@@ -1,0 +1,158 @@
+//! END-TO-END driver: proves all three layers compose on a real small
+//! workload (recorded in EXPERIMENTS.md §End-to-end).
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+//!
+//! Pipeline per workload (posv 10×10 tiles and a 100-wide fork-join —
+//! 330 and 506 tasks):
+//!   1. L3 generates the task DAG and builds the HLP relaxation;
+//!   2. the LP is solved by the **AOT JAX/Pallas PDHG artifact through
+//!      PJRT** (Layer 1+2; the Rust mirror cross-checks the objective);
+//!   3. the rounded allocation is scheduled with HLP-OLS / HLP-EST and
+//!      compared against HEFT and the online policies;
+//!   4. every schedule is validated (precedences, overlap, durations);
+//!   5. the ER-LS decisions are executed *live* on a worker-thread pool
+//!      and the realized makespan is compared with the prediction.
+//!
+//! The headline metric of the paper — makespan / LP* — is printed for
+//! every algorithm, and the run fails loudly if any approximation
+//! certificate (6·LP* offline, 4√(m/k)·LP* online) is violated.
+
+use hetsched::algos::{run_offline, solve_hlp, Offline};
+use hetsched::coordinator::{run_live, LiveConfig};
+use hetsched::lp::model::build_hlp;
+use hetsched::lp::pdhg::{solve_rust, DriveOpts};
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sim::{validate, validate_realized};
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin};
+
+fn main() {
+    let plat = Platform::hybrid(16, 4);
+    let sqrt_mk = (plat.m() as f64 / plat.k() as f64).sqrt();
+    let workloads = vec![
+        chameleon::posv(10, &CostModel::hybrid(320), 2026),
+        forkjoin::forkjoin(100, 5, 1, 2026),
+    ];
+
+    let mut failures = 0;
+    for g in &workloads {
+        println!(
+            "==== {} : {} tasks, {} arcs, machine {} ====",
+            g.app,
+            g.n_tasks(),
+            g.n_arcs(),
+            plat.label()
+        );
+
+        // --- Layers 1+2: the AOT PDHG artifact through PJRT ---------
+        let t = std::time::Instant::now();
+        let hlp = solve_hlp(g, &plat, LpBackendKind::Pjrt, 1e-4);
+        println!(
+            "LP* = {:.4}  [{}; gap {:.1e}; {} iters; {:?}]",
+            hlp.sol.obj,
+            hlp.sol.backend,
+            hlp.sol.gap,
+            hlp.sol.iters,
+            t.elapsed()
+        );
+        assert_eq!(hlp.sol.backend, "pdhg-pjrt", "PJRT path must be exercised");
+
+        // cross-check against the in-tree f64 mirror
+        let (lp, _) = build_hlp(g, &plat);
+        let mirror = solve_rust(&lp, &DriveOpts { tol: 1e-5, ..Default::default() });
+        let dev = (mirror.obj - hlp.sol.obj).abs() / (1.0 + mirror.obj.abs());
+        println!(
+            "cross-check: rust-pdhg LP* = {:.4} (deviation {:.2e})",
+            mirror.obj, dev
+        );
+        assert!(dev < 5e-3, "backends disagree");
+
+        // --- Layer 3: offline algorithms ----------------------------
+        for algo in Offline::ALL {
+            let t = std::time::Instant::now();
+            let (s, _) = run_offline(algo, g, &plat, Some(&hlp), LpBackendKind::Pjrt, 1e-4);
+            if let Err(e) = validate(g, &plat, &s) {
+                println!("!! {} produced an INVALID schedule: {e}", algo.name());
+                failures += 1;
+                continue;
+            }
+            let ratio = s.makespan / hlp.sol.obj;
+            let ok = ratio <= 6.0 * 1.05;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "{:>8}: makespan {:>10.4}  ratio {:>6.3}  [{:>9?}] {}",
+                algo.name(),
+                s.makespan,
+                ratio,
+                t.elapsed(),
+                if ok { "<= 6 LP* ok" } else { "VIOLATES 6 LP*" }
+            );
+        }
+
+        // --- Layer 3: online policies -------------------------------
+        for policy in [
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(2026),
+        ] {
+            let t = std::time::Instant::now();
+            let s = online_by_id(g, &plat, &policy);
+            validate(g, &plat, &s).expect("online schedule feasible");
+            let ratio = s.makespan / hlp.sol.obj;
+            let bound_ok = match policy {
+                OnlinePolicy::ErLs => ratio <= 4.0 * sqrt_mk + 1e-9,
+                _ => true,
+            };
+            if !bound_ok {
+                failures += 1;
+            }
+            println!(
+                "{:>8}: makespan {:>10.4}  ratio {:>6.3}  [{:>9?}] {}",
+                policy.name(),
+                s.makespan,
+                ratio,
+                t.elapsed(),
+                match policy {
+                    OnlinePolicy::ErLs if bound_ok => "<= 4*sqrt(m/k) LP* ok",
+                    OnlinePolicy::ErLs => "VIOLATES competitive bound",
+                    _ => "",
+                }
+            );
+        }
+
+        // --- live execution on the coordinator's worker pool --------
+        let small = Platform::hybrid(6, 2); // one OS thread per unit
+        let order: Vec<usize> = (0..g.n_tasks()).collect();
+        let total_work: f64 = (0..g.n_tasks()).map(|j| g.p_cpu(j)).sum();
+        // scale virtual time so the mean task sleeps ~1 ms (well above
+        // OS timer granularity) while the whole run stays sub-second
+        let mean_task = total_work / g.n_tasks() as f64;
+        let cfg = LiveConfig {
+            time_scale: 0.004 / mean_task,
+            policy: OnlinePolicy::ErLs,
+        };
+        let (report, realized) = run_live(g, &small, &order, &cfg);
+        validate_realized(g, &small, &realized).expect("realized schedule feasible");
+        println!(
+            "live ER-LS on {} worker threads: realized {:.3} vs predicted {:.3} \
+             (+{:.1}%), decision p95 {:.1} us, wall {:?}\n",
+            small.n_units(),
+            report.realized_makespan,
+            report.predicted_makespan,
+            (report.realized_makespan / report.predicted_makespan - 1.0) * 100.0,
+            report.decision_latency.p95 * 1e6,
+            report.wall
+        );
+    }
+
+    if failures > 0 {
+        eprintln!("END-TO-END: {failures} certificate violations");
+        std::process::exit(1);
+    }
+    println!("END-TO-END: all layers compose; all certificates hold.");
+}

@@ -1,0 +1,33 @@
+//! LP-backend performance harness (EXPERIMENTS.md §Perf): times the full
+//! HLP solve (build + Ruiz + warm start + PDHG drive) on campaign-sized
+//! instances for the PJRT artifact backend vs the Rust mirror.
+//!
+//!     cargo run --release --example lp_perf
+
+use hetsched::algos::solve_hlp;
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin};
+use std::time::Instant;
+
+fn main() {
+    let cases: Vec<(&str, hetsched::graph::TaskGraph, Platform)> = vec![
+        ("potri-nb5 (105t)", chameleon::potri(5, &CostModel::hybrid(320), 7), Platform::hybrid(4, 2)),
+        ("potri-nb10 (660t)", chameleon::potri(10, &CostModel::hybrid(320), 7), Platform::hybrid(16, 4)),
+        ("forkjoin-500x5 (2506t)", forkjoin::forkjoin(500, 5, 1, 2026), Platform::hybrid(16, 4)),
+        ("potri-nb20 (4620t)", chameleon::potri(20, &CostModel::hybrid(320), 7), Platform::hybrid(64, 8)),
+    ];
+    for (name, g, plat) in cases {
+        println!("{name}:");
+        for backend in [LpBackendKind::RustPdhg, LpBackendKind::Pjrt] {
+            let t = Instant::now();
+            let sol = solve_hlp(&g, &plat, backend, 1e-4);
+            let dt = t.elapsed();
+            println!(
+                "  {:>10}: obj {:.4} gap {:.2e} iters {:>7} in {:>12?}  ({:.0} iters/s)",
+                sol.sol.backend, sol.sol.obj, sol.sol.gap, sol.sol.iters, dt,
+                sol.sol.iters as f64 / dt.as_secs_f64()
+            );
+        }
+    }
+}

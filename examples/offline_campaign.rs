@@ -1,0 +1,89 @@
+//! Offline campaign driver (Figures 3, 4 and 5 of the paper).
+//!
+//!     cargo run --release --example offline_campaign [-- --scale smoke]
+//!
+//! Runs every benchmark instance × machine configuration ×
+//! {HLP-EST, HLP-OLS, HEFT} for 2 resource types and the QHLP versions
+//! for 3 types, prints the per-app ratio tables and the headline
+//! pairwise improvements, and writes CSVs under results/.
+
+use hetsched::analysis::{
+    mean_improvement_pct, pairwise_by_app, ratio_by_app, records_csv, render_summary_table,
+};
+use hetsched::experiments::{offline, CampaignOpts};
+use hetsched::substrate::cli::Args;
+use hetsched::workloads::Scale;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let opts = CampaignOpts {
+        scale: Scale::parse(&args.string("scale", "default")).unwrap_or(Scale::Default),
+        ..Default::default()
+    };
+    std::fs::create_dir_all("results").ok();
+
+    // ---- 2 resource types: Fig. 3 + Fig. 4 --------------------------
+    let t = std::time::Instant::now();
+    let records = offline::run(2, &opts);
+    eprintln!("2-type campaign: {} records in {:?}", records.len(), t.elapsed());
+    std::fs::write("results/fig3_fig4_records.csv", records_csv(&records)).ok();
+
+    for algo in ["HLP-EST", "HLP-OLS", "HEFT"] {
+        println!(
+            "{}",
+            render_summary_table(
+                &format!("Fig.3 makespan/LP* — {algo}"),
+                &ratio_by_app(&records, algo)
+            )
+        );
+    }
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.4-left HLP-EST / HLP-OLS",
+            &pairwise_by_app(&records, "HLP-EST", "HLP-OLS")
+        )
+    );
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.4-right HEFT / HLP-OLS",
+            &pairwise_by_app(&records, "HEFT", "HLP-OLS")
+        )
+    );
+    println!(
+        "HLP-OLS improves on HLP-EST by {:.1}% on average (paper: ~8-10%)",
+        mean_improvement_pct(&records, "HLP-OLS", "HLP-EST")
+    );
+    println!(
+        "HLP-OLS improves on HEFT by {:.1}% on average (paper: ~2%)\n",
+        mean_improvement_pct(&records, "HLP-OLS", "HEFT")
+    );
+
+    // ---- 3 resource types: Fig. 5 -----------------------------------
+    let t = std::time::Instant::now();
+    let records3 = offline::run(3, &opts);
+    eprintln!("3-type campaign: {} records in {:?}", records3.len(), t.elapsed());
+    std::fs::write("results/fig5_records.csv", records_csv(&records3)).ok();
+
+    for algo in ["QHLP-EST", "QHLP-OLS", "QHEFT"] {
+        println!(
+            "{}",
+            render_summary_table(
+                &format!("Fig.5-left makespan/LP* — {algo}"),
+                &ratio_by_app(&records3, algo)
+            )
+        );
+    }
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.5-right QHEFT / QHLP-OLS",
+            &pairwise_by_app(&records3, "QHEFT", "QHLP-OLS")
+        )
+    );
+    println!(
+        "QHEFT improves on QHLP-OLS by {:.1}% on average (paper: ~5%)",
+        mean_improvement_pct(&records3, "QHEFT", "QHLP-OLS")
+    );
+}

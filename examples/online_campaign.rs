@@ -1,0 +1,76 @@
+//! Online campaign driver (Figures 6 and 7 of the paper).
+//!
+//!     cargo run --release --example online_campaign [-- --scale smoke]
+//!
+//! Runs ER-LS against the EFT / Greedy / Random baselines on every
+//! instance × 2-type config, prints per-app ratio tables, the
+//! competitive-ratio-vs-√(m/k) series, and the headline improvements.
+
+use hetsched::analysis::{
+    mean_improvement_pct, pairwise_by_app, ratio_by_app, ratio_by_sqrt_mk, records_csv,
+    render_summary_table,
+};
+use hetsched::experiments::{online, CampaignOpts};
+use hetsched::substrate::cli::Args;
+use hetsched::workloads::Scale;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let opts = CampaignOpts {
+        scale: Scale::parse(&args.string("scale", "default")).unwrap_or(Scale::Default),
+        ..Default::default()
+    };
+    std::fs::create_dir_all("results").ok();
+
+    let t = std::time::Instant::now();
+    let records = online::run(&opts);
+    eprintln!("online campaign: {} records in {:?}", records.len(), t.elapsed());
+    std::fs::write("results/fig6_fig7_records.csv", records_csv(&records)).ok();
+
+    // Fig. 6 left: ratio to LP* per app
+    for algo in ["ER-LS", "EFT", "Greedy", "Random"] {
+        println!(
+            "{}",
+            render_summary_table(
+                &format!("Fig.6-left makespan/LP* — {algo}"),
+                &ratio_by_app(&records, algo)
+            )
+        );
+    }
+
+    // Fig. 6 right: mean competitive ratio vs sqrt(m/k)
+    println!("Fig.6-right mean competitive ratio (±stderr) vs sqrt(m/k):");
+    for algo in ["ER-LS", "EFT", "Greedy"] {
+        let series = ratio_by_sqrt_mk(&records, algo);
+        let pts: Vec<String> = series
+            .iter()
+            .map(|(x, s)| format!("({x:.2}, {:.3}±{:.3})", s.mean, s.stderr))
+            .collect();
+        println!("  {algo:>7}: {}", pts.join(" "));
+    }
+    println!();
+
+    // Fig. 7: pairwise
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.7-left Greedy / ER-LS",
+            &pairwise_by_app(&records, "Greedy", "ER-LS")
+        )
+    );
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.7-right EFT / ER-LS",
+            &pairwise_by_app(&records, "EFT", "ER-LS")
+        )
+    );
+    println!(
+        "ER-LS improves on Greedy by {:.1}% on average (paper: ~16%)",
+        mean_improvement_pct(&records, "ER-LS", "Greedy")
+    );
+    println!(
+        "ER-LS loses to EFT by {:.1}% on average (paper: ~10%)",
+        -mean_improvement_pct(&records, "ER-LS", "EFT")
+    );
+}

@@ -1,0 +1,16 @@
+//! Probe PJRT vs Rust convergence on campaign LPs (dev/perf tool).
+use hetsched::algos::solve_hlp_capped;
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::workloads::{chameleon, costs::CostModel};
+use std::time::Instant;
+
+fn main() {
+    let g = chameleon::posv(10, &CostModel::hybrid(320), 3);
+    let plat = Platform::hybrid(16, 4);
+    for backend in [LpBackendKind::RustPdhg, LpBackendKind::Pjrt] {
+        let t = Instant::now();
+        let sol = solve_hlp_capped(&g, &plat, backend, 1e-4, 400_000);
+        println!("{}: obj {:.5} gap {:.2e} iters {} in {:?}", sol.sol.backend, sol.sol.obj, sol.sol.gap, sol.sol.iters, t.elapsed());
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the library in ~40 lines.
+//!
+//! Build a tiled-Cholesky task graph, solve the paper's HLP allocation
+//! LP (JAX/Pallas PDHG via PJRT when `make artifacts` has run, Rust
+//! mirror otherwise), and compare HLP-OLS / HLP-EST / HEFT and the
+//! online ER-LS on a 16-CPU + 4-GPU machine.
+//!
+//!     cargo run --release --example quickstart
+
+use hetsched::algos::{run_offline, solve_hlp, Offline};
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sim::validate;
+use hetsched::workloads::{chameleon, costs::CostModel};
+
+fn main() {
+    // 1. the application: potrf (tiled Cholesky), 10x10 tiles of 320
+    let g = chameleon::potrf(10, &CostModel::hybrid(320), 42);
+    println!("app {}: {} tasks, {} arcs", g.app, g.n_tasks(), g.n_arcs());
+
+    // 2. the machine: m = 16 CPUs, k = 4 GPUs
+    let plat = Platform::hybrid(16, 4);
+
+    // 3. allocation phase: solve + round the HLP relaxation
+    let hlp = solve_hlp(&g, &plat, LpBackendKind::Auto, 1e-4);
+    println!(
+        "LP* = {:.4} (backend {}, {} iters)",
+        hlp.sol.obj, hlp.sol.backend, hlp.sol.iters
+    );
+
+    // 4. scheduling phase: the paper's three offline algorithms
+    for algo in Offline::ALL {
+        let (s, _) = run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::Auto, 1e-4);
+        validate(&g, &plat, &s).expect("schedule must be feasible");
+        println!(
+            "{:>8}: makespan {:.4}  (ratio to LP* {:.3})",
+            algo.name(),
+            s.makespan,
+            s.makespan / hlp.sol.obj
+        );
+    }
+
+    // 5. the online algorithm (tasks revealed one by one, irrevocably)
+    let s = online_by_id(&g, &plat, &OnlinePolicy::ErLs);
+    validate(&g, &plat, &s).expect("schedule must be feasible");
+    println!(
+        "{:>8}: makespan {:.4}  (ratio to LP* {:.3})",
+        "ER-LS",
+        s.makespan,
+        s.makespan / hlp.sol.obj
+    );
+}

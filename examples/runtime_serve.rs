@@ -1,0 +1,53 @@
+//! Live coordinator demo: execute a task graph on a real worker-thread
+//! pool under each online policy and compare realized makespans with the
+//! discrete-event predictions (the deployment mode the paper's §7 aims
+//! at, StarPU-style).
+//!
+//!     cargo run --release --example runtime_serve
+
+use hetsched::coordinator::{run_live, LiveConfig};
+use hetsched::platform::Platform;
+use hetsched::sched::online::OnlinePolicy;
+use hetsched::sim::validate_realized;
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin};
+
+fn main() {
+    let plat = Platform::hybrid(6, 2);
+    let workloads = vec![
+        chameleon::posv(6, &CostModel::hybrid(320), 11),
+        forkjoin::forkjoin(40, 3, 1, 11),
+    ];
+
+    for g in &workloads {
+        println!(
+            "== {} ({} tasks) on {} units ({}) ==",
+            g.app,
+            g.n_tasks(),
+            plat.n_units(),
+            plat.label()
+        );
+        let order: Vec<usize> = (0..g.n_tasks()).collect();
+        for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+            let name = policy.name();
+            // scale virtual time so each run takes well under a second
+            let total_work: f64 = (0..g.n_tasks()).map(|j| g.p_cpu(j)).sum();
+            let cfg = LiveConfig {
+                time_scale: (0.4 / total_work).min(0.002),
+                policy,
+            };
+            let (report, realized) = run_live(g, &plat, &order, &cfg);
+            validate_realized(g, &plat, &realized).expect("realized schedule feasible");
+            println!(
+                "{:>7}: realized {:>9.3} | predicted {:>9.3} | overhead {:>5.1}% | \
+                 decision p95 {:>6.1} us | wall {:?}",
+                name,
+                report.realized_makespan,
+                report.predicted_makespan,
+                (report.realized_makespan / report.predicted_makespan - 1.0) * 100.0,
+                report.decision_latency.p95 * 1e6,
+                report.wall,
+            );
+        }
+        println!();
+    }
+}

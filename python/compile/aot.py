@@ -1,0 +1,87 @@
+"""AOT lowering: JAX/Pallas PDHG chunks -> artifacts/pdhg_<bucket>.hlo.txt.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the HLO
+text through `HloModuleProto::from_text_file` and executes it on the PJRT
+CPU client.  HLO **text** (not `.serialize()`) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.
+
+Also writes artifacts/manifest.json describing every bucket (shapes,
+iteration count, argument order) so the Rust side never hard-codes them.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(bucket: model.Bucket) -> str:
+    specs = model.chunk_arg_specs(bucket)
+    lowered = jax.jit(model.chunk_fn(bucket)).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="",
+                    help="comma-separated bucket names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = set(filter(None, args.buckets.split(",")))
+    manifest = {"format": "hlo-text", "pad_b": model.PAD_B, "buckets": []}
+    for bucket in model.BUCKETS:
+        if wanted and bucket.name not in wanted:
+            continue
+        text = lower_bucket(bucket)
+        fname = f"pdhg_{bucket.name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append(
+            {
+                "name": bucket.name,
+                "file": fname,
+                "n": bucket.n,
+                "r": bucket.r,
+                "nz": bucket.nz,
+                "iters": bucket.iters,
+                "block": bucket.block,
+                "args": [
+                    "nz_val:f32[nz]", "nz_row:i32[nz]", "nz_col:i32[nz]",
+                    "b:f32[r]", "c:f32[n]", "lo:f32[n]", "hi:f32[n]",
+                    "z0:f32[n]", "y0:f32[r]", "tau:f32[1]", "sigma:f32[1]",
+                ],
+                "outputs": [
+                    "z:f32[n]", "y:f32[r]",
+                    "z_avg:f32[n]", "y_avg:f32[r]", "diag:f32[8]",
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernels: the fused PDHG update steps.
+
+These are the per-iteration elementwise hot spots of the restarted PDHG
+(PDLP-style) LP solver used for the HLP / QHLP relaxations of the paper
+(Amaris et al., 2017).  A PDHG iteration is
+
+    z+  = clip(z - tau * (c + A^T y), lo, hi)        (primal prox)
+    zb  = 2 z+ - z                                   (extrapolation)
+    y+  = max(0, y + sigma * (A zb - b))             (dual prox)
+
+The sparse matvecs (A zb, A^T y) stay in Layer 2 (gather + segment_sum);
+the two fused prox/extrapolation updates below are the Pallas kernels.
+
+TPU mapping (see DESIGN.md #Hardware-Adaptation): 1-D grid, each block a
+`block`-element f32 slab resident in VMEM; the scalar step size rides along
+as a (1,)-shaped operand mapped to every block.  `interpret=True` is
+mandatory on this image: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO that the
+Rust runtime's `PjRtClient::cpu()` runs directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _primal_kernel(tau_ref, z_ref, g_ref, lo_ref, hi_ref, znew_ref, zbar_ref):
+    """znew = clip(z - tau*g, lo, hi); zbar = 2*znew - z, one VMEM block."""
+    tau = tau_ref[0]
+    z = z_ref[...]
+    step = z - tau * g_ref[...]
+    znew = jnp.minimum(jnp.maximum(step, lo_ref[...]), hi_ref[...])
+    znew_ref[...] = znew
+    zbar_ref[...] = 2.0 * znew - z
+
+
+def _dual_kernel(sigma_ref, y_ref, r_ref, ynew_ref):
+    """ynew = max(0, y + sigma*r), one VMEM block."""
+    sigma = sigma_ref[0]
+    ynew_ref[...] = jnp.maximum(y_ref[...] + sigma * r_ref[...], 0.0)
+
+
+def _grid_1d(n: int, block: int) -> int:
+    if n % block != 0:
+        raise ValueError(f"size {n} not a multiple of block {block}")
+    return n // block
+
+
+@functools.partial(jax.named_call, name="pallas_primal_update")
+def primal_update(z, g, lo, hi, tau, *, block: int = DEFAULT_BLOCK):
+    """Fused primal prox + extrapolation.
+
+    Args:
+      z, g, lo, hi: f32[n] (n a multiple of `block`).
+      tau: f32[1] step size.
+    Returns:
+      (z_new, z_bar): f32[n] each.
+    """
+    n = z.shape[0]
+    grid = _grid_1d(n, block)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), z.dtype)
+    return pl.pallas_call(
+        _primal_kernel,
+        grid=(grid,),
+        in_specs=[scl, vec, vec, vec, vec],
+        out_specs=[vec, vec],
+        out_shape=[out, out],
+        interpret=True,
+    )(tau, z, g, lo, hi)
+
+
+@functools.partial(jax.named_call, name="pallas_dual_update")
+def dual_update(y, r, sigma, *, block: int = DEFAULT_BLOCK):
+    """Fused dual prox: max(0, y + sigma * r).
+
+    Args:
+      y, r: f32[m] (m a multiple of `block`).
+      sigma: f32[1] step size.
+    Returns:
+      y_new: f32[m].
+    """
+    m = y.shape[0]
+    grid = _grid_1d(m, block)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _dual_kernel,
+        grid=(grid,),
+        in_specs=[scl, vec, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((m,), y.dtype),
+        interpret=True,
+    )(sigma, y, r)

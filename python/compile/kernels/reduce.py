@@ -1,0 +1,53 @@
+"""Layer-1 Pallas reduction kernels: blocked dot products.
+
+Used by the Layer-2 PDHG model for objectives and residual norms:
+`dot(c, z)`, `dot(b, y)`, and squared norms (as `dot(x, x)`).
+
+Each grid step reduces one VMEM-resident block to a single partial sum;
+the (tiny) final reduction over partials happens in plain jnp.  On a real
+TPU the per-block reduction maps to VPU lane reductions over an 8x128
+retile; on this image the kernel runs under interpret=True (see
+pdhg_update.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pdhg_update import DEFAULT_BLOCK, _grid_1d
+
+
+def _dot_kernel(x_ref, y_ref, out_ref):
+    out_ref[0] = jnp.sum(x_ref[...] * y_ref[...])
+
+
+@functools.partial(jax.named_call, name="pallas_block_dot")
+def block_dot(x, y, *, block: int = DEFAULT_BLOCK):
+    """dot(x, y) with a blocked Pallas partial-sum pass.
+
+    Args:
+      x, y: f32[n] (n a multiple of `block`).
+    Returns:
+      f32[] scalar.
+    """
+    n = x.shape[0]
+    grid = _grid_1d(n, block)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    partial = pl.pallas_call(
+        _dot_kernel,
+        grid=(grid,),
+        in_specs=[vec, vec],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), x.dtype),
+        interpret=True,
+    )(x, y)
+    return jnp.sum(partial)
+
+
+def sumsq(x, *, block: int = DEFAULT_BLOCK):
+    """||x||_2^2 via block_dot(x, x)."""
+    return block_dot(x, x, block=block)

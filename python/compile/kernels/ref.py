@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference).
+
+pytest (python/tests/test_kernels.py) asserts allclose between each kernel
+in pdhg_update.py / reduce.py and its oracle here, across shapes and seeds
+(hypothesis).  Keep these boring and obviously correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def primal_update(z, g, lo, hi, tau):
+    """Oracle for kernels.pdhg_update.primal_update."""
+    tau = jnp.asarray(tau).reshape(())
+    znew = jnp.clip(z - tau * g, lo, hi)
+    return znew, 2.0 * znew - z
+
+
+def dual_update(y, r, sigma):
+    """Oracle for kernels.pdhg_update.dual_update."""
+    sigma = jnp.asarray(sigma).reshape(())
+    return jnp.maximum(y + sigma * r, 0.0)
+
+
+def block_dot(x, y):
+    """Oracle for kernels.reduce.block_dot."""
+    return jnp.sum(x * y)
+
+
+def sumsq(x):
+    return jnp.sum(x * x)

@@ -1,0 +1,237 @@
+"""Layer-2 JAX model: one AOT-compilable chunk of the restarted PDHG LP
+solver for the paper's HLP / QHLP relaxations.
+
+The Rust coordinator (Layer 3) builds the LP
+
+    minimize    c^T z
+    subject to  A z <= b          (A sparse, COO)
+                lo <= z <= hi
+
+from the precedence DAG (constraints (1)-(6) of HLP, (9)-(14) of QHLP,
+equalities split into two inequalities), Ruiz-preconditions it, pads it
+into a static (N, R, NZ) *bucket*, and then repeatedly executes the
+`pdhg_chunk` computation below — each call advances `ITERS` PDHG
+iterations and reports a duality-gap certificate, so Rust decides when to
+stop.  Python never runs after `make artifacts`.
+
+Padding contract (what Rust must send):
+  * padded columns:  c = 0, lo = hi = 0            -> z stays 0
+  * padded rows:     b = +PAD_B (huge)             -> slack, y stays 0
+  * padded nnz:      val = 0, row = 0, col = 0     -> contributes nothing
+
+The fused elementwise updates are Layer-1 Pallas kernels
+(kernels/pdhg_update.py); the sparse matvecs are gather + segment_sum,
+which XLA fuses into the surrounding loop body.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import pdhg_update as pk
+from .kernels import reduce as rk
+
+PAD_B = 1.0e9  # b value for padded rows (see contract above)
+
+
+class Bucket(NamedTuple):
+    """Static shape class for one compiled artifact."""
+
+    name: str
+    n: int  # padded number of primal variables (multiple of block)
+    r: int  # padded number of rows (multiple of block)
+    nz: int  # padded number of nonzeros
+    iters: int  # PDHG iterations per executable call
+    block: int  # Pallas block length
+
+
+# The artifact ladder.  Sized for the paper's campaign (Section 6):
+#   HLP  has N = 2n+1 variables, R = |E| + n_src + #sinks + 2 rows;
+#   QHLP has N = (Q+1)n + 1, R = |E| + n_src + #sinks + 2n + Q rows
+# with n up to 4620 tasks (potri, nb_blocks=20) and |E| up to ~13k arcs.
+# Small buckets keep padding waste low for the nb_blocks=5/10 instances
+# (a tiny LP in a huge bucket pays the full padded matvec every
+# iteration — see EXPERIMENTS.md §Perf).
+BUCKETS = [
+    Bucket("t0", n=512, r=1024, nz=4096, iters=250, block=512),
+    Bucket("t1", n=1024, r=2048, nz=8192, iters=250, block=1024),
+    Bucket("t2", n=2048, r=4096, nz=16384, iters=250, block=2048),
+    Bucket("b0", n=4096, r=8192, nz=32768, iters=250, block=4096),
+    Bucket("b1", n=8192, r=16384, nz=65536, iters=250, block=4096),
+    Bucket("b2", n=16384, r=32768, nz=131072, iters=250, block=4096),
+    Bucket("b3", n=32768, r=65536, nz=262144, iters=250, block=4096),
+]
+
+
+def matvec(nz_val, nz_row, nz_col, z, num_rows):
+    """A @ z for COO A (padded entries are (0,0,0) and contribute 0)."""
+    return jax.ops.segment_sum(
+        nz_val * jnp.take(z, nz_col, mode="clip"), nz_row, num_segments=num_rows
+    )
+
+
+def rmatvec(nz_val, nz_row, nz_col, y, num_cols):
+    """A^T @ y."""
+    return jax.ops.segment_sum(
+        nz_val * jnp.take(y, nz_row, mode="clip"), nz_col, num_segments=num_cols
+    )
+
+
+def _diagnostics(nz_val, nz_row, nz_col, b, c, lo, hi, z, y, *, n, r, block):
+    """KKT residuals + primal/dual objectives (the stopping certificate).
+
+    dual objective of (min c'z : Az<=b, lo<=z<=hi) at y>=0 with reduced
+    cost rc = c + A'y:  g(y) = -b'y + sum_j min(rc_j*lo_j, rc_j*hi_j).
+    Padded rows carry b = PAD_B with y = 0; mask them out of b'y anyway to
+    stay exact under nonzero dual noise.
+    """
+    az = matvec(nz_val, nz_row, nz_col, z, r)
+    rc = c + rmatvec(nz_val, nz_row, nz_col, y, n)
+    live_row = (b < PAD_B / 2).astype(z.dtype)
+    pviol = jnp.maximum(az - b, 0.0) * live_row
+    pres = jnp.sqrt(rk.sumsq(pviol, block=block))
+    # dual residual: distance from z to the box-projected gradient step
+    dres = jnp.sqrt(rk.sumsq(z - jnp.clip(z - rc, lo, hi), block=block))
+    pobj = rk.block_dot(c, z, block=block)
+    dobj = -rk.block_dot(b * live_row, y, block=block) + jnp.sum(
+        jnp.minimum(rc * lo, rc * hi)
+    )
+    return pobj, dobj, pres, dres
+
+
+def pdhg_chunk(nz_val, nz_row, nz_col, b, c, lo, hi, z0, y0, tau, sigma, *, bucket: Bucket):
+    """Run `bucket.iters` PDHG iterations from (z0, y0).
+
+    Returns (z, y, z_avg, y_avg, diag) where (z_avg, y_avg) is the
+    in-chunk ergodic average (the restart-to-average candidate, as in
+    PDLP) and diag = f32[8] = [pobj, dobj, pres, dres] for the last
+    iterate followed by the same four values for the average.
+    """
+    n, r, block = bucket.n, bucket.r, bucket.block
+
+    def body(_, state):
+        z, y, sz, sy = state
+        g = c + rmatvec(nz_val, nz_row, nz_col, y, n)
+        z_new, z_bar = pk.primal_update(z, g, lo, hi, tau, block=block)
+        resid = matvec(nz_val, nz_row, nz_col, z_bar, r) - b
+        y_new = pk.dual_update(y, resid, sigma, block=block)
+        return (z_new, y_new, sz + z_new, sy + y_new)
+
+    init = (z0, y0, jnp.zeros_like(z0), jnp.zeros_like(y0))
+    z, y, sz, sy = lax.fori_loop(0, bucket.iters, body, init)
+    z_avg = sz / bucket.iters
+    y_avg = sy / bucket.iters
+    d_last = _diagnostics(
+        nz_val, nz_row, nz_col, b, c, lo, hi, z, y, n=n, r=r, block=block
+    )
+    d_avg = _diagnostics(
+        nz_val, nz_row, nz_col, b, c, lo, hi, z_avg, y_avg, n=n, r=r, block=block
+    )
+    diag = jnp.stack(list(d_last) + list(d_avg))
+    return z, y, z_avg, y_avg, diag
+
+
+def chunk_fn(bucket: Bucket):
+    """The jittable entry point for one bucket (fixed shapes)."""
+
+    def fn(nz_val, nz_row, nz_col, b, c, lo, hi, z0, y0, tau, sigma):
+        return pdhg_chunk(
+            nz_val, nz_row, nz_col, b, c, lo, hi, z0, y0, tau, sigma, bucket=bucket
+        )
+
+    return fn
+
+
+def chunk_arg_specs(bucket: Bucket):
+    """ShapeDtypeStructs in the exact positional order of chunk_fn."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((bucket.nz,), f32),  # nz_val
+        s((bucket.nz,), i32),  # nz_row
+        s((bucket.nz,), i32),  # nz_col
+        s((bucket.r,), f32),  # b
+        s((bucket.n,), f32),  # c
+        s((bucket.n,), f32),  # lo
+        s((bucket.n,), f32),  # hi
+        s((bucket.n,), f32),  # z0
+        s((bucket.r,), f32),  # y0
+        s((1,), f32),  # tau
+        s((1,), f32),  # sigma
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference drive loop (build/test-time only): mirrors what the Rust
+# runtime does across chunks.  Used by pytest to check that chunked PDHG
+# actually solves LPs to optimality.
+# ---------------------------------------------------------------------------
+
+
+def estimate_opnorm(nz_val, nz_row, nz_col, n, r):
+    """sqrt(||A||_1 * ||A||_inf) >= ||A||_2 (cheap, matches the Rust side)."""
+    av = jnp.abs(nz_val)
+    col_sums = jax.ops.segment_sum(av, nz_col, num_segments=n)
+    row_sums = jax.ops.segment_sum(av, nz_row, num_segments=r)
+    return jnp.sqrt(jnp.max(col_sums) * jnp.max(row_sums))
+
+
+def solve(nz_val, nz_row, nz_col, b, c, lo, hi, *, bucket: Bucket,
+          max_chunks: int = 200, tol: float = 1e-4):
+    """Drive pdhg_chunk until the relative gap + residuals close."""
+    norm_a = float(estimate_opnorm(nz_val, nz_row, nz_col, bucket.n, bucket.r))
+    eta = 1.0 / max(norm_a, 1e-12)
+    tau = jnp.array([0.9 * eta], jnp.float32)
+    sigma = jnp.array([0.9 * eta], jnp.float32)
+    z = jnp.zeros((bucket.n,), jnp.float32)
+    y = jnp.zeros((bucket.r,), jnp.float32)
+    fn = jax.jit(chunk_fn(bucket))
+    info = {}
+    for chunk in range(max_chunks):
+        z, y, z_avg, y_avg, diag = fn(
+            nz_val, nz_row, nz_col, b, c, lo, hi, z, y, tau, sigma)
+        vals = [float(v) for v in diag]
+        score = lambda d: d[2] + d[3] + abs(d[0] - d[1])
+        # restart-to-average when the ergodic point is better (PDLP)
+        if score(vals[4:]) < score(vals[:4]):
+            z, y = z_avg, y_avg
+            pobj, dobj, pres, dres = vals[4:]
+        else:
+            pobj, dobj, pres, dres = vals[:4]
+        scale = 1.0 + abs(pobj) + abs(dobj)
+        gap = abs(pobj - dobj) / scale
+        info = dict(pobj=pobj, dobj=dobj, pres=pres, dres=dres, gap=gap,
+                    chunks=chunk + 1, iters=(chunk + 1) * bucket.iters)
+        if gap < tol and pres / scale < tol and dres / scale < tol:
+            break
+    return z, y, info
+
+
+def pad_coo(rows, cols, vals, b, c, lo, hi, bucket: Bucket):
+    """Pad a concrete LP into `bucket` shapes per the padding contract."""
+    import numpy as np
+
+    nz = len(vals)
+    if nz > bucket.nz or len(b) > bucket.r or len(c) > bucket.n:
+        raise ValueError("LP does not fit bucket")
+    nz_val = np.zeros(bucket.nz, np.float32)
+    nz_row = np.zeros(bucket.nz, np.int32)
+    nz_col = np.zeros(bucket.nz, np.int32)
+    nz_val[:nz] = vals
+    nz_row[:nz] = rows
+    nz_col[:nz] = cols
+    bb = np.full(bucket.r, PAD_B, np.float32)
+    bb[: len(b)] = b
+    cc = np.zeros(bucket.n, np.float32)
+    cc[: len(c)] = c
+    ll = np.zeros(bucket.n, np.float32)
+    ll[: len(lo)] = lo
+    hh = np.zeros(bucket.n, np.float32)
+    hh[: len(hi)] = hi
+    return (jnp.asarray(nz_val), jnp.asarray(nz_row), jnp.asarray(nz_col),
+            jnp.asarray(bb), jnp.asarray(cc), jnp.asarray(ll), jnp.asarray(hh))

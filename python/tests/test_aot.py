@@ -1,0 +1,63 @@
+"""AOT lowering: HLO-text artifacts + manifest have the right structure."""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+TINY = model.Bucket("t", n=256, r=512, nz=1024, iters=10, block=256)
+
+
+def test_lower_tiny_bucket_has_entry_layout():
+    text = aot.lower_bucket(TINY)
+    assert text.startswith("HloModule")
+    # entry layout carries the exact bucket shapes in positional order
+    assert "f32[1024]" in text  # nz_val
+    assert "s32[1024]" in text  # nz_row / nz_col
+    assert "f32[512]" in text  # b / y0
+    assert "f32[256]" in text  # c / lo / hi / z0
+    assert "ENTRY" in text
+    # 3 outputs: z, y, diag
+    m = re.search(r"->\((.*?)\)\}", text)
+    assert m and m.group(1).count("f32") == 5
+    assert "f32[8]" in m.group(1)
+
+
+def test_lower_is_deterministic():
+    assert aot.lower_bucket(TINY) == aot.lower_bucket(TINY)
+
+
+def test_manifest_written(tmp_path):
+    # run the module CLI for the smallest real bucket only
+    env = dict(os.environ)
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--buckets", "b0"],
+        check=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+    )
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["format"] == "hlo-text"
+    names = [b["name"] for b in man["buckets"]]
+    assert names == ["b0"]
+    b0 = man["buckets"][0]
+    assert (out / b0["file"]).exists()
+    assert b0["n"] == 4096 and b0["r"] == 8192 and b0["nz"] == 32768
+    assert b0["args"][0] == "nz_val:f32[nz]"
+    assert b0["outputs"][-1] == "diag:f32[8]"
+
+
+def test_bucket_ladder_covers_campaign():
+    """Largest campaign LP (QHLP potri nb=20: n=4620 tasks, Q=3) fits b3."""
+    n_tasks, q, arcs = 4620, 3, 13000
+    n_vars = (q + 1) * n_tasks + 1
+    rows = arcs + n_tasks + n_tasks + 2 * n_tasks + q
+    big = model.BUCKETS[-1]
+    assert n_vars <= big.n and rows <= big.r

@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles (ref.py) — the core L1 correctness
+signal.  Hypothesis sweeps shapes (several block sizes, multi-block grids)
+and value regimes (including extreme step sizes and infinite-ish bounds).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pdhg_update as pk
+from compile.kernels import reduce as rk
+from compile.kernels import ref
+
+
+def rng_arrays(seed, n, k, scale=10.0):
+    r = np.random.default_rng(seed)
+    return [r.uniform(-scale, scale, n).astype(np.float32) for _ in range(k)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([128, 256, 512]),
+    nblocks=st.integers(1, 5),
+    tau=st.floats(1e-6, 10.0),
+)
+def test_primal_update_matches_ref(seed, block, nblocks, tau):
+    n = block * nblocks
+    z, g, a, b_ = rng_arrays(seed, n, 4)
+    lo, hi = np.minimum(a, b_), np.maximum(a, b_)
+    tau_arr = jnp.array([tau], jnp.float32)
+    got_z, got_zb = pk.primal_update(
+        jnp.asarray(z), jnp.asarray(g), jnp.asarray(lo), jnp.asarray(hi),
+        tau_arr, block=block)
+    want_z, want_zb = ref.primal_update(z, g, lo, hi, np.float32(tau))
+    np.testing.assert_allclose(got_z, want_z, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(got_zb, want_zb, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([128, 256, 512]),
+    nblocks=st.integers(1, 5),
+    sigma=st.floats(1e-6, 10.0),
+)
+def test_dual_update_matches_ref(seed, block, nblocks, sigma):
+    m = block * nblocks
+    y, r_ = rng_arrays(seed, m, 2)
+    sig = jnp.array([sigma], jnp.float32)
+    got = pk.dual_update(jnp.asarray(y), jnp.asarray(r_), sig, block=block)
+    want = ref.dual_update(y, r_, np.float32(sigma))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    assert float(jnp.min(got)) >= 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([128, 256, 512]),
+    nblocks=st.integers(1, 6),
+)
+def test_block_dot_matches_ref(seed, block, nblocks):
+    n = block * nblocks
+    x, y = rng_arrays(seed, n, 2, scale=2.0)
+    got = float(rk.block_dot(jnp.asarray(x), jnp.asarray(y), block=block))
+    want = float(ref.block_dot(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sumsq_nonnegative_and_exact_on_zeros():
+    z = jnp.zeros((256,), jnp.float32)
+    assert float(rk.sumsq(z, block=256)) == 0.0
+    x = jnp.ones((512,), jnp.float32)
+    assert float(rk.sumsq(x, block=256)) == 512.0
+
+
+def test_primal_update_clips_to_box():
+    n = 256
+    z = jnp.full((n,), 100.0, jnp.float32)
+    g = jnp.zeros((n,), jnp.float32)
+    lo = jnp.zeros((n,), jnp.float32)
+    hi = jnp.ones((n,), jnp.float32)
+    znew, zbar = pk.primal_update(z, g, lo, hi, jnp.array([1.0], jnp.float32),
+                                  block=n)
+    np.testing.assert_allclose(znew, np.ones(n, np.float32))
+    np.testing.assert_allclose(zbar, 2.0 * np.ones(n) - 100.0)
+
+
+def test_block_size_must_divide():
+    z = jnp.zeros((300,), jnp.float32)
+    with pytest.raises(ValueError):
+        pk.dual_update(z, z, jnp.array([1.0], jnp.float32), block=256)

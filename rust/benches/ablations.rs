@@ -1,0 +1,52 @@
+//! Bench: ablations of the design choices (DESIGN.md §Perf / §4.1):
+//! OLS priority rule, HLP rounding threshold, and the PDHG solver's
+//! warm-start / Ruiz / restart components.
+
+use hetsched::experiments::ablation;
+use hetsched::platform::Platform;
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin, ggen};
+
+fn main() {
+    let plat = Platform::hybrid(16, 4);
+    let cases: Vec<(&str, hetsched::graph::TaskGraph)> = vec![
+        ("posv-nb10", chameleon::posv(10, &CostModel::hybrid(320), 5)),
+        ("potri-nb10", chameleon::potri(10, &CostModel::hybrid(320), 5)),
+        ("forkjoin-100x5", forkjoin::forkjoin(100, 5, 1, 5)),
+        ("ggen-layers-8x20", ggen::layer_by_layer(8, 20, 0.3, 1, 5)),
+        ("ggen-sp-150", ggen::series_parallel(150, 1, 5)),
+    ];
+
+    println!("== OLS priority rule (makespan; same HLP allocation) ==");
+    for (name, g) in &cases {
+        let rows = ablation::ablate_priority(g, &plat, 1e-4);
+        let base = rows
+            .iter()
+            .find(|(n, _)| *n == "hlp-rank")
+            .map(|(_, m)| *m)
+            .unwrap();
+        let cells: Vec<String> = rows
+            .iter()
+            .map(|(n, m)| format!("{n} {:.4} ({:+.1}%)", m, (m / base - 1.0) * 100.0))
+            .collect();
+        println!("{name:>18}: {}", cells.join(" | "));
+    }
+
+    println!("\n== HLP rounding threshold θ (x >= θ -> CPU; makespan) ==");
+    for (name, g) in &cases {
+        let sweep =
+            ablation::ablate_rounding_threshold(g, &plat, &[0.1, 0.3, 0.5, 0.7, 0.9], 1e-4);
+        let cells: Vec<String> = sweep
+            .iter()
+            .map(|(t, m)| format!("θ={t}: {m:.4}"))
+            .collect();
+        println!("{name:>18}: {}", cells.join(" | "));
+    }
+
+    println!("\n== PDHG components (iterations to tol=1e-4, cap 150k) ==");
+    for (name, g) in &cases {
+        println!("{name}:");
+        for (label, iters, gap) in ablation::ablate_pdhg(g, &plat, 1e-4) {
+            println!("    {label:>28}: {iters:>7} iters (gap {gap:.1e})");
+        }
+    }
+}

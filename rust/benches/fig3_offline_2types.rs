@@ -1,0 +1,59 @@
+//! Bench: regenerate Figure 3 — makespan/LP* per application for
+//! HLP-EST / HLP-OLS / HEFT on 2 resource types — and time the offline
+//! pipeline stages on a representative instance.
+//!
+//!     cargo bench --bench fig3_offline_2types
+//!     HETSCHED_BENCH_SCALE=default cargo bench ...   (bigger grid)
+
+use hetsched::algos::{run_offline, solve_hlp, Offline};
+use hetsched::analysis::{ratio_by_app, render_summary_table};
+use hetsched::experiments::{offline, CampaignOpts};
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::substrate::bench::bench;
+use hetsched::workloads::{chameleon, costs::CostModel, Scale};
+
+fn scale() -> Scale {
+    std::env::var("HETSCHED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Smoke)
+}
+
+fn main() {
+    // ---- the figure ----
+    let opts = CampaignOpts {
+        scale: scale(),
+        ..CampaignOpts::smoke()
+    };
+    let t = std::time::Instant::now();
+    let records = offline::run(2, &opts);
+    println!(
+        "Fig.3 campaign: {} records in {:?} (scale {:?})\n",
+        records.len(),
+        t.elapsed(),
+        opts.scale
+    );
+    for algo in ["HLP-EST", "HLP-OLS", "HEFT"] {
+        println!(
+            "{}",
+            render_summary_table(
+                &format!("Fig.3 makespan/LP* — {algo}"),
+                &ratio_by_app(&records, algo)
+            )
+        );
+    }
+
+    // ---- stage micro-benches on posv nb=10 (330 tasks), 16x4 ----
+    let g = chameleon::posv(10, &CostModel::hybrid(320), 3);
+    let plat = Platform::hybrid(16, 4);
+    bench("hlp-solve+round (rust-pdhg, posv nb=10)", || {
+        let _ = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+    });
+    let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+    for algo in Offline::ALL {
+        bench(&format!("{} schedule phase (posv nb=10)", algo.name()), || {
+            let _ = run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::RustPdhg, 1e-4);
+        });
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate Figure 4 — pairwise makespan ratios
+//! HLP-EST/HLP-OLS (left) and HEFT/HLP-OLS (right), grouped by app.
+
+use hetsched::analysis::{mean_improvement_pct, pairwise_by_app, render_summary_table};
+use hetsched::experiments::{offline, CampaignOpts};
+use hetsched::workloads::Scale;
+
+fn main() {
+    let scale = std::env::var("HETSCHED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Smoke);
+    let opts = CampaignOpts {
+        scale,
+        ..CampaignOpts::smoke()
+    };
+    let t = std::time::Instant::now();
+    let records = offline::run(2, &opts);
+    println!("Fig.4 campaign: {} records in {:?}\n", records.len(), t.elapsed());
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.4-left HLP-EST / HLP-OLS (paper: OLS ~8% better on average)",
+            &pairwise_by_app(&records, "HLP-EST", "HLP-OLS")
+        )
+    );
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.4-right HEFT / HLP-OLS (paper: OLS ~2% better on average)",
+            &pairwise_by_app(&records, "HEFT", "HLP-OLS")
+        )
+    );
+    println!(
+        "HLP-OLS vs HLP-EST: {:+.1}% | HLP-OLS vs HEFT: {:+.1}%",
+        mean_improvement_pct(&records, "HLP-OLS", "HLP-EST"),
+        mean_improvement_pct(&records, "HLP-OLS", "HEFT"),
+    );
+}

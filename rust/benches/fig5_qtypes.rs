@@ -1,0 +1,43 @@
+//! Bench: regenerate Figure 5 — the 3-resource-type experiment:
+//! QHLP-EST / QHLP-OLS / QHEFT over LP* (left) and QHEFT/QHLP-OLS
+//! pairwise (right).
+
+use hetsched::analysis::{
+    mean_improvement_pct, pairwise_by_app, ratio_by_app, render_summary_table,
+};
+use hetsched::experiments::{offline, CampaignOpts};
+use hetsched::workloads::Scale;
+
+fn main() {
+    let scale = std::env::var("HETSCHED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Smoke);
+    let opts = CampaignOpts {
+        scale,
+        ..CampaignOpts::smoke()
+    };
+    let t = std::time::Instant::now();
+    let records = offline::run(3, &opts);
+    println!("Fig.5 campaign: {} records in {:?}\n", records.len(), t.elapsed());
+    for algo in ["QHLP-EST", "QHLP-OLS", "QHEFT"] {
+        println!(
+            "{}",
+            render_summary_table(
+                &format!("Fig.5-left makespan/LP* — {algo}"),
+                &ratio_by_app(&records, algo)
+            )
+        );
+    }
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.5-right QHEFT / QHLP-OLS (paper: QHEFT ~5% better on average)",
+            &pairwise_by_app(&records, "QHEFT", "QHLP-OLS")
+        )
+    );
+    println!(
+        "QHEFT vs QHLP-OLS: {:+.1}%",
+        mean_improvement_pct(&records, "QHEFT", "QHLP-OLS")
+    );
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate Figure 6 — online algorithms over LP* (left) and
+//! the mean competitive ratio as a function of √(m/k) (right) — plus
+//! decision-throughput micro-benches of the online engine.
+
+use hetsched::analysis::{ratio_by_app, ratio_by_sqrt_mk, render_summary_table};
+use hetsched::experiments::{online, CampaignOpts};
+use hetsched::platform::Platform;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::substrate::bench::{bench, black_box};
+use hetsched::workloads::{forkjoin, Scale};
+
+fn main() {
+    let scale = std::env::var("HETSCHED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Smoke);
+    let opts = CampaignOpts {
+        scale,
+        ..CampaignOpts::smoke()
+    };
+    let t = std::time::Instant::now();
+    let records = online::run(&opts);
+    println!("Fig.6 campaign: {} records in {:?}\n", records.len(), t.elapsed());
+    for algo in ["ER-LS", "EFT", "Greedy", "Random"] {
+        println!(
+            "{}",
+            render_summary_table(
+                &format!("Fig.6-left makespan/LP* — {algo}"),
+                &ratio_by_app(&records, algo)
+            )
+        );
+    }
+    println!("Fig.6-right mean competitive ratio (±stderr) vs sqrt(m/k):");
+    for algo in ["ER-LS", "EFT", "Greedy"] {
+        let series = ratio_by_sqrt_mk(&records, algo);
+        let pts: Vec<String> = series
+            .iter()
+            .map(|(x, s)| format!("({x:.2}, {:.3}±{:.3})", s.mean, s.stderr))
+            .collect();
+        println!("  {algo:>7}: {}", pts.join(" "));
+    }
+    println!();
+
+    // decision throughput: tasks/second through the online engine
+    let g = forkjoin::forkjoin(500, 10, 1, 5); // 5011 tasks
+    let plat = Platform::hybrid(64, 8);
+    for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+        let name = policy.name();
+        let r = bench(&format!("online engine {name} (5011 tasks, 64x8)"), || {
+            black_box(online_by_id(&g, &plat, &policy));
+        });
+        println!(
+            "    -> {:.0} scheduling decisions/s",
+            r.throughput(g.n_tasks() as f64)
+        );
+    }
+}

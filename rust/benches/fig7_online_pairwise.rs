@@ -1,0 +1,39 @@
+//! Bench: regenerate Figure 7 — pairwise Greedy/ER-LS (left) and
+//! EFT/ER-LS (right) makespan ratios per application.
+
+use hetsched::analysis::{mean_improvement_pct, pairwise_by_app, render_summary_table};
+use hetsched::experiments::{online, CampaignOpts};
+use hetsched::workloads::Scale;
+
+fn main() {
+    let scale = std::env::var("HETSCHED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Smoke);
+    let opts = CampaignOpts {
+        scale,
+        ..CampaignOpts::smoke()
+    };
+    let t = std::time::Instant::now();
+    let records = online::run(&opts);
+    println!("Fig.7 campaign: {} records in {:?}\n", records.len(), t.elapsed());
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.7-left Greedy / ER-LS (paper: ER-LS ~16% better on average)",
+            &pairwise_by_app(&records, "Greedy", "ER-LS")
+        )
+    );
+    println!(
+        "{}",
+        render_summary_table(
+            "Fig.7-right EFT / ER-LS (paper: EFT ~10% better on average)",
+            &pairwise_by_app(&records, "EFT", "ER-LS")
+        )
+    );
+    println!(
+        "ER-LS vs Greedy: {:+.1}% | ER-LS vs EFT: {:+.1}%",
+        mean_improvement_pct(&records, "ER-LS", "Greedy"),
+        mean_improvement_pct(&records, "ER-LS", "EFT"),
+    );
+}

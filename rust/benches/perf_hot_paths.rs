@@ -1,0 +1,124 @@
+//! Bench: hot-path performance (EXPERIMENTS.md §Perf).
+//!
+//! L1+L2: PDHG chunk execution through PJRT (per-bucket iterations/sec,
+//!        and the padding waste vs the Rust mirror on the same LP);
+//! L3:    LP build, Ruiz scaling, list/EST/HEFT schedulers, ranks,
+//!        validator, and the end-to-end offline pipeline.
+//!
+//! The paper's anchor (§6.2): "the linear program resolution took about
+//! 100 seconds" on the biggest instance (potri nb=20, 4620 tasks) with
+//! GLPK; the same relaxation is timed below end-to-end.
+
+use hetsched::algos::solve_hlp_capped;
+use hetsched::graph::paths;
+use hetsched::lp::model::{build_hlp, hlp_warm_start, tighten_hlp_box};
+use hetsched::lp::pdhg::{solve_rust, ChunkBackend, DriveOpts, RustChunk};
+use hetsched::lp::scale::ruiz;
+use hetsched::platform::Platform;
+use hetsched::runtime::{with_runtime, LpBackendKind};
+use hetsched::sched::{est::est_schedule, heft::heft_schedule, list::ols_schedule};
+use hetsched::sim::validate;
+use hetsched::substrate::bench::{bench, bench_with, black_box, BenchOpts};
+use hetsched::workloads::{chameleon, costs::CostModel};
+use std::time::Duration;
+
+fn main() {
+    let plat = Platform::hybrid(16, 4);
+    let g = chameleon::posv(10, &CostModel::hybrid(320), 3); // 330 tasks
+    let alloc: Vec<usize> = (0..g.n_tasks())
+        .map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j)))
+        .collect();
+
+    println!("== L3 hot paths (posv nb=10, 330 tasks, 16x4) ==");
+    bench("build_hlp", || {
+        black_box(build_hlp(&g, &plat));
+    });
+    let (lp, vars) = build_hlp(&g, &plat);
+    bench("ruiz scaling (8 rounds)", || {
+        black_box(ruiz(&lp, 8));
+    });
+    bench("ols_rank (bottom levels)", || {
+        black_box(paths::ols_rank(&g, &alloc));
+    });
+    bench("list scheduler (OLS)", || {
+        black_box(ols_schedule(&g, &plat, &alloc));
+    });
+    bench("EST scheduler", || {
+        black_box(est_schedule(&g, &plat, &alloc));
+    });
+    bench("HEFT scheduler (insertion)", || {
+        black_box(heft_schedule(&g, &plat));
+    });
+    let s = ols_schedule(&g, &plat, &alloc);
+    bench("schedule validator", || {
+        validate(&g, &plat, &s).unwrap();
+    });
+
+    println!("\n== L1+L2: PDHG chunks (scaled LP, 250 iters/chunk) ==");
+    let mut scaled_lp = lp.clone();
+    let warm = hlp_warm_start(&g, &plat, &alloc, &vars);
+    tighten_hlp_box(&mut scaled_lp, &vars, warm[vars.lambda]);
+    let (scaled, _) = ruiz(&scaled_lp, 8);
+    let mut rust_chunk = RustChunk::new(&scaled, 250);
+    let mut z = vec![0.0; scaled.n];
+    let mut y = vec![0.0; scaled.m];
+    let slow = BenchOpts {
+        warmup: Duration::from_millis(300),
+        measure: Duration::from_secs(3),
+        ..Default::default()
+    };
+    let r = bench_with("rust chunk: 250 PDHG iters", &slow, || {
+        black_box(rust_chunk.run_chunk(&mut z, &mut y, 1e-3, 1e-3));
+    });
+    println!("{}", r.report());
+    println!("    -> {:.0} PDHG iters/s (rust, f64)", r.throughput(250.0));
+
+    let pjrt_ok = with_runtime(|rt| {
+        let opts = DriveOpts {
+            tol: 1e-4,
+            warm_start: Some(warm.clone()),
+            ..Default::default()
+        };
+        // end-to-end solves through the artifact
+        let t = std::time::Instant::now();
+        let sol = rt.solve(&scaled_lp, &opts).expect("pjrt solve");
+        println!(
+            "pjrt end-to-end solve: obj {:.4}, {} iters in {:?} ({:.0} iters/s)",
+            sol.obj,
+            sol.iters,
+            t.elapsed(),
+            sol.iters as f64 / t.elapsed().as_secs_f64()
+        );
+    })
+    .is_some();
+    if !pjrt_ok {
+        println!("(PJRT artifacts not present; run `make artifacts`)");
+    }
+
+    println!("\n== paper anchor: full HLP of potri nb=20 (4620 tasks, 64x8) ==");
+    let big = chameleon::potri(20, &CostModel::hybrid(320), 7);
+    let bigplat = Platform::hybrid(64, 8);
+    let t = std::time::Instant::now();
+    let sol = solve_hlp_capped(&big, &bigplat, LpBackendKind::RustPdhg, 1e-3, 120_000);
+    println!(
+        "rust-pdhg: LP* = {:.4} (gap {:.1e}, {} iters) in {:?}  [paper/GLPK: ~100 s]",
+        sol.sol.obj,
+        sol.sol.gap,
+        sol.sol.iters,
+        t.elapsed()
+    );
+
+    // LP solve comparison across backends on a mid instance
+    println!("\n== backend comparison (potrf nb=10, 220 tasks, 16x4) ==");
+    let mid = chameleon::potrf(10, &CostModel::hybrid(320), 3);
+    let (midlp, _) = build_hlp(&mid, &plat);
+    for (name, f) in [
+        ("rust-pdhg", Box::new(|| {
+            black_box(solve_rust(&midlp, &DriveOpts { tol: 1e-4, ..Default::default() }));
+        }) as Box<dyn FnMut()>),
+    ] {
+        let mut f = f;
+        let r = bench_with(name, &slow, &mut *f);
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,70 @@
+//! Bench: the adversarial instances of Theorems 1, 2 and 4
+//! (Tables 1–3, Figures 1–2): measured ratios vs closed forms.
+
+use hetsched::experiments::thm;
+
+fn main() {
+    println!("Theorem 1 — HEFT worst case (Table 1, Fig. 1):");
+    println!(
+        "{:>5} {:>3} {:>12} {:>12} {:>9} {:>9} {:>9}",
+        "m", "k", "HEFT", "GOOD", "ratio", "exact", "asympt"
+    );
+    // note: beyond m ~ 150 the geometric processing times (m/(m+k))^i
+    // collapse below f64 resolution of the HEFT rank comparisons and the
+    // adversarial ordering degrades — same limit the paper's Python
+    // implementation would hit.
+    for (m, k) in [
+        (9usize, 2usize),
+        (16, 2),
+        (16, 4),
+        (36, 4),
+        (64, 8),
+        (100, 10),
+        (128, 8),
+    ] {
+        if k * k > m {
+            continue;
+        }
+        let t = std::time::Instant::now();
+        let (heft_ms, good_ms, ratio) = thm::thm1_run(m, k);
+        println!(
+            "{m:>5} {k:>3} {heft_ms:>12.4} {good_ms:>12.4} {ratio:>9.4} {:>9.4} {:>9.4}   [{:?}]",
+            thm::thm1_exact_ratio(m, k),
+            thm::thm1_predicted_ratio(m, k),
+            t.elapsed()
+        );
+    }
+
+    println!("\nTheorem 2 — HLP-EST tightness (Table 2, Fig. 2):");
+    println!(
+        "{:>5} {:>12} {:>10} {:>10} {:>10}",
+        "m", "LP*", "EST", "OLS", "6-O(1/m)"
+    );
+    for m in [5usize, 10, 20, 40, 80, 160] {
+        let (lp_star, est_ratio, ols_ratio) = thm::thm2_run(m);
+        println!(
+            "{m:>5} {lp_star:>12.4} {est_ratio:>10.4} {ols_ratio:>10.4} {:>10.4}",
+            thm::thm2_worst_makespan(m) / lp_star
+        );
+    }
+
+    println!("\nTheorem 4 — ER-LS lower bound (Table 3):");
+    println!(
+        "{:>5} {:>3} {:>12} {:>12} {:>9} {:>9}",
+        "m", "k", "ER-LS", "OPT", "ratio", "sqrt(m/k)"
+    );
+    for (m, k) in [
+        (16usize, 4usize),
+        (36, 4),
+        (64, 4),
+        (64, 16),
+        (128, 8),
+        (256, 4),
+    ] {
+        let (erls_ms, opt_ms, ratio) = thm::thm4_run(m, k);
+        println!(
+            "{m:>5} {k:>3} {erls_ms:>12.4} {opt_ms:>12.4} {ratio:>9.4} {:>9.4}",
+            (m as f64 / k as f64).sqrt()
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! End-to-end algorithm pipelines — the exact algorithm set the paper
+//! evaluates (§6):
+//!
+//! offline, 2 types:  HLP-EST, HLP-OLS, HEFT
+//! offline, Q types:  QHLP-EST, QHLP-OLS, QHEFT
+//! online,  2 types:  ER-LS, EFT, Greedy, Random (+ R1/R2/R3 rules)
+//!
+//! Each offline pipeline = allocation phase (LP relax + round) followed
+//! by the scheduling phase (EST or OLS); HEFT is the single-phase
+//! baseline.  `LpBackendKind` picks where the relaxation is solved
+//! (PJRT artifact / Rust PDHG / simplex).
+
+use crate::alloc::{greedy_min_time, Allocation};
+use crate::graph::TaskGraph;
+use crate::lp::model::{
+    build_hlp, build_qhlp, hlp_warm_start, qhlp_warm_start, tighten_hlp_box,
+    tighten_qhlp_box, HlpVars, QhlpVars,
+};
+
+use crate::lp::rounding::{round_hlp, round_qhlp};
+use crate::lp::LpSolution;
+use crate::platform::Platform;
+use crate::runtime::{self, LpBackendKind};
+use crate::sched::est::est_schedule;
+use crate::sched::heft::heft_schedule;
+use crate::sched::list::ols_schedule;
+use crate::sim::Schedule;
+
+/// Offline algorithm identifiers (2-type names; the same code handles
+/// the Q-type generalizations of §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Offline {
+    HlpEst,
+    HlpOls,
+    Heft,
+}
+
+impl Offline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Offline::HlpEst => "HLP-EST",
+            Offline::HlpOls => "HLP-OLS",
+            Offline::Heft => "HEFT",
+        }
+    }
+
+    pub const ALL: [Offline; 3] = [Offline::HlpEst, Offline::HlpOls, Offline::Heft];
+}
+
+/// The solved allocation LP for an instance (shared by EST/OLS and by
+/// the figure harnesses as the `LP*` normalizer).
+#[derive(Clone, Debug)]
+pub struct AllocLp {
+    pub sol: LpSolution,
+    pub alloc: Allocation,
+}
+
+/// Solve + round HLP (2 types).  The greedy warm start both seeds PDHG
+/// and tightens the C/λ box to its (feasible) makespan bound.
+pub fn solve_hlp(g: &TaskGraph, plat: &Platform, backend: LpBackendKind, tol: f64) -> AllocLp {
+    solve_hlp_capped(g, plat, backend, tol, crate::lp::pdhg::DriveOpts::default().max_iters)
+}
+
+/// `solve_hlp` with an explicit PDHG iteration budget.
+pub fn solve_hlp_capped(
+    g: &TaskGraph,
+    plat: &Platform,
+    backend: LpBackendKind,
+    tol: f64,
+    max_iters: usize,
+) -> AllocLp {
+    let (mut lp, vars) = build_hlp(g, plat);
+    let warm = hlp_warm_start(g, plat, &greedy_min_time(g), &vars);
+    tighten_hlp_box(&mut lp, &vars, warm[vars.lambda]);
+    let sol = runtime::solve_lp_capped(&lp, backend, tol, Some(warm), max_iters);
+    let alloc = round_hlp(&sol.z, &vars);
+    AllocLp { sol, alloc }
+}
+
+/// Solve + round QHLP (Q ≥ 2 types).
+pub fn solve_qhlp(g: &TaskGraph, plat: &Platform, backend: LpBackendKind, tol: f64) -> AllocLp {
+    solve_qhlp_capped(g, plat, backend, tol, crate::lp::pdhg::DriveOpts::default().max_iters)
+}
+
+/// `solve_qhlp` with an explicit PDHG iteration budget.
+pub fn solve_qhlp_capped(
+    g: &TaskGraph,
+    plat: &Platform,
+    backend: LpBackendKind,
+    tol: f64,
+    max_iters: usize,
+) -> AllocLp {
+    let (mut lp, vars) = build_qhlp(g, plat);
+    let warm = qhlp_warm_start(g, plat, &greedy_min_time(g), &vars);
+    tighten_qhlp_box(&mut lp, &vars, warm[vars.lambda]);
+    let sol = runtime::solve_lp_capped(&lp, backend, tol, Some(warm), max_iters);
+    let alloc = round_qhlp(&sol.z, &vars, g);
+    AllocLp { sol, alloc }
+}
+
+/// Run one offline algorithm; returns the schedule and (for the LP-based
+/// ones) the allocation LP solution, reusing `lp` if provided.
+pub fn run_offline(
+    algo: Offline,
+    g: &TaskGraph,
+    plat: &Platform,
+    lp: Option<&AllocLp>,
+    backend: LpBackendKind,
+    tol: f64,
+) -> (Schedule, Option<AllocLp>) {
+    match algo {
+        Offline::Heft => (heft_schedule(g, plat), None),
+        Offline::HlpEst | Offline::HlpOls => {
+            let owned;
+            let alloc_lp = match lp {
+                Some(l) => l,
+                None => {
+                    owned = if plat.n_types() == 2 && g.n_types() == 2 {
+                        solve_hlp(g, plat, backend, tol)
+                    } else {
+                        solve_qhlp(g, plat, backend, tol)
+                    };
+                    &owned
+                }
+            };
+            let s = match algo {
+                Offline::HlpEst => est_schedule(g, plat, &alloc_lp.alloc),
+                Offline::HlpOls => ols_schedule(g, plat, &alloc_lp.alloc),
+                Offline::Heft => unreachable!(),
+            };
+            (s, Some(alloc_lp.clone()))
+        }
+    }
+}
+
+/// Expose the LP-facade with explicit warm start (used by runtime).
+pub fn lp_vars_hlp(g: &TaskGraph, plat: &Platform) -> HlpVars {
+    build_hlp(g, plat).1
+}
+
+pub fn lp_vars_qhlp(g: &TaskGraph, plat: &Platform) -> QhlpVars {
+    build_qhlp(g, plat).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::validate;
+    use crate::workloads::{chameleon, costs::CostModel};
+
+    #[test]
+    fn all_offline_algorithms_on_potrf() {
+        let g = chameleon::potrf(5, &CostModel::hybrid(320), 3);
+        let plat = Platform::hybrid(4, 2);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        assert!(hlp.sol.obj > 0.0);
+        for algo in Offline::ALL {
+            let (s, _) = run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::RustPdhg, 1e-4);
+            validate(&g, &plat, &s).unwrap();
+            // the 6-approximation certificate, with LP tolerance slack
+            assert!(
+                s.makespan <= 6.0 * hlp.sol.obj * 1.05 + 1e-9,
+                "{}: {} > 6 x {}",
+                algo.name(),
+                s.makespan,
+                hlp.sol.obj
+            );
+        }
+    }
+
+    #[test]
+    fn qhlp_three_types_pipeline() {
+        let g = chameleon::posv(5, &CostModel::three_type(320), 3);
+        let plat = Platform::new(vec![4, 2, 1]);
+        let qhlp = solve_qhlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        for algo in [Offline::HlpEst, Offline::HlpOls, Offline::Heft] {
+            let (s, _) =
+                run_offline(algo, &g, &plat, Some(&qhlp), LpBackendKind::RustPdhg, 1e-4);
+            validate(&g, &plat, &s).unwrap();
+            // Q(Q+1) = 12 certificate
+            assert!(s.makespan <= 12.0 * qhlp.sol.obj * 1.05);
+        }
+    }
+
+    #[test]
+    fn lp_star_is_lower_bound_for_makespan() {
+        let g = chameleon::getrf(5, &CostModel::hybrid(128), 5);
+        let plat = Platform::hybrid(16, 2);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-5);
+        for algo in Offline::ALL {
+            let (s, _) = run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::RustPdhg, 1e-5);
+            // LP* (within tolerance) lower-bounds any feasible makespan
+            assert!(s.makespan >= hlp.sol.obj * 0.99, "{}", algo.name());
+        }
+    }
+}

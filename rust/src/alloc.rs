@@ -1,0 +1,127 @@
+//! Allocation-phase policies (which processor *type* runs each task).
+//!
+//! The HLP/QHLP rounding allocations live in [`crate::lp::rounding`];
+//! here are the greedy low-complexity rules of §4.2 plus the baselines:
+//!
+//! * **R1**: `p̄_j/m ≤ p̠_j/k` → CPU (load-normalized comparison)
+//! * **R2**: `p̄_j/√m ≤ p̠_j/√k` → CPU (the rule inside ER-LS's Step 2)
+//! * **R3**: `p̄_j ≤ p̠_j` → CPU (pure speed comparison)
+//! * **Greedy**: fastest type (Q-generic; equals R3 for 2 types)
+//! * **Random**: uniform type choice (Q-generic)
+
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+use crate::substrate::rng::Rng;
+
+pub type Allocation = Vec<usize>;
+
+/// Rule R1 for one task: CPU iff `p̄/m ≤ p̠/k`.
+pub fn r1_side(p_cpu: f64, p_gpu: f64, m: usize, k: usize) -> usize {
+    usize::from(p_cpu / m as f64 > p_gpu / k as f64)
+}
+
+/// Rule R2 for one task: CPU iff `p̄/√m ≤ p̠/√k`.
+pub fn r2_side(p_cpu: f64, p_gpu: f64, m: usize, k: usize) -> usize {
+    usize::from(p_cpu / (m as f64).sqrt() > p_gpu / (k as f64).sqrt())
+}
+
+/// Rule R3 for one task: CPU iff `p̄ ≤ p̠`.
+pub fn r3_side(p_cpu: f64, p_gpu: f64) -> usize {
+    usize::from(p_cpu > p_gpu)
+}
+
+pub fn rule_r1(g: &TaskGraph, plat: &Platform) -> Allocation {
+    assert_eq!(g.n_types(), 2);
+    (0..g.n_tasks())
+        .map(|j| r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k()))
+        .collect()
+}
+
+pub fn rule_r2(g: &TaskGraph, plat: &Platform) -> Allocation {
+    assert_eq!(g.n_types(), 2);
+    (0..g.n_tasks())
+        .map(|j| r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k()))
+        .collect()
+}
+
+pub fn rule_r3(g: &TaskGraph, _plat: &Platform) -> Allocation {
+    assert_eq!(g.n_types(), 2);
+    (0..g.n_tasks())
+        .map(|j| r3_side(g.p_cpu(j), g.p_gpu(j)))
+        .collect()
+}
+
+/// Fastest-type allocation (the "Greedy" baseline of §6.3, Q-generic).
+pub fn greedy_min_time(g: &TaskGraph) -> Allocation {
+    (0..g.n_tasks())
+        .map(|j| {
+            (0..g.n_types())
+                .min_by(|&a, &b| g.time_on(j, a).partial_cmp(&g.time_on(j, b)).unwrap())
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Uniform random type per task (the "Random" baseline of §6.3).
+pub fn random_alloc(g: &TaskGraph, n_types: usize, rng: &mut Rng) -> Allocation {
+    (0..g.n_tasks()).map(|_| rng.below(n_types)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+
+    fn g2() -> TaskGraph {
+        let mut b = Builder::new("g");
+        b.add_task("fast-gpu", vec![10.0, 1.0]);
+        b.add_task("fast-cpu", vec![1.0, 10.0]);
+        b.add_task("mild-gpu", vec![3.0, 2.0]);
+        b.build()
+    }
+
+    #[test]
+    fn r3_pure_speed() {
+        let g = g2();
+        assert_eq!(rule_r3(&g, &Platform::hybrid(4, 1)), vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn r1_load_normalized() {
+        let g = g2();
+        // m=16, k=2: CPU iff p̄/16 <= p̠/2 i.e. p̄ <= 8 p̠
+        // task0: 10 <= 8 -> false -> GPU; task2: 3 <= 16 -> CPU
+        assert_eq!(rule_r1(&g, &Platform::hybrid(16, 2)), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn r2_between_r1_and_r3() {
+        let g = g2();
+        // m=16,k=2: CPU iff p̄/4 <= p̠/1.414 i.e. p̄ <= 2.83 p̠
+        // task2: 3 <= 5.66 -> CPU
+        assert_eq!(rule_r2(&g, &Platform::hybrid(16, 2)), vec![1, 0, 0]);
+        // m=16,k=16: R2 == R3
+        assert_eq!(
+            rule_r2(&g, &Platform::hybrid(16, 16)),
+            rule_r3(&g, &Platform::hybrid(16, 16))
+        );
+    }
+
+    #[test]
+    fn greedy_is_argmin() {
+        let mut b = Builder::new("q3");
+        b.add_task("t", vec![3.0, 2.0, 1.0]);
+        b.add_task("u", vec![1.0, 2.0, 3.0]);
+        let g = b.build();
+        assert_eq!(greedy_min_time(&g), vec![2, 0]);
+    }
+
+    #[test]
+    fn random_alloc_in_range_and_deterministic() {
+        let g = g2();
+        let a = random_alloc(&g, 2, &mut Rng::new(4));
+        let b = random_alloc(&g, 2, &mut Rng::new(4));
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&q| q < 2));
+    }
+}

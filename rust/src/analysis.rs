@@ -1,0 +1,220 @@
+//! Campaign result records and the aggregations behind Figures 3–7:
+//! per-app ratio-to-LP* distributions, pairwise algorithm ratios, and
+//! competitive-ratio-vs-√(m/k) series.
+
+use std::collections::BTreeMap;
+
+use crate::substrate::stats::{render_csv, render_table, Summary};
+
+/// One (instance, machine config, algorithm) measurement.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// instance label, e.g. "potrf-nb10-bs320"
+    pub instance: String,
+    /// application name, e.g. "potrf" (figure grouping key)
+    pub app: String,
+    /// machine config label, e.g. "64x8"
+    pub config: String,
+    pub algo: String,
+    pub makespan: f64,
+    /// optimal value of the (Q)HLP relaxation for this (instance, config)
+    pub lp_star: f64,
+    /// √(m/k) of the config (Fig. 6-right x-axis; 0 for Q≠2)
+    pub sqrt_mk: f64,
+}
+
+impl Record {
+    /// makespan / LP* — the y-axis of Figs. 3, 5, 6.
+    pub fn ratio(&self) -> f64 {
+        self.makespan / self.lp_star
+    }
+}
+
+/// Per-app summaries of makespan/LP* for one algorithm (Fig. 3/5/6-left).
+pub fn ratio_by_app(records: &[Record], algo: &str) -> BTreeMap<String, Summary> {
+    let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.algo == algo) {
+        groups.entry(r.app.clone()).or_default().push(r.ratio());
+    }
+    groups
+        .into_iter()
+        .map(|(k, v)| (k, Summary::of(&v)))
+        .collect()
+}
+
+/// Per-app summaries of makespan(A)/makespan(B) over matched
+/// (instance, config) pairs (Fig. 4/5-right/7).
+pub fn pairwise_by_app(records: &[Record], a: &str, b: &str) -> BTreeMap<String, Summary> {
+    let mut index: BTreeMap<(&str, &str), f64> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.algo == b) {
+        index.insert((r.instance.as_str(), r.config.as_str()), r.makespan);
+    }
+    let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.algo == a) {
+        if let Some(mb) = index.get(&(r.instance.as_str(), r.config.as_str())) {
+            groups
+                .entry(r.app.clone())
+                .or_default()
+                .push(r.makespan / mb);
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(k, v)| (k, Summary::of(&v)))
+        .collect()
+}
+
+/// Mean competitive ratio per machine config, keyed by √(m/k)
+/// (Fig. 6-right series; one entry per config value).
+pub fn ratio_by_sqrt_mk(records: &[Record], algo: &str) -> Vec<(f64, Summary)> {
+    let mut groups: BTreeMap<u64, (f64, Vec<f64>)> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.algo == algo) {
+        let key = (r.sqrt_mk * 1e6) as u64;
+        groups
+            .entry(key)
+            .or_insert((r.sqrt_mk, Vec::new()))
+            .1
+            .push(r.ratio());
+    }
+    groups
+        .into_values()
+        .map(|(x, v)| (x, Summary::of(&v)))
+        .collect()
+}
+
+/// Overall mean improvement of algo `a` over algo `b` in percent
+/// (positive = a is better/lower makespan), as the paper quotes.
+pub fn mean_improvement_pct(records: &[Record], a: &str, b: &str) -> f64 {
+    let per_app = pairwise_by_app(records, a, b);
+    let means: Vec<f64> = per_app.values().map(|s| s.mean).collect();
+    if means.is_empty() {
+        return 0.0;
+    }
+    let overall = means.iter().sum::<f64>() / means.len() as f64;
+    (1.0 - overall) * 100.0
+}
+
+/// Render a per-app summary map as a table.
+pub fn render_summary_table(title: &str, groups: &BTreeMap<String, Summary>) -> String {
+    let rows: Vec<Vec<String>> = groups
+        .iter()
+        .map(|(app, s)| {
+            vec![
+                app.clone(),
+                format!("{}", s.n),
+                format!("{:.4}", s.mean),
+                format!("{:.4}", s.stderr),
+                format!("{:.4}", s.min),
+                format!("{:.4}", s.p50),
+                format!("{:.4}", s.max),
+            ]
+        })
+        .collect();
+    format!(
+        "## {title}\n{}",
+        render_table(&["app", "n", "mean", "stderr", "min", "p50", "max"], &rows)
+    )
+}
+
+/// CSV dump of raw records (one row per measurement).
+pub fn records_csv(records: &[Record]) -> String {
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            vec![
+                r.instance.clone(),
+                r.app.clone(),
+                r.config.clone(),
+                r.algo.clone(),
+                format!("{:.6}", r.makespan),
+                format!("{:.6}", r.lp_star),
+                format!("{:.6}", r.ratio()),
+                format!("{:.4}", r.sqrt_mk),
+            ]
+        })
+        .collect();
+    render_csv(
+        &["instance", "app", "config", "algo", "makespan", "lp_star", "ratio", "sqrt_mk"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(instance: &str, app: &str, config: &str, algo: &str, ms: f64, lp: f64) -> Record {
+        Record {
+            instance: instance.into(),
+            app: app.into(),
+            config: config.into(),
+            algo: algo.into(),
+            makespan: ms,
+            lp_star: lp,
+            sqrt_mk: 2.0,
+        }
+    }
+
+    #[test]
+    fn ratio_by_app_groups() {
+        let records = vec![
+            rec("i1", "potrf", "16x2", "HEFT", 2.0, 1.0),
+            rec("i2", "potrf", "16x2", "HEFT", 4.0, 2.0),
+            rec("i3", "posv", "16x2", "HEFT", 3.0, 1.0),
+            rec("i1", "potrf", "16x2", "HLP-OLS", 1.5, 1.0),
+        ];
+        let g = ratio_by_app(&records, "HEFT");
+        assert_eq!(g.len(), 2);
+        assert_eq!(g["potrf"].n, 2);
+        assert!((g["potrf"].mean - 2.0).abs() < 1e-12);
+        assert!((g["posv"].mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pairwise_matches_instances() {
+        let records = vec![
+            rec("i1", "potrf", "16x2", "HLP-EST", 2.0, 1.0),
+            rec("i1", "potrf", "16x2", "HLP-OLS", 1.6, 1.0),
+            rec("i1", "potrf", "32x4", "HLP-EST", 3.0, 1.0),
+            rec("i1", "potrf", "32x4", "HLP-OLS", 1.5, 1.0),
+            // unmatched record ignored
+            rec("i9", "potrf", "16x2", "HLP-EST", 9.0, 1.0),
+        ];
+        let g = pairwise_by_app(&records, "HLP-EST", "HLP-OLS");
+        assert_eq!(g["potrf"].n, 2);
+        assert!((g["potrf"].mean - (2.0 / 1.6 + 2.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn improvement_percentage_sign() {
+        let records = vec![
+            rec("i1", "a", "c", "X", 0.9, 1.0),
+            rec("i1", "a", "c", "Y", 1.0, 1.0),
+        ];
+        // X beats Y by 10%
+        assert!((mean_improvement_pct(&records, "X", "Y") - 10.0).abs() < 1e-9);
+        assert!(mean_improvement_pct(&records, "Y", "X") < 0.0);
+    }
+
+    #[test]
+    fn sqrt_mk_series() {
+        let mut records = vec![rec("i1", "a", "16x4", "ER-LS", 2.0, 1.0)];
+        records[0].sqrt_mk = 2.0;
+        let mut r2 = rec("i2", "a", "64x4", "ER-LS", 8.0, 2.0);
+        r2.sqrt_mk = 4.0;
+        records.push(r2);
+        let series = ratio_by_sqrt_mk(&records, "ER-LS");
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].0, 2.0);
+        assert_eq!(series[1].1.mean, 4.0);
+    }
+
+    #[test]
+    fn renders() {
+        let records = vec![rec("i1", "a", "c", "X", 2.0, 1.0)];
+        let t = render_summary_table("T", &ratio_by_app(&records, "X"));
+        assert!(t.contains("## T") && t.contains("| a"));
+        let csv = records_csv(&records);
+        assert!(csv.lines().count() == 2);
+    }
+}

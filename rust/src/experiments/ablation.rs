@@ -1,0 +1,199 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! * **OLS priority** (§4.1): the paper ranks by the *allocated* time
+//!   (HLP-rank).  Alternatives: HEFT's average-time rank, submission
+//!   order, and a random priority — how much does the rank choice buy?
+//! * **Rounding threshold** (§3): `x_j ≥ θ` → CPU with θ = 0.5 in the
+//!   paper; sweep θ.
+//! * **PDHG solver** (§Perf): warm start / Ruiz / restart-to-average
+//!   on-off grid, measured in iterations-to-tolerance.
+
+use crate::alloc::greedy_min_time;
+use crate::graph::{paths, TaskGraph};
+use crate::lp::model::{build_hlp, hlp_warm_start, tighten_hlp_box};
+use crate::lp::pdhg::{drive, ChunkBackend, ChunkResult, DriveOpts, RustChunk};
+
+use crate::platform::Platform;
+use crate::runtime::LpBackendKind;
+use crate::sched::list::list_schedule;
+use crate::substrate::rng::Rng;
+
+/// Priority rules for the OLS scheduling phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// the paper's rank: bottom level under the HLP allocation
+    HlpRank,
+    /// HEFT-style rank: bottom level under unit-weighted average times
+    AvgRank,
+    /// submission order (task id, descending so earlier tasks first)
+    IdOrder,
+    /// random priorities (seeded)
+    Random(u64),
+}
+
+impl Priority {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::HlpRank => "hlp-rank",
+            Priority::AvgRank => "avg-rank",
+            Priority::IdOrder => "id-order",
+            Priority::Random(_) => "random",
+        }
+    }
+
+    pub fn compute(&self, g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Vec<f64> {
+        match self {
+            Priority::HlpRank => paths::ols_rank(g, alloc),
+            Priority::AvgRank => paths::heft_rank(g, &plat.counts),
+            Priority::IdOrder => (0..g.n_tasks()).map(|j| -(j as f64)).collect(),
+            Priority::Random(seed) => {
+                let mut rng = Rng::new(*seed);
+                (0..g.n_tasks()).map(|_| rng.f64()).collect()
+            }
+        }
+    }
+}
+
+/// Makespans of list scheduling under each priority rule, same allocation.
+pub fn ablate_priority(
+    g: &TaskGraph,
+    plat: &Platform,
+    tol: f64,
+) -> Vec<(&'static str, f64)> {
+    let hlp = crate::algos::solve_hlp(g, plat, LpBackendKind::RustPdhg, tol);
+    [
+        Priority::HlpRank,
+        Priority::AvgRank,
+        Priority::IdOrder,
+        Priority::Random(7),
+    ]
+    .iter()
+    .map(|p| {
+        let prio = p.compute(g, plat, &hlp.alloc);
+        let s = list_schedule(g, plat, &hlp.alloc, &prio);
+        (p.name(), s.makespan)
+    })
+    .collect()
+}
+
+/// Makespans of HLP-EST under different rounding thresholds θ.
+pub fn ablate_rounding_threshold(
+    g: &TaskGraph,
+    plat: &Platform,
+    thetas: &[f64],
+    tol: f64,
+) -> Vec<(f64, f64)> {
+    let (mut lp, vars) = build_hlp(g, plat);
+    let warm = hlp_warm_start(g, plat, &greedy_min_time(g), &vars);
+    tighten_hlp_box(&mut lp, &vars, warm[vars.lambda]);
+    let sol = crate::runtime::solve_lp(&lp, LpBackendKind::RustPdhg, tol, Some(warm));
+    thetas
+        .iter()
+        .map(|&theta| {
+            let alloc: Vec<usize> = (0..vars.n_tasks)
+                .map(|j| usize::from(sol.z[vars.x(j)] < theta))
+                .collect();
+            let s = crate::sched::est::est_schedule(g, plat, &alloc);
+            (theta, s.makespan)
+        })
+        .collect()
+}
+
+/// A chunk backend wrapper that disables restart-to-average by reporting
+/// an infinitely bad average (the driver then never adopts it).
+struct NoRestart(RustChunk);
+
+impl ChunkBackend for NoRestart {
+    fn run_chunk(&mut self, z: &mut [f64], y: &mut [f64], tau: f64, sigma: f64) -> ChunkResult {
+        let mut res = self.0.run_chunk(z, y, tau, sigma);
+        res.avg.pres = f64::INFINITY;
+        res
+    }
+    fn load_avg(&self, z: &mut [f64], y: &mut [f64]) {
+        self.0.load_avg(z, y);
+    }
+    fn iters_per_chunk(&self) -> usize {
+        self.0.iters_per_chunk()
+    }
+    fn name(&self) -> &'static str {
+        "pdhg-rust-norestart"
+    }
+}
+
+/// PDHG solver ablation: iterations to tolerance for each on/off combo.
+/// Returns (label, iterations, achieved_gap).
+pub fn ablate_pdhg(g: &TaskGraph, plat: &Platform, tol: f64) -> Vec<(String, usize, f64)> {
+    let (mut lp, vars) = build_hlp(g, plat);
+    let warm = hlp_warm_start(g, plat, &greedy_min_time(g), &vars);
+    tighten_hlp_box(&mut lp, &vars, warm[vars.lambda]);
+    let mut out = Vec::new();
+    for (warm_on, ruiz_on, restart_on) in [
+        (true, true, true),
+        (false, true, true),
+        (true, false, true),
+        (true, true, false),
+        (false, false, false),
+    ] {
+        let opts = DriveOpts {
+            tol,
+            max_iters: 150_000,
+            ruiz_iters: if ruiz_on { 8 } else { 0 },
+            warm_start: warm_on.then(|| warm.clone()),
+        };
+        let sol = if restart_on {
+            drive(&lp, &opts, |scaled| RustChunk::new(scaled, 250))
+        } else {
+            drive(&lp, &opts, |scaled| NoRestart(RustChunk::new(scaled, 250)))
+        };
+        let label = format!(
+            "warm={} ruiz={} restart={}",
+            u8::from(warm_on),
+            u8::from(ruiz_on),
+            u8::from(restart_on)
+        );
+        out.push((label, sol.iters, sol.gap));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{chameleon, costs::CostModel};
+
+    #[test]
+    fn priority_ablation_hlp_rank_not_worse_than_random() {
+        let g = chameleon::posv(8, &CostModel::hybrid(320), 5);
+        let plat = Platform::hybrid(8, 2);
+        let results = ablate_priority(&g, &plat, 1e-4);
+        assert_eq!(results.len(), 4);
+        let get = |n: &str| results.iter().find(|(a, _)| *a == n).unwrap().1;
+        // the paper's rank should not lose to random priorities here
+        assert!(get("hlp-rank") <= get("random") * 1.05);
+    }
+
+    #[test]
+    fn threshold_half_is_reasonable() {
+        let g = chameleon::potrf(8, &CostModel::hybrid(320), 5);
+        let plat = Platform::hybrid(8, 2);
+        let sweep = ablate_rounding_threshold(&g, &plat, &[0.25, 0.5, 0.75], 1e-4);
+        assert_eq!(sweep.len(), 3);
+        for (_, ms) in &sweep {
+            assert!(*ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn pdhg_ablation_full_config_converges_fastest_or_close() {
+        let g = chameleon::potrf(8, &CostModel::hybrid(320), 5);
+        let plat = Platform::hybrid(8, 2);
+        let rows = ablate_pdhg(&g, &plat, 1e-4);
+        assert_eq!(rows.len(), 5);
+        let full = rows[0].1;
+        let bare = rows[4].1;
+        assert!(
+            full <= bare,
+            "full config ({full}) should beat bare PDHG ({bare})"
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! LP* cache: solving the (Q)HLP relaxation is the expensive step of the
+//! campaign (the paper: ~100 s for the biggest instance), and Figs. 3/4
+//! and 6/7 share the same (instance, config) LPs — so solved relaxations
+//! (objective + rounded allocation) are persisted as JSON.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::algos::AllocLp;
+use crate::lp::LpSolution;
+use crate::substrate::json::{parse, Json};
+
+#[derive(Default)]
+pub struct LpCache {
+    entries: BTreeMap<String, (f64, f64, Vec<usize>)>, // obj, lower_bound, alloc
+    dirty: bool,
+}
+
+impl LpCache {
+    pub fn load(path: &Path) -> LpCache {
+        let mut cache = LpCache::default();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(Json::Obj(map)) = parse(&text) {
+                for (k, v) in map {
+                    let (Some(obj), Some(lb), Some(alloc)) = (
+                        v.get("obj").and_then(Json::as_f64),
+                        v.get("lb").and_then(Json::as_f64),
+                        v.get("alloc").and_then(Json::as_arr),
+                    ) else {
+                        continue;
+                    };
+                    let alloc: Option<Vec<usize>> =
+                        alloc.iter().map(|x| x.as_usize()).collect();
+                    if let Some(alloc) = alloc {
+                        cache.entries.insert(k, (obj, lb, alloc));
+                    }
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &str) -> Option<AllocLp> {
+        self.entries.get(key).map(|(obj, lb, alloc)| AllocLp {
+            sol: LpSolution {
+                z: Vec::new(),
+                obj: *obj,
+                lower_bound: *lb,
+                gap: 0.0,
+                iters: 0,
+                backend: "cache",
+            },
+            alloc: alloc.clone(),
+        })
+    }
+
+    pub fn put(&mut self, key: &str, value: &AllocLp) {
+        self.entries.insert(
+            key.to_string(),
+            (value.sol.obj, value.sol.lower_bound, value.alloc.clone()),
+        );
+        self.dirty = true;
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let obj: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(k, (obj, lb, alloc))| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("obj", Json::Num(*obj)),
+                        ("lb", Json::Num(*lb)),
+                        (
+                            "alloc",
+                            Json::Arr(alloc.iter().map(|&a| Json::Num(a as f64)).collect()),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        std::fs::write(path, Json::Obj(obj).to_string())
+    }
+}
+
+/// Cache key for an (instance, platform, formulation, tolerance) solve.
+pub fn cache_key(instance: &str, config: &str, n_types: usize, tol: f64) -> String {
+    format!("{instance}|{config}|q{n_types}|tol{tol:.0e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AllocLp {
+        AllocLp {
+            sol: LpSolution {
+                z: vec![],
+                obj: 3.25,
+                lower_bound: 3.2,
+                gap: 0.0,
+                iters: 10,
+                backend: "test",
+            },
+            alloc: vec![0, 1, 1, 0],
+        }
+    }
+
+    #[test]
+    fn roundtrip_via_disk() {
+        let dir = std::env::temp_dir().join(format!("hetsched-cache-{}", std::process::id()));
+        let path = dir.join("cache.json");
+        let mut c = LpCache::default();
+        let key = cache_key("potrf-nb5-bs320", "16x2", 2, 1e-4);
+        assert!(c.get(&key).is_none());
+        c.put(&key, &sample());
+        c.save(&path).unwrap();
+        let c2 = LpCache::load(&path);
+        let got = c2.get(&key).unwrap();
+        assert_eq!(got.sol.obj, 3.25);
+        assert_eq!(got.alloc, vec![0, 1, 1, 0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let c = LpCache::load(Path::new("/nonexistent/c.json"));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn keys_distinguish_dimensions() {
+        assert_ne!(
+            cache_key("a", "16x2", 2, 1e-4),
+            cache_key("a", "16x2", 3, 1e-4)
+        );
+        assert_ne!(
+            cache_key("a", "16x2", 2, 1e-4),
+            cache_key("a", "16x2", 2, 1e-3)
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! Offline campaign (Figs. 3–5): every benchmark instance × machine
+//! config × {HLP-EST, HLP-OLS, HEFT} (2 types) or the QHLP versions
+//! (3 types), normalized by the LP* of the corresponding relaxation.
+
+use std::sync::Mutex;
+
+use crate::algos::{run_offline, solve_hlp_capped, solve_qhlp_capped, AllocLp, Offline};
+use crate::analysis::Record;
+use crate::platform::{self, Platform};
+use crate::sim::validate;
+use crate::substrate::pool::parallel_map;
+use crate::workloads::{instances, Scale};
+
+use super::cache::{cache_key, LpCache};
+use super::CampaignOpts;
+
+/// Machine-configuration grid for the given type count and scale.
+pub fn configs(n_types: usize, scale: Scale) -> Vec<Platform> {
+    match (n_types, scale) {
+        (2, Scale::Full) => platform::paper_two_type_configs(),
+        (2, Scale::Default) => platform::paper_two_type_configs(),
+        (2, Scale::Smoke) => platform::reduced_two_type_configs(),
+        (3, Scale::Full) => platform::paper_three_type_configs(),
+        (3, Scale::Default) => platform::reduced_three_type_configs(),
+        (3, Scale::Smoke) => vec![platform::reduced_three_type_configs()[0].clone()],
+        _ => panic!("unsupported type count {n_types}"),
+    }
+}
+
+/// Run the offline campaign for `n_types` ∈ {2, 3}.
+/// Returns one record per (instance, config, algorithm).
+pub fn run(n_types: usize, opts: &CampaignOpts) -> Vec<Record> {
+    let insts = instances(opts.scale);
+    let cfgs = configs(n_types, opts.scale);
+    let cache = Mutex::new(
+        opts.cache_path
+            .as_ref()
+            .map(|p| LpCache::load(p))
+            .unwrap_or_default(),
+    );
+
+    // work items: one per (instance, config)
+    let mut items = Vec::new();
+    for inst in &insts {
+        for cfg in &cfgs {
+            items.push((inst.clone(), cfg.clone()));
+        }
+    }
+
+    let records: Vec<Vec<Record>> = parallel_map(items, opts.workers, |(inst, cfg)| {
+        let g = inst.generate(n_types);
+        let key = cache_key(&inst.label(), &cfg.label(), n_types, opts.tol);
+        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
+        let alloc_lp = cached.unwrap_or_else(|| {
+            let solved = if n_types == 2 {
+                solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters)
+            } else {
+                solve_qhlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters)
+            };
+            cache.lock().unwrap().put(&key, &solved);
+            solved
+        });
+
+        let sqrt_mk = if n_types == 2 {
+            (cfg.m() as f64 / cfg.k() as f64).sqrt()
+        } else {
+            0.0
+        };
+        Offline::ALL
+            .iter()
+            .map(|&algo| {
+                let (s, _) =
+                    run_offline(algo, &g, &cfg, Some(&alloc_lp), opts.backend, opts.tol);
+                debug_assert!(validate(&g, &cfg, &s).is_ok());
+                let name = if n_types == 2 {
+                    algo.name().to_string()
+                } else {
+                    format!("Q{}", algo.name())
+                };
+                Record {
+                    instance: inst.label(),
+                    app: inst.app().to_string(),
+                    config: cfg.label(),
+                    algo: name,
+                    makespan: s.makespan,
+                    lp_star: alloc_lp.sol.obj,
+                    sqrt_mk,
+                }
+            })
+            .collect()
+    });
+
+    if let Some(path) = &opts.cache_path {
+        cache.lock().unwrap().save(path).ok();
+    }
+    records.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{mean_improvement_pct, pairwise_by_app, ratio_by_app};
+    use crate::runtime::LpBackendKind;
+
+    fn smoke_opts() -> CampaignOpts {
+        CampaignOpts {
+            backend: LpBackendKind::RustPdhg,
+            workers: 4,
+            ..CampaignOpts::smoke()
+        }
+    }
+
+    #[test]
+    fn smoke_campaign_two_types() {
+        let records = run(2, &smoke_opts());
+        // 6 instances x 4 smoke configs x 3 algos
+        assert_eq!(records.len(), 6 * 4 * 3);
+        // every ratio >= ~1 (LP* is a lower bound) and <= 6 (approx ratio)
+        for r in &records {
+            assert!(r.ratio() > 0.95, "{:?}", r);
+            assert!(r.ratio() < 6.3, "{:?}", r);
+        }
+        // the paper's qualitative claim: HLP-OLS beats HLP-EST on average
+        let imp = mean_improvement_pct(&records, "HLP-OLS", "HLP-EST");
+        assert!(imp > 0.0, "OLS should improve on EST, got {imp:.1}%");
+        // grouping covers all 6 apps
+        assert_eq!(ratio_by_app(&records, "HEFT").len(), 6);
+    }
+
+    #[test]
+    fn smoke_campaign_three_types() {
+        let records = run(3, &smoke_opts());
+        assert_eq!(records.len(), 6 * 1 * 3);
+        for r in &records {
+            assert!(r.ratio() > 0.95 && r.ratio() < 12.5, "{:?}", r);
+        }
+        let pair = pairwise_by_app(&records, "QHEFT", "QHLP-OLS");
+        assert!(!pair.is_empty());
+    }
+}

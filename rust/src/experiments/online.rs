@@ -1,0 +1,132 @@
+//! Online campaign (Figs. 6–7): ER-LS vs the EFT / Greedy / Random
+//! baselines on the 2-type configs, normalized by LP* (which also feeds
+//! the competitive-ratio-vs-√(m/k) series of Fig. 6-right).
+
+use std::sync::Mutex;
+
+use crate::algos::{solve_hlp_capped, AllocLp};
+use crate::analysis::Record;
+use crate::sched::online::{online_by_id, OnlinePolicy};
+use crate::sim::validate;
+use crate::substrate::pool::parallel_map;
+use crate::substrate::rng::seed_for;
+use crate::workloads::instances;
+
+use super::cache::{cache_key, LpCache};
+use super::offline::configs;
+use super::CampaignOpts;
+
+/// The §6.3 policy set.
+pub fn policies(instance_label: &str) -> Vec<OnlinePolicy> {
+    vec![
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed_for(&["online-random", instance_label])),
+    ]
+}
+
+/// Run the online campaign (2 types).
+pub fn run(opts: &CampaignOpts) -> Vec<Record> {
+    let insts = instances(opts.scale);
+    let cfgs = configs(2, opts.scale);
+    let cache = Mutex::new(
+        opts.cache_path
+            .as_ref()
+            .map(|p| LpCache::load(p))
+            .unwrap_or_default(),
+    );
+
+    let mut items = Vec::new();
+    for inst in &insts {
+        for cfg in &cfgs {
+            items.push((inst.clone(), cfg.clone()));
+        }
+    }
+
+    let records: Vec<Vec<Record>> = parallel_map(items, opts.workers, |(inst, cfg)| {
+        let g = inst.generate(2);
+        let key = cache_key(&inst.label(), &cfg.label(), 2, opts.tol);
+        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
+        let alloc_lp = cached.unwrap_or_else(|| {
+            let solved = solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters);
+            cache.lock().unwrap().put(&key, &solved);
+            solved
+        });
+        let sqrt_mk = (cfg.m() as f64 / cfg.k() as f64).sqrt();
+
+        policies(&inst.label())
+            .iter()
+            .map(|policy| {
+                let s = online_by_id(&g, &cfg, policy);
+                debug_assert!(validate(&g, &cfg, &s).is_ok());
+                Record {
+                    instance: inst.label(),
+                    app: inst.app().to_string(),
+                    config: cfg.label(),
+                    algo: policy.name().to_string(),
+                    makespan: s.makespan,
+                    lp_star: alloc_lp.sol.obj,
+                    sqrt_mk,
+                }
+            })
+            .collect()
+    });
+
+    if let Some(path) = &opts.cache_path {
+        cache.lock().unwrap().save(path).ok();
+    }
+    records.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{mean_improvement_pct, ratio_by_sqrt_mk};
+    use crate::runtime::LpBackendKind;
+
+    #[test]
+    fn smoke_online_campaign() {
+        let opts = CampaignOpts {
+            backend: LpBackendKind::RustPdhg,
+            workers: 4,
+            ..CampaignOpts::smoke()
+        };
+        let records = run(&opts);
+        // 6 instances x 4 configs x 4 policies
+        assert_eq!(records.len(), 6 * 4 * 4);
+        for r in &records {
+            assert!(r.ratio() > 0.95, "{:?}", r);
+        }
+        // ER-LS stays below its theoretical 4*sqrt(m/k) bound vs LP*
+        for r in records.iter().filter(|r| r.algo == "ER-LS") {
+            assert!(
+                r.ratio() <= 4.0 * r.sqrt_mk + 1e-6,
+                "ER-LS exceeded 4*sqrt(m/k): {:?}",
+                r
+            );
+        }
+        // qualitative ordering that holds on both the paper's measured
+        // times and our synthetic matrix: Random is far worse than
+        // ER-LS, EFT is the strongest baseline, and ER-LS beats Greedy
+        // on the irregular fork-join app (the paper's overall +16% vs
+        // Greedy depends on its measured time matrix; see EXPERIMENTS.md)
+        let rand_vs_er = mean_improvement_pct(&records, "Random", "ER-LS");
+        assert!(rand_vs_er < -20.0, "Random vs ER-LS: {rand_vs_er:.1}%");
+        let er_vs_eft = mean_improvement_pct(&records, "ER-LS", "EFT");
+        assert!(er_vs_eft < 5.0, "EFT should be competitive: {er_vs_eft:.1}%");
+        let fj = crate::analysis::pairwise_by_app(&records, "Greedy", "ER-LS");
+        assert!(
+            fj["fork-join"].mean > 1.0,
+            "ER-LS should beat Greedy on fork-join: {}",
+            fj["fork-join"].mean
+        );
+        // Fig. 6-right series exists with one point per sqrt(m/k) value
+        let series = ratio_by_sqrt_mk(&records, "ER-LS");
+        assert!(!series.is_empty());
+        // mean competitive ratio below sqrt(m/k) (paper's observation)
+        for (x, s) in &series {
+            assert!(s.mean <= *x + 1.0, "mean {} vs sqrt {}", s.mean, x);
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! The adversarial instances of Theorems 1, 2 and 4 (Tables 1–3) and
+//! drivers that measure the achieved ratios against the closed forms —
+//! the reproduction of Figures 1 and 2.
+
+use crate::graph::{Builder, TaskGraph};
+use crate::platform::Platform;
+use crate::sched::heft::heft_schedule;
+use crate::sched::online::{online_by_id, OnlinePolicy};
+use crate::sim::{validate, Placement, Schedule};
+
+/// Theorem 1 / Table 1: 2m sets of tasks on which HEFT achieves ratio
+/// `((m+k)/k²)(1 − e^{−k})`, for k ≤ √m.
+///
+/// Sets A_i (k tasks each): p̄ = p̠ = (m/(m+k))^i.
+/// Sets B_i (m tasks each): p̄ = (m/(m+k))^i, p̠ = (k/m²)(m/(m+k))^m.
+pub fn thm1_instance(m: usize, k: usize) -> TaskGraph {
+    assert!(k * k <= m, "Theorem 1 needs k <= sqrt(m)");
+    let mut b = Builder::new("thm1");
+    let (mf, kf) = (m as f64, k as f64);
+    let q = mf / (mf + kf);
+    let b_gpu = kf / (mf * mf) * q.powi(m as i32);
+    for i in 1..=m {
+        let p = q.powi(i as i32);
+        for _ in 0..k {
+            b.add_task(&format!("A{i}"), vec![p, p]);
+        }
+        for _ in 0..m {
+            b.add_task(&format!("B{i}"), vec![p, b_gpu]);
+        }
+    }
+    b.build()
+}
+
+/// The near-optimal schedule from the Theorem 1 proof (Fig. 1 right):
+/// all A_i tasks of a given i go serially on CPU i−1; the B tasks are
+/// round-robined over the k GPUs.
+pub fn thm1_good_schedule(g: &TaskGraph, m: usize, k: usize) -> Schedule {
+    let mut placements = vec![
+        Placement {
+            ptype: 0,
+            unit: 0,
+            start: 0.0,
+            finish: 0.0
+        };
+        g.n_tasks()
+    ];
+    let mut cpu_free = vec![0.0f64; m];
+    let mut gpu_free = vec![0.0f64; k];
+    let mut next_gpu = 0usize;
+    let mut idx = 0usize;
+    for i in 1..=m {
+        // k tasks of A_i -> CPU (i-1), serially
+        let cpu = i - 1;
+        for _ in 0..k {
+            let start = cpu_free[cpu];
+            let fin = start + g.p_cpu(idx);
+            placements[idx] = Placement {
+                ptype: 0,
+                unit: cpu,
+                start,
+                finish: fin,
+            };
+            cpu_free[cpu] = fin;
+            idx += 1;
+        }
+        // m tasks of B_i -> round robin over GPUs
+        for _ in 0..m {
+            let start = gpu_free[next_gpu];
+            let fin = start + g.p_gpu(idx);
+            placements[idx] = Placement {
+                ptype: 1,
+                unit: next_gpu,
+                start,
+                finish: fin,
+            };
+            gpu_free[next_gpu] = fin;
+            next_gpu = (next_gpu + 1) % k;
+            idx += 1;
+        }
+    }
+    Schedule::from_placements(placements)
+}
+
+/// Closed-form (asymptotic) lower bound on HEFT's ratio from Theorem 1:
+/// `((m+k)/k²)(1 − e^{−k})`.
+pub fn thm1_predicted_ratio(m: usize, k: usize) -> f64 {
+    let (mf, kf) = (m as f64, k as f64);
+    (mf + kf) / (kf * kf) * (1.0 - (-kf).exp())
+}
+
+/// Exact finite-m ratio of the construction:
+/// HEFT = Σ_{i=1..m} q^i with q = m/(m+k); GOOD = km/(m+k);
+/// ratio = ((m+k)/k²)(1 − q^m)  →  the asymptotic form as m → ∞
+/// (since q^m = (1+k/m)^{−m} ↓ e^{−k}).
+pub fn thm1_exact_ratio(m: usize, k: usize) -> f64 {
+    let (mf, kf) = (m as f64, k as f64);
+    let q = mf / (mf + kf);
+    (mf + kf) / (kf * kf) * (1.0 - q.powi(m as i32))
+}
+
+/// Measured Theorem-1 experiment: (heft_makespan, good_makespan, ratio).
+pub fn thm1_run(m: usize, k: usize) -> (f64, f64, f64) {
+    let g = thm1_instance(m, k);
+    let plat = Platform::hybrid(m, k);
+    let heft = heft_schedule(&g, &plat);
+    validate(&g, &plat, &heft).expect("HEFT schedule invalid");
+    let good = thm1_good_schedule(&g, m, k);
+    validate(&g, &plat, &good).expect("good schedule invalid");
+    (heft.makespan, good.makespan, heft.makespan / good.makespan)
+}
+
+/// Theorem 2 / Table 2: the instance on which *any* scheduling policy
+/// after HLP rounding achieves ratio 6 − O(1/m).  m = k.
+///
+/// Task A: p̄ = m(2m+1)/(m−1), p̠ = "∞" (a huge finite surrogate).
+/// B1 (2m+1 tasks): p̄ = 2m−1, p̠ = 1.  B2 (2m+1): p̄ = 1, p̠ = 2m−1.
+/// Full bipartite precedence B1 → B2.
+pub fn thm2_instance(m: usize) -> TaskGraph {
+    assert!(m >= 3);
+    let mf = m as f64;
+    let mut b = Builder::new("thm2");
+    let inf = 1e6 * mf; // finite surrogate for p̠_A = ∞
+    b.add_task("A", vec![mf * (2.0 * mf + 1.0) / (mf - 1.0), inf]);
+    let n_b = 2 * m + 1;
+    let mut b1 = Vec::new();
+    for _ in 0..n_b {
+        b1.push(b.add_task("B1", vec![2.0 * mf - 1.0, 1.0]));
+    }
+    for _ in 0..n_b {
+        let t = b.add_task("B2", vec![1.0, 2.0 * mf - 1.0]);
+        for &p in &b1 {
+            b.add_arc(p, t);
+        }
+    }
+    b.build()
+}
+
+/// LP* of the relaxed HLP on the Theorem-2 instance (Proposition 1).
+pub fn thm2_lp_star(m: usize) -> f64 {
+    let mf = m as f64;
+    mf * (2.0 * mf + 1.0) / (mf - 1.0)
+}
+
+/// The worst-case makespan 6(2m−1) from the proof.
+pub fn thm2_worst_makespan(m: usize) -> f64 {
+    6.0 * (2.0 * m as f64 - 1.0)
+}
+
+/// The allocation produced by rounding the Proposition-1 optimal
+/// fractional solution: A → CPU, B1 → CPU (x = ½ rounds up),
+/// B2 → GPU (x = ½ − ε rounds down).
+pub fn thm2_proposition_allocation(m: usize) -> Vec<usize> {
+    let n_b = 2 * m + 1;
+    let mut alloc = vec![0usize]; // A on CPU
+    alloc.extend(std::iter::repeat(0).take(n_b)); // B1 on CPU
+    alloc.extend(std::iter::repeat(1).take(n_b)); // B2 on GPU
+    alloc
+}
+
+/// Run the Theorem-2 experiment: schedule the rounded allocation with
+/// EST and OLS and report (lp_star, est_ratio, ols_ratio).  Ratios
+/// approach 6 as m grows — for *any* scheduling policy (Corollary 1).
+pub fn thm2_run(m: usize) -> (f64, f64, f64) {
+    use crate::sched::{est::est_schedule, list::ols_schedule};
+    let g = thm2_instance(m);
+    let plat = Platform::hybrid(m, m);
+    let alloc = thm2_proposition_allocation(m);
+    let lp_star = thm2_lp_star(m);
+    let est = est_schedule(&g, &plat, &alloc);
+    validate(&g, &plat, &est).expect("EST schedule invalid");
+    let ols = ols_schedule(&g, &plat, &alloc);
+    validate(&g, &plat, &ols).expect("OLS schedule invalid");
+    (lp_star, est.makespan / lp_star, ols.makespan / lp_star)
+}
+
+/// Theorem 4 / Table 3: ER-LS achieves `√(m/k)` on k independent tasks
+/// A (p̄ = p̠ = √m) followed by an m-task chain B (p̄ = √m, p̠ = √k).
+pub fn thm4_instance(m: usize, k: usize) -> TaskGraph {
+    assert!(k <= m);
+    let mut b = Builder::new("thm4");
+    let sm = (m as f64).sqrt();
+    let sk = (k as f64).sqrt();
+    for _ in 0..k {
+        b.add_task("A", vec![sm, sm]);
+    }
+    let mut prev: Option<usize> = None;
+    for _ in 0..m {
+        let t = b.add_task("B", vec![sm, sk]);
+        if let Some(p) = prev {
+            b.add_arc(p, t);
+        }
+        prev = Some(t);
+    }
+    b.build()
+}
+
+/// Run ER-LS on the Theorem-4 instance and construct the optimal-style
+/// schedule from the proof: A on distinct CPUs, the B chain on one GPU.
+pub fn thm4_run(m: usize, k: usize) -> (f64, f64, f64) {
+    let g = thm4_instance(m, k);
+    let plat = Platform::hybrid(m, k);
+    let erls = online_by_id(&g, &plat, &OnlinePolicy::ErLs);
+    validate(&g, &plat, &erls).expect("ER-LS schedule invalid");
+
+    let sm = (m as f64).sqrt();
+    let sk = (k as f64).sqrt();
+    let mut placements = Vec::new();
+    for a in 0..k {
+        placements.push(Placement {
+            ptype: 0,
+            unit: a,
+            start: 0.0,
+            finish: sm,
+        });
+    }
+    for i in 0..m {
+        placements.push(Placement {
+            ptype: 1,
+            unit: 0,
+            start: i as f64 * sk,
+            finish: (i + 1) as f64 * sk,
+        });
+    }
+    let opt = Schedule::from_placements(placements);
+    validate(&g, &plat, &opt).expect("optimal schedule invalid");
+    (erls.makespan, opt.makespan, erls.makespan / opt.makespan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thm1_heft_matches_prediction() {
+        for (m, k) in [(9usize, 2usize), (16, 3), (25, 4)] {
+            let (heft_ms, good_ms, ratio) = thm1_run(m, k);
+            // HEFT fills all units until sum_i (m/(m+k))^i
+            let (mf, kf) = (m as f64, k as f64);
+            let q = mf / (mf + kf);
+            let expected_heft: f64 = (1..=m).map(|i| q.powi(i as i32)).sum();
+            assert!(
+                (heft_ms - expected_heft).abs() < 1e-6,
+                "m={m} k={k}: HEFT {heft_ms} vs predicted {expected_heft}"
+            );
+            // good schedule's makespan is at most km/(m+k)
+            assert!(good_ms <= kf * mf / (mf + kf) + 1e-9);
+            // measured ratio matches the exact finite-m expression
+            assert!(
+                (ratio - thm1_exact_ratio(m, k)).abs() < 1e-6,
+                "m={m} k={k}: ratio {ratio} vs exact {}",
+                thm1_exact_ratio(m, k)
+            );
+        }
+        // exact expression converges to the theorem's asymptotic bound
+        // from below: q^m = (1+k/m)^{-m} >= e^{-k}
+        for k in [2usize, 3] {
+            let exact_small = thm1_exact_ratio(k * k, k);
+            let exact_big = thm1_exact_ratio(4000, k);
+            let asym = thm1_predicted_ratio(4000, k);
+            assert!(exact_small <= asym * (k * k + k) as f64 / (k * k) as f64);
+            assert!((exact_big - asym).abs() / asym < 1e-3);
+        }
+    }
+
+    #[test]
+    fn thm1_requires_k_le_sqrt_m() {
+        let r = std::panic::catch_unwind(|| thm1_instance(4, 3));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn thm2_instance_shape() {
+        let g = thm2_instance(5);
+        assert_eq!(g.n_tasks(), 4 * 5 + 3); // 1 + (2m+1) + (2m+1) = 23
+        assert_eq!(g.n_arcs(), 11 * 11);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn thm2_ratio_approaches_six() {
+        let mut prev = 0.0;
+        for m in [5usize, 10, 20, 40] {
+            let (lp_star, est_ratio, ols_ratio) = thm2_run(m);
+            // LP* matches Proposition 1's value by construction
+            assert!((lp_star - thm2_lp_star(m)).abs() < 1e-9);
+            // both policies land on the 6 − O(1/m) worst case:
+            // makespan = 6(2m−1), LP* = m(2m+1)/(m−1)
+            let want = thm2_worst_makespan(m) / lp_star;
+            assert!(
+                (est_ratio - want).abs() < 1e-6,
+                "m={m}: EST ratio {est_ratio} want {want}"
+            );
+            assert!(
+                (ols_ratio - want).abs() < 1e-6,
+                "m={m}: OLS ratio {ols_ratio} want {want}"
+            );
+            // monotone towards 6, never exceeding it
+            assert!(want > prev && want < 6.0);
+            prev = want;
+        }
+        assert!(prev > 5.6, "m=40 ratio should be close to 6: {prev}");
+    }
+
+    #[test]
+    fn thm2_lp_solution_value_verified_by_simplex() {
+        use crate::lp::model::build_hlp;
+        use crate::lp::simplex::solve_simplex;
+        let m = 4;
+        let g = thm2_instance(m);
+        let (lp, _) = build_hlp(&g, &Platform::hybrid(m, m));
+        let sol = solve_simplex(&lp).unwrap();
+        assert!(
+            (sol.obj - thm2_lp_star(m)).abs() < 1e-6,
+            "simplex {} vs proposition {}",
+            sol.obj,
+            thm2_lp_star(m)
+        );
+    }
+
+    #[test]
+    fn thm4_erls_hits_lower_bound() {
+        for (m, k) in [(16usize, 4usize), (36, 4), (64, 16)] {
+            let (erls_ms, opt_ms, ratio) = thm4_run(m, k);
+            let sm = (m as f64).sqrt();
+            let sk = (k as f64).sqrt();
+            // ER-LS: chain serially on CPUs -> m*sqrt(m)
+            assert!(
+                (erls_ms - m as f64 * sm).abs() < 1e-6,
+                "m={m} k={k}: ER-LS {erls_ms}"
+            );
+            // OPT-style schedule: max(sqrt(m), m*sqrt(k)) = m*sqrt(k)
+            assert!((opt_ms - m as f64 * sk).abs() < 1e-6);
+            // ratio = sqrt(m/k)
+            let want = (m as f64 / k as f64).sqrt();
+            assert!((ratio - want).abs() < 1e-6, "ratio {ratio} want {want}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Random task-graph generators for property tests (not the paper's
+//! benchmark — those live in `workloads/`): layered DAGs and
+//! Erdős–Rényi-style DAGs with random 2-type or Q-type times.
+
+use crate::substrate::rng::Rng;
+
+use super::{Builder, TaskGraph};
+
+/// Random DAG: arc (i, j), i < j, with probability `density`; times
+/// uniform in [0.5, 10] per type.
+pub fn random_dag(rng: &mut Rng, n: usize, density: f64, n_types: usize) -> TaskGraph {
+    let mut b = Builder::new("random");
+    for j in 0..n {
+        let times: Vec<f64> = (0..n_types).map(|_| rng.uniform(0.5, 10.0)).collect();
+        b.add_task(&format!("t{j}"), times);
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(density) {
+                b.add_arc(i, j);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Layered DAG: `layers` layers of ~`width` tasks; arcs only between
+/// consecutive layers with probability `density` (plus a fallback arc so
+/// no task in layer l > 0 is orphaned).
+pub fn layered_dag(
+    rng: &mut Rng,
+    layers: usize,
+    width: usize,
+    density: f64,
+    n_types: usize,
+) -> TaskGraph {
+    let mut b = Builder::new("layered");
+    let mut prev: Vec<usize> = Vec::new();
+    for l in 0..layers {
+        let w = 1 + rng.below(width.max(1));
+        let cur: Vec<usize> = (0..w)
+            .map(|i| {
+                let times: Vec<f64> = (0..n_types).map(|_| rng.uniform(0.5, 10.0)).collect();
+                b.add_task(&format!("l{l}_{i}"), times)
+            })
+            .collect();
+        if l > 0 {
+            for &j in &cur {
+                let mut any = false;
+                for &i in &prev {
+                    if rng.chance(density) {
+                        b.add_arc(i, j);
+                        any = true;
+                    }
+                }
+                if !any {
+                    let i = prev[rng.below(prev.len())];
+                    b.add_arc(i, j);
+                }
+            }
+        }
+        prev = cur;
+    }
+    b.build()
+}
+
+/// Random "accelerator-flavoured" hybrid DAG: GPU times are CPU times
+/// scaled by an acceleration factor in [0.1, 50] (mimicking the paper's
+/// fork-join recipe), so allocation actually matters.
+pub fn hybrid_dag(rng: &mut Rng, n: usize, density: f64) -> TaskGraph {
+    let mut b = Builder::new("hybrid");
+    for j in 0..n {
+        let cpu = rng.uniform(1.0, 20.0);
+        let accel = if rng.chance(0.1) {
+            rng.uniform(0.1, 0.5)
+        } else {
+            rng.uniform(0.5, 50.0)
+        };
+        b.add_task(&format!("t{j}"), vec![cpu, cpu / accel]);
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(density) {
+                b.add_arc(i, j);
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_dag_valid() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 30, 0.2, 2);
+            assert!(g.validate().is_ok());
+            assert_eq!(g.n_tasks(), 30);
+        }
+    }
+
+    #[test]
+    fn layered_dag_valid_and_layered() {
+        let mut rng = Rng::new(2);
+        let g = layered_dag(&mut rng, 5, 6, 0.4, 3);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.n_types(), 3);
+        // every non-first-layer task has a predecessor
+        let sources = g.sources();
+        for s in &sources {
+            assert!(g.names[*s].starts_with("l0_"), "{}", g.names[*s]);
+        }
+    }
+
+    #[test]
+    fn hybrid_dag_has_heterogeneous_times() {
+        let mut rng = Rng::new(3);
+        let g = hybrid_dag(&mut rng, 50, 0.1);
+        assert!(g.validate().is_ok());
+        let faster_gpu = (0..50).filter(|&j| g.p_gpu(j) < g.p_cpu(j)).count();
+        let faster_cpu = (0..50).filter(|&j| g.p_gpu(j) > g.p_cpu(j)).count();
+        assert!(faster_gpu > 0 && faster_cpu > 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Task-graph serialization: JSON (lossless round-trip) and Graphviz DOT
+//! (inspection).  The JSON schema is the library's on-disk instance
+//! format (`hetsched gen --out file.json`).
+
+use crate::substrate::json::{self, Json};
+
+use super::{Builder, TaskGraph};
+
+pub fn to_json(g: &TaskGraph) -> Json {
+    let tasks: Vec<Json> = (0..g.n_tasks())
+        .map(|j| {
+            Json::obj(vec![
+                ("name", Json::Str(g.names[j].clone())),
+                (
+                    "times",
+                    Json::Arr(g.proc_times[j].iter().map(|&t| Json::Num(t)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let arcs: Vec<Json> = (0..g.n_tasks())
+        .flat_map(|j| {
+            g.succs[j]
+                .iter()
+                .map(move |&s| Json::Arr(vec![Json::Num(j as f64), Json::Num(s as f64)]))
+        })
+        .collect();
+    Json::obj(vec![
+        ("app", Json::Str(g.app.clone())),
+        ("tasks", Json::Arr(tasks)),
+        ("arcs", Json::Arr(arcs)),
+    ])
+}
+
+pub fn from_json(v: &Json) -> Result<TaskGraph, String> {
+    let app = v
+        .get("app")
+        .and_then(|x| x.as_str())
+        .ok_or("missing app")?;
+    let mut b = Builder::new(app);
+    for t in v.get("tasks").and_then(|x| x.as_arr()).ok_or("missing tasks")? {
+        let name = t.get("name").and_then(|x| x.as_str()).ok_or("task name")?;
+        let times = t
+            .get("times")
+            .and_then(|x| x.as_arr())
+            .ok_or("task times")?
+            .iter()
+            .map(|x| x.as_f64().ok_or("bad time"))
+            .collect::<Result<Vec<_>, _>>()?;
+        b.add_task(name, times);
+    }
+    for a in v.get("arcs").and_then(|x| x.as_arr()).ok_or("missing arcs")? {
+        let pair = a.as_arr().ok_or("bad arc")?;
+        if pair.len() != 2 {
+            return Err("bad arc arity".into());
+        }
+        let i = pair[0].as_usize().ok_or("bad arc src")?;
+        let j = pair[1].as_usize().ok_or("bad arc dst")?;
+        if i >= b.n_tasks() || j >= b.n_tasks() {
+            return Err("arc endpoint out of range".into());
+        }
+        b.add_arc(i, j);
+    }
+    let g = b.build();
+    g.validate()?;
+    Ok(g)
+}
+
+pub fn parse_graph(text: &str) -> Result<TaskGraph, String> {
+    from_json(&json::parse(text)?)
+}
+
+/// Graphviz DOT with kernel names and CPU/GPU times in the labels.
+pub fn to_dot(g: &TaskGraph) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("digraph \"{}\" {{\n  rankdir=TB;\n", g.app));
+    for j in 0..g.n_tasks() {
+        let times = g.proc_times[j]
+            .iter()
+            .map(|t| format!("{t:.2}"))
+            .collect::<Vec<_>>()
+            .join("/");
+        s.push_str(&format!(
+            "  t{j} [label=\"{}#{j}\\n{}\"];\n",
+            g.names[j], times
+        ));
+    }
+    for j in 0..g.n_tasks() {
+        for &k in &g.succs[j] {
+            s.push_str(&format!("  t{j} -> t{k};\n"));
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+
+    fn sample() -> TaskGraph {
+        let mut b = Builder::new("sample");
+        let a = b.add_task("A", vec![1.5, 0.5]);
+        let c = b.add_task("B", vec![2.0, 4.0]);
+        let d = b.add_task("C", vec![3.0, 1.0]);
+        b.add_arc(a, c);
+        b.add_arc(a, d);
+        b.build()
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = sample();
+        let text = to_json(&g).to_string();
+        let back = parse_graph(&text).unwrap();
+        assert_eq!(back.app, g.app);
+        assert_eq!(back.names, g.names);
+        assert_eq!(back.proc_times, g.proc_times);
+        assert_eq!(back.succs, g.succs);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_docs() {
+        assert!(parse_graph("{}").is_err());
+        assert!(parse_graph(r#"{"app":"x","tasks":[],"arcs":[[0,1]]}"#).is_err());
+    }
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let d = to_dot(&sample());
+        assert!(d.contains("digraph"));
+        assert!(d.contains("t0 -> t1"));
+        assert!(d.contains("A#0"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Precedence task graphs: the application model of the paper.
+//!
+//! A [`TaskGraph`] is a DAG whose nodes are sequential tasks and whose
+//! arcs are precedence relations; every task carries one processing time
+//! per *processor type* (`p̄_j` on CPU, `p̠_j` on GPU for the hybrid
+//! 2-type case; a vector of `Q` times in the general case of Section 5).
+
+pub mod gen;
+pub mod io;
+pub mod paths;
+
+pub type TaskId = usize;
+
+/// Processor-type indices for the hybrid case.
+pub const CPU: usize = 0;
+pub const GPU: usize = 1;
+
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    /// Human-readable application name ("potrf", "fork-join", ...).
+    pub app: String,
+    /// Kernel name per task ("GEMM", "TRSM", ...).
+    pub names: Vec<String>,
+    /// `proc_times[j][q]` = processing time of task j on a type-q unit.
+    pub proc_times: Vec<Vec<f64>>,
+    pub preds: Vec<Vec<TaskId>>,
+    pub succs: Vec<Vec<TaskId>>,
+}
+
+impl TaskGraph {
+    pub fn n_tasks(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.proc_times.first().map(|t| t.len()).unwrap_or(0)
+    }
+
+    pub fn n_arcs(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    /// `p̄_j` (CPU time) in the hybrid case.
+    pub fn p_cpu(&self, j: TaskId) -> f64 {
+        self.proc_times[j][CPU]
+    }
+
+    /// `p̠_j` (GPU time) in the hybrid case.
+    pub fn p_gpu(&self, j: TaskId) -> f64 {
+        self.proc_times[j][GPU]
+    }
+
+    pub fn time_on(&self, j: TaskId, q: usize) -> f64 {
+        self.proc_times[j][q]
+    }
+
+    pub fn sources(&self) -> Vec<TaskId> {
+        (0..self.n_tasks()).filter(|&j| self.preds[j].is_empty()).collect()
+    }
+
+    pub fn sinks(&self) -> Vec<TaskId> {
+        (0..self.n_tasks()).filter(|&j| self.succs[j].is_empty()).collect()
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<TaskId>> {
+        let n = self.n_tasks();
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut queue: std::collections::VecDeque<TaskId> =
+            (0..n).filter(|&j| indeg[j] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(j) = queue.pop_front() {
+            order.push(j);
+            for &s in &self.succs[j] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Structural sanity: consistent arrays, mirrored arcs, acyclic,
+    /// strictly positive processing times, uniform type count.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_tasks();
+        if self.proc_times.len() != n || self.preds.len() != n || self.succs.len() != n {
+            return Err("inconsistent array lengths".into());
+        }
+        let q = self.n_types();
+        if q == 0 {
+            return Err("no processor types".into());
+        }
+        for j in 0..n {
+            if self.proc_times[j].len() != q {
+                return Err(format!("task {j}: wrong number of type times"));
+            }
+            for (t, &p) in self.proc_times[j].iter().enumerate() {
+                if !(p > 0.0) || !p.is_finite() {
+                    return Err(format!("task {j}: nonpositive time on type {t}"));
+                }
+            }
+            for &s in &self.succs[j] {
+                if s >= n {
+                    return Err(format!("task {j}: successor {s} out of range"));
+                }
+                if !self.preds[s].contains(&j) {
+                    return Err(format!("arc ({j},{s}) not mirrored in preds"));
+                }
+            }
+            for &p in &self.preds[j] {
+                if !self.succs[p].contains(&j) {
+                    return Err(format!("arc ({p},{j}) not mirrored in succs"));
+                }
+            }
+        }
+        if self.topo_order().is_none() {
+            return Err("graph has a cycle".into());
+        }
+        Ok(())
+    }
+
+    /// Count tasks per kernel name (Table 4 checks).
+    pub fn kernel_histogram(&self) -> std::collections::BTreeMap<String, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for name in &self.names {
+            *h.entry(name.clone()).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+/// Incremental builder; arcs are deduplicated.
+#[derive(Clone, Debug, Default)]
+pub struct Builder {
+    app: String,
+    names: Vec<String>,
+    proc_times: Vec<Vec<f64>>,
+    preds: Vec<Vec<TaskId>>,
+    succs: Vec<Vec<TaskId>>,
+}
+
+impl Builder {
+    pub fn new(app: &str) -> Builder {
+        Builder {
+            app: app.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_task(&mut self, name: &str, times: Vec<f64>) -> TaskId {
+        let id = self.names.len();
+        self.names.push(name.to_string());
+        self.proc_times.push(times);
+        self.preds.push(Vec::new());
+        self.succs.push(Vec::new());
+        id
+    }
+
+    /// Add arc `i -> j` (i must precede j). Self-loops rejected.
+    pub fn add_arc(&mut self, i: TaskId, j: TaskId) {
+        assert_ne!(i, j, "self-loop {i}");
+        if !self.succs[i].contains(&j) {
+            self.succs[i].push(j);
+            self.preds[j].push(i);
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn build(self) -> TaskGraph {
+        let g = TaskGraph {
+            app: self.app,
+            names: self.names,
+            proc_times: self.proc_times,
+            preds: self.preds,
+            succs: self.succs,
+        };
+        debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> TaskGraph {
+        let mut b = Builder::new("diamond");
+        let t0 = b.add_task("a", vec![4.0, 1.0]);
+        let t1 = b.add_task("b", vec![2.0, 5.0]);
+        let t2 = b.add_task("c", vec![6.0, 1.0]);
+        let t3 = b.add_task("d", vec![4.0, 1.0]);
+        b.add_arc(t0, t1);
+        b.add_arc(t0, t2);
+        b.add_arc(t1, t3);
+        b.add_arc(t2, t3);
+        b.build()
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let g = diamond();
+        assert_eq!(g.n_tasks(), 4);
+        assert_eq!(g.n_arcs(), 4);
+        assert_eq!(g.n_types(), 2);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn topo_order_respects_arcs() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &t) in order.iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        for j in 0..g.n_tasks() {
+            for &s in &g.succs[j] {
+                assert!(pos[j] < pos[s]);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_arcs_are_deduped() {
+        let mut b = Builder::new("x");
+        let a = b.add_task("a", vec![1.0, 1.0]);
+        let c = b.add_task("b", vec![1.0, 1.0]);
+        b.add_arc(a, c);
+        b.add_arc(a, c);
+        let g = b.build();
+        assert_eq!(g.n_arcs(), 1);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        // bypass builder's debug assert by constructing directly
+        let g = TaskGraph {
+            app: "cyc".into(),
+            names: vec!["a".into(), "b".into()],
+            proc_times: vec![vec![1.0], vec![1.0]],
+            preds: vec![vec![1], vec![0]],
+            succs: vec![vec![1], vec![0]],
+        };
+        assert!(g.topo_order().is_none());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn bad_times_rejected() {
+        let g = TaskGraph {
+            app: "bad".into(),
+            names: vec!["a".into()],
+            proc_times: vec![vec![0.0]],
+            preds: vec![vec![]],
+            succs: vec![vec![]],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_histogram_counts() {
+        let g = diamond();
+        let h = g.kernel_histogram();
+        assert_eq!(h.len(), 4);
+        assert_eq!(h["a"], 1);
+    }
+}

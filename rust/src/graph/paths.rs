@@ -1,0 +1,138 @@
+//! Path metrics on task graphs: bottom-level ranks (the OLS priority of
+//! §4.1 and the HEFT priority of §3), critical paths, and the standard
+//! combinatorial lower bounds (Graham).
+
+use super::{TaskGraph, TaskId};
+
+/// Bottom-level rank for arbitrary per-task lengths:
+/// `rank(j) = len(j) + max_{s in succ(j)} rank(s)`
+/// i.e. the longest path from j to its last descendant, inclusive.
+pub fn bottom_level(g: &TaskGraph, len: &dyn Fn(TaskId) -> f64) -> Vec<f64> {
+    let order = g.topo_order().expect("acyclic");
+    let mut rank = vec![0.0f64; g.n_tasks()];
+    for &j in order.iter().rev() {
+        let tail = g.succs[j]
+            .iter()
+            .map(|&s| rank[s])
+            .fold(0.0f64, f64::max);
+        rank[j] = len(j) + tail;
+    }
+    rank
+}
+
+/// Top-level: longest path strictly *before* j (earliest possible start
+/// if infinitely many units).
+pub fn top_level(g: &TaskGraph, len: &dyn Fn(TaskId) -> f64) -> Vec<f64> {
+    let order = g.topo_order().expect("acyclic");
+    let mut tl = vec![0.0f64; g.n_tasks()];
+    for &j in order.iter() {
+        let t = tl[j] + len(j);
+        for &s in &g.succs[j] {
+            if t > tl[s] {
+                tl[s] = t;
+            }
+        }
+    }
+    tl
+}
+
+/// Length of the critical path under `len`.
+pub fn critical_path(g: &TaskGraph, len: &dyn Fn(TaskId) -> f64) -> f64 {
+    bottom_level(g, len).iter().copied().fold(0.0, f64::max)
+}
+
+/// OLS rank (§4.1): lengths follow the HLP *allocation* (`alloc[j]` is the
+/// processor type of task j).
+pub fn ols_rank(g: &TaskGraph, alloc: &[usize]) -> Vec<f64> {
+    bottom_level(g, &|j| g.time_on(j, alloc[j]))
+}
+
+/// HEFT rank (§3): lengths are unit-count-weighted average times,
+/// `(Σ_q m_q · p_{j,q}) / Σ_q m_q` — which reduces to the paper's
+/// `(m·p̄_j + k·p̠_j)/(m+k)` for 2 types.
+pub fn heft_rank(g: &TaskGraph, type_counts: &[usize]) -> Vec<f64> {
+    let total: usize = type_counts.iter().sum();
+    bottom_level(g, &|j| {
+        type_counts
+            .iter()
+            .enumerate()
+            .map(|(q, &mq)| mq as f64 * g.time_on(j, q))
+            .sum::<f64>()
+            / total as f64
+    })
+}
+
+/// Valid combinatorial lower bound on OPT: max of the best-case critical
+/// path (every task at its fastest type) and the best-case total work
+/// spread over all units.
+pub fn lower_bound(g: &TaskGraph, type_counts: &[usize]) -> f64 {
+    let min_len = |j: TaskId| {
+        g.proc_times[j]
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    };
+    let cp = critical_path(g, &min_len);
+    let units: usize = type_counts.iter().sum();
+    let work: f64 = (0..g.n_tasks()).map(min_len).sum();
+    cp.max(work / units as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+
+    fn chain3() -> TaskGraph {
+        let mut b = Builder::new("chain");
+        let t0 = b.add_task("a", vec![2.0, 1.0]);
+        let t1 = b.add_task("b", vec![3.0, 1.0]);
+        let t2 = b.add_task("c", vec![4.0, 1.0]);
+        b.add_arc(t0, t1);
+        b.add_arc(t1, t2);
+        b.build()
+    }
+
+    #[test]
+    fn bottom_level_on_chain() {
+        let g = chain3();
+        let r = bottom_level(&g, &|j| g.p_cpu(j));
+        assert_eq!(r, vec![9.0, 7.0, 4.0]);
+        assert_eq!(critical_path(&g, &|j| g.p_cpu(j)), 9.0);
+    }
+
+    #[test]
+    fn top_level_on_chain() {
+        let g = chain3();
+        let t = top_level(&g, &|j| g.p_cpu(j));
+        assert_eq!(t, vec![0.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn ranks_decrease_along_arcs() {
+        let g = chain3();
+        let r = ols_rank(&g, &[0, 1, 0]);
+        for j in 0..g.n_tasks() {
+            for &s in &g.succs[j] {
+                assert!(r[j] > r[s]);
+            }
+        }
+    }
+
+    #[test]
+    fn heft_rank_weighted_average() {
+        let g = chain3();
+        // m=3 CPUs, k=1 GPU: len(a) = (3*2+1*1)/4 = 1.75
+        let r = heft_rank(&g, &[3, 1]);
+        let len_c = (3.0 * 4.0 + 1.0) / 4.0;
+        assert!((r[2] - len_c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_bound_sane() {
+        let g = chain3();
+        // fastest chain = 3 (all GPU); work/units = 3/3 = 1
+        let lb = lower_bound(&g, &[2, 1]);
+        assert!((lb - 3.0).abs() < 1e-12);
+    }
+}

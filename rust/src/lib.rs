@@ -1,0 +1,32 @@
+//! # hetsched
+//!
+//! Reproduction of *“Generic algorithms for scheduling applications on
+//! heterogeneous multi-core platforms”* (Amaris, Lucarelli, Mommessin,
+//! Trystram — CS.DC 2017) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the scheduling framework: task graphs,
+//!   workload generators, the HLP/QHLP allocation phase, the offline
+//!   schedulers (HLP-EST, HLP-OLS, HEFT, QHLP-\*), the online engine
+//!   (ER-LS, EFT, Greedy, Random), a discrete-event simulator, a live
+//!   coordinator runtime, and the full experiment campaign of §6.
+//! * **Layer 2/1 (python/compile, build-time only)** — the HLP/QHLP LP
+//!   relaxation solved by a restarted PDHG whose fused updates are Pallas
+//!   kernels; AOT-lowered to HLO text and executed from
+//!   [`runtime`] via PJRT.  Python never runs on the scheduling path.
+//!
+//! See DESIGN.md for the module inventory and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod analysis;
+pub mod experiments;
+pub mod graph;
+pub mod algos;
+pub mod alloc;
+pub mod lp;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod coordinator;
+pub mod platform;
+pub mod substrate;
+pub mod workloads;

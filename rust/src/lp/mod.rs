@@ -1,0 +1,145 @@
+//! The allocation-phase linear programs of the paper and their solvers.
+//!
+//! * [`model`] — build HLP (2 types, constraints (1)–(6)) and QHLP
+//!   (Q types, constraints (9)–(14)) from a task graph + platform, in the
+//!   generic box form `min cᵀz : Az ≤ b, lo ≤ z ≤ hi` (COO).
+//! * [`scale`] — Ruiz equilibration (preconditioning for PDHG).
+//! * [`pdhg`] — restarted PDHG: the backend-generic chunk driver (used by
+//!   both the in-tree Rust mirror and the AOT JAX/Pallas artifact run via
+//!   PJRT) plus the Rust chunk backend itself.
+//! * [`simplex`] — exact dense two-phase simplex (test oracle + small
+//!   instances).
+//! * [`rounding`] — the paper's rounding rules (`x_j ≥ ½` for HLP,
+//!   argmax with min-time tie-break for QHLP).
+
+pub mod model;
+pub mod pdhg;
+pub mod rounding;
+pub mod scale;
+pub mod simplex;
+
+/// A linear program `min cᵀz  s.t.  Az ≤ b,  lo ≤ z ≤ hi` with sparse A.
+#[derive(Clone, Debug, Default)]
+pub struct SparseLp {
+    /// number of variables
+    pub n: usize,
+    /// number of rows
+    pub m: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+    pub b: Vec<f64>,
+    pub c: Vec<f64>,
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl SparseLp {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.m && col < self.n);
+        if val != 0.0 {
+            self.rows.push(row as u32);
+            self.cols.push(col as u32);
+            self.vals.push(val);
+        }
+    }
+
+    /// Objective value of a point.
+    pub fn objective(&self, z: &[f64]) -> f64 {
+        self.c.iter().zip(z).map(|(c, z)| c * z).sum()
+    }
+
+    /// Max violation of `Az ≤ b` at `z` (0 if feasible).
+    pub fn max_violation(&self, z: &[f64]) -> f64 {
+        let mut az = vec![0.0; self.m];
+        for i in 0..self.vals.len() {
+            az[self.rows[i] as usize] += self.vals[i] * z[self.cols[i] as usize];
+        }
+        az.iter()
+            .zip(&self.b)
+            .map(|(a, b)| (a - b).max(0.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Structural sanity checks (indices in range, bounds ordered).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.b.len() != self.m || self.c.len() != self.n {
+            return Err("b/c length mismatch".into());
+        }
+        if self.lo.len() != self.n || self.hi.len() != self.n {
+            return Err("bounds length mismatch".into());
+        }
+        for j in 0..self.n {
+            if self.lo[j] > self.hi[j] {
+                return Err(format!("lo > hi at var {j}"));
+            }
+        }
+        for i in 0..self.vals.len() {
+            if self.rows[i] as usize >= self.m || self.cols[i] as usize >= self.n {
+                return Err("COO index out of range".into());
+            }
+            if !self.vals[i].is_finite() {
+                return Err("non-finite coefficient".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of an LP solve (any backend).
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub z: Vec<f64>,
+    /// primal objective at `z`
+    pub obj: f64,
+    /// best dual lower bound on the optimum (= obj for exact backends)
+    pub lower_bound: f64,
+    /// relative duality gap achieved
+    pub gap: f64,
+    /// total PDHG iterations (0 for simplex)
+    pub iters: usize,
+    pub backend: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_lp_helpers() {
+        let mut lp = SparseLp {
+            n: 2,
+            m: 1,
+            b: vec![1.5],
+            c: vec![-1.0, -1.0],
+            lo: vec![0.0, 0.0],
+            hi: vec![1.0, 1.0],
+            ..Default::default()
+        };
+        lp.push(0, 0, 1.0);
+        lp.push(0, 1, 1.0);
+        lp.push(0, 1, 0.0); // dropped
+        assert_eq!(lp.nnz(), 2);
+        assert!(lp.validate().is_ok());
+        assert_eq!(lp.objective(&[1.0, 0.5]), -1.5);
+        assert_eq!(lp.max_violation(&[1.0, 0.5]), 0.0);
+        assert!(lp.max_violation(&[1.0, 1.0]) > 0.49);
+    }
+
+    #[test]
+    fn validate_catches_bad_bounds() {
+        let lp = SparseLp {
+            n: 1,
+            m: 0,
+            c: vec![0.0],
+            lo: vec![1.0],
+            hi: vec![0.0],
+            ..Default::default()
+        };
+        assert!(lp.validate().is_err());
+    }
+}

@@ -1,0 +1,503 @@
+//! HLP / QHLP construction (the paper's allocation LPs).
+//!
+//! HLP (Section 3, constraints (1)–(6)); variable layout — chosen to
+//! match `python/tests/test_pdhg.py::build_hlp` exactly so the two
+//! implementations cross-check each other:
+//!
+//!   z = [ x_0 .. x_{n-1},  C_0 .. C_{n-1},  λ ]
+//!   x_j ∈ [0,1];  C_j, λ ∈ [0, U]   (U = Σ_j p̄_j, a trivial upper bound)
+//!
+//! QHLP (Section 5, constraints (9)–(14)); layout:
+//!
+//!   z = [ x_{0,0} .. x_{0,Q-1}, x_{1,0} .., ...,  C_0 .. C_{n-1},  λ ]
+//!
+//! with the assignment equality (13) split into two inequalities.
+
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+
+use super::SparseLp;
+
+/// Which tasks get an explicit `C_j ≤ λ` row.
+///
+/// The paper writes constraint (3)/(11) for every task, but the arc
+/// constraints make `C` non-decreasing along every path, so bounding the
+/// *sinks* is equivalent (identical optimal value and x/λ projection of
+/// the feasible set) while shrinking the λ column from n rows to
+/// #sinks + Q rows — which matters enormously for PDHG, whose step size
+/// scales with 1/‖A‖₂ ≈ 1/√(λ-column count).  Equivalence is asserted
+/// against the full formulation via simplex in tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapRows {
+    /// `C_j ≤ λ` for every task (the paper's literal formulation).
+    All,
+    /// `C_j ≤ λ` for sink tasks only (equivalent, PDHG-friendly).
+    SinksOnly,
+}
+
+/// Variable indices of a built HLP.
+#[derive(Clone, Copy, Debug)]
+pub struct HlpVars {
+    pub n_tasks: usize,
+    /// x_j = `j`; C_j = `n_tasks + j`; λ = `2 n_tasks`.
+    pub lambda: usize,
+}
+
+impl HlpVars {
+    pub fn x(&self, j: usize) -> usize {
+        j
+    }
+    pub fn completion(&self, j: usize) -> usize {
+        self.n_tasks + j
+    }
+}
+
+/// Build HLP for a hybrid platform (`m` CPUs, `k` GPUs) with sink-only
+/// cap rows (see [`CapRows`]).
+pub fn build_hlp(g: &TaskGraph, plat: &Platform) -> (SparseLp, HlpVars) {
+    build_hlp_opts(g, plat, CapRows::SinksOnly)
+}
+
+/// Build HLP with an explicit cap-row policy.
+pub fn build_hlp_opts(g: &TaskGraph, plat: &Platform, caps: CapRows) -> (SparseLp, HlpVars) {
+    assert_eq!(g.n_types(), 2, "HLP is the 2-type LP; use build_qhlp");
+    assert_eq!(plat.n_types(), 2);
+    let n = g.n_tasks();
+    let (m, k) = (plat.m() as f64, plat.k() as f64);
+    let n_arcs = g.n_arcs();
+    let n_src = g.sources().len();
+    let capped: Vec<usize> = match caps {
+        CapRows::All => (0..n).collect(),
+        CapRows::SinksOnly => g.sinks(),
+    };
+
+    let vars = HlpVars {
+        n_tasks: n,
+        lambda: 2 * n,
+    };
+    let n_vars = 2 * n + 1;
+    let n_rows = n_arcs + n_src + capped.len() + 2;
+
+    let mut lp = SparseLp {
+        n: n_vars,
+        m: n_rows,
+        b: Vec::with_capacity(n_rows),
+        c: vec![0.0; n_vars],
+        lo: vec![0.0; n_vars],
+        hi: vec![0.0; n_vars],
+        ..Default::default()
+    };
+    lp.c[vars.lambda] = 1.0;
+    let u: f64 = (0..n).map(|j| g.p_cpu(j)).sum();
+    for j in 0..n {
+        lp.hi[vars.x(j)] = 1.0;
+        lp.hi[vars.completion(j)] = u;
+    }
+    lp.hi[vars.lambda] = u;
+
+    let mut row = 0;
+    // (1) C_i + p̄_j x_j + p̠_j (1 - x_j) ≤ C_j  for each arc (i, j)
+    //  => C_i + (p̄_j - p̠_j) x_j - C_j ≤ -p̠_j
+    for i in 0..n {
+        for &j in &g.succs[i] {
+            lp.push(row, vars.completion(i), 1.0);
+            lp.push(row, vars.x(j), g.p_cpu(j) - g.p_gpu(j));
+            lp.push(row, vars.completion(j), -1.0);
+            lp.b.push(-g.p_gpu(j));
+            row += 1;
+        }
+    }
+    // (2) p̄_j x_j + p̠_j (1 - x_j) ≤ C_j  for sources
+    for j in 0..n {
+        if g.preds[j].is_empty() {
+            lp.push(row, vars.x(j), g.p_cpu(j) - g.p_gpu(j));
+            lp.push(row, vars.completion(j), -1.0);
+            lp.b.push(-g.p_gpu(j));
+            row += 1;
+        }
+    }
+    // (3) C_j ≤ λ (sinks suffice; see CapRows)
+    for &j in &capped {
+        lp.push(row, vars.completion(j), 1.0);
+        lp.push(row, vars.lambda, -1.0);
+        lp.b.push(0.0);
+        row += 1;
+    }
+    // (4) (1/m) Σ p̄_j x_j ≤ λ
+    for j in 0..n {
+        lp.push(row, vars.x(j), g.p_cpu(j) / m);
+    }
+    lp.push(row, vars.lambda, -1.0);
+    lp.b.push(0.0);
+    row += 1;
+    // (5) (1/k) Σ p̠_j (1 - x_j) ≤ λ  =>  -(1/k) Σ p̠_j x_j - λ ≤ -(1/k) Σ p̠_j
+    let gpu_total: f64 = (0..n).map(|j| g.p_gpu(j)).sum();
+    for j in 0..n {
+        lp.push(row, vars.x(j), -g.p_gpu(j) / k);
+    }
+    lp.push(row, vars.lambda, -1.0);
+    lp.b.push(-gpu_total / k);
+    row += 1;
+
+    debug_assert_eq!(row, n_rows);
+    debug_assert!(lp.validate().is_ok());
+    (lp, vars)
+}
+
+/// Variable indices of a built QHLP.
+#[derive(Clone, Copy, Debug)]
+pub struct QhlpVars {
+    pub n_tasks: usize,
+    pub n_types: usize,
+    pub lambda: usize,
+}
+
+impl QhlpVars {
+    pub fn x(&self, j: usize, q: usize) -> usize {
+        j * self.n_types + q
+    }
+    pub fn completion(&self, j: usize) -> usize {
+        self.n_tasks * self.n_types + j
+    }
+}
+
+/// Build QHLP for a general platform with `Q ≥ 2` types (sink-only caps).
+pub fn build_qhlp(g: &TaskGraph, plat: &Platform) -> (SparseLp, QhlpVars) {
+    build_qhlp_opts(g, plat, CapRows::SinksOnly)
+}
+
+/// Build QHLP with an explicit cap-row policy.
+pub fn build_qhlp_opts(g: &TaskGraph, plat: &Platform, caps: CapRows) -> (SparseLp, QhlpVars) {
+    let q = plat.n_types();
+    assert_eq!(g.n_types(), q);
+    assert!(q >= 2);
+    let n = g.n_tasks();
+    let n_arcs = g.n_arcs();
+    let n_src = g.sources().len();
+    let capped: Vec<usize> = match caps {
+        CapRows::All => (0..n).collect(),
+        CapRows::SinksOnly => g.sinks(),
+    };
+
+    let vars = QhlpVars {
+        n_tasks: n,
+        n_types: q,
+        lambda: n * q + n,
+    };
+    let n_vars = n * q + n + 1;
+    // rows: arcs + sources + caps + Q loads + 2n assignment inequalities
+    let n_rows = n_arcs + n_src + capped.len() + q + 2 * n;
+
+    let mut lp = SparseLp {
+        n: n_vars,
+        m: n_rows,
+        b: Vec::with_capacity(n_rows),
+        c: vec![0.0; n_vars],
+        lo: vec![0.0; n_vars],
+        hi: vec![0.0; n_vars],
+        ..Default::default()
+    };
+    lp.c[vars.lambda] = 1.0;
+    let u: f64 = (0..n).map(|j| g.time_on(j, 0)).sum();
+    for j in 0..n {
+        for t in 0..q {
+            lp.hi[vars.x(j, t)] = 1.0;
+        }
+        lp.hi[vars.completion(j)] = u;
+    }
+    lp.hi[vars.lambda] = u;
+
+    let mut row = 0;
+    // (9) C_i + Σ_q p_{j,q} x_{j,q} ≤ C_j for each arc (i, j)
+    for i in 0..n {
+        for &j in &g.succs[i] {
+            lp.push(row, vars.completion(i), 1.0);
+            for t in 0..q {
+                lp.push(row, vars.x(j, t), g.time_on(j, t));
+            }
+            lp.push(row, vars.completion(j), -1.0);
+            lp.b.push(0.0);
+            row += 1;
+        }
+    }
+    // (10) sources
+    for j in 0..n {
+        if g.preds[j].is_empty() {
+            for t in 0..q {
+                lp.push(row, vars.x(j, t), g.time_on(j, t));
+            }
+            lp.push(row, vars.completion(j), -1.0);
+            lp.b.push(0.0);
+            row += 1;
+        }
+    }
+    // (11) C_j ≤ λ (sinks suffice; see CapRows)
+    for &j in &capped {
+        lp.push(row, vars.completion(j), 1.0);
+        lp.push(row, vars.lambda, -1.0);
+        lp.b.push(0.0);
+        row += 1;
+    }
+    // (12) per-type load
+    for t in 0..q {
+        let mq = plat.counts[t] as f64;
+        for j in 0..n {
+            lp.push(row, vars.x(j, t), g.time_on(j, t) / mq);
+        }
+        lp.push(row, vars.lambda, -1.0);
+        lp.b.push(0.0);
+        row += 1;
+    }
+    // (13) Σ_q x_{j,q} = 1, as ≤ 1 and ≥ 1
+    for j in 0..n {
+        for t in 0..q {
+            lp.push(row, vars.x(j, t), 1.0);
+        }
+        lp.b.push(1.0);
+        row += 1;
+        for t in 0..q {
+            lp.push(row, vars.x(j, t), -1.0);
+        }
+        lp.b.push(-1.0);
+        row += 1;
+    }
+
+    debug_assert_eq!(row, n_rows);
+    debug_assert!(lp.validate().is_ok());
+    (lp, vars)
+}
+
+/// Tighten the box bounds of a built HLP: any feasible schedule value
+/// `lambda_hi` (e.g. the warm start's λ) upper-bounds λ*, and some
+/// optimal solution keeps every `C_j ≤ λ*`, so shrinking
+/// `hi[C_j] = hi[λ] = lambda_hi` preserves the optimum while improving
+/// PDHG's dual bound enormously (the dual objective pays
+/// `min(rc·lo, rc·hi)` per variable — a loose `hi = Σp̄` lets slightly
+/// negative reduced costs wreck it).
+pub fn tighten_hlp_box(lp: &mut SparseLp, vars: &HlpVars, lambda_hi: f64) {
+    let hi = lambda_hi * (1.0 + 1e-9);
+    for j in 0..vars.n_tasks {
+        lp.hi[vars.completion(j)] = lp.hi[vars.completion(j)].min(hi);
+    }
+    lp.hi[vars.lambda] = lp.hi[vars.lambda].min(hi);
+}
+
+/// Same for QHLP.
+pub fn tighten_qhlp_box(lp: &mut SparseLp, vars: &QhlpVars, lambda_hi: f64) {
+    let hi = lambda_hi * (1.0 + 1e-9);
+    for j in 0..vars.n_tasks {
+        lp.hi[vars.completion(j)] = lp.hi[vars.completion(j)].min(hi);
+    }
+    lp.hi[vars.lambda] = lp.hi[vars.lambda].min(hi);
+}
+
+/// Feasible warm start for HLP from a concrete allocation: x per
+/// `alloc`, C = completion under infinite units (top level + own time),
+/// λ = max(critical path, load bounds).  Cuts PDHG iteration counts by a
+/// large factor (EXPERIMENTS.md §Perf).
+pub fn hlp_warm_start(g: &TaskGraph, plat: &Platform, alloc: &[usize], vars: &HlpVars) -> Vec<f64> {
+    let n = g.n_tasks();
+    let len = |j: usize| g.time_on(j, alloc[j]);
+    let tl = crate::graph::paths::top_level(g, &len);
+    let mut z = vec![0.0; 2 * n + 1];
+    let mut loads = vec![0.0f64; 2];
+    let mut cp: f64 = 0.0;
+    for j in 0..n {
+        z[vars.x(j)] = if alloc[j] == 0 { 1.0 } else { 0.0 };
+        let c = tl[j] + len(j);
+        z[vars.completion(j)] = c;
+        cp = cp.max(c);
+        loads[alloc[j]] += len(j);
+    }
+    z[vars.lambda] = cp
+        .max(loads[0] / plat.m() as f64)
+        .max(loads[1] / plat.k() as f64);
+    z
+}
+
+/// Feasible warm start for QHLP (same construction, Q types).
+pub fn qhlp_warm_start(
+    g: &TaskGraph,
+    plat: &Platform,
+    alloc: &[usize],
+    vars: &QhlpVars,
+) -> Vec<f64> {
+    let n = g.n_tasks();
+    let q = vars.n_types;
+    let len = |j: usize| g.time_on(j, alloc[j]);
+    let tl = crate::graph::paths::top_level(g, &len);
+    let mut z = vec![0.0; n * q + n + 1];
+    let mut loads = vec![0.0f64; q];
+    let mut cp: f64 = 0.0;
+    for j in 0..n {
+        z[vars.x(j, alloc[j])] = 1.0;
+        let c = tl[j] + len(j);
+        z[vars.completion(j)] = c;
+        cp = cp.max(c);
+        loads[alloc[j]] += len(j);
+    }
+    let mut lam = cp;
+    for t in 0..q {
+        lam = lam.max(loads[t] / plat.counts[t] as f64);
+    }
+    z[vars.lambda] = lam;
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+    use crate::platform::Platform;
+
+    fn diamond() -> TaskGraph {
+        let mut b = Builder::new("diamond");
+        let t0 = b.add_task("a", vec![4.0, 1.0]);
+        let t1 = b.add_task("b", vec![2.0, 5.0]);
+        let t2 = b.add_task("c", vec![6.0, 1.0]);
+        let t3 = b.add_task("d", vec![4.0, 1.0]);
+        b.add_arc(t0, t1);
+        b.add_arc(t0, t2);
+        b.add_arc(t1, t3);
+        b.add_arc(t2, t3);
+        b.build()
+    }
+
+    #[test]
+    fn hlp_shape() {
+        let g = diamond();
+        let (lp, vars) = build_hlp_opts(&g, &Platform::hybrid(2, 1), CapRows::All);
+        assert_eq!(lp.n, 9);
+        assert_eq!(lp.m, 4 + 1 + 4 + 2);
+        assert_eq!(vars.lambda, 8);
+        assert_eq!(lp.c[8], 1.0);
+        assert_eq!(lp.hi[0], 1.0);
+        assert_eq!(lp.hi[4], 16.0); // U = 4+2+6+4
+        lp.validate().unwrap();
+        // sinks-only drops 3 cap rows (single sink)
+        let (lp2, _) = build_hlp(&g, &Platform::hybrid(2, 1));
+        assert_eq!(lp2.m, 4 + 1 + 1 + 2);
+        lp2.validate().unwrap();
+    }
+
+    #[test]
+    fn sinks_only_caps_equivalent_to_full() {
+        use crate::graph::gen;
+        use crate::lp::simplex::solve_simplex;
+        use crate::substrate::rng::Rng;
+        let mut rng = Rng::new(41);
+        for _ in 0..8 {
+            let g = gen::hybrid_dag(&mut rng, 12, 0.25);
+            let plat = Platform::hybrid(3, 2);
+            let (full, _) = build_hlp_opts(&g, &plat, CapRows::All);
+            let (slim, _) = build_hlp_opts(&g, &plat, CapRows::SinksOnly);
+            let a = solve_simplex(&full).unwrap().obj;
+            let b = solve_simplex(&slim).unwrap().obj;
+            assert!((a - b).abs() < 1e-7 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn warm_start_is_feasible() {
+        use crate::graph::gen;
+        use crate::substrate::rng::Rng;
+        let mut rng = Rng::new(43);
+        for _ in 0..8 {
+            let g = gen::hybrid_dag(&mut rng, 25, 0.15);
+            let plat = Platform::hybrid(4, 2);
+            let alloc: Vec<usize> = (0..25)
+                .map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j)))
+                .collect();
+            let (lp, vars) = build_hlp(&g, &plat);
+            let z = hlp_warm_start(&g, &plat, &alloc, &vars);
+            assert!(lp.max_violation(&z) < 1e-9, "viol {}", lp.max_violation(&z));
+            // and within bounds
+            for j in 0..lp.n {
+                assert!(z[j] >= lp.lo[j] - 1e-12 && z[j] <= lp.hi[j] + 1e-9);
+            }
+            // QHLP variant
+            let (qlp, qvars) = build_qhlp(&g, &plat);
+            let qz = qhlp_warm_start(&g, &plat, &alloc, &qvars);
+            assert!(qlp.max_violation(&qz) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn hlp_feasible_point_all_cpu_serial() {
+        // all on CPU executed serially: x=1, C_j = cumulative, λ = U
+        let g = diamond();
+        let (lp, vars) = build_hlp(&g, &Platform::hybrid(2, 1));
+        let mut z = vec![0.0; lp.n];
+        for j in 0..4 {
+            z[vars.x(j)] = 1.0;
+        }
+        // serial completion in topo order 0,1,2,3
+        z[vars.completion(0)] = 4.0;
+        z[vars.completion(1)] = 6.0;
+        z[vars.completion(2)] = 12.0;
+        z[vars.completion(3)] = 16.0;
+        z[vars.lambda] = 16.0;
+        assert!(lp.max_violation(&z) < 1e-12, "viol {}", lp.max_violation(&z));
+    }
+
+    #[test]
+    fn hlp_infeasible_if_lambda_below_critical_path() {
+        let g = diamond();
+        let (lp, vars) = build_hlp(&g, &Platform::hybrid(2, 1));
+        // all GPU: CP = 1 + 1 + 1 = 3 via (0,2,3); λ = 2 must violate
+        let mut z = vec![0.0; lp.n];
+        z[vars.completion(0)] = 1.0;
+        z[vars.completion(1)] = 6.0;
+        z[vars.completion(2)] = 2.0;
+        z[vars.completion(3)] = 3.0;
+        z[vars.lambda] = 2.0;
+        assert!(lp.max_violation(&z) > 0.5);
+    }
+
+    #[test]
+    fn qhlp_shape_and_q2_equivalence_dimensions() {
+        let g = diamond();
+        let (lp, vars) = build_qhlp_opts(&g, &Platform::hybrid(2, 1), CapRows::All);
+        assert_eq!(lp.n, 4 * 2 + 4 + 1);
+        assert_eq!(lp.m, 4 + 1 + 4 + 2 + 8);
+        assert_eq!(vars.x(1, 1), 3);
+        assert_eq!(vars.completion(0), 8);
+        lp.validate().unwrap();
+        let (lp2, _) = build_qhlp(&g, &Platform::hybrid(2, 1));
+        assert_eq!(lp2.m, 4 + 1 + 1 + 2 + 8);
+    }
+
+    #[test]
+    fn qhlp_assignment_equality_enforced() {
+        let g = diamond();
+        let (lp, vars) = build_qhlp(&g, &Platform::hybrid(2, 1));
+        let mut z = vec![0.0; lp.n];
+        // x all zero violates Σ x = 1 (the ≥ rows)
+        for j in 0..4 {
+            z[vars.completion(j)] = 100.0;
+        }
+        z[vars.lambda] = 1000.0;
+        assert!(lp.max_violation(&z) >= 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn qhlp_three_types() {
+        let mut b = Builder::new("t");
+        let a = b.add_task("a", vec![3.0, 1.0, 2.0]);
+        let c = b.add_task("b", vec![5.0, 4.0, 1.0]);
+        b.add_arc(a, c);
+        let g = b.build();
+        let plat = Platform::new(vec![4, 2, 1]);
+        let (lp, vars) = build_qhlp(&g, &plat);
+        assert_eq!(lp.n, 2 * 3 + 2 + 1);
+        assert_eq!(vars.lambda, 8);
+        // feasible: both tasks on type 0, serially
+        let mut z = vec![0.0; lp.n];
+        z[vars.x(0, 0)] = 1.0;
+        z[vars.x(1, 0)] = 1.0;
+        z[vars.completion(0)] = 3.0;
+        z[vars.completion(1)] = 8.0;
+        z[vars.lambda] = 8.0;
+        assert!(lp.max_violation(&z) < 1e-12);
+    }
+}

@@ -1,0 +1,115 @@
+//! Rounding the fractional HLP/QHLP solution into an allocation — the
+//! paper's rules:
+//!
+//! * HLP (§3): `x_j ≥ ½` → CPU side, else GPU side.
+//! * QHLP (§5): `q' = argmax_q x_{j,q}`; ties broken towards the type
+//!   with the smallest processing time.
+
+use crate::graph::TaskGraph;
+
+use super::model::{HlpVars, QhlpVars};
+
+/// Allocation: processor type per task (0 = CPU, 1.. = GPU types).
+pub type Allocation = Vec<usize>;
+
+/// Round a fractional HLP solution.
+pub fn round_hlp(z: &[f64], vars: &HlpVars) -> Allocation {
+    (0..vars.n_tasks)
+        .map(|j| if z[vars.x(j)] >= 0.5 { 0 } else { 1 })
+        .collect()
+}
+
+/// Round a fractional QHLP solution.
+pub fn round_qhlp(z: &[f64], vars: &QhlpVars, g: &TaskGraph) -> Allocation {
+    (0..vars.n_tasks)
+        .map(|j| {
+            let mut best_q = 0usize;
+            let mut best_x = f64::NEG_INFINITY;
+            for q in 0..vars.n_types {
+                let x = z[vars.x(j, q)];
+                let better = x > best_x + 1e-12
+                    || ((x - best_x).abs() <= 1e-12 && g.time_on(j, q) < g.time_on(j, best_q));
+                if better {
+                    best_x = x.max(best_x);
+                    best_q = q;
+                }
+            }
+            best_q
+        })
+        .collect()
+}
+
+/// Property of the rounding used in the Q(Q+1) proof: the chosen type's
+/// fractional value is at least 1/Q (Equation (17)).  Returns the worst
+/// (task, value) pair for diagnostics.
+pub fn min_selected_fraction(z: &[f64], vars: &QhlpVars, alloc: &Allocation) -> (usize, f64) {
+    let mut worst = (0usize, f64::INFINITY);
+    for j in 0..vars.n_tasks {
+        let x = z[vars.x(j, alloc[j])];
+        if x < worst.1 {
+            worst = (j, x);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+    use crate::lp::model::{build_hlp, build_qhlp};
+    use crate::lp::pdhg::{solve_rust, DriveOpts};
+    use crate::platform::Platform;
+
+    fn two_task_graph() -> crate::graph::TaskGraph {
+        let mut b = Builder::new("t");
+        b.add_task("a", vec![10.0, 1.0]); // strongly GPU
+        b.add_task("b", vec![1.0, 10.0]); // strongly CPU
+        b.build()
+    }
+
+    #[test]
+    fn hlp_round_threshold() {
+        let vars = HlpVars {
+            n_tasks: 2,
+            lambda: 4,
+        };
+        let z = vec![0.5, 0.49, 0.0, 0.0, 0.0];
+        assert_eq!(round_hlp(&z, &vars), vec![0, 1]);
+    }
+
+    #[test]
+    fn hlp_round_on_solved_lp_follows_speed() {
+        let g = two_task_graph();
+        let (lp, vars) = build_hlp(&g, &Platform::hybrid(2, 1));
+        let sol = solve_rust(&lp, &DriveOpts::default());
+        let alloc = round_hlp(&sol.z, &vars);
+        assert_eq!(alloc, vec![1, 0], "z = {:?}", &sol.z[..2]);
+    }
+
+    #[test]
+    fn qhlp_round_argmax_and_tiebreak() {
+        let g = two_task_graph();
+        let vars = QhlpVars {
+            n_tasks: 2,
+            n_types: 2,
+            lambda: 6,
+        };
+        // task 0: clear argmax type 1; task 1: tie -> faster type (0)
+        let z = vec![0.2, 0.8, 0.5, 0.5, 0.0, 0.0, 0.0];
+        let alloc = round_qhlp(&z, &vars, &g);
+        assert_eq!(alloc, vec![1, 0]);
+    }
+
+    #[test]
+    fn qhlp_selected_fraction_at_least_inverse_q() {
+        let g = two_task_graph();
+        let plat = Platform::hybrid(2, 1);
+        let (lp, vars) = build_qhlp(&g, &plat);
+        let sol = solve_rust(&lp, &DriveOpts::default());
+        let alloc = round_qhlp(&sol.z, &vars, &g);
+        let (_, frac) = min_selected_fraction(&sol.z, &vars, &alloc);
+        // Σ_q x = 1 and argmax => x >= 1/Q (allow PDHG tolerance)
+        assert!(frac >= 1.0 / 2.0 - 1e-2, "frac {frac}");
+    }
+}

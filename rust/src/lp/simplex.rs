@@ -1,0 +1,410 @@
+//! Exact LP solver: dense two-phase primal simplex.
+//!
+//! The role of this module is the one GLPK played in the paper (§6.2):
+//! an exact optimum `LP*` for the HLP/QHLP relaxations.  It is the
+//! correctness oracle for the PDHG path (both backends must agree with
+//! it on every test LP) and the exact backend for small instances; big
+//! campaign instances use PDHG with its duality-gap certificate instead.
+//!
+//! Handles the general box form by shifting to `x̃ = z − lo ≥ 0` and
+//! materializing finite upper bounds as extra rows.  Dantzig pricing
+//! with an automatic switch to Bland's rule to guarantee termination.
+
+use super::{LpSolution, SparseLp};
+
+const EPS: f64 = 1e-9;
+/// Upper bounds at or above this are treated as +inf (no row emitted).
+const BIG: f64 = 1e17;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimplexError {
+    Infeasible,
+    Unbounded,
+    IterationLimit,
+}
+
+struct Tableau {
+    /// rows x cols, last column = rhs
+    t: Vec<Vec<f64>>,
+    n_rows: usize,
+    n_cols: usize, // variables incl. slacks/artificials (excl. rhs)
+    basis: Vec<usize>,
+}
+
+impl Tableau {
+    fn pivot(&mut self, r: usize, c: usize) {
+        let piv = self.t[r][c];
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for x in self.t[r].iter_mut() {
+            *x *= inv;
+        }
+        let prow = self.t[r].clone();
+        for (i, row) in self.t.iter_mut().enumerate() {
+            if i != r {
+                let f = row[c];
+                if f != 0.0 {
+                    for (x, p) in row.iter_mut().zip(&prow) {
+                        *x -= f * p;
+                    }
+                }
+            }
+        }
+        self.basis[r] = c;
+    }
+
+    /// Run simplex on the cost row (last row), minimizing.
+    /// `allowed` marks columns that may enter the basis.
+    fn optimize(&mut self, allowed: &[bool], max_iters: usize) -> Result<(), SimplexError> {
+        let cost_row = self.n_rows;
+        let mut iters = 0usize;
+        // switch to Bland when past this many iterations (anti-cycling)
+        let bland_after = max_iters / 2;
+        loop {
+            iters += 1;
+            if iters > max_iters {
+                return Err(SimplexError::IterationLimit);
+            }
+            // entering column
+            let mut enter: Option<usize> = None;
+            if iters <= bland_after {
+                let mut best = -EPS;
+                for c in 0..self.n_cols {
+                    if allowed[c] && self.t[cost_row][c] < best {
+                        best = self.t[cost_row][c];
+                        enter = Some(c);
+                    }
+                }
+            } else {
+                for c in 0..self.n_cols {
+                    if allowed[c] && self.t[cost_row][c] < -EPS {
+                        enter = Some(c);
+                        break;
+                    }
+                }
+            }
+            let Some(c) = enter else {
+                return Ok(());
+            };
+            // leaving row: min ratio, Bland tie-break on basis index
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.n_rows {
+                let a = self.t[r][c];
+                if a > EPS {
+                    let ratio = self.t[r][self.n_cols] / a;
+                    let better = ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && leave.map(|l| self.basis[r] < self.basis[l]).unwrap_or(true));
+                    if better {
+                        best_ratio = ratio;
+                        leave = Some(r);
+                    }
+                }
+            }
+            let Some(r) = leave else {
+                return Err(SimplexError::Unbounded);
+            };
+            self.pivot(r, c);
+        }
+    }
+}
+
+/// Solve `min cᵀz : Az ≤ b, lo ≤ z ≤ hi` exactly.
+pub fn solve_simplex(lp: &SparseLp) -> Result<LpSolution, SimplexError> {
+    let n = lp.n;
+    // shift: x̃ = z - lo; extra rows for finite hi
+    let shift: Vec<f64> = lp.lo.clone();
+    let ubs: Vec<(usize, f64)> = (0..n)
+        .filter(|&j| lp.hi[j] < BIG)
+        .map(|j| (j, lp.hi[j] - lp.lo[j]))
+        .collect();
+    let m = lp.m + ubs.len();
+
+    // dense A-tilde and b-tilde
+    let mut a = vec![vec![0.0f64; n]; m];
+    let mut b = vec![0.0f64; m];
+    for i in 0..lp.vals.len() {
+        a[lp.rows[i] as usize][lp.cols[i] as usize] += lp.vals[i];
+    }
+    for i in 0..lp.m {
+        let alo: f64 = a[i].iter().zip(&shift).map(|(x, l)| x * l).sum();
+        b[i] = lp.b[i] - alo;
+    }
+    for (r, &(j, ub)) in ubs.iter().enumerate() {
+        a[lp.m + r][j] = 1.0;
+        b[lp.m + r] = ub;
+    }
+
+    // columns: structural n | slacks m | artificials (rows with b<0)
+    let neg_rows: Vec<usize> = (0..m).filter(|&i| b[i] < -EPS).collect();
+    let n_art = neg_rows.len();
+    let n_cols = n + m + n_art;
+    let mut t = vec![vec![0.0f64; n_cols + 1]; m + 1];
+    let mut basis = vec![0usize; m];
+    {
+        let mut art = 0;
+        for i in 0..m {
+            let negate = b[i] < -EPS;
+            let s = if negate { -1.0 } else { 1.0 };
+            for j in 0..n {
+                t[i][j] = s * a[i][j];
+            }
+            t[i][n + i] = s; // slack
+            t[i][n_cols] = s * b[i];
+            if negate {
+                t[i][n + m + art] = 1.0;
+                basis[i] = n + m + art;
+                art += 1;
+            } else {
+                basis[i] = n + i;
+            }
+        }
+    }
+
+    let max_iters = 200 * (m + n) + 2000;
+
+    // Phase 1: minimize sum of artificials.
+    if n_art > 0 {
+        // phase-1 cost: +1 on artificial columns; reduce against the
+        // basic artificial rows so basic reduced costs are zero.
+        for c in 0..=n_cols {
+            t[m][c] = 0.0;
+        }
+        for c in n + m..n_cols {
+            t[m][c] = 1.0;
+        }
+        for i in 0..m {
+            if basis[i] >= n + m {
+                for c in 0..=n_cols {
+                    t[m][c] -= t[i][c];
+                }
+            }
+        }
+        let allowed: Vec<bool> = (0..n_cols).map(|_| true).collect();
+        let mut tab = Tableau {
+            t,
+            n_rows: m,
+            n_cols,
+            basis,
+        };
+        tab.optimize(&allowed, max_iters)?;
+        // objective = -t[m][rhs] (we built the negated cost row)
+        let phase1_obj = -tab.t[m][n_cols];
+        if phase1_obj > 1e-6 {
+            return Err(SimplexError::Infeasible);
+        }
+        // pivot any artificial still basic (degenerate) out of the basis
+        for r in 0..m {
+            if tab.basis[r] >= n + m {
+                if let Some(c) = (0..n + m).find(|&c| tab.t[r][c].abs() > EPS) {
+                    tab.pivot(r, c);
+                }
+            }
+        }
+        t = tab.t;
+        basis = tab.basis;
+    }
+
+    // Phase 2: minimize c̃ᵀ x̃ (c̃ = c on structural, 0 on slacks).
+    for c in 0..=n_cols {
+        t[m][c] = 0.0;
+    }
+    for j in 0..n {
+        t[m][j] = lp.c[j];
+    }
+    // subtract basic rows to zero reduced costs of the basis
+    for i in 0..m {
+        let f = t[m][basis[i]];
+        if f != 0.0 {
+            let row = t[i].clone();
+            for (x, p) in t[m].iter_mut().zip(&row) {
+                *x -= f * p;
+            }
+        }
+    }
+    let allowed: Vec<bool> = (0..n_cols).map(|c| c < n + m).collect();
+    let mut tab = Tableau {
+        t,
+        n_rows: m,
+        n_cols,
+        basis,
+    };
+    tab.optimize(&allowed, max_iters)?;
+
+    // extract
+    let mut z = shift;
+    for r in 0..m {
+        if tab.basis[r] < n {
+            z[tab.basis[r]] += tab.t[r][n_cols];
+        }
+    }
+    let obj = lp.objective(&z);
+    Ok(LpSolution {
+        z,
+        obj,
+        lower_bound: obj,
+        gap: 0.0,
+        iters: 0,
+        backend: "simplex",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::pdhg::{solve_rust, DriveOpts};
+    use crate::substrate::rng::Rng;
+
+    fn knapsack() -> SparseLp {
+        let mut lp = SparseLp {
+            n: 2,
+            m: 1,
+            b: vec![1.5],
+            c: vec![-1.0, -1.0],
+            lo: vec![0.0; 2],
+            hi: vec![1.0; 2],
+            ..Default::default()
+        };
+        lp.push(0, 0, 1.0);
+        lp.push(0, 1, 1.0);
+        lp
+    }
+
+    #[test]
+    fn textbook_lp() {
+        // max 3x+2y : x+y<=4, x+3y<=6, x,y>=0 -> (4,0), obj 12
+        let mut lp = SparseLp {
+            n: 2,
+            m: 2,
+            b: vec![4.0, 6.0],
+            c: vec![-3.0, -2.0],
+            lo: vec![0.0; 2],
+            hi: vec![f64::INFINITY; 2],
+            ..Default::default()
+        };
+        lp.push(0, 0, 1.0);
+        lp.push(0, 1, 1.0);
+        lp.push(1, 0, 1.0);
+        lp.push(1, 1, 3.0);
+        let sol = solve_simplex(&lp).unwrap();
+        assert!((sol.obj + 12.0).abs() < 1e-9, "obj {}", sol.obj);
+        assert!((sol.z[0] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn knapsack_with_box() {
+        let sol = solve_simplex(&knapsack()).unwrap();
+        assert!((sol.obj + 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase1_negative_rhs() {
+        // min x : x >= 3 (as -x <= -3), x in [0,10] -> 3
+        let mut lp = SparseLp {
+            n: 1,
+            m: 1,
+            b: vec![-3.0],
+            c: vec![1.0],
+            lo: vec![0.0],
+            hi: vec![10.0],
+            ..Default::default()
+        };
+        lp.push(0, 0, -1.0);
+        let sol = solve_simplex(&lp).unwrap();
+        assert!((sol.obj - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1 and x >= 2
+        let mut lp = SparseLp {
+            n: 1,
+            m: 2,
+            b: vec![1.0, -2.0],
+            c: vec![0.0],
+            lo: vec![0.0],
+            hi: vec![f64::INFINITY],
+            ..Default::default()
+        };
+        lp.push(0, 0, 1.0);
+        lp.push(1, 0, -1.0);
+        assert!(matches!(solve_simplex(&lp), Err(SimplexError::Infeasible)));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x : x >= 0 unbounded
+        let lp = SparseLp {
+            n: 1,
+            m: 0,
+            c: vec![-1.0],
+            lo: vec![0.0],
+            hi: vec![f64::INFINITY],
+            ..Default::default()
+        };
+        assert!(matches!(solve_simplex(&lp), Err(SimplexError::Unbounded)));
+    }
+
+    #[test]
+    fn nonzero_lower_bounds() {
+        // min x+y : x+y >= 5, x in [1,3], y in [2, 10] -> 5 at (1,4)? x+y>=5
+        // feasible min is max(5, 1+2)=5
+        let mut lp = SparseLp {
+            n: 2,
+            m: 1,
+            b: vec![-5.0],
+            c: vec![1.0, 1.0],
+            lo: vec![1.0, 2.0],
+            hi: vec![3.0, 10.0],
+            ..Default::default()
+        };
+        lp.push(0, 0, -1.0);
+        lp.push(0, 1, -1.0);
+        let sol = solve_simplex(&lp).unwrap();
+        assert!((sol.obj - 5.0).abs() < 1e-9, "obj {}", sol.obj);
+        assert!(sol.z[0] >= 1.0 - 1e-9 && sol.z[1] >= 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn agrees_with_pdhg_on_random_lps() {
+        let mut rng = Rng::new(77);
+        for case in 0..20 {
+            let n = 2 + rng.below(8);
+            let m = 1 + rng.below(6);
+            let mut lp = SparseLp {
+                n,
+                m,
+                b: (0..m).map(|_| rng.uniform(0.5, 5.0)).collect(),
+                c: (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                lo: vec![0.0; n],
+                hi: (0..n).map(|_| rng.uniform(0.5, 3.0)).collect(),
+                ..Default::default()
+            };
+            for i in 0..m {
+                for j in 0..n {
+                    if rng.chance(0.5) {
+                        lp.push(i, j, rng.uniform(-2.0, 2.0));
+                    }
+                }
+            }
+            let exact = solve_simplex(&lp).unwrap();
+            let approx = solve_rust(
+                &lp,
+                &DriveOpts {
+                    tol: 1e-6,
+                    ..Default::default()
+                },
+            );
+            let scale = 1.0 + exact.obj.abs();
+            assert!(
+                (exact.obj - approx.obj).abs() / scale < 5e-3,
+                "case {case}: simplex {} vs pdhg {}",
+                exact.obj,
+                approx.obj
+            );
+            // duality sandwich: pdhg lower bound <= exact optimum
+            assert!(approx.lower_bound <= exact.obj + 1e-6 * scale);
+        }
+    }
+}

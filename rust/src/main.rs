@@ -1,0 +1,501 @@
+//! `hetsched` — CLI for the heterogeneous-scheduling framework.
+//!
+//! Subcommands:
+//!   counts        Table 4/5 task counts (sanity vs the paper)
+//!   gen           generate an instance (JSON to --out, DOT with --dot)
+//!   lp            solve the (Q)HLP relaxation of an instance
+//!   schedule      run an offline algorithm, print makespan (+ --gantt)
+//!   online        run an online policy
+//!   experiment    regenerate a figure: --fig 3|4|5|6|7
+//!   lower-bounds  run the Theorem 1/2/4 adversarial instances
+//!   serve         live coordinator run (worker threads)
+//!   artifacts     show the AOT artifact manifest
+
+use hetsched::algos::{run_offline, solve_hlp, solve_qhlp, Offline};
+use hetsched::analysis::{
+    mean_improvement_pct, pairwise_by_app, ratio_by_app, ratio_by_sqrt_mk, records_csv,
+    render_summary_table,
+};
+use hetsched::coordinator::{run_live, LiveConfig};
+use hetsched::experiments::{offline, online, thm, CampaignOpts};
+use hetsched::graph::{io as gio, TaskGraph};
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sim::validate;
+use hetsched::substrate::cli::Args;
+use hetsched::workloads::{chameleon, forkjoin, Instance, Scale};
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("counts") => cmd_counts(),
+        Some("gen") => cmd_gen(&args),
+        Some("lp") => cmd_lp(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("online") => cmd_online(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("lower-bounds") => cmd_lower_bounds(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: hetsched <command> [flags]\n\
+         commands:\n  \
+         counts\n  \
+         gen        --app potrf|getrf|posv|potri|potrs|forkjoin --nb N --bs B \
+         [--width W --phases P] [--types 2|3] [--out FILE] [--dot]\n  \
+         lp         (gen flags) --m M --k K [--backend auto|rust|pjrt|simplex] [--tol T]\n  \
+         schedule   (lp flags) --algo hlp-est|hlp-ols|heft [--gantt]\n  \
+         online     (gen flags) --m M --k K --policy er-ls|eft|greedy|random|r1|r2|r3\n  \
+         experiment --fig 3|4|5|6|7 [--scale smoke|default|full] [--backend B] \
+         [--workers N] [--out DIR]\n  \
+         lower-bounds [--thm 1|2|4]\n  \
+         serve      (gen flags) --m M --k K --policy P [--time-scale S]\n  \
+         artifacts"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_counts() {
+    println!("Table 4 (Chameleon task counts):");
+    println!("{:>8} {:>8} {:>8} {:>8}", "app", "nb=5", "nb=10", "nb=20");
+    for app in chameleon::APPS {
+        let row: Vec<usize> = [5, 10, 20]
+            .iter()
+            .map(|&nb| chameleon::table4_count(app, nb).unwrap())
+            .collect();
+        println!("{:>8} {:>8} {:>8} {:>8}", app, row[0], row[1], row[2]);
+    }
+    println!("\nTable 5 (fork-join task counts):");
+    print!("{:>6}", "p\\w");
+    for w in forkjoin::PAPER_WIDTHS {
+        print!(" {w:>6}");
+    }
+    println!();
+    for p in forkjoin::PAPER_PHASES {
+        print!("{p:>6}");
+        for w in forkjoin::PAPER_WIDTHS {
+            print!(" {:>6}", forkjoin::table5_count(w, p));
+        }
+        println!();
+    }
+}
+
+fn instance_from_args(args: &Args) -> Instance {
+    let app = args.string("app", "potrf");
+    if app == "forkjoin" || app == "fork-join" {
+        Instance::ForkJoin {
+            width: args.usize("width", 100),
+            phases: args.usize("phases", 2),
+        }
+    } else {
+        Instance::Chameleon {
+            app,
+            nb_blocks: args.usize("nb", 10),
+            block_size: args.usize("bs", 320),
+        }
+    }
+}
+
+fn graph_from_args(args: &Args) -> TaskGraph {
+    let n_types = args.usize("types", 2);
+    instance_from_args(args).generate(n_types)
+}
+
+fn platform_from_args(args: &Args, g: &TaskGraph) -> Platform {
+    if g.n_types() == 2 {
+        Platform::hybrid(args.usize("m", 16), args.usize("k", 4))
+    } else {
+        Platform::new(vec![
+            args.usize("m", 16),
+            args.usize("k", 4),
+            args.usize("k2", 4),
+        ])
+    }
+}
+
+fn backend_from_args(args: &Args) -> LpBackendKind {
+    LpBackendKind::parse(&args.string("backend", "auto")).unwrap_or_else(|| {
+        eprintln!("unknown backend");
+        std::process::exit(2)
+    })
+}
+
+fn cmd_gen(args: &Args) {
+    let g = graph_from_args(args);
+    eprintln!(
+        "{}: {} tasks, {} arcs, {} types",
+        g.app,
+        g.n_tasks(),
+        g.n_arcs(),
+        g.n_types()
+    );
+    let text = if args.has("dot") {
+        gio::to_dot(&g)
+    } else {
+        gio::to_json(&g).to_string()
+    };
+    match args.str_flag("out") {
+        Some(path) => std::fs::write(path, text).expect("write output"),
+        None => println!("{text}"),
+    }
+}
+
+fn cmd_lp(args: &Args) {
+    let g = graph_from_args(args);
+    let plat = platform_from_args(args, &g);
+    let backend = backend_from_args(args);
+    let tol = args.f64("tol", 1e-4);
+    let t = std::time::Instant::now();
+    let sol = if g.n_types() == 2 {
+        solve_hlp(&g, &plat, backend, tol)
+    } else {
+        solve_qhlp(&g, &plat, backend, tol)
+    };
+    println!(
+        "LP* = {:.6}  (backend {}, gap {:.2e}, {} iters, {:?})",
+        sol.sol.obj,
+        sol.sol.backend,
+        sol.sol.gap,
+        sol.sol.iters,
+        t.elapsed()
+    );
+    let cpu = sol.alloc.iter().filter(|&&a| a == 0).count();
+    println!(
+        "allocation: {} tasks on CPU, {} on accelerators",
+        cpu,
+        g.n_tasks() - cpu
+    );
+}
+
+fn cmd_schedule(args: &Args) {
+    let g = graph_from_args(args);
+    let plat = platform_from_args(args, &g);
+    let backend = backend_from_args(args);
+    let algo = match args.string("algo", "hlp-ols").as_str() {
+        "hlp-est" => Offline::HlpEst,
+        "hlp-ols" => Offline::HlpOls,
+        "heft" => Offline::Heft,
+        other => {
+            eprintln!("unknown algo {other}");
+            std::process::exit(2)
+        }
+    };
+    let tol = args.f64("tol", 1e-4);
+    let t = std::time::Instant::now();
+    let (s, lp) = run_offline(algo, &g, &plat, None, backend, tol);
+    validate(&g, &plat, &s).expect("invalid schedule");
+    println!(
+        "{} on {} ({}): makespan {:.6} in {:?}",
+        algo.name(),
+        g.app,
+        plat.label(),
+        s.makespan,
+        t.elapsed()
+    );
+    if let Some(lp) = lp {
+        println!("LP* = {:.6}, ratio = {:.4}", lp.sol.obj, s.makespan / lp.sol.obj);
+    }
+    let util = s.utilization(&plat);
+    println!(
+        "utilization: {}",
+        util.iter()
+            .enumerate()
+            .map(|(q, u)| format!("{} {:.1}%", plat.names[q], u * 100.0))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if args.has("gantt") {
+        println!("{}", s.gantt(&g, &plat));
+    }
+}
+
+fn policy_from_args(args: &Args) -> OnlinePolicy {
+    match args.string("policy", "er-ls").as_str() {
+        "er-ls" | "erls" => OnlinePolicy::ErLs,
+        "eft" => OnlinePolicy::Eft,
+        "greedy" => OnlinePolicy::Greedy,
+        "random" => OnlinePolicy::Random(args.u64("seed", 42)),
+        "r1" => OnlinePolicy::R1,
+        "r2" => OnlinePolicy::R2,
+        "r3" => OnlinePolicy::R3,
+        other => {
+            eprintln!("unknown policy {other}");
+            std::process::exit(2)
+        }
+    }
+}
+
+fn cmd_online(args: &Args) {
+    let g = graph_from_args(args);
+    let plat = platform_from_args(args, &g);
+    let policy = policy_from_args(args);
+    let t = std::time::Instant::now();
+    let s = online_by_id(&g, &plat, &policy);
+    validate(&g, &plat, &s).expect("invalid schedule");
+    println!(
+        "{} on {} ({}): makespan {:.6} in {:?}",
+        policy.name(),
+        g.app,
+        plat.label(),
+        s.makespan,
+        t.elapsed()
+    );
+}
+
+fn campaign_opts(args: &Args) -> CampaignOpts {
+    let mut opts = CampaignOpts {
+        scale: Scale::parse(&args.string("scale", "default")).unwrap_or(Scale::Default),
+        backend: backend_from_args(args),
+        tol: args.f64("tol", 1e-4),
+        ..Default::default()
+    };
+    if let Some(w) = args.str_flag("workers") {
+        opts.workers = w.parse().unwrap_or(opts.workers);
+    }
+    if args.has("no-cache") {
+        opts.cache_path = None;
+    } else if let Some(dir) = args.str_flag("out") {
+        opts.cache_path = Some(std::path::Path::new(dir).join("lp_cache.json"));
+    }
+    opts
+}
+
+fn write_out(args: &Args, name: &str, content: &str) {
+    if let Some(dir) = args.str_flag("out") {
+        std::fs::create_dir_all(dir).ok();
+        let path = std::path::Path::new(dir).join(name);
+        std::fs::write(&path, content).expect("write results");
+        eprintln!("wrote {}", path.display());
+    }
+}
+
+fn cmd_experiment(args: &Args) {
+    let fig = args.usize("fig", 3);
+    let opts = campaign_opts(args);
+    match fig {
+        3 | 4 => {
+            let records = offline::run(2, &opts);
+            write_out(args, &format!("fig{fig}_records.csv"), &records_csv(&records));
+            if fig == 3 {
+                for algo in ["HLP-EST", "HLP-OLS", "HEFT"] {
+                    println!(
+                        "{}",
+                        render_summary_table(
+                            &format!("Fig.3 makespan/LP* — {algo}"),
+                            &ratio_by_app(&records, algo)
+                        )
+                    );
+                }
+            } else {
+                println!(
+                    "{}",
+                    render_summary_table(
+                        "Fig.4-left HLP-EST / HLP-OLS",
+                        &pairwise_by_app(&records, "HLP-EST", "HLP-OLS")
+                    )
+                );
+                println!(
+                    "{}",
+                    render_summary_table(
+                        "Fig.4-right HEFT / HLP-OLS",
+                        &pairwise_by_app(&records, "HEFT", "HLP-OLS")
+                    )
+                );
+                println!(
+                    "mean improvement of HLP-OLS over HLP-EST: {:.1}%",
+                    mean_improvement_pct(&records, "HLP-OLS", "HLP-EST")
+                );
+                println!(
+                    "mean improvement of HLP-OLS over HEFT: {:.1}%",
+                    mean_improvement_pct(&records, "HLP-OLS", "HEFT")
+                );
+            }
+        }
+        5 => {
+            let records = offline::run(3, &opts);
+            write_out(args, "fig5_records.csv", &records_csv(&records));
+            for algo in ["QHLP-EST", "QHLP-OLS", "QHEFT"] {
+                println!(
+                    "{}",
+                    render_summary_table(
+                        &format!("Fig.5-left makespan/LP* — {algo}"),
+                        &ratio_by_app(&records, algo)
+                    )
+                );
+            }
+            println!(
+                "{}",
+                render_summary_table(
+                    "Fig.5-right QHEFT / QHLP-OLS",
+                    &pairwise_by_app(&records, "QHEFT", "QHLP-OLS")
+                )
+            );
+            println!(
+                "mean improvement of QHEFT over QHLP-OLS: {:.1}%",
+                mean_improvement_pct(&records, "QHEFT", "QHLP-OLS")
+            );
+        }
+        6 | 7 => {
+            let records = online::run(&opts);
+            write_out(args, &format!("fig{fig}_records.csv"), &records_csv(&records));
+            if fig == 6 {
+                for algo in ["ER-LS", "EFT", "Greedy", "Random"] {
+                    println!(
+                        "{}",
+                        render_summary_table(
+                            &format!("Fig.6-left makespan/LP* — {algo}"),
+                            &ratio_by_app(&records, algo)
+                        )
+                    );
+                }
+                println!("Fig.6-right mean competitive ratio vs sqrt(m/k):");
+                for algo in ["ER-LS", "EFT", "Greedy"] {
+                    let series = ratio_by_sqrt_mk(&records, algo);
+                    let pts: Vec<String> = series
+                        .iter()
+                        .map(|(x, s)| format!("({x:.2}, {:.3}±{:.3})", s.mean, s.stderr))
+                        .collect();
+                    println!("  {algo:>7}: {}", pts.join(" "));
+                }
+            } else {
+                println!(
+                    "{}",
+                    render_summary_table(
+                        "Fig.7-left Greedy / ER-LS",
+                        &pairwise_by_app(&records, "Greedy", "ER-LS")
+                    )
+                );
+                println!(
+                    "{}",
+                    render_summary_table(
+                        "Fig.7-right EFT / ER-LS",
+                        &pairwise_by_app(&records, "EFT", "ER-LS")
+                    )
+                );
+                println!(
+                    "mean improvement of ER-LS over Greedy: {:.1}%",
+                    mean_improvement_pct(&records, "ER-LS", "Greedy")
+                );
+                println!(
+                    "mean improvement of ER-LS over EFT: {:.1}%",
+                    mean_improvement_pct(&records, "ER-LS", "EFT")
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown figure {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_lower_bounds(args: &Args) {
+    let which = args.usize("thm", 0);
+    if which == 0 || which == 1 {
+        println!("Theorem 1 (HEFT lower bound, instance of Table 1 / Fig. 1):");
+        println!(
+            "{:>5} {:>3} {:>12} {:>12} {:>9} {:>9} {:>9}",
+            "m", "k", "HEFT", "GOOD", "ratio", "exact", "asympt"
+        );
+        for (m, k) in [(9usize, 2usize), (16, 2), (16, 4), (36, 4), (64, 8), (128, 8)] {
+            if k * k > m {
+                continue;
+            }
+            let (heft_ms, good_ms, ratio) = thm::thm1_run(m, k);
+            println!(
+                "{m:>5} {k:>3} {heft_ms:>12.4} {good_ms:>12.4} {ratio:>9.4} {:>9.4} {:>9.4}",
+                thm::thm1_exact_ratio(m, k),
+                thm::thm1_predicted_ratio(m, k)
+            );
+        }
+    }
+    if which == 0 || which == 2 {
+        println!("\nTheorem 2 (HLP-EST tightness, instance of Table 2 / Fig. 2):");
+        println!(
+            "{:>5} {:>12} {:>10} {:>10} {:>10}",
+            "m", "LP*", "EST", "OLS", "6-O(1/m)"
+        );
+        for m in [5usize, 10, 20, 40, 80] {
+            let (lp_star, est_ratio, ols_ratio) = thm::thm2_run(m);
+            println!(
+                "{m:>5} {lp_star:>12.4} {est_ratio:>10.4} {ols_ratio:>10.4} {:>10.4}",
+                thm::thm2_worst_makespan(m) / lp_star
+            );
+        }
+    }
+    if which == 0 || which == 4 {
+        println!("\nTheorem 4 (ER-LS lower bound, instance of Table 3):");
+        println!(
+            "{:>5} {:>3} {:>12} {:>12} {:>9} {:>9}",
+            "m", "k", "ER-LS", "OPT", "ratio", "sqrt(m/k)"
+        );
+        for (m, k) in [(16usize, 4usize), (36, 4), (64, 4), (64, 16), (128, 8)] {
+            let (erls_ms, opt_ms, ratio) = thm::thm4_run(m, k);
+            println!(
+                "{m:>5} {k:>3} {erls_ms:>12.4} {opt_ms:>12.4} {ratio:>9.4} {:>9.4}",
+                (m as f64 / k as f64).sqrt()
+            );
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let g = graph_from_args(args);
+    let plat = Platform::hybrid(args.usize("m", 4), args.usize("k", 2));
+    let policy = policy_from_args(args);
+    let cfg = LiveConfig {
+        time_scale: args.f64("time-scale", 0.001),
+        policy,
+    };
+    let order: Vec<usize> = (0..g.n_tasks()).collect();
+    println!(
+        "serving {} ({} tasks) on {} workers ({}), policy {} ...",
+        g.app,
+        g.n_tasks(),
+        plat.n_units(),
+        plat.label(),
+        cfg.policy.name()
+    );
+    let (report, realized) = run_live(&g, &plat, &order, &cfg);
+    validate(&g, &plat, &realized).expect("realized schedule invalid");
+    println!(
+        "realized makespan {:.3} (predicted {:.3}, +{:.1}%), wall {:?}",
+        report.realized_makespan,
+        report.predicted_makespan,
+        (report.realized_makespan / report.predicted_makespan - 1.0) * 100.0,
+        report.wall
+    );
+    println!(
+        "decision latency: p50 {:.1} us, p95 {:.1} us",
+        report.decision_latency.p50 * 1e6,
+        report.decision_latency.p95 * 1e6
+    );
+}
+
+fn cmd_artifacts() {
+    match hetsched::runtime::load_manifest() {
+        Ok(man) => {
+            println!("artifacts dir: {}", man.dir.display());
+            println!(
+                "{:>6} {:>8} {:>8} {:>8} {:>6} {:>6}",
+                "name", "n", "r", "nz", "iters", "block"
+            );
+            for b in &man.buckets {
+                println!(
+                    "{:>6} {:>8} {:>8} {:>8} {:>6} {:>6}",
+                    b.name, b.n, b.r, b.nz, b.iters, b.block
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e} (run `make artifacts`)");
+            std::process::exit(1);
+        }
+    }
+}

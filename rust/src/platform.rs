@@ -1,0 +1,138 @@
+//! Machine model: `Q` sets of identical processors (Section 1 of the
+//! paper; `Q = 2` is the hybrid CPU/GPU case with `m >= k`), plus the
+//! exact machine-configuration grids of the experimental campaign (§6).
+
+/// A heterogeneous platform: `counts[q]` identical units of type `q`.
+/// Type 0 is "CPU" and type 1 "GPU" in the hybrid case.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Platform {
+    pub counts: Vec<usize>,
+    pub names: Vec<String>,
+}
+
+impl Platform {
+    pub fn new(counts: Vec<usize>) -> Platform {
+        assert!(!counts.is_empty() && counts.iter().all(|&c| c > 0));
+        let names = (0..counts.len())
+            .map(|q| match q {
+                0 => "CPU".to_string(),
+                1 => "GPU".to_string(),
+                q => format!("GPU{q}"),
+            })
+            .collect();
+        Platform { counts, names }
+    }
+
+    /// Hybrid platform with `m` CPUs and `k` GPUs.
+    pub fn hybrid(m: usize, k: usize) -> Platform {
+        Platform::new(vec![m, k])
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// m (number of CPUs) in the hybrid case.
+    pub fn m(&self) -> usize {
+        self.counts[0]
+    }
+
+    /// k (number of GPUs) in the hybrid case.
+    pub fn k(&self) -> usize {
+        self.counts[1]
+    }
+
+    pub fn label(&self) -> String {
+        self.counts
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+}
+
+/// The paper's 16 hybrid configurations (§6.2): 16..128 CPUs x 2..16 GPUs.
+pub fn paper_two_type_configs() -> Vec<Platform> {
+    let ms = [16usize, 32, 64, 128];
+    let ks = [2usize, 4, 8, 16];
+    let mut out = Vec::new();
+    for &m in &ms {
+        for &k in &ks {
+            out.push(Platform::hybrid(m, k));
+        }
+    }
+    out
+}
+
+/// The paper's 3-type grid (§6.2): triplets (CPUs, GPU1s, GPU2s) over the
+/// same value sets, 64 configurations in total.
+pub fn paper_three_type_configs() -> Vec<Platform> {
+    let ms = [16usize, 32, 64, 128];
+    let ks = [2usize, 4, 8, 16];
+    let mut out = Vec::new();
+    for &m in &ms {
+        for &k1 in &ks {
+            for &k2 in &ks {
+                out.push(Platform::new(vec![m, k1, k2]));
+            }
+        }
+    }
+    out
+}
+
+/// Reduced grids for quick campaigns (`--scale` smoke/default; the full
+/// paper grid stays available behind `--scale full`).
+pub fn reduced_two_type_configs() -> Vec<Platform> {
+    vec![
+        Platform::hybrid(16, 2),
+        Platform::hybrid(16, 8),
+        Platform::hybrid(64, 4),
+        Platform::hybrid(128, 16),
+    ]
+}
+
+pub fn reduced_three_type_configs() -> Vec<Platform> {
+    vec![
+        Platform::new(vec![16, 2, 2]),
+        Platform::new(vec![16, 8, 2]),
+        Platform::new(vec![64, 4, 8]),
+        Platform::new(vec![128, 16, 4]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_accessors() {
+        let p = Platform::hybrid(16, 4);
+        assert_eq!(p.m(), 16);
+        assert_eq!(p.k(), 4);
+        assert_eq!(p.n_units(), 20);
+        assert_eq!(p.n_types(), 2);
+        assert_eq!(p.label(), "16x4");
+        assert_eq!(p.names[0], "CPU");
+        assert_eq!(p.names[1], "GPU");
+    }
+
+    #[test]
+    fn paper_grids_have_paper_sizes() {
+        assert_eq!(paper_two_type_configs().len(), 16);
+        assert_eq!(paper_three_type_configs().len(), 64);
+        // m >= k holds for every paper hybrid config
+        for p in paper_two_type_configs() {
+            assert!(p.m() >= p.k());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_count_rejected() {
+        Platform::new(vec![4, 0]);
+    }
+}

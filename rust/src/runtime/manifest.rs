@@ -1,0 +1,151 @@
+//! Parse artifacts/manifest.json (written by python/compile/aot.py):
+//! the bucket ladder of compiled PDHG chunk executables.
+
+use std::path::{Path, PathBuf};
+
+use crate::substrate::json::{parse, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketSpec {
+    pub name: String,
+    pub file: String,
+    /// padded variable count (multiple of `block`)
+    pub n: usize,
+    /// padded row count
+    pub r: usize,
+    /// padded nonzero count
+    pub nz: usize,
+    /// PDHG iterations per executable call
+    pub iters: usize,
+    pub block: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub pad_b: f64,
+    pub buckets: Vec<BucketSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let dir = path
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| PathBuf::from("."));
+        Self::parse_with_dir(&text, dir)
+    }
+
+    pub fn parse_with_dir(text: &str, dir: PathBuf) -> Result<Manifest, String> {
+        let v = parse(text)?;
+        if v.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err("manifest: unsupported format".into());
+        }
+        let pad_b = v
+            .get("pad_b")
+            .and_then(Json::as_f64)
+            .ok_or("manifest: missing pad_b")?;
+        let mut buckets = Vec::new();
+        for b in v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing buckets")?
+        {
+            let field = |k: &str| -> Result<usize, String> {
+                b.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("manifest bucket: missing {k}"))
+            };
+            buckets.push(BucketSpec {
+                name: b
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("bucket name")?
+                    .to_string(),
+                file: b
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or("bucket file")?
+                    .to_string(),
+                n: field("n")?,
+                r: field("r")?,
+                nz: field("nz")?,
+                iters: field("iters")?,
+                block: field("block")?,
+            });
+        }
+        if buckets.is_empty() {
+            return Err("manifest: no buckets".into());
+        }
+        // keep sorted by capacity so pick() returns the smallest fit
+        buckets.sort_by_key(|b| (b.n, b.r, b.nz));
+        Ok(Manifest { dir, pad_b, buckets })
+    }
+
+    /// Smallest bucket that fits an LP of the given dimensions.
+    pub fn pick(&self, n_vars: usize, n_rows: usize, nnz: usize) -> Option<&BucketSpec> {
+        self.buckets
+            .iter()
+            .find(|b| n_vars <= b.n && n_rows <= b.r && nnz <= b.nz)
+    }
+
+    pub fn hlo_path(&self, bucket: &BucketSpec) -> PathBuf {
+        self.dir.join(&bucket.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "pad_b": 1e9,
+      "buckets": [
+        {"name": "b1", "file": "pdhg_b1.hlo.txt", "n": 8192, "r": 16384,
+         "nz": 65536, "iters": 250, "block": 4096},
+        {"name": "b0", "file": "pdhg_b0.hlo.txt", "n": 4096, "r": 8192,
+         "nz": 32768, "iters": 250, "block": 4096}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_sorts() {
+        let m = Manifest::parse_with_dir(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.pad_b, 1e9);
+        assert_eq!(m.buckets.len(), 2);
+        assert_eq!(m.buckets[0].name, "b0"); // sorted by size
+        assert_eq!(m.hlo_path(&m.buckets[1]).to_str().unwrap(), "/a/pdhg_b1.hlo.txt");
+    }
+
+    #[test]
+    fn pick_smallest_fit() {
+        let m = Manifest::parse_with_dir(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.pick(100, 100, 100).unwrap().name, "b0");
+        assert_eq!(m.pick(5000, 100, 100).unwrap().name, "b1");
+        assert!(m.pick(100_000, 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse_with_dir("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse_with_dir(
+            r#"{"format":"protobuf","pad_b":1,"buckets":[]}"#,
+            PathBuf::from(".")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration: if `make artifacts` has run, the real manifest parses
+        let path = crate::runtime::artifacts_dir().join("manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.pick(4 * 4620 + 1, 30_000, 140_000).is_some(),
+                "ladder must cover the largest campaign LP");
+        }
+    }
+}

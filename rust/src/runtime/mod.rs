@@ -1,0 +1,123 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas PDHG artifacts (HLO
+//! text, see python/compile/aot.py) and drive them from the Rust side.
+//!
+//! This is the Layer-3 ↔ Layer-2/1 bridge.  `make artifacts` produces
+//! `artifacts/pdhg_<bucket>.hlo.txt` + `manifest.json`; at startup we
+//! parse the manifest, compile each needed bucket once on the PJRT CPU
+//! client (compilation is cached per process), and then every HLP/QHLP
+//! solve pads its scaled LP into the smallest fitting bucket and runs
+//! 250-iteration chunks until the duality-gap certificate closes.
+
+pub mod manifest;
+pub mod pjrt;
+
+use crate::lp::pdhg::{self, DriveOpts};
+use crate::lp::{LpSolution, SparseLp};
+
+use manifest::Manifest;
+use pjrt::PjrtRuntime;
+
+/// Which LP backend to use for the allocation phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LpBackendKind {
+    /// AOT JAX/Pallas artifact via PJRT if available, else Rust PDHG.
+    Auto,
+    /// Force the in-tree Rust PDHG mirror.
+    RustPdhg,
+    /// Force the PJRT artifact (error if artifacts are missing).
+    Pjrt,
+    /// Exact dense simplex (small instances only).
+    Simplex,
+}
+
+impl LpBackendKind {
+    pub fn parse(s: &str) -> Option<LpBackendKind> {
+        match s {
+            "auto" => Some(LpBackendKind::Auto),
+            "rust" | "pdhg-rust" => Some(LpBackendKind::RustPdhg),
+            "pjrt" => Some(LpBackendKind::Pjrt),
+            "simplex" => Some(LpBackendKind::Simplex),
+            _ => None,
+        }
+    }
+}
+
+// The PJRT client is Rc-based (not Send), so the cached runtime is
+// per-thread: each campaign worker compiles its own executables once
+// (compilation of the ~40 kB chunk HLOs is cheap next to the solves).
+thread_local! {
+    static TLS_RT: std::cell::RefCell<Option<Result<PjrtRuntime, String>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Default artifacts directory: $HETSCHED_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HETSCHED_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Run `f` with this thread's PJRT runtime (initialized on first use).
+/// Returns `None` if the artifacts are absent or fail to load.
+pub fn with_runtime<R>(f: impl FnOnce(&mut PjrtRuntime) -> R) -> Option<R> {
+    TLS_RT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                PjrtRuntime::load(&artifacts_dir()).map_err(|e| e.to_string()),
+            );
+        }
+        match slot.as_mut().unwrap() {
+            Ok(rt) => Some(f(rt)),
+            Err(_) => None,
+        }
+    })
+}
+
+/// Solve an LP with the selected backend (the campaign entry point).
+/// `warm` is a feasible primal point in original coordinates, if known.
+pub fn solve_lp(
+    lp: &SparseLp,
+    kind: LpBackendKind,
+    tol: f64,
+    warm: Option<Vec<f64>>,
+) -> LpSolution {
+    solve_lp_capped(lp, kind, tol, warm, DriveOpts::default().max_iters)
+}
+
+/// `solve_lp` with an explicit PDHG iteration budget (campaign knob:
+/// stragglers return with a certified-but-looser gap instead of
+/// burning minutes).
+pub fn solve_lp_capped(
+    lp: &SparseLp,
+    kind: LpBackendKind,
+    tol: f64,
+    warm: Option<Vec<f64>>,
+    max_iters: usize,
+) -> LpSolution {
+    let opts = DriveOpts {
+        tol,
+        warm_start: warm,
+        max_iters,
+        ..Default::default()
+    };
+    match kind {
+        LpBackendKind::Simplex => crate::lp::simplex::solve_simplex(lp)
+            .expect("simplex failed on allocation LP (feasible by construction)"),
+        LpBackendKind::RustPdhg => pdhg::solve_rust(lp, &opts),
+        LpBackendKind::Pjrt => with_runtime(|rt| rt.solve(lp, &opts))
+            .expect("PJRT artifacts not found (run `make artifacts`)")
+            .expect("PJRT solve failed"),
+        LpBackendKind::Auto => {
+            match with_runtime(|rt| rt.solve(lp, &opts)) {
+                Some(Ok(sol)) => sol,
+                _ => pdhg::solve_rust(lp, &opts),
+            }
+        }
+    }
+}
+
+/// Load just the manifest (used by CLI info commands and tests).
+pub fn load_manifest() -> Result<Manifest, String> {
+    Manifest::load(&artifacts_dir().join("manifest.json"))
+}

@@ -1,0 +1,137 @@
+//! The Earliest Starting Time policy (§3): given the allocation, at each
+//! step schedule the ready task with the earliest possible starting time
+//! (ties towards the smaller task id).  This is the scheduling phase of
+//! HLP-EST (Kedad-Sidhoum et al.) and of its Q-type extension QHLP-EST.
+//!
+//! "Ready" here means all predecessors are already *scheduled* (their
+//! completion times are known), matching the static EST construction.
+
+use crate::graph::{TaskGraph, TaskId};
+use crate::platform::Platform;
+use crate::sim::{Placement, Schedule};
+
+/// Schedule with a fixed allocation under the EST policy.
+pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
+    let n = g.n_tasks();
+    assert_eq!(alloc.len(), n);
+
+    // per-type unit free times (linear scan: unit counts are small)
+    let mut unit_free: Vec<Vec<f64>> =
+        plat.counts.iter().map(|&c| vec![0.0f64; c]).collect();
+    let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
+    let mut ready_time = vec![0.0f64; n];
+    let mut ready: Vec<TaskId> = (0..n).filter(|&j| remaining[j] == 0).collect();
+    let mut placements: Vec<Option<Placement>> = vec![None; n];
+
+    for _ in 0..n {
+        // pick the ready task with the earliest possible start
+        let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, ready-slot)
+        for (slot, &j) in ready.iter().enumerate() {
+            let q = alloc[j];
+            let avail = unit_free[q].iter().copied().fold(f64::INFINITY, f64::min);
+            let est = ready_time[j].max(avail);
+            let better = match best {
+                None => true,
+                Some((b_est, b_j, _)) => est < b_est - 1e-12 || (est <= b_est + 1e-12 && j < b_j),
+            };
+            if better {
+                best = Some((est, j, slot));
+            }
+        }
+        let (est, j, slot) = best.expect("ready set empty with tasks remaining");
+        ready.swap_remove(slot);
+        let q = alloc[j];
+        // unit achieving the earliest start
+        let (unit, _) = unit_free[q]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = est;
+        let finish = start + g.time_on(j, q);
+        unit_free[q][unit] = finish;
+        placements[j] = Some(Placement {
+            ptype: q,
+            unit,
+            start,
+            finish,
+        });
+        for &s in &g.succs[j] {
+            ready_time[s] = ready_time[s].max(finish);
+            remaining[s] -= 1;
+            if remaining[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+
+    Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, Builder};
+    use crate::sim::validate;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn est_picks_earliest_start() {
+        // Two independent tasks, 1 CPU + 1 GPU; t0 CPU-allocated (busy
+        // CPU), t1 GPU-allocated: both start at 0 on their own types.
+        let mut b = Builder::new("x");
+        b.add_task("a", vec![4.0, 1.0]);
+        b.add_task("b", vec![1.0, 4.0]);
+        let g = b.build();
+        let plat = Platform::hybrid(1, 1);
+        let s = est_schedule(&g, &plat, &[0, 1]);
+        validate(&g, &plat, &s).unwrap();
+        assert_eq!(s.placements[0].start, 0.0);
+        assert_eq!(s.placements[1].start, 0.0);
+        assert!((s.makespan - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn est_orders_by_start_not_priority() {
+        // chain a->b plus independent c, all CPU, 1 CPU:
+        // EST schedules a (est 0), then c (est p_a vs ready b at p_a: tie
+        // -> smaller id wins: b), order is a, b, c.
+        let mut b = Builder::new("y");
+        let a = b.add_task("a", vec![2.0, 9.0]);
+        let t_b = b.add_task("b", vec![1.0, 9.0]);
+        b.add_task("c", vec![1.0, 9.0]);
+        b.add_arc(a, t_b);
+        let g = b.build();
+        let plat = Platform::hybrid(1, 1);
+        let s = est_schedule(&g, &plat, &[0, 0, 0]);
+        validate(&g, &plat, &s).unwrap();
+        assert!(s.placements[1].start < s.placements[2].start);
+    }
+
+    #[test]
+    fn est_valid_on_random_hybrid_dags() {
+        let mut rng = Rng::new(21);
+        for _ in 0..15 {
+            let g = gen::hybrid_dag(&mut rng, 50, 0.1);
+            let plat = Platform::hybrid(4, 2);
+            let alloc: Vec<usize> =
+                (0..50).map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j))).collect();
+            let s = est_schedule(&g, &plat, &alloc);
+            validate(&g, &plat, &s).unwrap();
+            assert_eq!(s.allocation(), alloc);
+        }
+    }
+
+    #[test]
+    fn est_three_types() {
+        let mut b = Builder::new("q3");
+        for j in 0..6 {
+            b.add_task("t", vec![3.0, 2.0, 1.0 + j as f64]);
+        }
+        let g = b.build();
+        let plat = Platform::new(vec![2, 2, 2]);
+        let alloc = vec![0, 0, 1, 1, 2, 2];
+        let s = est_schedule(&g, &plat, &alloc);
+        validate(&g, &plat, &s).unwrap();
+    }
+}

@@ -1,0 +1,190 @@
+//! HEFT — Heterogeneous Earliest Finish Time (Topcuoglu et al.), the
+//! single-phase baseline of §3, without communication costs and
+//! generalized to Q resource types (QHEFT in §6.2).
+//!
+//! Tasks are prioritized by the average-processing-time upward rank
+//! `rank(j) = (Σ_q m_q p_{j,q})/(Σ_q m_q) + max_succ rank`, then placed
+//! one by one on the unit minimizing the *earliest finish time*, with
+//! insertion-based backfilling (a task may slot into an idle gap).
+//! Ties between a CPU and a GPU go to the GPU (the paper's Theorem 1
+//! convention); ties within a type go to the lowest unit index.
+
+use crate::graph::{paths, TaskGraph};
+use crate::platform::Platform;
+use crate::sim::{Placement, Schedule};
+
+/// One unit's busy intervals, kept sorted by start time.
+#[derive(Clone, Debug, Default)]
+struct Timeline {
+    busy: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    /// Earliest start ≥ `ready` for a task of length `dur` (insertion).
+    fn earliest_start(&self, ready: f64, dur: f64) -> f64 {
+        let mut t = ready;
+        for &(s, f) in &self.busy {
+            if t + dur <= s + 1e-12 {
+                return t;
+            }
+            if f > t {
+                t = f;
+            }
+        }
+        t
+    }
+
+    fn insert(&mut self, start: f64, finish: f64) {
+        let pos = self
+            .busy
+            .partition_point(|&(s, _)| s < start);
+        self.busy.insert(pos, (start, finish));
+    }
+}
+
+/// HEFT / QHEFT schedule.
+pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
+    let n = g.n_tasks();
+    let rank = paths::heft_rank(g, &plat.counts);
+    let mut order: Vec<usize> = (0..n).collect();
+    // non-increasing rank; ties by id for determinism
+    order.sort_by(|&a, &b| {
+        rank[b]
+            .partial_cmp(&rank[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    let mut timelines: Vec<Vec<Timeline>> = plat
+        .counts
+        .iter()
+        .map(|&c| vec![Timeline::default(); c])
+        .collect();
+    let mut placements: Vec<Option<Placement>> = vec![None; n];
+
+    for &j in &order {
+        let ready = g.preds[j]
+            .iter()
+            .map(|&p| placements[p].expect("rank order is topological").finish)
+            .fold(0.0f64, f64::max);
+        // choose (type, unit) minimizing EFT; tie -> larger type index
+        // (GPU over CPU), then lower unit index
+        let mut best: Option<(f64, usize, usize, f64)> = None; // (eft, q, unit, start)
+        for q in 0..plat.n_types() {
+            let dur = g.time_on(j, q);
+            for (u, tl) in timelines[q].iter().enumerate() {
+                let start = tl.earliest_start(ready, dur);
+                let eft = start + dur;
+                let better = match best {
+                    None => true,
+                    Some((b_eft, b_q, _, _)) => {
+                        eft < b_eft - 1e-9 || (eft <= b_eft + 1e-9 && q > b_q)
+                    }
+                };
+                if better {
+                    best = Some((eft, q, u, start));
+                }
+            }
+        }
+        let (eft, q, unit, start) = best.unwrap();
+        timelines[q][unit].insert(start, eft);
+        placements[j] = Some(Placement {
+            ptype: q,
+            unit,
+            start,
+            finish: eft,
+        });
+    }
+
+    Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, Builder};
+    use crate::sim::validate;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn timeline_insertion_finds_gaps() {
+        let mut tl = Timeline::default();
+        tl.insert(0.0, 2.0);
+        tl.insert(5.0, 7.0);
+        // a 3-long task fits in [2,5)
+        assert_eq!(tl.earliest_start(0.0, 3.0), 2.0);
+        // a 4-long task must go after 7
+        assert_eq!(tl.earliest_start(0.0, 4.0), 7.0);
+        // respects ready time
+        assert_eq!(tl.earliest_start(2.5, 2.0), 2.5);
+    }
+
+    #[test]
+    fn heft_prefers_faster_unit() {
+        let mut b = Builder::new("x");
+        b.add_task("a", vec![10.0, 1.0]);
+        let g = b.build();
+        let plat = Platform::hybrid(2, 1);
+        let s = heft_schedule(&g, &plat);
+        assert_eq!(s.placements[0].ptype, 1);
+        assert!((s.makespan - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heft_tie_goes_to_gpu() {
+        let mut b = Builder::new("tie");
+        b.add_task("a", vec![2.0, 2.0]);
+        let g = b.build();
+        let plat = Platform::hybrid(1, 1);
+        let s = heft_schedule(&g, &plat);
+        assert_eq!(s.placements[0].ptype, 1);
+    }
+
+    #[test]
+    fn heft_backfills_into_gaps() {
+        // big runs on GPU [0,1); its successor `late` runs on CPU [1,2);
+        // the low-rank `tiny` must backfill into the CPU idle gap [0,1)
+        // instead of queueing at t=2.
+        let mut b = Builder::new("gap");
+        let big = b.add_task("big", vec![10.0, 1.0]);
+        let late = b.add_task("late", vec![1.0, 10.0]);
+        b.add_task("tiny", vec![1.0, 2.0]);
+        b.add_arc(big, late);
+        let g = b.build();
+        let plat = Platform::hybrid(1, 1);
+        let s = heft_schedule(&g, &plat);
+        validate(&g, &plat, &s).unwrap();
+        assert_eq!(s.placements[2].ptype, 0);
+        assert_eq!(s.placements[2].start, 0.0, "tiny should backfill");
+        assert!((s.makespan - 2.0).abs() < 1e-9, "makespan {}", s.makespan);
+    }
+
+    #[test]
+    fn heft_valid_on_random_dags_2_and_3_types() {
+        let mut rng = Rng::new(31);
+        for _ in 0..10 {
+            let g = gen::hybrid_dag(&mut rng, 60, 0.08);
+            let plat = Platform::hybrid(4, 2);
+            let s = heft_schedule(&g, &plat);
+            validate(&g, &plat, &s).unwrap();
+        }
+        for _ in 0..5 {
+            let g = gen::random_dag(&mut rng, 40, 0.1, 3);
+            let plat = Platform::new(vec![4, 2, 2]);
+            let s = heft_schedule(&g, &plat);
+            validate(&g, &plat, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn heft_beats_serial_on_parallel_work() {
+        let mut b = Builder::new("par");
+        for _ in 0..8 {
+            b.add_task("t", vec![1.0, 1.0]);
+        }
+        let g = b.build();
+        let plat = Platform::hybrid(4, 4);
+        let s = heft_schedule(&g, &plat);
+        assert!((s.makespan - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,50 @@
+//! The scheduling phase: given (or while deciding) an allocation, place
+//! tasks on units over time.
+//!
+//! * [`list`] — allocation-respecting List Scheduling (Graham) with an
+//!   arbitrary priority; OLS (§4.1) is this with the HLP-rank priority.
+//! * [`est`] — the Earliest Starting Time policy of HLP-EST (§3).
+//! * [`heft`] — HEFT with insertion-based backfilling (§3), Q-type ready.
+//! * [`online`] — the online engine (§4.2): ER-LS, EFT, Greedy, Random
+//!   and the R1/R2/R3 rules, with irrevocable decisions.
+
+pub mod est;
+pub mod heft;
+pub mod list;
+pub mod online;
+
+/// Total order wrapper for f64 priorities (NaN-free by construction).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN priority")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordf64_orders() {
+        let mut v = vec![OrdF64(3.0), OrdF64(1.0), OrdF64(2.0)];
+        v.sort();
+        assert_eq!(v, vec![OrdF64(1.0), OrdF64(2.0), OrdF64(3.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn ordf64_rejects_nan() {
+        let _ = OrdF64(f64::NAN).cmp(&OrdF64(1.0));
+    }
+}

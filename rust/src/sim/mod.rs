@@ -1,0 +1,295 @@
+//! Schedules and their validation: the discrete outcome of every
+//! algorithm in the paper, plus a feasibility checker used by tests and
+//! by the property suite (precedences respected, units never overlap,
+//! durations match the allocation, makespan consistent).
+
+use crate::graph::{TaskGraph, TaskId};
+use crate::platform::Platform;
+
+/// Where and when one task runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Placement {
+    /// processor type (0 = CPU, 1.. = GPU types)
+    pub ptype: usize,
+    /// unit index within the type (0..counts[ptype])
+    pub unit: usize,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// A complete schedule: one placement per task.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub placements: Vec<Placement>,
+    pub makespan: f64,
+}
+
+impl Schedule {
+    pub fn from_placements(placements: Vec<Placement>) -> Schedule {
+        let makespan = placements.iter().map(|p| p.finish).fold(0.0, f64::max);
+        Schedule { placements, makespan }
+    }
+
+    pub fn allocation(&self) -> Vec<usize> {
+        self.placements.iter().map(|p| p.ptype).collect()
+    }
+
+    /// Total busy time per type ("load" in the paper's analyses).
+    pub fn loads(&self, n_types: usize) -> Vec<f64> {
+        let mut w = vec![0.0; n_types];
+        for p in &self.placements {
+            w[p.ptype] += p.finish - p.start;
+        }
+        w
+    }
+
+    /// Average utilization per type over [0, makespan).
+    pub fn utilization(&self, plat: &Platform) -> Vec<f64> {
+        if self.makespan <= 0.0 {
+            return vec![0.0; plat.n_types()];
+        }
+        self.loads(plat.n_types())
+            .iter()
+            .zip(&plat.counts)
+            .map(|(w, &c)| w / (self.makespan * c as f64))
+            .collect()
+    }
+
+    /// Gantt-style text rendering (one line per unit), for debugging and
+    /// the `hetsched schedule --gantt` CLI.
+    pub fn gantt(&self, g: &TaskGraph, plat: &Platform) -> String {
+        let mut per_unit: Vec<Vec<(TaskId, &Placement)>> = Vec::new();
+        let mut unit_index = std::collections::HashMap::new();
+        for (q, &cnt) in plat.counts.iter().enumerate() {
+            for u in 0..cnt {
+                unit_index.insert((q, u), per_unit.len());
+                per_unit.push(Vec::new());
+            }
+        }
+        for (j, p) in self.placements.iter().enumerate() {
+            per_unit[unit_index[&(p.ptype, p.unit)]].push((j, p));
+        }
+        let mut out = String::new();
+        let mut row = 0;
+        for (q, &cnt) in plat.counts.iter().enumerate() {
+            for u in 0..cnt {
+                let tasks = &mut per_unit[row];
+                tasks.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+                out.push_str(&format!("{}[{}]:", plat.names[q], u));
+                for (j, p) in tasks.iter() {
+                    out.push_str(&format!(
+                        " {}#{}@[{:.2},{:.2})",
+                        g.names[*j], j, p.start, p.finish
+                    ));
+                }
+                out.push('\n');
+                row += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Full feasibility validation of a schedule.
+pub fn validate(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), String> {
+    let n = g.n_tasks();
+    if s.placements.len() != n {
+        return Err(format!(
+            "schedule has {} placements for {} tasks",
+            s.placements.len(),
+            n
+        ));
+    }
+    for (j, p) in s.placements.iter().enumerate() {
+        if p.ptype >= plat.n_types() {
+            return Err(format!("task {j}: type {} out of range", p.ptype));
+        }
+        if p.unit >= plat.counts[p.ptype] {
+            return Err(format!("task {j}: unit {} out of range", p.unit));
+        }
+        if p.start < -1e-9 {
+            return Err(format!("task {j}: negative start {}", p.start));
+        }
+        let want = g.time_on(j, p.ptype);
+        if (p.finish - p.start - want).abs() > 1e-6 * (1.0 + want) {
+            return Err(format!(
+                "task {j}: duration {} != allocated time {}",
+                p.finish - p.start,
+                want
+            ));
+        }
+        if p.finish > s.makespan + 1e-6 {
+            return Err(format!("task {j} finishes after makespan"));
+        }
+    }
+    // precedence
+    for j in 0..n {
+        for &succ in &g.succs[j] {
+            if s.placements[succ].start < s.placements[j].finish - 1e-6 {
+                return Err(format!(
+                    "precedence violated: {j} finishes {} but {succ} starts {}",
+                    s.placements[j].finish, s.placements[succ].start
+                ));
+            }
+        }
+    }
+    // no overlap per unit
+    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, usize)>> =
+        std::collections::HashMap::new();
+    for (j, p) in s.placements.iter().enumerate() {
+        per_unit
+            .entry((p.ptype, p.unit))
+            .or_default()
+            .push((p.start, p.finish, j));
+    }
+    for ((q, u), mut iv) in per_unit {
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in iv.windows(2) {
+            if w[1].0 < w[0].1 - 1e-6 {
+                return Err(format!(
+                    "overlap on {q}/{u}: task {} [{:.4},{:.4}) vs task {} [{:.4},{:.4})",
+                    w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validation for *realized* (wall-clock measured) schedules from the
+/// live coordinator: precedence + no-overlap + duration ≥ allocated
+/// time.  Realized durations legitimately exceed the nominal processing
+/// time (sleep/wakeup overhead), so the exact-duration check of
+/// [`validate`] does not apply.
+pub fn validate_realized(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), String> {
+    let n = g.n_tasks();
+    if s.placements.len() != n {
+        return Err("placement count mismatch".into());
+    }
+    for (j, p) in s.placements.iter().enumerate() {
+        if p.ptype >= plat.n_types() || p.unit >= plat.counts[p.ptype] {
+            return Err(format!("task {j}: unit out of range"));
+        }
+        let want = g.time_on(j, p.ptype);
+        if p.finish - p.start < want - 1e-6 * (1.0 + want) {
+            return Err(format!(
+                "task {j}: realized duration {} below allocated {}",
+                p.finish - p.start,
+                want
+            ));
+        }
+    }
+    for j in 0..n {
+        for &succ in &g.succs[j] {
+            if s.placements[succ].start < s.placements[j].finish - 1e-6 {
+                return Err(format!("precedence violated: {j} -> {succ}"));
+            }
+        }
+    }
+    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64)>> =
+        std::collections::HashMap::new();
+    for p in &s.placements {
+        per_unit
+            .entry((p.ptype, p.unit))
+            .or_default()
+            .push((p.start, p.finish));
+    }
+    for ((q, u), mut iv) in per_unit {
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in iv.windows(2) {
+            if w[1].0 < w[0].1 - 1e-6 {
+                return Err(format!("overlap on unit {q}/{u}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+
+    fn chain2() -> TaskGraph {
+        let mut b = Builder::new("c");
+        let a = b.add_task("a", vec![2.0, 1.0]);
+        let c = b.add_task("b", vec![3.0, 1.0]);
+        b.add_arc(a, c);
+        b.build()
+    }
+
+    fn plat() -> Platform {
+        Platform::hybrid(2, 1)
+    }
+
+    #[test]
+    fn valid_schedule_passes() {
+        let g = chain2();
+        let s = Schedule::from_placements(vec![
+            Placement { ptype: 0, unit: 0, start: 0.0, finish: 2.0 },
+            Placement { ptype: 1, unit: 0, start: 2.0, finish: 3.0 },
+        ]);
+        validate(&g, &plat(), &s).unwrap();
+        assert_eq!(s.makespan, 3.0);
+        assert_eq!(s.allocation(), vec![0, 1]);
+        assert_eq!(s.loads(2), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn precedence_violation_caught() {
+        let g = chain2();
+        let s = Schedule::from_placements(vec![
+            Placement { ptype: 0, unit: 0, start: 0.0, finish: 2.0 },
+            Placement { ptype: 1, unit: 0, start: 1.0, finish: 2.0 },
+        ]);
+        assert!(validate(&g, &plat(), &s).unwrap_err().contains("precedence"));
+    }
+
+    #[test]
+    fn overlap_caught() {
+        let mut b = Builder::new("i");
+        b.add_task("a", vec![2.0, 1.0]);
+        b.add_task("b", vec![3.0, 1.0]);
+        let g = b.build();
+        let s = Schedule::from_placements(vec![
+            Placement { ptype: 0, unit: 0, start: 0.0, finish: 2.0 },
+            Placement { ptype: 0, unit: 0, start: 1.0, finish: 4.0 },
+        ]);
+        assert!(validate(&g, &plat(), &s).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn wrong_duration_caught() {
+        let g = chain2();
+        let s = Schedule::from_placements(vec![
+            Placement { ptype: 0, unit: 0, start: 0.0, finish: 1.0 },
+            Placement { ptype: 1, unit: 0, start: 1.0, finish: 2.0 },
+        ]);
+        assert!(validate(&g, &plat(), &s).unwrap_err().contains("duration"));
+    }
+
+    #[test]
+    fn unit_out_of_range_caught() {
+        let g = chain2();
+        let s = Schedule::from_placements(vec![
+            Placement { ptype: 1, unit: 5, start: 0.0, finish: 1.0 },
+            Placement { ptype: 1, unit: 0, start: 1.0, finish: 2.0 },
+        ]);
+        assert!(validate(&g, &plat(), &s).unwrap_err().contains("unit"));
+    }
+
+    #[test]
+    fn utilization_and_gantt() {
+        let g = chain2();
+        let s = Schedule::from_placements(vec![
+            Placement { ptype: 0, unit: 0, start: 0.0, finish: 2.0 },
+            Placement { ptype: 1, unit: 0, start: 2.0, finish: 3.0 },
+        ]);
+        let u = s.utilization(&plat());
+        assert!((u[0] - 2.0 / 6.0).abs() < 1e-12);
+        assert!((u[1] - 1.0 / 3.0).abs() < 1e-12);
+        let gantt = s.gantt(&g, &plat());
+        assert!(gantt.contains("CPU[0]: a#0@[0.00,2.00)"));
+        assert!(gantt.contains("GPU[0]: b#1@[2.00,3.00)"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (criterion stand-in for the offline build).
+//!
+//! Every `rust/benches/*.rs` target is `harness = false` and drives this:
+//! warmup, timed iterations until a minimum measuring window, then a
+//! report line with mean / p50 / p95 and optional throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::substrate::stats;
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1500),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+        )
+    }
+
+    /// items/second at the mean time, for `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+/// Time `f` under `opts`; the closure must do one full unit of work.
+pub fn bench_with<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < opts.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < opts.measure && samples.len() < opts.max_iters)
+        || samples.len() < opts.min_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: Duration::from_secs_f64(mean),
+        p50: Duration::from_secs_f64(stats::percentile(&samples, 0.50)),
+        p95: Duration::from_secs_f64(stats::percentile(&samples, 0.95)),
+    }
+}
+
+/// Convenience wrapper with default options; prints the report line.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench_with(name, &BenchOpts::default(), f);
+    println!("{}", r.report());
+    r
+}
+
+/// Keep a value from being optimized away (ptr read volatile fence).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let mut acc = 0u64;
+        let r = bench_with("spin", &opts, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p95 >= r.p50);
+        black_box(acc);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with(" us"));
+    }
+}

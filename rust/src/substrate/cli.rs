@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (no `clap` offline): subcommand + `--flag
+//! value` / `--switch` conventions, with typed getters and a usage dump.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word = subcommand, `--k v` = flag,
+    /// `--k` followed by another `--` or end = switch.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.command.is_none() {
+                    out.command = Some(a.clone());
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn str_flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn string(&self, name: &str, default: &str) -> String {
+        self.str_flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.str_flag(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.str_flag(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.str_flag(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list flag, e.g. `--apps potrf,getrf`.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str_flag(name)
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(&words.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_flags_switches() {
+        let a = parse(&["experiment", "--fig", "3", "--full", "--out", "results"]);
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.string("fig", ""), "3");
+        assert!(a.has("full"));
+        assert_eq!(a.string("out", ""), "results");
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["x", "--m", "64", "--tol", "0.5"]);
+        assert_eq!(a.usize("m", 1), 64);
+        assert_eq!(a.f64("tol", 1.0), 0.5);
+        assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["x", "--apps", "potrf, getrf,,posv"]);
+        assert_eq!(a.list("apps"), vec!["potrf", "getrf", "posv"]);
+        assert!(a.list("none").is_empty());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["gen", "file1", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates for the offline build (no crates.io beyond the
+//! `xla` tree): deterministic RNG, JSON, CLI parsing, thread pool,
+//! micro-bench harness, property-testing, summary statistics.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

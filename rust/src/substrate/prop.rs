@@ -1,0 +1,121 @@
+//! Mini property-testing framework (proptest stand-in for the offline
+//! build): run a property over `cases` seeded inputs; on failure, report
+//! the failing seed so the case can be replayed deterministically.
+//!
+//! Generators are plain closures over [`Rng`]; composite generators for
+//! DAGs / platforms live next to their types (e.g. `graph::gen`).
+
+use crate::substrate::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Override case count via HETSCHED_PROP_CASES for deeper soak runs.
+        let cases = std::env::var("HETSCHED_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        PropConfig {
+            cases,
+            base_seed: 0x5EED_0001,
+        }
+    }
+}
+
+/// Run `prop(rng, case_index)`; panic with the seed on the first failure.
+/// The property signals failure by returning `Err(message)`.
+pub fn for_all<F>(name: &str, cfg: &PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: Rng::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for_all(name, &PropConfig::default(), prop)
+}
+
+/// assert_le with a readable error for property bodies.
+pub fn ensure_le(lhs: f64, rhs: f64, what: &str) -> Result<(), String> {
+    if lhs <= rhs + 1e-9 {
+        Ok(())
+    } else {
+        Err(format!("{what}: {lhs} > {rhs}"))
+    }
+}
+
+pub fn ensure(cond: bool, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all(
+            "trivial",
+            &PropConfig {
+                cases: 10,
+                base_seed: 1,
+            },
+            |rng, _| {
+                count += 1;
+                ensure(rng.f64() < 1.0, "uniform below 1")
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_panics_with_seed() {
+        for_all(
+            "failing",
+            &PropConfig {
+                cases: 5,
+                base_seed: 2,
+            },
+            |_, case| ensure(case < 3, "case too big"),
+        );
+    }
+
+    #[test]
+    fn helpers() {
+        assert!(ensure_le(1.0, 2.0, "le").is_ok());
+        assert!(ensure_le(2.0, 1.0, "le").is_err());
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "close").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "close").is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! Chameleon-style tiled dense linear-algebra DAGs: `potrf`, `getrf`,
+//! `posv`, `potri`, `potrs` (§6.1, Table 4).
+//!
+//! The paper generated these applications with the Chameleon/MORSE
+//! library and recorded StarPU's task graph.  The DAG of a tiled
+//! algorithm is fully determined by the algorithm itself, so we rebuild
+//! it here: each tiled kernel declares its tile accesses (reads + one
+//! read-modify-write) and a sequential-consistency engine derives the
+//! arcs exactly like a task-based runtime (StarPU) does:
+//!   * read  t: arc  last_writer(t) -> task
+//!   * write t: arcs last_writer(t) -> task and readers-since -> task
+//!
+//! Task counts per application equal Table 4 for every `nb_blocks`
+//! (asserted in tests):
+//!   potrf: N + N(N-1) + N(N-1)(N-2)/6            (35/220/1540)
+//!   potrs: 2(N + N(N-1)/2)                       (30/110/420)
+//!   posv : potrf + potrs                         (65/330/1960)
+//!   getrf: N + N(N-1) + N(N-1)(2N-1)/6           (55/385/2870)
+//!   potri: potrf + trtri + lauum = 3x potrf count (105/660/4620)
+
+use std::collections::HashMap;
+
+use crate::graph::{Builder, TaskGraph, TaskId};
+use crate::substrate::rng::Rng;
+
+use super::costs::{CostModel, Kernel};
+
+/// Tile coordinate namespace: (matrix, row, col). Matrix 0 = A, 1 = X
+/// (RHS tiles of the solve sweeps).
+type Tile = (u8, usize, usize);
+
+/// Sequential-consistency dependency tracker over tiles.
+struct Access {
+    last_writer: HashMap<Tile, TaskId>,
+    readers: HashMap<Tile, Vec<TaskId>>,
+}
+
+impl Access {
+    fn new() -> Access {
+        Access {
+            last_writer: HashMap::new(),
+            readers: HashMap::new(),
+        }
+    }
+
+    /// Register a task reading `reads` and read-modify-writing `write`.
+    fn task(&mut self, b: &mut Builder, id: TaskId, reads: &[Tile], write: Tile) {
+        for t in reads {
+            if let Some(&w) = self.last_writer.get(t) {
+                if w != id {
+                    b.add_arc(w, id);
+                }
+            }
+            self.readers.entry(*t).or_default().push(id);
+        }
+        if let Some(&w) = self.last_writer.get(&write) {
+            if w != id {
+                b.add_arc(w, id);
+            }
+        }
+        if let Some(rs) = self.readers.remove(&write) {
+            for r in rs {
+                if r != id {
+                    b.add_arc(r, id);
+                }
+            }
+        }
+        self.last_writer.insert(write, id);
+    }
+}
+
+struct Gen<'a> {
+    b: Builder,
+    acc: Access,
+    cm: &'a CostModel,
+    rng: Rng,
+}
+
+impl<'a> Gen<'a> {
+    fn new(app: &str, cm: &'a CostModel, seed: u64) -> Gen<'a> {
+        Gen {
+            b: Builder::new(app),
+            acc: Access::new(),
+            cm,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn kernel(&mut self, k: Kernel, reads: &[Tile], write: Tile) -> TaskId {
+        let times = self.cm.times(k, &mut self.rng);
+        let id = self.b.add_task(k.name(), times);
+        self.acc.task(&mut self.b, id, reads, write);
+        id
+    }
+
+    fn finish(self) -> TaskGraph {
+        self.b.build()
+    }
+}
+
+const A: u8 = 0;
+const X: u8 = 1;
+
+/// Tiled Cholesky factorization (lower), N = nb_blocks.
+fn emit_potrf(g: &mut Gen, n: usize) {
+    for k in 0..n {
+        g.kernel(Kernel::Potrf, &[], (A, k, k));
+        for i in (k + 1)..n {
+            g.kernel(Kernel::Trsm, &[(A, k, k)], (A, i, k));
+        }
+        for i in (k + 1)..n {
+            g.kernel(Kernel::Syrk, &[(A, i, k)], (A, i, i));
+            for j in (k + 1)..i {
+                g.kernel(Kernel::Gemm, &[(A, i, k), (A, j, k)], (A, i, j));
+            }
+        }
+    }
+}
+
+/// Two triangular sweeps (forward with L, backward with L^T) over one
+/// block-column of RHS tiles.
+fn emit_potrs(g: &mut Gen, n: usize) {
+    // forward substitution
+    for k in 0..n {
+        g.kernel(Kernel::SolveTile, &[(A, k, k)], (X, k, 0));
+        for i in (k + 1)..n {
+            g.kernel(Kernel::Gemm, &[(A, i, k), (X, k, 0)], (X, i, 0));
+        }
+    }
+    // backward substitution
+    for k in (0..n).rev() {
+        g.kernel(Kernel::SolveTile, &[(A, k, k)], (X, k, 0));
+        for i in 0..k {
+            g.kernel(Kernel::Gemm, &[(A, k, i), (X, k, 0)], (X, i, 0));
+        }
+    }
+}
+
+/// Tiled LU factorization without pivoting.
+fn emit_getrf(g: &mut Gen, n: usize) {
+    for k in 0..n {
+        g.kernel(Kernel::Getrf, &[], (A, k, k));
+        for j in (k + 1)..n {
+            g.kernel(Kernel::Trsm, &[(A, k, k)], (A, k, j));
+        }
+        for i in (k + 1)..n {
+            g.kernel(Kernel::Trsm, &[(A, k, k)], (A, i, k));
+        }
+        for i in (k + 1)..n {
+            for j in (k + 1)..n {
+                g.kernel(Kernel::Gemm, &[(A, i, k), (A, k, j)], (A, i, j));
+            }
+        }
+    }
+}
+
+/// Tiled in-place inversion of the triangular factor (Chameleon-like
+/// variant; counts match Table 4: N TRTRI + N(N-1) TRSM + C(N,3) GEMM).
+fn emit_trtri(g: &mut Gen, n: usize) {
+    for k in 0..n {
+        for i in (k + 1)..n {
+            g.kernel(Kernel::Trsm, &[(A, k, k)], (A, i, k));
+        }
+        g.kernel(Kernel::Trtri, &[], (A, k, k));
+        for i in (k + 1)..n {
+            for j in 0..k {
+                g.kernel(Kernel::Gemm, &[(A, i, k), (A, k, j)], (A, i, j));
+            }
+            g.kernel(Kernel::Trsm, &[(A, i, i)], (A, i, k));
+        }
+    }
+}
+
+/// Tiled L^T L product (lower, in place); counts mirror potrf's.
+fn emit_lauum(g: &mut Gen, n: usize) {
+    for k in 0..n {
+        g.kernel(Kernel::Lauum, &[], (A, k, k));
+        for i in (k + 1)..n {
+            g.kernel(Kernel::Syrk, &[(A, i, k)], (A, k, k));
+            for j in 0..k {
+                g.kernel(Kernel::Gemm, &[(A, i, k), (A, i, j)], (A, k, j));
+            }
+            g.kernel(Kernel::Trmm, &[(A, i, i)], (A, i, k));
+        }
+    }
+}
+
+/// Public generators.  `seed` drives only the cost-model jitter; the DAG
+/// shape is deterministic in `nb_blocks`.
+pub fn potrf(nb_blocks: usize, cm: &CostModel, seed: u64) -> TaskGraph {
+    let mut g = Gen::new("potrf", cm, seed);
+    emit_potrf(&mut g, nb_blocks);
+    g.finish()
+}
+
+pub fn potrs(nb_blocks: usize, cm: &CostModel, seed: u64) -> TaskGraph {
+    let mut g = Gen::new("potrs", cm, seed);
+    // factor tiles pre-exist (no potrf tasks in the potrs app)
+    emit_potrs(&mut g, nb_blocks);
+    g.finish()
+}
+
+pub fn posv(nb_blocks: usize, cm: &CostModel, seed: u64) -> TaskGraph {
+    let mut g = Gen::new("posv", cm, seed);
+    emit_potrf(&mut g, nb_blocks);
+    emit_potrs(&mut g, nb_blocks);
+    g.finish()
+}
+
+pub fn getrf(nb_blocks: usize, cm: &CostModel, seed: u64) -> TaskGraph {
+    let mut g = Gen::new("getrf", cm, seed);
+    emit_getrf(&mut g, nb_blocks);
+    g.finish()
+}
+
+pub fn potri(nb_blocks: usize, cm: &CostModel, seed: u64) -> TaskGraph {
+    let mut g = Gen::new("potri", cm, seed);
+    emit_potrf(&mut g, nb_blocks);
+    emit_trtri(&mut g, nb_blocks);
+    emit_lauum(&mut g, nb_blocks);
+    g.finish()
+}
+
+/// Generate by application name.
+pub fn by_name(app: &str, nb_blocks: usize, cm: &CostModel, seed: u64) -> Option<TaskGraph> {
+    Some(match app {
+        "potrf" => potrf(nb_blocks, cm, seed),
+        "potrs" => potrs(nb_blocks, cm, seed),
+        "posv" => posv(nb_blocks, cm, seed),
+        "getrf" => getrf(nb_blocks, cm, seed),
+        "potri" => potri(nb_blocks, cm, seed),
+        _ => return None,
+    })
+}
+
+pub const APPS: [&str; 5] = ["getrf", "posv", "potrf", "potri", "potrs"];
+
+/// Closed-form Table 4 task counts.
+pub fn table4_count(app: &str, n: usize) -> Option<usize> {
+    let potrf_c = n + n * (n - 1) + n * (n - 1) * (n - 2) / 6;
+    let potrs_c = 2 * (n + n * (n - 1) / 2);
+    Some(match app {
+        "potrf" => potrf_c,
+        "potrs" => potrs_c,
+        "posv" => potrf_c + potrs_c,
+        "getrf" => n + n * (n - 1) + n * (n - 1) * (2 * n - 1) / 6,
+        "potri" => 3 * potrf_c,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::hybrid(320)
+    }
+
+    /// Table 4 of the paper, verbatim.
+    #[test]
+    fn table4_task_counts_exact() {
+        let expected: &[(&str, [usize; 3])] = &[
+            ("getrf", [55, 385, 2870]),
+            ("posv", [65, 330, 1960]),
+            ("potrf", [35, 220, 1540]),
+            ("potri", [105, 660, 4620]),
+            ("potrs", [30, 110, 420]),
+        ];
+        for &(app, counts) in expected {
+            for (i, &nb) in [5usize, 10, 20].iter().enumerate() {
+                let g = by_name(app, nb, &cm(), 1).unwrap();
+                assert_eq!(
+                    g.n_tasks(),
+                    counts[i],
+                    "{app} nb_blocks={nb}: got {} want {}",
+                    g.n_tasks(),
+                    counts[i]
+                );
+                assert_eq!(table4_count(app, nb), Some(counts[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn all_apps_are_valid_dags() {
+        for app in APPS {
+            let g = by_name(app, 6, &cm(), 3).unwrap();
+            g.validate().unwrap();
+            assert!(g.n_arcs() > 0);
+        }
+    }
+
+    #[test]
+    fn potrf_dependency_structure() {
+        // nb=2: POTRF(0) -> TRSM(1,0) -> SYRK(0,1) -> POTRF(1)
+        let mut model = cm();
+        model.jitter = false;
+        let g = potrf(2, &model, 1);
+        assert_eq!(g.n_tasks(), 4);
+        assert_eq!(g.names, vec!["POTRF", "TRSM", "SYRK", "POTRF"]);
+        assert_eq!(g.succs[0], vec![1]);
+        assert_eq!(g.succs[1], vec![2]);
+        assert_eq!(g.succs[2], vec![3]);
+    }
+
+    #[test]
+    fn potrf_has_single_source_and_gemm_majority_at_scale() {
+        let g = potrf(20, &cm(), 1);
+        assert_eq!(g.sources().len(), 1); // POTRF(0)
+        let h = g.kernel_histogram();
+        assert_eq!(h["GEMM"], 1140);
+        assert_eq!(h["POTRF"], 20);
+        assert_eq!(h["TRSM"], 190);
+        assert_eq!(h["SYRK"], 190);
+    }
+
+    #[test]
+    fn potrs_is_two_serial_sweeps() {
+        let mut model = cm();
+        model.jitter = false;
+        let g = potrs(3, &model, 1);
+        // forward SOLVE(0) is a source; total = 2(3+3) = 12
+        assert_eq!(g.n_tasks(), 12);
+        g.validate().unwrap();
+        // backward sweep depends on forward sweep (same X tiles)
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 12);
+    }
+
+    #[test]
+    fn dag_shape_independent_of_seed_and_blocksize() {
+        let g1 = potrf(8, &CostModel::hybrid(64), 1);
+        let g2 = potrf(8, &CostModel::hybrid(960), 99);
+        assert_eq!(g1.succs, g2.succs);
+        assert_eq!(g1.names, g2.names);
+        assert_ne!(g1.proc_times, g2.proc_times);
+    }
+
+    #[test]
+    fn three_type_times() {
+        let cm3 = CostModel::three_type(320);
+        let g = posv(5, &cm3, 2);
+        assert_eq!(g.n_types(), 3);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,144 @@
+//! The fork-join application of §6.1 (generated with GGen in the paper),
+//! rebuilt with the paper's exact distributional recipe:
+//!
+//! * execution starts with one sequential task, then forks to `width`
+//!   parallel tasks, joined by one task per phase; `p` phases total
+//!   (task count = p·width + p + 1, Table 5);
+//! * CPU time of each task ~ Gaussian(center = p, std = p/4);
+//! * in each phase, 5% of the parallel tasks (randomly chosen) get a GPU
+//!   acceleration factor uniform in [0.1, 0.5] (i.e. *slower* on GPU),
+//!   the rest uniform in [0.5, 50];
+//! * for 3-type platforms the second GPU's factors are drawn by the same
+//!   process (independently), as in the paper.
+
+use crate::graph::{Builder, TaskGraph};
+use crate::substrate::rng::Rng;
+
+/// Build a fork-join instance. `n_gpu_types` is 1 (hybrid) or more (§5).
+pub fn forkjoin(width: usize, phases: usize, n_gpu_types: usize, seed: u64) -> TaskGraph {
+    assert!(width > 0 && phases > 0 && n_gpu_types >= 1);
+    let mut rng = Rng::new(seed);
+    let mut b = Builder::new("fork-join");
+    let center = phases as f64;
+    let std = center / 4.0;
+
+    let draw_times = |rng: &mut Rng, slow_on_gpu: bool| -> Vec<f64> {
+        let cpu = rng.gaussian_pos(center, std, center / 100.0);
+        let mut times = vec![cpu];
+        for _ in 0..n_gpu_types {
+            let accel = if slow_on_gpu {
+                rng.uniform(0.1, 0.5)
+            } else {
+                rng.uniform(0.5, 50.0)
+            };
+            times.push(cpu / accel);
+        }
+        times
+    };
+
+    let root = b.add_task("SEQ", draw_times(&mut rng, false));
+    let mut prev_join = root;
+    for ph in 0..phases {
+        // choose which of the `width` parallel tasks are the 5% slow-on-GPU
+        let n_slow = ((width as f64) * 0.05).round() as usize;
+        let mut idx: Vec<usize> = (0..width).collect();
+        rng.shuffle(&mut idx);
+        let slow: std::collections::HashSet<usize> =
+            idx.into_iter().take(n_slow).collect();
+
+        let mut members = Vec::with_capacity(width);
+        for w in 0..width {
+            let t = b.add_task(
+                &format!("FORK{ph}"),
+                draw_times(&mut rng, slow.contains(&w)),
+            );
+            b.add_arc(prev_join, t);
+            members.push(t);
+        }
+        let join = b.add_task(&format!("JOIN{ph}"), draw_times(&mut rng, false));
+        for t in members {
+            b.add_arc(t, join);
+        }
+        prev_join = join;
+    }
+    b.build()
+}
+
+/// Closed-form Table 5 task count.
+pub fn table5_count(width: usize, phases: usize) -> usize {
+    phases * width + phases + 1
+}
+
+pub const PAPER_WIDTHS: [usize; 5] = [100, 200, 300, 400, 500];
+pub const PAPER_PHASES: [usize; 3] = [2, 5, 10];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 5 of the paper, verbatim.
+    #[test]
+    fn table5_task_counts_exact() {
+        let expected: &[(usize, [usize; 5])] = &[
+            (2, [203, 403, 603, 803, 1003]),
+            (5, [506, 1006, 1506, 2006, 2506]),
+            (10, [1011, 2011, 3011, 4011, 5011]),
+        ];
+        for &(p, row) in expected {
+            for (i, &w) in PAPER_WIDTHS.iter().enumerate() {
+                let g = forkjoin(w, p, 1, 42);
+                assert_eq!(g.n_tasks(), row[i], "width={w} p={p}");
+                assert_eq!(table5_count(w, p), row[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn structure_is_fork_join() {
+        let g = forkjoin(10, 3, 1, 7);
+        g.validate().unwrap();
+        assert_eq!(g.sources().len(), 1);
+        assert_eq!(g.sinks().len(), 1);
+        // root forks to width
+        let root = g.sources()[0];
+        assert_eq!(g.succs[root].len(), 10);
+        // joins have width preds
+        let sink = g.sinks()[0];
+        assert_eq!(g.preds[sink].len(), 10);
+    }
+
+    #[test]
+    fn five_percent_slow_on_gpu() {
+        let g = forkjoin(500, 2, 1, 3);
+        let slow = (0..g.n_tasks())
+            .filter(|&j| g.names[j].starts_with("FORK"))
+            .filter(|&j| g.p_gpu(j) > g.p_cpu(j) * 1.9) // accel < ~0.53
+            .count();
+        // 5% of 1000 fork tasks = ~50 (accept the [0.5,50] draws near 0.5)
+        assert!((40..=80).contains(&slow), "slow count {slow}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = forkjoin(50, 2, 1, 9);
+        let b = forkjoin(50, 2, 1, 9);
+        assert_eq!(a.proc_times, b.proc_times);
+        let c = forkjoin(50, 2, 1, 10);
+        assert_ne!(a.proc_times, c.proc_times);
+    }
+
+    #[test]
+    fn gaussian_cpu_times_center() {
+        let g = forkjoin(500, 10, 1, 5);
+        let cpu: Vec<f64> = (0..g.n_tasks()).map(|j| g.p_cpu(j)).collect();
+        let mean = cpu.iter().sum::<f64>() / cpu.len() as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn multi_gpu_types() {
+        let g = forkjoin(20, 2, 2, 1);
+        assert_eq!(g.n_types(), 3);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,150 @@
+//! The paper's benchmark (§6.1): Chameleon dense linear-algebra DAGs and
+//! the GGen fork-join application, plus the cost model standing in for
+//! the StarPU time measurements.
+
+pub mod chameleon;
+pub mod costs;
+pub mod forkjoin;
+pub mod ggen;
+
+use crate::graph::TaskGraph;
+use crate::substrate::rng::seed_for;
+
+use costs::CostModel;
+
+/// One benchmark instance descriptor (application + parameters).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Instance {
+    Chameleon { app: String, nb_blocks: usize, block_size: usize },
+    ForkJoin { width: usize, phases: usize },
+}
+
+impl Instance {
+    pub fn label(&self) -> String {
+        match self {
+            Instance::Chameleon { app, nb_blocks, block_size } => {
+                format!("{app}-nb{nb_blocks}-bs{block_size}")
+            }
+            Instance::ForkJoin { width, phases } => format!("forkjoin-w{width}-p{phases}"),
+        }
+    }
+
+    pub fn app(&self) -> &str {
+        match self {
+            Instance::Chameleon { app, .. } => app,
+            Instance::ForkJoin { .. } => "fork-join",
+        }
+    }
+
+    /// Materialize the task graph with `n_types` resource types (2 or 3).
+    pub fn generate(&self, n_types: usize) -> TaskGraph {
+        assert!(n_types == 2 || n_types == 3);
+        let seed = seed_for(&[&self.label(), &n_types.to_string()]);
+        match self {
+            Instance::Chameleon { app, nb_blocks, block_size } => {
+                let cm = if n_types == 2 {
+                    CostModel::hybrid(*block_size)
+                } else {
+                    CostModel::three_type(*block_size)
+                };
+                chameleon::by_name(app, *nb_blocks, &cm, seed)
+                    .unwrap_or_else(|| panic!("unknown app {app}"))
+            }
+            Instance::ForkJoin { width, phases } => {
+                forkjoin::forkjoin(*width, *phases, n_types - 1, seed)
+            }
+        }
+    }
+}
+
+/// Campaign scale (DESIGN.md §4): `Smoke` for tests/benches, `Default`
+/// for the recorded EXPERIMENTS.md runs, `Full` = the paper's full grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Default,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+}
+
+/// The benchmark instance grid at a given scale.
+pub fn instances(scale: Scale) -> Vec<Instance> {
+    let (nbs, bss, widths, phases): (&[usize], &[usize], &[usize], &[usize]) = match scale {
+        Scale::Smoke => (&[5], &[320], &[100], &[2]),
+        Scale::Default => (&[5, 10], &[64, 320, 960], &[100, 300, 500], &[2, 5]),
+        Scale::Full => (
+            &[5, 10, 20],
+            &costs::PAPER_BLOCK_SIZES,
+            &forkjoin::PAPER_WIDTHS,
+            &forkjoin::PAPER_PHASES,
+        ),
+    };
+    let mut out = Vec::new();
+    for app in chameleon::APPS {
+        for &nb in nbs {
+            for &bs in bss {
+                out.push(Instance::Chameleon {
+                    app: app.to_string(),
+                    nb_blocks: nb,
+                    block_size: bs,
+                });
+            }
+        }
+    }
+    for &w in widths {
+        for &p in phases {
+            out.push(Instance::ForkJoin { width: w, phases: p });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_labels_and_generation() {
+        let i = Instance::Chameleon {
+            app: "potrf".into(),
+            nb_blocks: 5,
+            block_size: 320,
+        };
+        assert_eq!(i.label(), "potrf-nb5-bs320");
+        let g = i.generate(2);
+        assert_eq!(g.n_tasks(), 35);
+        assert_eq!(g.n_types(), 2);
+        let g3 = i.generate(3);
+        assert_eq!(g3.n_types(), 3);
+    }
+
+    #[test]
+    fn forkjoin_instance() {
+        let i = Instance::ForkJoin { width: 100, phases: 2 };
+        let g = i.generate(2);
+        assert_eq!(g.n_tasks(), 203);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let i = Instance::ForkJoin { width: 50, phases: 2 };
+        assert_eq!(i.generate(2).proc_times, i.generate(2).proc_times);
+    }
+
+    #[test]
+    fn grids_have_expected_sizes() {
+        assert_eq!(instances(Scale::Smoke).len(), 5 + 1);
+        assert_eq!(instances(Scale::Default).len(), 5 * 2 * 3 + 3 * 2);
+        assert_eq!(instances(Scale::Full).len(), 5 * 3 * 6 + 5 * 3);
+    }
+}

@@ -1,0 +1,227 @@
+//! Integration tests across layers: workloads → LP (both backends) →
+//! rounding → scheduling → validation → analysis, plus the live
+//! coordinator, on real benchmark instances.
+
+use hetsched::algos::{run_offline, solve_hlp, solve_qhlp, Offline};
+use hetsched::analysis::{pairwise_by_app, ratio_by_app, Record};
+use hetsched::coordinator::{run_live, LiveConfig};
+use hetsched::experiments::cache::{cache_key, LpCache};
+use hetsched::platform::Platform;
+use hetsched::runtime::{with_runtime, LpBackendKind};
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sim::{validate, validate_realized};
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin, instances, Instance, Scale};
+
+fn artifacts_present() -> bool {
+    hetsched::runtime::artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn every_smoke_instance_schedules_feasibly_with_all_algorithms() {
+    let plat = Platform::hybrid(16, 4);
+    for inst in instances(Scale::Smoke) {
+        let g = inst.generate(2);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        for algo in Offline::ALL {
+            let (s, _) =
+                run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::RustPdhg, 1e-4);
+            validate(&g, &plat, &s)
+                .unwrap_or_else(|e| panic!("{} on {}: {e}", algo.name(), inst.label()));
+            assert!(s.makespan >= hlp.sol.obj * 0.99);
+            assert!(s.makespan <= 6.0 * hlp.sol.obj * 1.02);
+        }
+        for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+            let s = online_by_id(&g, &plat, &policy);
+            validate(&g, &plat, &s).unwrap();
+        }
+    }
+}
+
+#[test]
+fn pjrt_and_rust_backends_agree_on_benchmark_lps() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let plat = Platform::hybrid(16, 4);
+    for inst in [
+        Instance::Chameleon {
+            app: "potrf".into(),
+            nb_blocks: 10,
+            block_size: 320,
+        },
+        Instance::ForkJoin {
+            width: 100,
+            phases: 2,
+        },
+    ] {
+        let g = inst.generate(2);
+        let a = solve_hlp(&g, &plat, LpBackendKind::Pjrt, 1e-4);
+        let b = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        assert_eq!(a.sol.backend, "pdhg-pjrt");
+        assert_eq!(b.sol.backend, "pdhg-rust");
+        let scale = 1.0 + a.sol.obj.abs().max(b.sol.obj.abs());
+        assert!(
+            (a.sol.obj - b.sol.obj).abs() / scale < 5e-3,
+            "{}: pjrt {} vs rust {}",
+            inst.label(),
+            a.sol.obj,
+            b.sol.obj
+        );
+        // allocations need not be identical (alternative optima) but
+        // both must produce feasible, certified schedules
+        for lp in [&a, &b] {
+            let (s, _) = run_offline(
+                Offline::HlpOls,
+                &g,
+                &plat,
+                Some(lp),
+                LpBackendKind::RustPdhg,
+                1e-4,
+            );
+            validate(&g, &plat, &s).unwrap();
+            assert!(s.makespan <= 6.0 * lp.sol.obj * 1.02);
+        }
+    }
+}
+
+#[test]
+fn simplex_backend_matches_pdhg_on_small_instance() {
+    let g = chameleon::potrf(5, &CostModel::hybrid(320), 3);
+    let plat = Platform::hybrid(4, 2);
+    let exact = solve_hlp(&g, &plat, LpBackendKind::Simplex, 1e-4);
+    let approx = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-6);
+    assert_eq!(exact.sol.backend, "simplex");
+    assert!((exact.sol.obj - approx.sol.obj).abs() / (1.0 + exact.sol.obj) < 5e-3);
+}
+
+#[test]
+fn three_type_pipeline_on_forkjoin() {
+    let g = forkjoin::forkjoin(50, 2, 2, 9);
+    assert_eq!(g.n_types(), 3);
+    let plat = Platform::new(vec![8, 2, 2]);
+    let qhlp = solve_qhlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+    for algo in Offline::ALL {
+        let (s, _) = run_offline(algo, &g, &plat, Some(&qhlp), LpBackendKind::RustPdhg, 1e-4);
+        validate(&g, &plat, &s).unwrap();
+        assert!(s.makespan <= 12.0 * qhlp.sol.obj * 1.02); // Q(Q+1) = 12
+    }
+}
+
+#[test]
+fn lp_cache_roundtrip_through_campaign_shape() {
+    let dir = std::env::temp_dir().join(format!("hetsched-it-{}", std::process::id()));
+    let path = dir.join("cache.json");
+    let g = chameleon::potrs(5, &CostModel::hybrid(128), 4);
+    let plat = Platform::hybrid(16, 2);
+    let solved = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+    let key = cache_key("potrs-nb5-bs128", &plat.label(), 2, 1e-4);
+    let mut cache = LpCache::default();
+    cache.put(&key, &solved);
+    cache.save(&path).unwrap();
+    let reloaded = LpCache::load(&path);
+    let got = reloaded.get(&key).unwrap();
+    assert_eq!(got.alloc, solved.alloc);
+    assert!((got.sol.obj - solved.sol.obj).abs() < 1e-12);
+    // the cached allocation schedules identically
+    let s1 = hetsched::sched::est::est_schedule(&g, &plat, &solved.alloc);
+    let s2 = hetsched::sched::est::est_schedule(&g, &plat, &got.alloc);
+    assert_eq!(s1.makespan, s2.makespan);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn analysis_pipeline_produces_paper_shaped_outputs() {
+    // miniature campaign by hand: 2 instances x 1 config x 3 algos
+    let plat = Platform::hybrid(16, 4);
+    let mut records = Vec::new();
+    for inst in [
+        Instance::Chameleon {
+            app: "posv".into(),
+            nb_blocks: 5,
+            block_size: 320,
+        },
+        Instance::ForkJoin {
+            width: 100,
+            phases: 2,
+        },
+    ] {
+        let g = inst.generate(2);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        for algo in Offline::ALL {
+            let (s, _) =
+                run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::RustPdhg, 1e-4);
+            records.push(Record {
+                instance: inst.label(),
+                app: inst.app().to_string(),
+                config: plat.label(),
+                algo: algo.name().to_string(),
+                makespan: s.makespan,
+                lp_star: hlp.sol.obj,
+                sqrt_mk: 2.0,
+            });
+        }
+    }
+    let by_app = ratio_by_app(&records, "HLP-OLS");
+    assert_eq!(by_app.len(), 2);
+    for s in by_app.values() {
+        assert!(s.mean >= 1.0 * 0.99 && s.mean <= 6.0);
+    }
+    let pw = pairwise_by_app(&records, "HLP-EST", "HLP-OLS");
+    assert_eq!(pw.len(), 2);
+}
+
+#[test]
+fn live_coordinator_matches_engine_on_real_workload() {
+    let g = chameleon::potrf(5, &CostModel::hybrid(960), 6);
+    let plat = Platform::hybrid(3, 2);
+    let order: Vec<usize> = (0..g.n_tasks()).collect();
+    let cfg = LiveConfig {
+        time_scale: 0.05 / (0..g.n_tasks()).map(|j| g.p_cpu(j)).sum::<f64>(),
+        policy: OnlinePolicy::ErLs,
+    };
+    let (report, realized) = run_live(&g, &plat, &order, &cfg);
+    validate_realized(&g, &plat, &realized).unwrap();
+    assert_eq!(
+        realized.allocation(),
+        online_by_id(&g, &plat, &OnlinePolicy::ErLs).allocation(),
+        "live run must take identical irrevocable decisions"
+    );
+    assert!(report.realized_makespan >= report.predicted_makespan * 0.95);
+}
+
+#[test]
+fn pjrt_full_pipeline_on_small_instance() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let g = chameleon::getrf(5, &CostModel::hybrid(512), 8);
+    let plat = Platform::hybrid(8, 2);
+    let done = with_runtime(|rt| {
+        let (mut lp, vars) = hetsched::lp::model::build_hlp(&g, &plat);
+        let warm = hetsched::lp::model::hlp_warm_start(
+            &g,
+            &plat,
+            &hetsched::alloc::greedy_min_time(&g),
+            &vars,
+        );
+        hetsched::lp::model::tighten_hlp_box(&mut lp, &vars, warm[vars.lambda]);
+        let sol = rt
+            .solve(
+                &lp,
+                &hetsched::lp::pdhg::DriveOpts {
+                    tol: 1e-4,
+                    warm_start: Some(warm),
+                    ..Default::default()
+                },
+            )
+            .expect("pjrt solve");
+        assert!(rt.total_chunks > 0);
+        let alloc = hetsched::lp::rounding::round_hlp(&sol.z, &vars);
+        let s = hetsched::sched::list::ols_schedule(&g, &plat, &alloc);
+        validate(&g, &plat, &s).unwrap();
+        assert!(s.makespan <= 6.0 * sol.obj * 1.02);
+    });
+    assert!(done.is_some());
+}

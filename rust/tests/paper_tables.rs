@@ -1,0 +1,72 @@
+//! Paper-facing regression suite: every table of the paper is pinned
+//! here (Tables 1–5), plus the theorem drivers at test-sized grids.
+
+use hetsched::experiments::thm;
+use hetsched::workloads::{chameleon, forkjoin};
+
+#[test]
+fn table4_chameleon_counts_verbatim() {
+    let expected: &[(&str, [usize; 3])] = &[
+        ("getrf", [55, 385, 2870]),
+        ("posv", [65, 330, 1960]),
+        ("potrf", [35, 220, 1540]),
+        ("potri", [105, 660, 4620]),
+        ("potrs", [30, 110, 420]),
+    ];
+    let cm = hetsched::workloads::costs::CostModel::hybrid(320);
+    for &(app, counts) in expected {
+        for (i, &nb) in [5usize, 10, 20].iter().enumerate() {
+            let g = chameleon::by_name(app, nb, &cm, 0).unwrap();
+            assert_eq!(g.n_tasks(), counts[i], "{app} nb={nb}");
+            g.validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn table5_forkjoin_counts_verbatim() {
+    let expected: &[(usize, [usize; 5])] = &[
+        (2, [203, 403, 603, 803, 1003]),
+        (5, [506, 1006, 1506, 2006, 2506]),
+        (10, [1011, 2011, 3011, 4011, 5011]),
+    ];
+    for &(p, row) in expected {
+        for (i, &w) in [100usize, 200, 300, 400, 500].iter().enumerate() {
+            assert_eq!(forkjoin::forkjoin(w, p, 1, 1).n_tasks(), row[i]);
+        }
+    }
+}
+
+#[test]
+fn table1_thm1_heft_ratio_grid() {
+    for (m, k) in [(9usize, 2usize), (16, 4), (36, 4), (64, 8)] {
+        let (_, _, ratio) = thm::thm1_run(m, k);
+        let exact = thm::thm1_exact_ratio(m, k);
+        assert!(
+            (ratio - exact).abs() < 1e-6,
+            "m={m},k={k}: {ratio} vs {exact}"
+        );
+    }
+}
+
+#[test]
+fn table2_thm2_ratio_grid() {
+    for m in [5usize, 20, 80] {
+        let (lp_star, est, ols) = thm::thm2_run(m);
+        let want = thm::thm2_worst_makespan(m) / lp_star;
+        assert!((est - want).abs() < 1e-6);
+        assert!((ols - want).abs() < 1e-6);
+    }
+    // asymptotically 6
+    let (lp_star, est, _) = thm::thm2_run(200);
+    assert!(est > 5.8 && est < 6.0, "ratio {est} (LP* {lp_star})");
+}
+
+#[test]
+fn table3_thm4_ratio_grid() {
+    for (m, k) in [(16usize, 4usize), (64, 16), (100, 4)] {
+        let (_, _, ratio) = thm::thm4_run(m, k);
+        let want = (m as f64 / k as f64).sqrt();
+        assert!((ratio - want).abs() < 1e-9, "m={m},k={k}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Property-based test suite (substrate::prop): random DAGs × random
+//! platforms, checking the paper's invariants end-to-end.
+//!
+//! Case count: 64 per property by default; override with
+//! HETSCHED_PROP_CASES for soak runs.
+
+use hetsched::algos::{run_offline, solve_hlp, solve_qhlp, Offline};
+use hetsched::alloc;
+use hetsched::graph::{gen, io, paths};
+use hetsched::platform::Platform;
+use hetsched::runtime::LpBackendKind;
+use hetsched::sched::online::{online_schedule, random_topo_order, OnlinePolicy};
+use hetsched::sim::validate;
+use hetsched::substrate::prop::{check, ensure, ensure_close, ensure_le};
+use hetsched::substrate::rng::Rng;
+
+fn random_platform(rng: &mut Rng) -> Platform {
+    let k = 1 + rng.below(4);
+    let m = k + rng.below(12);
+    Platform::hybrid(m, k)
+}
+
+fn random_graph(rng: &mut Rng) -> hetsched::graph::TaskGraph {
+    let n = 10 + rng.below(40);
+    let density = 0.08 + 0.15 * rng.f64();
+    gen::hybrid_dag(rng, n, density)
+}
+
+#[test]
+fn prop_graph_json_roundtrip() {
+    check("graph json roundtrip", |rng, _| {
+        let g = random_graph(rng);
+        let back = io::parse_graph(&io::to_json(&g).to_string()).map_err(|e| e)?;
+        ensure(back.succs == g.succs, "arcs preserved")?;
+        ensure(back.proc_times == g.proc_times, "times preserved")
+    });
+}
+
+#[test]
+fn prop_topo_order_and_ranks_consistent() {
+    check("ranks decrease along arcs", |rng, _| {
+        let g = random_graph(rng);
+        let alloc: Vec<usize> = (0..g.n_tasks()).map(|_| rng.below(2)).collect();
+        let rank = paths::ols_rank(&g, &alloc);
+        for j in 0..g.n_tasks() {
+            for &s in &g.succs[j] {
+                ensure(rank[j] > rank[s], "rank monotone")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_offline_schedules_feasible_and_certified() {
+    check("offline certificates", |rng, case| {
+        let g = random_graph(rng);
+        let plat = random_platform(rng);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        // LP* sanity: at least the combinatorial lower bound, modulo tol
+        let lb = paths::lower_bound(&g, &plat.counts);
+        ensure_le(lb * 0.98, hlp.sol.obj, "LP* >= combinatorial LB")?;
+        for algo in Offline::ALL {
+            let (s, _) =
+                run_offline(algo, &g, &plat, Some(&hlp), LpBackendKind::RustPdhg, 1e-4);
+            validate(&g, &plat, &s).map_err(|e| format!("case {case} {}: {e}", algo.name()))?;
+            // 6-approximation certificate (LP tolerance slack)
+            ensure_le(
+                s.makespan,
+                6.0 * hlp.sol.obj * 1.02 + 1e-9,
+                &format!("{} <= 6 LP*", algo.name()),
+            )?;
+            // any makespan at least the lower bound
+            ensure_le(lb * 0.98, s.makespan, "makespan >= LB")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qhlp_certificates_three_types() {
+    check("qhlp certificates", |rng, _| {
+        let n = 8 + rng.below(25);
+        let g = gen::random_dag(rng, n, 0.15, 3);
+        let counts = vec![2 + rng.below(6), 1 + rng.below(4), 1 + rng.below(4)];
+        let plat = Platform::new(counts);
+        let q = 3.0;
+        let qhlp = solve_qhlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        for algo in Offline::ALL {
+            let (s, _) =
+                run_offline(algo, &g, &plat, Some(&qhlp), LpBackendKind::RustPdhg, 1e-4);
+            validate(&g, &plat, &s)?;
+            ensure_le(
+                s.makespan,
+                q * (q + 1.0) * qhlp.sol.obj * 1.02,
+                &format!("{} <= Q(Q+1) LP*", algo.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_list_scheduling_graham_bound() {
+    check("graham bound", |rng, _| {
+        let g = random_graph(rng);
+        let plat = random_platform(rng);
+        let alloc: Vec<usize> = (0..g.n_tasks()).map(|_| rng.below(2)).collect();
+        let s = hetsched::sched::list::ols_schedule(&g, &plat, &alloc);
+        validate(&g, &plat, &s)?;
+        let loads = s.loads(2);
+        let cp = paths::critical_path(&g, &|j| g.time_on(j, alloc[j]));
+        ensure_le(
+            s.makespan,
+            loads[0] / plat.m() as f64 + loads[1] / plat.k() as f64 + cp,
+            "C_max <= W_cpu/m + W_gpu/k + CP",
+        )
+    });
+}
+
+#[test]
+fn prop_online_policies_feasible_and_erls_bounded() {
+    check("online policies", |rng, case| {
+        let g = random_graph(rng);
+        let plat = random_platform(rng);
+        let order = random_topo_order(&g, rng);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
+        for policy in [
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(case as u64),
+            OnlinePolicy::R1,
+            OnlinePolicy::R2,
+            OnlinePolicy::R3,
+        ] {
+            let s = online_schedule(&g, &plat, &order, &policy);
+            validate(&g, &plat, &s)
+                .map_err(|e| format!("{}: {e}", policy.name()))?;
+            if matches!(policy, OnlinePolicy::ErLs) {
+                let bound = 4.0 * (plat.m() as f64 / plat.k() as f64).sqrt();
+                ensure_le(
+                    s.makespan,
+                    bound * hlp.sol.obj * 1.02,
+                    "ER-LS <= 4 sqrt(m/k) LP*",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_deterministic_given_order() {
+    check("online determinism", |rng, _| {
+        let g = random_graph(rng);
+        let plat = random_platform(rng);
+        let order = random_topo_order(&g, rng);
+        let a = online_schedule(&g, &plat, &order, &OnlinePolicy::ErLs);
+        let b = online_schedule(&g, &plat, &order, &OnlinePolicy::ErLs);
+        ensure_close(a.makespan, b.makespan, 1e-12, "same makespan")?;
+        ensure(a.placements == b.placements, "same placements")
+    });
+}
+
+#[test]
+fn prop_greedy_rules_agree_when_m_equals_k() {
+    check("R1=R2=R3 at m=k", |rng, _| {
+        let g = random_graph(rng);
+        let m = 1 + rng.below(8);
+        let plat = Platform::hybrid(m, m);
+        let a = alloc::rule_r1(&g, &plat);
+        let b = alloc::rule_r2(&g, &plat);
+        let c = alloc::rule_r3(&g, &plat);
+        ensure(a == b && b == c, "rules coincide when m == k")
+    });
+}
+
+#[test]
+fn prop_hlp_lp_value_below_any_schedule() {
+    check("LP* lower-bounds schedules", |rng, _| {
+        let g = random_graph(rng);
+        let plat = random_platform(rng);
+        let hlp = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-5);
+        // an arbitrary feasible schedule (greedy alloc + OLS)
+        let alloc = alloc::greedy_min_time(&g);
+        let s = hetsched::sched::list::ols_schedule(&g, &plat, &alloc);
+        ensure_le(hlp.sol.obj * 0.995, s.makespan, "LP* <= C_max")
+    });
+}
+
+#[test]
+fn prop_simplex_agrees_with_pdhg_on_hlp() {
+    // smaller case count: simplex on random HLPs is the slow oracle
+    let cfg = hetsched::substrate::prop::PropConfig {
+        cases: 12,
+        base_seed: 0xCAFE,
+    };
+    hetsched::substrate::prop::for_all("simplex vs pdhg", &cfg, |rng, _| {
+        let n = 6 + rng.below(12);
+        let g = gen::hybrid_dag(rng, n, 0.2);
+        let plat = random_platform(rng);
+        let (lp, _) = hetsched::lp::model::build_hlp(&g, &plat);
+        let exact = hetsched::lp::simplex::solve_simplex(&lp).map_err(|e| format!("{e:?}"))?;
+        let approx = hetsched::lp::pdhg::solve_rust(
+            &lp,
+            &hetsched::lp::pdhg::DriveOpts {
+                tol: 1e-6,
+                ..Default::default()
+            },
+        );
+        ensure_close(exact.obj, approx.obj, 5e-3, "objectives agree")?;
+        ensure_le(approx.lower_bound, exact.obj + 1e-6 * (1.0 + exact.obj), "dual bound valid")
+    });
+}
