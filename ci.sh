@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, tier-1 build + tests, and (optionally) the
+# scheduler perf gate that refreshes BENCH_sched.json.
+#
+#   ./ci.sh          # fmt-check + clippy + tier-1
+#   ./ci.sh --perf   # also run the perf_hot_paths acceptance bench
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "(rustfmt not installed; skipping format check)"
+fi
+
+echo "== cargo clippy -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "(clippy not installed; skipping lints)"
+fi
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" == "--perf" ]]; then
+    echo "== perf gate: engine >= 5x seed EST (writes BENCH_sched.json) =="
+    HETSCHED_BENCH_QUICK=1 cargo bench --bench perf_hot_paths
+    cat BENCH_sched.json
+fi
+
+echo "CI OK"

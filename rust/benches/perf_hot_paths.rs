@@ -1,28 +1,128 @@
 //! Bench: hot-path performance (EXPERIMENTS.md §Perf).
 //!
-//! L1+L2: PDHG chunk execution through PJRT (per-bucket iterations/sec,
-//!        and the padding waste vs the Rust mirror on the same LP);
-//! L3:    LP build, Ruiz scaling, list/EST/HEFT schedulers, ranks,
-//!        validator, and the end-to-end offline pipeline.
+//! Sections:
+//!   0. engine vs seed schedulers on a 5000-task, 32+8-unit instance —
+//!      the event-driven-core acceptance gate.  Results (and speedups)
+//!      are written to BENCH_sched.json so the perf trajectory is
+//!      tracked PR over PR.
+//!   L3: LP build, Ruiz scaling, list/EST/HEFT schedulers, ranks,
+//!       validator, and the end-to-end offline pipeline.
+//!   L1+L2: PDHG chunk execution through PJRT (skipped without
+//!       artifacts), plus the paper's ~100 s GLPK anchor re-timed.
 //!
-//! The paper's anchor (§6.2): "the linear program resolution took about
-//! 100 seconds" on the biggest instance (potri nb=20, 4620 tasks) with
-//! GLPK; the same relaxation is timed below end-to-end.
+//! Set HETSCHED_BENCH_QUICK=1 to stop after the JSON is written.
 
 use hetsched::algos::solve_hlp_capped;
-use hetsched::graph::paths;
+use hetsched::graph::{gen, paths};
 use hetsched::lp::model::{build_hlp, hlp_warm_start, tighten_hlp_box};
 use hetsched::lp::pdhg::{solve_rust, ChunkBackend, DriveOpts, RustChunk};
 use hetsched::lp::scale::ruiz;
 use hetsched::platform::Platform;
 use hetsched::runtime::{with_runtime, LpBackendKind};
-use hetsched::sched::{est::est_schedule, heft::heft_schedule, list::ols_schedule};
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sched::{est::est_schedule, heft::heft_schedule, list::ols_schedule, reference};
 use hetsched::sim::validate;
-use hetsched::substrate::bench::{bench, bench_with, black_box, BenchOpts};
+use hetsched::substrate::bench::{bench, bench_with, black_box, BenchOpts, BenchResult};
+use hetsched::substrate::json::Json;
+use hetsched::substrate::rng::Rng;
 use hetsched::workloads::{chameleon, costs::CostModel};
 use std::time::Duration;
 
+fn sched_pair(
+    name: &str,
+    opts: &BenchOpts,
+    mut engine: impl FnMut() -> f64,
+    mut seedf: impl FnMut() -> f64,
+) -> (BenchResult, BenchResult, f64) {
+    // parity sanity before timing anything
+    let (me, ms) = (engine(), seedf());
+    assert_eq!(me, ms, "{name}: engine and seed makespans diverged");
+    let e = bench_with(&format!("{name} (engine)"), opts, || {
+        black_box(engine());
+    });
+    println!("{}", e.report());
+    let s = bench_with(&format!("{name} (seed)"), opts, || {
+        black_box(seedf());
+    });
+    println!("{}", s.report());
+    let speedup = s.mean.as_secs_f64() / e.mean.as_secs_f64();
+    println!("    -> speedup {speedup:.1}x");
+    (e, s, speedup)
+}
+
 fn main() {
+    // ---- 0. acceptance gate: 5000 tasks, 32 CPUs + 8 GPUs ----------
+    println!("== engine vs seed schedulers (5000-task hybrid DAG, 32x8) ==");
+    let mut rng = Rng::new(2026);
+    let big = gen::hybrid_dag(&mut rng, 5000, 0.002);
+    let bigplat = Platform::hybrid(32, 8);
+    let bigalloc: Vec<usize> = (0..big.n_tasks())
+        .map(|j| usize::from(big.p_gpu(j) < big.p_cpu(j)))
+        .collect();
+    println!(
+        "instance: {} tasks, {} arcs, platform {}",
+        big.n_tasks(),
+        big.n_arcs(),
+        bigplat.label()
+    );
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_millis(2000),
+        min_iters: 3,
+        max_iters: 100_000,
+    };
+    let (est_e, est_s, est_speedup) = sched_pair(
+        "EST 5000",
+        &opts,
+        || est_schedule(&big, &bigplat, &bigalloc).makespan,
+        || reference::est_schedule(&big, &bigplat, &bigalloc).makespan,
+    );
+    let (ols_e, ols_s, ols_speedup) = sched_pair(
+        "OLS 5000",
+        &opts,
+        || ols_schedule(&big, &bigplat, &bigalloc).makespan,
+        || reference::ols_schedule(&big, &bigplat, &bigalloc).makespan,
+    );
+    let (onl_e, onl_s, onl_speedup) = sched_pair(
+        "online ER-LS 5000",
+        &opts,
+        || online_by_id(&big, &bigplat, &OnlinePolicy::ErLs).makespan,
+        || reference::online_by_id(&big, &bigplat, &OnlinePolicy::ErLs).makespan,
+    );
+    let ms = |r: &BenchResult| Json::Num(r.mean.as_secs_f64() * 1e3);
+    let section = |e: &BenchResult, s: &BenchResult, speedup: f64| {
+        Json::obj(vec![
+            ("engine_ms", ms(e)),
+            ("seed_ms", ms(s)),
+            ("speedup", Json::Num(speedup)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_hot_paths".into())),
+        (
+            "instance",
+            Json::obj(vec![
+                ("tasks", Json::Num(big.n_tasks() as f64)),
+                ("arcs", Json::Num(big.n_arcs() as f64)),
+                ("platform", Json::Str(bigplat.label())),
+            ]),
+        ),
+        ("est", section(&est_e, &est_s, est_speedup)),
+        ("ols", section(&ols_e, &ols_s, ols_speedup)),
+        ("online_erls", section(&onl_e, &onl_s, onl_speedup)),
+    ]);
+    std::fs::write("BENCH_sched.json", report.to_string()).expect("write BENCH_sched.json");
+    println!("wrote BENCH_sched.json\n");
+    assert!(
+        est_speedup >= 5.0,
+        "acceptance: EST engine must be >= 5x the seed (got {est_speedup:.1}x)"
+    );
+
+    if std::env::var("HETSCHED_BENCH_QUICK").is_ok() {
+        return;
+    }
+
+    // ---- L3 hot paths ----------------------------------------------
     let plat = Platform::hybrid(16, 4);
     let g = chameleon::posv(10, &CostModel::hybrid(320), 3); // 330 tasks
     let alloc: Vec<usize> = (0..g.n_tasks())
@@ -96,10 +196,10 @@ fn main() {
     }
 
     println!("\n== paper anchor: full HLP of potri nb=20 (4620 tasks, 64x8) ==");
-    let big = chameleon::potri(20, &CostModel::hybrid(320), 7);
-    let bigplat = Platform::hybrid(64, 8);
+    let anchor = chameleon::potri(20, &CostModel::hybrid(320), 7);
+    let anchorplat = Platform::hybrid(64, 8);
     let t = std::time::Instant::now();
-    let sol = solve_hlp_capped(&big, &bigplat, LpBackendKind::RustPdhg, 1e-3, 120_000);
+    let sol = solve_hlp_capped(&anchor, &anchorplat, LpBackendKind::RustPdhg, 1e-3, 120_000);
     println!(
         "rust-pdhg: LP* = {:.4} (gap {:.1e}, {} iters) in {:?}  [paper/GLPK: ~100 s]",
         sol.sol.obj,
@@ -112,13 +212,14 @@ fn main() {
     println!("\n== backend comparison (potrf nb=10, 220 tasks, 16x4) ==");
     let mid = chameleon::potrf(10, &CostModel::hybrid(320), 3);
     let (midlp, _) = build_hlp(&mid, &plat);
-    for (name, f) in [
-        ("rust-pdhg", Box::new(|| {
-            black_box(solve_rust(&midlp, &DriveOpts { tol: 1e-4, ..Default::default() }));
-        }) as Box<dyn FnMut()>),
-    ] {
-        let mut f = f;
-        let r = bench_with(name, &slow, &mut *f);
-        println!("{}", r.report());
-    }
+    let r = bench_with("rust-pdhg", &slow, || {
+        black_box(solve_rust(
+            &midlp,
+            &DriveOpts {
+                tol: 1e-4,
+                ..Default::default()
+            },
+        ));
+    });
+    println!("{}", r.report());
 }

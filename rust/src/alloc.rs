@@ -56,7 +56,9 @@ pub fn greedy_min_time(g: &TaskGraph) -> Allocation {
     (0..g.n_tasks())
         .map(|j| {
             (0..g.n_types())
-                .min_by(|&a, &b| g.time_on(j, a).partial_cmp(&g.time_on(j, b)).unwrap())
+                // total_cmp: same order as partial_cmp on the finite
+                // times the builder enforces, but panic-free by design
+                .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
                 .unwrap()
         })
         .collect()

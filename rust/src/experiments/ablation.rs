@@ -8,6 +8,9 @@
 //! * **PDHG solver** (§Perf): warm start / Ruiz / restart-to-average
 //!   on-off grid, measured in iterations-to-tolerance.
 
+use std::sync::Mutex;
+
+use crate::algos::{solve_hlp_capped, AllocLp};
 use crate::alloc::greedy_min_time;
 use crate::graph::{paths, TaskGraph};
 use crate::lp::model::{build_hlp, hlp_warm_start, tighten_hlp_box};
@@ -16,7 +19,13 @@ use crate::lp::pdhg::{drive, ChunkBackend, ChunkResult, DriveOpts, RustChunk};
 use crate::platform::Platform;
 use crate::runtime::LpBackendKind;
 use crate::sched::list::list_schedule;
+use crate::substrate::pool::parallel_map;
 use crate::substrate::rng::Rng;
+use crate::workloads::instances;
+
+use super::cache::{cache_key, LpCache};
+use super::offline::configs;
+use super::CampaignOpts;
 
 /// Priority rules for the OLS scheduling phase.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,6 +106,83 @@ pub fn ablate_rounding_threshold(
             (theta, s.makespan)
         })
         .collect()
+}
+
+/// One row of the sharded priority-ablation campaign.
+#[derive(Clone, Debug)]
+pub struct AblationRecord {
+    pub instance: String,
+    pub config: String,
+    pub priority: &'static str,
+    pub makespan: f64,
+    pub lp_star: f64,
+}
+
+impl AblationRecord {
+    pub fn ratio(&self) -> f64 {
+        self.makespan / self.lp_star
+    }
+}
+
+/// The priority rules the campaign sweeps.
+pub const PRIORITY_GRID: [Priority; 4] = [
+    Priority::HlpRank,
+    Priority::AvgRank,
+    Priority::IdOrder,
+    Priority::Random(7),
+];
+
+/// Run the OLS-priority ablation over the full benchmark grid, sharded
+/// across the worker pool with per-(instance, config) LP reuse through
+/// the campaign cache — the same sharding scheme as the offline/online
+/// campaigns, so the expensive HLP solves are paid once and shared with
+/// the figure harnesses when they use the same cache path.
+pub fn run_priority_campaign(opts: &CampaignOpts) -> Vec<AblationRecord> {
+    let insts = instances(opts.scale);
+    let cfgs = configs(2, opts.scale);
+    let cache = Mutex::new(
+        opts.cache_path
+            .as_ref()
+            .map(|p| LpCache::load(p))
+            .unwrap_or_default(),
+    );
+
+    let mut items = Vec::new();
+    for inst in &insts {
+        for cfg in &cfgs {
+            items.push((inst.clone(), cfg.clone()));
+        }
+    }
+
+    let records: Vec<Vec<AblationRecord>> = parallel_map(items, opts.workers, |(inst, cfg)| {
+        let g = inst.generate(2);
+        let key = cache_key(&inst.label(), &cfg.label(), 2, opts.tol);
+        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
+        let hlp = cached.unwrap_or_else(|| {
+            let solved = solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters);
+            cache.lock().unwrap().put(&key, &solved);
+            solved
+        });
+        PRIORITY_GRID
+            .iter()
+            .map(|p| {
+                let prio = p.compute(&g, &cfg, &hlp.alloc);
+                let s = list_schedule(&g, &cfg, &hlp.alloc, &prio);
+                AblationRecord {
+                    instance: inst.label(),
+                    config: cfg.label(),
+                    priority: p.name(),
+                    makespan: s.makespan,
+                    lp_star: hlp.sol.obj,
+                }
+            })
+            .collect()
+    });
+
+    if let Some(path) = &opts.cache_path {
+        cache.lock().unwrap().save(path).ok();
+    }
+    records.into_iter().flatten().collect()
 }
 
 /// A chunk backend wrapper that disables restart-to-average by reporting
@@ -181,6 +267,31 @@ mod tests {
         for (_, ms) in &sweep {
             assert!(*ms > 0.0);
         }
+    }
+
+    #[test]
+    fn priority_campaign_shards_and_reuses_lps() {
+        let opts = CampaignOpts {
+            backend: LpBackendKind::RustPdhg,
+            workers: 4,
+            ..CampaignOpts::smoke()
+        };
+        let records = run_priority_campaign(&opts);
+        // 6 smoke instances x 4 smoke configs x 4 priority rules
+        assert_eq!(records.len(), 6 * 4 * 4);
+        for r in &records {
+            assert!(r.ratio() > 0.95, "{r:?}");
+        }
+        // the paper's rank never loses badly to submission order overall
+        let mean = |name: &str| {
+            let xs: Vec<f64> = records
+                .iter()
+                .filter(|r| r.priority == name)
+                .map(|r| r.ratio())
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(mean("hlp-rank") <= mean("id-order") * 1.05);
     }
 
     #[test]

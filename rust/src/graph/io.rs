@@ -47,6 +47,11 @@ pub fn from_json(v: &Json) -> Result<TaskGraph, String> {
             .iter()
             .map(|x| x.as_f64().ok_or("bad time"))
             .collect::<Result<Vec<_>, _>>()?;
+        // pre-check so invalid documents surface as Err rather than the
+        // builder's panic on NaN / non-positive costs
+        if times.is_empty() || times.iter().any(|&t| !t.is_finite() || t <= 0.0) {
+            return Err(format!("task {name}: times must be finite and > 0"));
+        }
         b.add_task(name, times);
     }
     for a in v.get("arcs").and_then(|x| x.as_arr()).ok_or("missing arcs")? {

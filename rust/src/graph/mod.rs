@@ -172,6 +172,23 @@ impl Builder {
     }
 
     pub fn build(self) -> TaskGraph {
+        // Reject NaN / non-positive / infinite costs unconditionally
+        // (not just in debug): a single NaN time would otherwise poison
+        // every downstream float comparison silently.
+        for (j, times) in self.proc_times.iter().enumerate() {
+            assert!(
+                !times.is_empty(),
+                "task {j} ({}): no processing times",
+                self.names[j]
+            );
+            for (q, &p) in times.iter().enumerate() {
+                assert!(
+                    p.is_finite() && p > 0.0,
+                    "task {j} ({}): processing time {p} on type {q} must be finite and > 0",
+                    self.names[j]
+                );
+            }
+        }
         let g = TaskGraph {
             app: self.app,
             names: self.names,
@@ -265,6 +282,30 @@ mod tests {
             succs: vec![vec![]],
         };
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and > 0")]
+    fn builder_rejects_nan_cost() {
+        let mut b = Builder::new("nan");
+        b.add_task("a", vec![1.0, f64::NAN]);
+        let _ = b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and > 0")]
+    fn builder_rejects_negative_cost() {
+        let mut b = Builder::new("neg");
+        b.add_task("a", vec![-1.0, 2.0]);
+        let _ = b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and > 0")]
+    fn builder_rejects_infinite_cost() {
+        let mut b = Builder::new("inf");
+        b.add_task("a", vec![f64::INFINITY, 2.0]);
+        let _ = b.build();
     }
 
     #[test]

@@ -20,21 +20,27 @@ pub fn round_hlp(z: &[f64], vars: &HlpVars) -> Allocation {
 }
 
 /// Round a fractional QHLP solution.
+///
+/// Two passes per task so the result is independent of the type order:
+/// first the exact argmax of the fractional assignment, then — among the
+/// types within the 1e-12 tie band of that maximum — the fastest type
+/// (ties on speed towards the lowest type index).  The previous
+/// single-pass fold kept a running `best_x = x.max(best_x)` while
+/// switching `best_q` on tie-breaks, which made three-way near-ties
+/// order-dependent (a later type could beat the band anchor without
+/// beating the fastest in-band type).
 pub fn round_qhlp(z: &[f64], vars: &QhlpVars, g: &TaskGraph) -> Allocation {
     (0..vars.n_tasks)
         .map(|j| {
-            let mut best_q = 0usize;
-            let mut best_x = f64::NEG_INFINITY;
-            for q in 0..vars.n_types {
-                let x = z[vars.x(j, q)];
-                let better = x > best_x + 1e-12
-                    || ((x - best_x).abs() <= 1e-12 && g.time_on(j, q) < g.time_on(j, best_q));
-                if better {
-                    best_x = x.max(best_x);
-                    best_q = q;
-                }
-            }
-            best_q
+            let max_x = (0..vars.n_types)
+                .map(|q| z[vars.x(j, q)])
+                .fold(f64::NEG_INFINITY, f64::max);
+            (0..vars.n_types)
+                .filter(|&q| z[vars.x(j, q)] >= max_x - 1e-12)
+                .min_by(|&a, &b| {
+                    g.time_on(j, a).total_cmp(&g.time_on(j, b)).then(a.cmp(&b))
+                })
+                .expect("at least the argmax type is within its own band")
         })
         .collect()
 }
@@ -99,6 +105,42 @@ mod tests {
         let z = vec![0.2, 0.8, 0.5, 0.5, 0.0, 0.0, 0.0];
         let alloc = round_qhlp(&z, &vars, &g);
         assert_eq!(alloc, vec![1, 0]);
+    }
+
+    #[test]
+    fn qhlp_round_three_way_near_tie_is_order_independent() {
+        // Three types whose fractional values straddle the 1e-12 band:
+        // x = [0.5 - 1.8e-12, 0.5 - 9e-13, 0.5].  The argmax is type 2;
+        // its band contains type 1 (9e-13 below) but NOT type 0
+        // (1.8e-12 below).  The fastest in-band type is 1.  The old
+        // running-anchor fold picked type 2: type 0 (out of the true
+        // band, but the fastest overall) anchored the scan, type 1
+        // could not beat that anchor on time, and type 2 then beat the
+        // stale anchor "strictly" — an order-dependent outcome.
+        let mut b = Builder::new("band");
+        b.add_task("t", vec![1.0, 5.0, 9.0]);
+        let g = b.build();
+        let vars = QhlpVars {
+            n_tasks: 1,
+            n_types: 3,
+            lambda: 4,
+        };
+        let z = vec![0.5 - 1.8e-12, 0.5 - 9e-13, 0.5, 0.0, 0.0];
+        assert_eq!(round_qhlp(&z, &vars, &g), vec![1]);
+    }
+
+    #[test]
+    fn qhlp_round_all_three_in_band_picks_fastest() {
+        let mut b = Builder::new("band3");
+        b.add_task("t", vec![3.0, 1.0, 2.0]);
+        let g = b.build();
+        let vars = QhlpVars {
+            n_tasks: 1,
+            n_types: 3,
+            lambda: 4,
+        };
+        let z = vec![0.5, 0.5 - 4e-13, 0.5 + 4e-13, 0.0, 0.0];
+        assert_eq!(round_qhlp(&z, &vars, &g), vec![1]);
     }
 
     #[test]

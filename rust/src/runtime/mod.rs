@@ -9,6 +9,15 @@
 //! 250-iteration chunks until the duality-gap certificate closes.
 
 pub mod manifest;
+
+// The real PJRT client needs the vendored `xla` tree (not shipped in the
+// offline build); without the `pjrt` feature a stub with the same API
+// surface always fails to load, so `with_runtime` returns `None` and
+// `LpBackendKind::Auto` falls back to the Rust PDHG mirror.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 use crate::lp::pdhg::{self, DriveOpts};

@@ -1,0 +1,33 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off (the
+//! default for the offline build, where the `xla` runtime crate is not
+//! vendored).  Mirrors the API surface of the real
+//! [`pjrt`](crate::runtime) module: `load` always fails, so
+//! [`with_runtime`](crate::runtime::with_runtime) reports the artifacts
+//! as absent and `LpBackendKind::Auto` silently falls back to the
+//! in-tree Rust PDHG backend.
+
+use std::path::Path;
+
+use crate::lp::pdhg::DriveOpts;
+use crate::lp::{LpSolution, SparseLp};
+
+/// Placeholder for the loaded-artifact runtime of the real backend.
+pub struct PjrtRuntime {
+    /// cumulative PDHG iterations executed through PJRT (always 0 here)
+    pub total_iters: usize,
+    /// cumulative chunk calls (always 0 here)
+    pub total_chunks: usize,
+}
+
+impl PjrtRuntime {
+    pub fn load(_dir: &Path) -> Result<PjrtRuntime, String> {
+        Err("hetsched was built without the `pjrt` feature (the `xla` \
+             runtime crate is not vendored in this build); use the \
+             rust/simplex LP backends"
+            .to_string())
+    }
+
+    pub fn solve(&mut self, _lp: &SparseLp, _opts: &DriveOpts) -> Result<LpSolution, String> {
+        Err("PJRT backend unavailable: built without the `pjrt` feature".to_string())
+    }
+}

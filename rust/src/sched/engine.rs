@@ -1,0 +1,409 @@
+//! Shared event-driven scheduling engine: the data structures every
+//! scheduler in this crate selects over, with logarithmic updates where
+//! the seed implementations re-scanned linearly.
+//!
+//! * [`UnitTree`] — an indexed min segment tree over the units of one
+//!   processor type, keyed by free time.  Supports the exact queries the
+//!   schedulers need in O(log c): earliest idle time, the `min_by`
+//!   tie-break ("first index achieving the minimum"), and threshold
+//!   queries ("first/last unit idle by time t") that reproduce the EFT
+//!   ready-clamp tie-break bit-for-bit.
+//! * [`UnitPool`] — one `UnitTree` per processor type.
+//! * [`EstReady`] — per-type ready queues for the EST policy: tasks whose
+//!   ready time is at or below the type's idle horizon collapse into one
+//!   id-ordered bucket (their starting times are all the horizon), while
+//!   later-ready tasks wait in a (ready_time, id) heap and are promoted
+//!   as the horizon advances.  Selection over the whole ready set is
+//!   O(Q log n) per step instead of O(|ready| · units).
+//! * [`EventQueue`] — completion-event min-heap for list scheduling.
+//! * [`Timeline`] — one unit's busy intervals for insertion-based
+//!   policies (HEFT backfilling).
+//!
+//! Tie-break contract: the engine reproduces the seed semantics exactly
+//! for exact floating-point ties (the only ties that arise from the
+//! deterministic generators): `Iterator::min_by` resolves equal keys
+//! towards the *first* index, EST ties resolve towards the smaller task
+//! id, and the EFT ready-clamp resolves towards the smallest unit
+//! index.  The
+//! golden-parity suite (`rust/tests/golden_parity.rs`) pins this against
+//! the retained reference implementations in [`super::reference`].
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::TaskId;
+
+use super::OrdF64;
+
+/// Indexed min segment tree over one processor type's units, keyed by
+/// the time each unit becomes free.  All queries take finite thresholds.
+#[derive(Clone, Debug)]
+pub struct UnitTree {
+    len: usize,
+    size: usize,
+    /// 1-based heap layout; leaves at `size..size + len`, padding +inf.
+    tree: Vec<f64>,
+}
+
+impl UnitTree {
+    pub fn new(len: usize) -> UnitTree {
+        assert!(len > 0, "a processor type needs at least one unit");
+        let size = len.next_power_of_two();
+        let mut tree = vec![f64::INFINITY; 2 * size];
+        for leaf in tree.iter_mut().skip(size).take(len) {
+            *leaf = 0.0;
+        }
+        for i in (1..size).rev() {
+            tree[i] = tree[2 * i].min(tree[2 * i + 1]);
+        }
+        UnitTree { len, size, tree }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Earliest time any unit is free (the type's idle horizon τ_q).
+    pub fn min(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Free time of one unit.
+    pub fn get(&self, unit: usize) -> f64 {
+        debug_assert!(unit < self.len);
+        self.tree[self.size + unit]
+    }
+
+    /// Update one unit's free time.
+    pub fn set(&mut self, unit: usize, free: f64) {
+        debug_assert!(unit < self.len);
+        let mut i = self.size + unit;
+        self.tree[i] = free;
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = self.tree[2 * i].min(self.tree[2 * i + 1]);
+        }
+    }
+
+    /// Lowest unit index free by time `t`, if any.
+    pub fn first_at_most(&self, t: f64) -> Option<usize> {
+        if self.tree[1] > t {
+            return None;
+        }
+        let mut i = 1;
+        while i < self.size {
+            i = if self.tree[2 * i] <= t { 2 * i } else { 2 * i + 1 };
+        }
+        Some(i - self.size)
+    }
+
+    /// Highest unit index free by time `t`, if any.
+    pub fn last_at_most(&self, t: f64) -> Option<usize> {
+        if self.tree[1] > t {
+            return None;
+        }
+        let mut i = 1;
+        while i < self.size {
+            i = if self.tree[2 * i + 1] <= t { 2 * i + 1 } else { 2 * i };
+        }
+        Some(i - self.size)
+    }
+
+    /// First (lowest) unit index achieving the minimum free time — the
+    /// element `Iterator::min_by` returns on ties, which is what the
+    /// seed schedulers' linear scans picked.
+    pub fn argmin_first(&self) -> usize {
+        self.first_at_most(self.min()).expect("tree is non-empty")
+    }
+
+    /// Last (highest) unit index achieving the minimum free time (the
+    /// `max_by`-style tie-break; kept for policies that want to spread
+    /// load away from low-index units).
+    pub fn argmin_last(&self) -> usize {
+        self.last_at_most(self.min()).expect("tree is non-empty")
+    }
+}
+
+/// One [`UnitTree`] per processor type.
+#[derive(Clone, Debug)]
+pub struct UnitPool {
+    pub types: Vec<UnitTree>,
+}
+
+impl UnitPool {
+    pub fn new(counts: &[usize]) -> UnitPool {
+        UnitPool {
+            types: counts.iter().map(|&c| UnitTree::new(c)).collect(),
+        }
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.types.len()
+    }
+
+    /// τ_q: earliest time a unit of type `q` is idle.
+    pub fn earliest_idle(&self, q: usize) -> f64 {
+        self.types[q].min()
+    }
+}
+
+/// Per-type ready queues for the EST policy (see module docs).
+pub struct EstReady {
+    /// tasks with ready time ≤ the type's idle horizon: their starting
+    /// time is the horizon itself, so only the id orders them
+    arrived: Vec<BinaryHeap<Reverse<TaskId>>>,
+    /// tasks still waiting on a predecessor finish beyond the horizon,
+    /// ordered by (ready_time, id)
+    pending: Vec<BinaryHeap<Reverse<(OrdF64, TaskId)>>>,
+}
+
+impl EstReady {
+    pub fn new(n_types: usize) -> EstReady {
+        EstReady {
+            arrived: (0..n_types).map(|_| BinaryHeap::new()).collect(),
+            pending: (0..n_types).map(|_| BinaryHeap::new()).collect(),
+        }
+    }
+
+    /// Insert a task that just became ready; `tau` is the current idle
+    /// horizon of its allocated type `q`.
+    pub fn push(&mut self, q: usize, ready: f64, tau: f64, j: TaskId) {
+        if ready <= tau {
+            self.arrived[q].push(Reverse(j));
+        } else {
+            self.pending[q].push(Reverse((OrdF64(ready), j)));
+        }
+    }
+
+    /// Move tasks whose ready time the advancing horizon has passed into
+    /// the id-ordered bucket.  Call after every assignment on type `q`.
+    pub fn promote(&mut self, q: usize, tau: f64) {
+        while let Some(Reverse((OrdF64(r), j))) = self.pending[q].peek().copied() {
+            if r > tau {
+                break;
+            }
+            self.pending[q].pop();
+            self.arrived[q].push(Reverse(j));
+        }
+    }
+
+    /// Best (starting time, id) candidate on type `q` under horizon
+    /// `tau`, without removing it.  Arrived tasks all start at `tau`;
+    /// pending tasks start at their own ready time (> `tau`), so an
+    /// arrived task always dominates when present.
+    pub fn peek(&self, q: usize, tau: f64) -> Option<(f64, TaskId)> {
+        if let Some(Reverse(j)) = self.arrived[q].peek().copied() {
+            return Some((tau, j));
+        }
+        self.pending[q]
+            .peek()
+            .copied()
+            .map(|Reverse((OrdF64(r), j))| (r, j))
+    }
+
+    /// Remove the candidate [`Self::peek`] reported for type `q`.
+    pub fn pop(&mut self, q: usize) -> Option<TaskId> {
+        if let Some(Reverse(j)) = self.arrived[q].pop() {
+            return Some(j);
+        }
+        self.pending[q].pop().map(|Reverse((_, j))| j)
+    }
+}
+
+/// Completion-event min-heap: (finish time, task), earliest first, ties
+/// towards the smaller task id.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(OrdF64, TaskId)>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, finish: f64, j: TaskId) {
+        self.heap.push(Reverse((OrdF64(finish), j)));
+    }
+
+    pub fn peek(&self) -> Option<(f64, TaskId)> {
+        self.heap.peek().copied().map(|Reverse((OrdF64(t), j))| (t, j))
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, TaskId)> {
+        self.heap.pop().map(|Reverse((OrdF64(t), j))| (t, j))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// One unit's busy intervals, kept sorted by start time — the structure
+/// behind insertion-based (backfilling) policies such as HEFT.  Lookups
+/// are linear in the number of intervals on the unit; insertion-based
+/// EFT inherently inspects each candidate unit's gap structure, so HEFT
+/// stays O(n · units) while the non-backfilling schedulers ride the
+/// O(log) structures above.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    busy: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    /// Earliest start ≥ `ready` for a task of length `dur` (insertion).
+    pub fn earliest_start(&self, ready: f64, dur: f64) -> f64 {
+        let mut t = ready;
+        for &(s, f) in &self.busy {
+            if t + dur <= s + 1e-12 {
+                return t;
+            }
+            if f > t {
+                t = f;
+            }
+        }
+        t
+    }
+
+    pub fn insert(&mut self, start: f64, finish: f64) {
+        let pos = self.busy.partition_point(|&(s, _)| s < start);
+        self.busy.insert(pos, (start, finish));
+    }
+
+    pub fn n_intervals(&self) -> usize {
+        self.busy.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_tree_min_and_updates() {
+        let mut t = UnitTree::new(5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.min(), 0.0);
+        for u in 0..5 {
+            t.set(u, (u + 1) as f64);
+        }
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.get(3), 4.0);
+        t.set(3, 0.5);
+        assert_eq!(t.min(), 0.5);
+        assert_eq!(t.argmin_first(), 3);
+        assert_eq!(t.argmin_last(), 3);
+    }
+
+    #[test]
+    fn unit_tree_tie_breaks_match_min_by() {
+        // free times [2, 1, 1, 7]: Iterator::min_by returns the FIRST
+        // minimum (index 1) on ties
+        let mut t = UnitTree::new(4);
+        for (u, f) in [2.0, 1.0, 1.0, 7.0].iter().enumerate() {
+            t.set(u, *f);
+        }
+        assert_eq!(t.argmin_first(), 1);
+        assert_eq!(t.argmin_last(), 2);
+        let avail = [2.0, 1.0, 1.0, 7.0];
+        let by_scan = avail
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(u, _)| u)
+            .unwrap();
+        assert_eq!(t.argmin_first(), by_scan);
+    }
+
+    #[test]
+    fn unit_tree_threshold_queries() {
+        let mut t = UnitTree::new(3);
+        for (u, f) in [5.0, 3.0, 9.0].iter().enumerate() {
+            t.set(u, *f);
+        }
+        assert_eq!(t.first_at_most(4.0), Some(1));
+        assert_eq!(t.first_at_most(6.0), Some(0));
+        assert_eq!(t.last_at_most(6.0), Some(1));
+        assert_eq!(t.first_at_most(2.0), None);
+        assert_eq!(t.last_at_most(9.0), Some(2));
+    }
+
+    #[test]
+    fn unit_tree_non_power_of_two_padding_ignored() {
+        let mut t = UnitTree::new(3);
+        t.set(0, 10.0);
+        t.set(1, 10.0);
+        t.set(2, 10.0);
+        // padding leaves are +inf and must never win a threshold query
+        assert_eq!(t.min(), 10.0);
+        assert_eq!(t.last_at_most(10.0), Some(2));
+        assert_eq!(t.argmin_first(), 0);
+    }
+
+    #[test]
+    fn est_ready_promotes_on_horizon_advance() {
+        let mut r = EstReady::new(1);
+        r.push(0, 0.0, 0.0, 5); // arrived
+        r.push(0, 4.0, 0.0, 2); // pending (ready 4 > tau 0)
+        r.push(0, 9.0, 0.0, 1); // pending
+        assert_eq!(r.peek(0, 0.0), Some((0.0, 5)));
+        assert_eq!(r.pop(0), Some(5));
+        // horizon still 0: earliest candidate is the pending (4, 2)
+        assert_eq!(r.peek(0, 0.0), Some((4.0, 2)));
+        // horizon advances past 4: task 2 arrives, starts at the horizon
+        r.promote(0, 6.0);
+        assert_eq!(r.peek(0, 6.0), Some((6.0, 2)));
+        assert_eq!(r.pop(0), Some(2));
+        assert_eq!(r.peek(0, 6.0), Some((9.0, 1)));
+        assert_eq!(r.pop(0), Some(1));
+        assert_eq!(r.peek(0, 6.0), None);
+        assert_eq!(r.pop(0), None);
+    }
+
+    #[test]
+    fn est_ready_arrived_orders_by_id() {
+        let mut r = EstReady::new(1);
+        r.push(0, 0.0, 0.0, 9);
+        r.push(0, 0.0, 0.0, 3);
+        r.push(0, 0.0, 0.0, 7);
+        assert_eq!(r.pop(0), Some(3));
+        assert_eq!(r.pop(0), Some(7));
+        assert_eq!(r.pop(0), Some(9));
+    }
+
+    #[test]
+    fn event_queue_orders_by_finish_then_id() {
+        let mut e = EventQueue::new();
+        e.push(3.0, 1);
+        e.push(1.0, 2);
+        e.push(1.0, 0);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.pop(), Some((1.0, 0)));
+        assert_eq!(e.pop(), Some((1.0, 2)));
+        assert_eq!(e.peek(), Some((3.0, 1)));
+        assert_eq!(e.pop(), Some((3.0, 1)));
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn timeline_insertion_finds_gaps() {
+        let mut tl = Timeline::default();
+        tl.insert(0.0, 2.0);
+        tl.insert(5.0, 7.0);
+        // a 3-long task fits in [2,5)
+        assert_eq!(tl.earliest_start(0.0, 3.0), 2.0);
+        // a 4-long task must go after 7
+        assert_eq!(tl.earliest_start(0.0, 4.0), 7.0);
+        // respects ready time
+        assert_eq!(tl.earliest_start(2.5, 2.0), 2.5);
+        assert_eq!(tl.n_intervals(), 2);
+    }
+}

@@ -5,62 +5,82 @@
 //!
 //! "Ready" here means all predecessors are already *scheduled* (their
 //! completion times are known), matching the static EST construction.
+//!
+//! Engine-backed since the event-driven refactor: per-type unit trees
+//! ([`engine::UnitTree`]) give the idle horizon and the unit pick in
+//! O(log units), and the split arrived/pending ready queues
+//! ([`engine::EstReady`]) make the global earliest-start selection
+//! O(Q log n) per step — O((n + |E|) log n) per instance overall, versus
+//! the O(n · (|ready| + units)) rescan of the retained reference
+//! implementation ([`super::reference::est_schedule`]).  Both produce
+//! identical schedules (golden-parity suite).
 
 use crate::graph::{TaskGraph, TaskId};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
+use super::engine::{EstReady, UnitPool};
+
 /// Schedule with a fixed allocation under the EST policy.
 pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
     let n = g.n_tasks();
     assert_eq!(alloc.len(), n);
+    let n_types = plat.n_types();
+    debug_assert!(alloc.iter().all(|&q| q < n_types));
 
-    // per-type unit free times (linear scan: unit counts are small)
-    let mut unit_free: Vec<Vec<f64>> =
-        plat.counts.iter().map(|&c| vec![0.0f64; c]).collect();
+    let mut units = UnitPool::new(&plat.counts);
+    let mut ready = EstReady::new(n_types);
     let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
     let mut ready_time = vec![0.0f64; n];
-    let mut ready: Vec<TaskId> = (0..n).filter(|&j| remaining[j] == 0).collect();
     let mut placements: Vec<Option<Placement>> = vec![None; n];
 
+    for j in 0..n {
+        if remaining[j] == 0 {
+            ready.push(alloc[j], 0.0, units.earliest_idle(alloc[j]), j);
+        }
+    }
+
     for _ in 0..n {
-        // pick the ready task with the earliest possible start
-        let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, ready-slot)
-        for (slot, &j) in ready.iter().enumerate() {
-            let q = alloc[j];
-            let avail = unit_free[q].iter().copied().fold(f64::INFINITY, f64::min);
-            let est = ready_time[j].max(avail);
-            let better = match best {
-                None => true,
-                Some((b_est, b_j, _)) => est < b_est - 1e-12 || (est <= b_est + 1e-12 && j < b_j),
-            };
-            if better {
-                best = Some((est, j, slot));
+        // earliest (starting time, id) over the per-type candidates; the
+        // id tie-break is global, exactly as the reference scan's
+        let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, type)
+        for q in 0..n_types {
+            if let Some((est, j)) = ready.peek(q, units.earliest_idle(q)) {
+                let better = match best {
+                    None => true,
+                    Some((b_est, b_j, _)) => est < b_est || (est == b_est && j < b_j),
+                };
+                if better {
+                    best = Some((est, j, q));
+                }
             }
         }
-        let (est, j, slot) = best.expect("ready set empty with tasks remaining");
-        ready.swap_remove(slot);
-        let q = alloc[j];
-        // unit achieving the earliest start
-        let (unit, _) = unit_free[q]
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+        let (est, j, q) = best.expect("ready set empty with tasks remaining");
+        let popped = ready.pop(q);
+        debug_assert_eq!(popped, Some(j));
+        debug_assert_eq!(q, alloc[j]);
+
+        // unit achieving the earliest start (min free time, `min_by`
+        // first-index tie-break)
+        let unit = units.types[q].argmin_first();
         let start = est;
         let finish = start + g.time_on(j, q);
-        unit_free[q][unit] = finish;
+        units.types[q].set(unit, finish);
         placements[j] = Some(Placement {
             ptype: q,
             unit,
             start,
             finish,
         });
+        // the horizon of type q may have advanced: promote pending tasks
+        ready.promote(q, units.earliest_idle(q));
+
         for &s in &g.succs[j] {
             ready_time[s] = ready_time[s].max(finish);
             remaining[s] -= 1;
             if remaining[s] == 0 {
-                ready.push(s);
+                let qs = alloc[s];
+                ready.push(qs, ready_time[s], units.earliest_idle(qs), s);
             }
         }
     }
@@ -72,6 +92,7 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
 mod tests {
     use super::*;
     use crate::graph::{gen, Builder};
+    use crate::sched::reference;
     use crate::sim::validate;
     use crate::substrate::rng::Rng;
 
@@ -133,5 +154,21 @@ mod tests {
         let alloc = vec![0, 0, 1, 1, 2, 2];
         let s = est_schedule(&g, &plat, &alloc);
         validate(&g, &plat, &s).unwrap();
+    }
+
+    #[test]
+    fn est_engine_matches_reference_inline() {
+        // quick in-module parity check; the full 50+-instance sweep
+        // lives in rust/tests/golden_parity.rs
+        let mut rng = Rng::new(99);
+        for _ in 0..8 {
+            let g = gen::hybrid_dag(&mut rng, 60, 0.08);
+            let plat = Platform::hybrid(5, 3);
+            let alloc: Vec<usize> =
+                (0..60).map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j))).collect();
+            let a = est_schedule(&g, &plat, &alloc);
+            let b = reference::est_schedule(&g, &plat, &alloc);
+            assert_eq!(a.placements, b.placements);
+        }
     }
 }

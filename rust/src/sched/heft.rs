@@ -8,39 +8,18 @@
 //! insertion-based backfilling (a task may slot into an idle gap).
 //! Ties between a CPU and a GPU go to the GPU (the paper's Theorem 1
 //! convention); ties within a type go to the lowest unit index.
+//!
+//! Built on the shared [`engine::Timeline`].  Unlike the EST/OLS/online
+//! schedulers, insertion-based EFT must inspect every unit's gap
+//! structure per task (a min-heap over tail times cannot see gaps), so
+//! HEFT's selection remains O(n · units); the engine refactor shares the
+//! timeline plumbing rather than changing the asymptotics.
 
 use crate::graph::{paths, TaskGraph};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
-/// One unit's busy intervals, kept sorted by start time.
-#[derive(Clone, Debug, Default)]
-struct Timeline {
-    busy: Vec<(f64, f64)>,
-}
-
-impl Timeline {
-    /// Earliest start ≥ `ready` for a task of length `dur` (insertion).
-    fn earliest_start(&self, ready: f64, dur: f64) -> f64 {
-        let mut t = ready;
-        for &(s, f) in &self.busy {
-            if t + dur <= s + 1e-12 {
-                return t;
-            }
-            if f > t {
-                t = f;
-            }
-        }
-        t
-    }
-
-    fn insert(&mut self, start: f64, finish: f64) {
-        let pos = self
-            .busy
-            .partition_point(|&(s, _)| s < start);
-        self.busy.insert(pos, (start, finish));
-    }
-}
+use super::engine::Timeline;
 
 /// HEFT / QHEFT schedule.
 pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
@@ -48,12 +27,7 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
     let rank = paths::heft_rank(g, &plat.counts);
     let mut order: Vec<usize> = (0..n).collect();
     // non-increasing rank; ties by id for determinism
-    order.sort_by(|&a, &b| {
-        rank[b]
-            .partial_cmp(&rank[a])
-            .unwrap()
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| rank[b].total_cmp(&rank[a]).then(a.cmp(&b)));
 
     let mut timelines: Vec<Vec<Timeline>> = plat
         .counts
@@ -105,19 +79,6 @@ mod tests {
     use crate::graph::{gen, Builder};
     use crate::sim::validate;
     use crate::substrate::rng::Rng;
-
-    #[test]
-    fn timeline_insertion_finds_gaps() {
-        let mut tl = Timeline::default();
-        tl.insert(0.0, 2.0);
-        tl.insert(5.0, 7.0);
-        // a 3-long task fits in [2,5)
-        assert_eq!(tl.earliest_start(0.0, 3.0), 2.0);
-        // a 4-long task must go after 7
-        assert_eq!(tl.earliest_start(0.0, 4.0), 7.0);
-        // respects ready time
-        assert_eq!(tl.earliest_start(2.5, 2.0), 2.5);
-    }
 
     #[test]
     fn heft_prefers_faster_unit() {

@@ -4,8 +4,10 @@
 //! highest priority immediately.
 //!
 //! OLS = this scheduler with `priority = ols_rank` (the allocation-aware
-//! bottom-level rank of §4.1).  The engine is event-driven:
-//! O((n + |E|) log n) per instance.
+//! bottom-level rank of §4.1).  The engine is event-driven —
+//! O((n + |E|) log n) per instance — built on the shared
+//! [`engine::EventQueue`] completion heap, per-type ready max-heaps and
+//! LIFO idle-unit pools.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -14,6 +16,7 @@ use crate::graph::{TaskGraph, TaskId};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
+use super::engine::EventQueue;
 use super::OrdF64;
 
 /// Schedule with a fixed allocation and per-task priority (higher first).
@@ -32,10 +35,10 @@ pub fn list_schedule(
     // ready queues per type: (priority, Reverse(id)) max-heap
     let mut ready: Vec<BinaryHeap<(OrdF64, Reverse<TaskId>)>> =
         (0..q_types).map(|_| BinaryHeap::new()).collect();
-    // idle unit pools per type
+    // idle unit pools per type (LIFO)
     let mut idle: Vec<Vec<usize>> = plat.counts.iter().map(|&c| (0..c).collect()).collect();
-    // completion events: Reverse((finish, task))
-    let mut events: BinaryHeap<Reverse<(OrdF64, TaskId)>> = BinaryHeap::new();
+    // completion events, earliest first
+    let mut events = EventQueue::new();
 
     let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
     let mut placements: Vec<Option<Placement>> = vec![None; n];
@@ -61,7 +64,7 @@ pub fn list_schedule(
                     start: t,
                     finish,
                 });
-                events.push(Reverse((OrdF64(finish), j)));
+                events.push(finish, j);
                 scheduled += 1;
             }
         }
@@ -69,13 +72,13 @@ pub fn list_schedule(
             break;
         }
         // advance to the next completion(s)
-        let Some(Reverse((OrdF64(t_next), _))) = events.peek().copied() else {
+        let Some((t_next, _)) = events.peek() else {
             // no events but unscheduled tasks left => deadlock (cycle)
             assert_eq!(scheduled, n, "list scheduler stalled");
             break;
         };
         t = t_next;
-        while let Some(Reverse((OrdF64(tf), j))) = events.peek().copied() {
+        while let Some((tf, j)) = events.peek() {
             if tf > t {
                 break;
             }

@@ -1,17 +1,45 @@
 //! The scheduling phase: given (or while deciding) an allocation, place
 //! tasks on units over time.
 //!
+//! * [`engine`] — the shared event-driven core: per-type unit trees,
+//!   split ready queues, completion-event heaps, and insertion
+//!   timelines.  Every scheduler below selects through it.
 //! * [`list`] — allocation-respecting List Scheduling (Graham) with an
 //!   arbitrary priority; OLS (§4.1) is this with the HLP-rank priority.
 //! * [`est`] — the Earliest Starting Time policy of HLP-EST (§3).
 //! * [`heft`] — HEFT with insertion-based backfilling (§3), Q-type ready.
 //! * [`online`] — the online engine (§4.2): ER-LS, EFT, Greedy, Random
 //!   and the R1/R2/R3 rules, with irrevocable decisions.
+//! * [`reference`] — the pre-engine (seed) implementations, kept as the
+//!   golden-parity oracle and the perf baseline.
+//!
+//! # Complexity
+//!
+//! With n tasks, E precedence arcs, Q processor types and c units per
+//! type (c = max_q m_q):
+//!
+//! | scheduler         | engine-backed            | reference (seed)     |
+//! |-------------------|--------------------------|----------------------|
+//! | `est_schedule`    | O((n + E) log n)         | O(n · (ready + c))   |
+//! | `list_schedule`   | O((n + E) log n)         | O((n + E) log n)     |
+//! | `online_schedule` | O((n + E) + n·Q·log c)   | O((n + E) + n·Q·c)   |
+//! | `heft_schedule`   | O(n · Q · c · gaps)      | same (see below)     |
+//!
+//! HEFT's insertion-based EFT must inspect each unit's gap structure per
+//! task, which no aggregate (heap/tree) over units can summarize, so its
+//! selection stays linear in the unit count; the engine contributes the
+//! shared [`engine::Timeline`] rather than a complexity change.
+//!
+//! Tie-breaks are preserved exactly for exact floating-point ties (see
+//! `engine` docs); `rust/tests/golden_parity.rs` pins engine-vs-reference
+//! schedule equality across random instances.
 
+pub mod engine;
 pub mod est;
 pub mod heft;
 pub mod list;
 pub mod online;
+pub mod reference;
 
 /// Total order wrapper for f64 priorities (NaN-free by construction).
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -10,12 +10,22 @@
 //! * **Greedy** — fastest type, then earliest start on it (baseline).
 //! * **Random** — uniform type, earliest start (baseline).
 //! * **R1/R2/R3** — the simple rules, then earliest start on the side.
+//!
+//! Engine-backed since the event-driven refactor: machine state lives in
+//! per-type unit trees ([`engine::UnitTree`]), so every decision —
+//! earliest idle time, best unit, and the full EFT scan — is
+//! O(Q log units) instead of the O(units) linear rescans of the retained
+//! reference implementation ([`super::reference::online_schedule`]).
+//! Decisions (and therefore schedules) are identical; the golden-parity
+//! suite pins this.
 
 use crate::alloc;
 use crate::graph::{TaskGraph, TaskId};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 use crate::substrate::rng::Rng;
+
+use super::engine::UnitPool;
 
 #[derive(Clone, Debug)]
 pub enum OnlinePolicy {
@@ -42,24 +52,37 @@ impl OnlinePolicy {
     }
 }
 
-/// Mutable machine state visible to online policies.
+/// Mutable machine state visible to online policies: one unit tree per
+/// type, keyed by the time each unit becomes idle.
 struct State {
-    /// `avail[q][u]` = time unit u of type q becomes idle
-    avail: Vec<Vec<f64>>,
+    avail: UnitPool,
 }
 
 impl State {
     fn earliest_idle(&self, q: usize) -> f64 {
-        self.avail[q].iter().copied().fold(f64::INFINITY, f64::min)
+        self.avail.types[q].min()
     }
 
+    /// The unit the seed's `min_by` scan picked: lowest index among the
+    /// earliest-idle units.
     fn best_unit(&self, q: usize) -> usize {
-        self.avail[q]
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(u, _)| u)
-            .unwrap()
+        self.avail.types[q].argmin_first()
+    }
+
+    /// EFT candidate on type `q` for a task ready at `ready` with
+    /// duration `dur`: (finish, unit).  When some unit is already idle
+    /// by `ready`, every such unit finishes at `ready + dur` and the
+    /// seed scan kept the first one; otherwise the earliest-idle unit
+    /// (again first index on ties) is the unique minimizer.
+    fn eft_candidate(&self, q: usize, ready: f64, dur: f64) -> (f64, usize) {
+        let tree = &self.avail.types[q];
+        let tau = tree.min();
+        if tau <= ready {
+            let u = tree.first_at_most(ready).expect("tau <= ready");
+            (ready + dur, u)
+        } else {
+            (tau + dur, tree.argmin_first())
+        }
     }
 }
 
@@ -82,7 +105,7 @@ pub fn online_schedule(
     }
 
     let mut st = State {
-        avail: plat.counts.iter().map(|&c| vec![0.0f64; c]).collect(),
+        avail: UnitPool::new(&plat.counts),
     };
     let mut rng = match policy {
         OnlinePolicy::Random(seed) => Some(Rng::new(*seed)),
@@ -130,7 +153,7 @@ pub fn online_schedule(
             }
             OnlinePolicy::Greedy => {
                 let q = (0..plat.n_types())
-                    .min_by(|&a, &b| g.time_on(j, a).partial_cmp(&g.time_on(j, b)).unwrap())
+                    .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
                     .unwrap();
                 (q, st.best_unit(q))
             }
@@ -140,30 +163,29 @@ pub fn online_schedule(
             }
             OnlinePolicy::Eft => {
                 // minimize finish across every unit; tie -> GPU-most type
-                let mut best: Option<(f64, usize, usize)> = None;
-                for q in 0..plat.n_types() {
+                let dur0 = g.time_on(j, 0);
+                let mut best = {
+                    let (finish, u) = st.eft_candidate(0, ready, dur0);
+                    (finish, 0usize, u)
+                };
+                for q in 1..plat.n_types() {
                     let dur = g.time_on(j, q);
-                    for (u, &a) in st.avail[q].iter().enumerate() {
-                        let finish = ready.max(a) + dur;
-                        let better = match best {
-                            None => true,
-                            Some((bf, bq, _)) => {
-                                finish < bf - 1e-12 || (finish <= bf + 1e-12 && q > bq)
-                            }
-                        };
-                        if better {
-                            best = Some((finish, q, u));
-                        }
+                    let (finish, u) = st.eft_candidate(q, ready, dur);
+                    // better, or tied within the band: the later
+                    // (higher) type wins ties, matching the reference
+                    // scan's `q > bq` rule
+                    if finish <= best.0 + 1e-12 {
+                        best = (finish, q, u);
                     }
                 }
-                let (_, q, u) = best.unwrap();
+                let (_, q, u) = best;
                 (q, u)
             }
         };
 
-        let start = ready.max(st.avail[q][unit]);
+        let start = ready.max(st.avail.types[q].get(unit));
         let finish = start + g.time_on(j, q);
-        st.avail[q][unit] = finish;
+        st.avail.types[q].set(unit, finish);
         placements[j] = Some(Placement {
             ptype: q,
             unit,
@@ -207,25 +229,30 @@ pub fn random_topo_order(g: &TaskGraph, rng: &mut Rng) -> Vec<TaskId> {
 mod tests {
     use super::*;
     use crate::graph::{gen, Builder};
+    use crate::sched::reference;
     use crate::sim::validate;
 
     fn plat() -> Platform {
         Platform::hybrid(4, 2)
     }
 
+    fn all_policies(seed: u64) -> Vec<OnlinePolicy> {
+        vec![
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(seed),
+            OnlinePolicy::R1,
+            OnlinePolicy::R2,
+            OnlinePolicy::R3,
+        ]
+    }
+
     #[test]
     fn all_policies_produce_valid_schedules() {
         let mut rng = Rng::new(11);
         let g = gen::hybrid_dag(&mut rng, 60, 0.08);
-        for policy in [
-            OnlinePolicy::ErLs,
-            OnlinePolicy::Eft,
-            OnlinePolicy::Greedy,
-            OnlinePolicy::Random(3),
-            OnlinePolicy::R1,
-            OnlinePolicy::R2,
-            OnlinePolicy::R3,
-        ] {
+        for policy in all_policies(3) {
             let s = online_by_id(&g, &plat(), &policy);
             validate(&g, &plat(), &s).unwrap();
         }
@@ -322,6 +349,22 @@ mod tests {
             // engine accepts it
             let s = online_schedule(&g, &plat(), &order, &OnlinePolicy::ErLs);
             validate(&g, &plat(), &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn online_engine_matches_reference_inline() {
+        // quick in-module parity check; the full 50+-instance sweep
+        // lives in rust/tests/golden_parity.rs
+        let mut rng = Rng::new(77);
+        for case in 0..6 {
+            let g = gen::hybrid_dag(&mut rng, 50, 0.1);
+            let order = random_topo_order(&g, &mut rng);
+            for policy in all_policies(case) {
+                let a = online_schedule(&g, &plat(), &order, &policy);
+                let b = reference::online_schedule(&g, &plat(), &order, &policy);
+                assert_eq!(a.placements, b.placements, "{}", policy.name());
+            }
         }
     }
 }

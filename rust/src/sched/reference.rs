@@ -1,0 +1,303 @@
+//! Reference schedulers: the pre-engine implementations, retained
+//! verbatim (quadratic selection loops and all) as the oracle for the
+//! golden-parity suite (`rust/tests/golden_parity.rs`) and as the
+//! baseline the perf bench (`benches/perf_hot_paths.rs`) measures the
+//! engine speedup against.
+//!
+//! Do NOT "optimize" these: their value is being the old behavior.  The
+//! only change from the seed code is `f64::total_cmp` in place of the
+//! panic-prone `partial_cmp(..).unwrap()` chains (identical ordering on
+//! the finite, NaN-free values the graph builder now enforces).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::alloc;
+use crate::graph::{TaskGraph, TaskId};
+use crate::platform::Platform;
+use crate::sim::{Placement, Schedule};
+use crate::substrate::rng::Rng;
+
+use super::online::OnlinePolicy;
+use super::OrdF64;
+
+/// Seed EST: O(n · (|ready| + units)) selection per instance.
+pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
+    let n = g.n_tasks();
+    assert_eq!(alloc.len(), n);
+
+    // per-type unit free times (linear scan: unit counts are small)
+    let mut unit_free: Vec<Vec<f64>> =
+        plat.counts.iter().map(|&c| vec![0.0f64; c]).collect();
+    let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
+    let mut ready_time = vec![0.0f64; n];
+    let mut ready: Vec<TaskId> = (0..n).filter(|&j| remaining[j] == 0).collect();
+    let mut placements: Vec<Option<Placement>> = vec![None; n];
+
+    for _ in 0..n {
+        // pick the ready task with the earliest possible start
+        let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, ready-slot)
+        for (slot, &j) in ready.iter().enumerate() {
+            let q = alloc[j];
+            let avail = unit_free[q].iter().copied().fold(f64::INFINITY, f64::min);
+            let est = ready_time[j].max(avail);
+            let better = match best {
+                None => true,
+                Some((b_est, b_j, _)) => est < b_est - 1e-12 || (est <= b_est + 1e-12 && j < b_j),
+            };
+            if better {
+                best = Some((est, j, slot));
+            }
+        }
+        let (est, j, slot) = best.expect("ready set empty with tasks remaining");
+        ready.swap_remove(slot);
+        let q = alloc[j];
+        // unit achieving the earliest start
+        let (unit, _) = unit_free[q]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap();
+        let start = est;
+        let finish = start + g.time_on(j, q);
+        unit_free[q][unit] = finish;
+        placements[j] = Some(Placement {
+            ptype: q,
+            unit,
+            start,
+            finish,
+        });
+        for &s in &g.succs[j] {
+            ready_time[s] = ready_time[s].max(finish);
+            remaining[s] -= 1;
+            if remaining[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+
+    Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
+}
+
+/// Seed list scheduler (identical algorithm to `sched::list`, retained
+/// so the parity suite compares two independently-maintained bodies).
+pub fn list_schedule(
+    g: &TaskGraph,
+    plat: &Platform,
+    alloc: &[usize],
+    priority: &[f64],
+) -> Schedule {
+    let n = g.n_tasks();
+    assert_eq!(alloc.len(), n);
+    assert_eq!(priority.len(), n);
+    let q_types = plat.n_types();
+    debug_assert!(alloc.iter().all(|&q| q < q_types));
+
+    // ready queues per type: (priority, Reverse(id)) max-heap
+    let mut ready: Vec<BinaryHeap<(OrdF64, Reverse<TaskId>)>> =
+        (0..q_types).map(|_| BinaryHeap::new()).collect();
+    // idle unit pools per type
+    let mut idle: Vec<Vec<usize>> = plat.counts.iter().map(|&c| (0..c).collect()).collect();
+    // completion events: Reverse((finish, task))
+    let mut events: BinaryHeap<Reverse<(OrdF64, TaskId)>> = BinaryHeap::new();
+
+    let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
+    let mut placements: Vec<Option<Placement>> = vec![None; n];
+    for j in 0..n {
+        if remaining[j] == 0 {
+            ready[alloc[j]].push((OrdF64(priority[j]), Reverse(j)));
+        }
+    }
+
+    let mut t = 0.0f64;
+    let mut scheduled = 0usize;
+    loop {
+        // start everything startable at time t
+        for q in 0..q_types {
+            while !idle[q].is_empty() && !ready[q].is_empty() {
+                let (_, Reverse(j)) = ready[q].pop().unwrap();
+                let unit = idle[q].pop().unwrap();
+                let dur = g.time_on(j, q);
+                let finish = t + dur;
+                placements[j] = Some(Placement {
+                    ptype: q,
+                    unit,
+                    start: t,
+                    finish,
+                });
+                events.push(Reverse((OrdF64(finish), j)));
+                scheduled += 1;
+            }
+        }
+        if scheduled == n && events.is_empty() {
+            break;
+        }
+        // advance to the next completion(s)
+        let Some(Reverse((OrdF64(t_next), _))) = events.peek().copied() else {
+            // no events but unscheduled tasks left => deadlock (cycle)
+            assert_eq!(scheduled, n, "list scheduler stalled");
+            break;
+        };
+        t = t_next;
+        while let Some(Reverse((OrdF64(tf), j))) = events.peek().copied() {
+            if tf > t {
+                break;
+            }
+            events.pop();
+            let p = placements[j].unwrap();
+            idle[p.ptype].push(p.unit);
+            for &s in &g.succs[j] {
+                remaining[s] -= 1;
+                if remaining[s] == 0 {
+                    ready[alloc[s]].push((OrdF64(priority[s]), Reverse(s)));
+                }
+            }
+        }
+    }
+
+    Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
+}
+
+/// Seed OLS: seed list scheduling with the HLP-rank priority.
+pub fn ols_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
+    let rank = crate::graph::paths::ols_rank(g, alloc);
+    list_schedule(g, plat, alloc, &rank)
+}
+
+/// Machine state of the seed online engine: flat per-unit availability
+/// vectors with O(units) scans per decision.
+struct State {
+    avail: Vec<Vec<f64>>,
+}
+
+impl State {
+    fn earliest_idle(&self, q: usize) -> f64 {
+        self.avail[q].iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    fn best_unit(&self, q: usize) -> usize {
+        self.avail[q]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(u, _)| u)
+            .unwrap()
+    }
+}
+
+/// Seed online engine: O(units) linear scans per arrival.
+pub fn online_schedule(
+    g: &TaskGraph,
+    plat: &Platform,
+    order: &[TaskId],
+    policy: &OnlinePolicy,
+) -> Schedule {
+    let n = g.n_tasks();
+    assert_eq!(order.len(), n, "arrival order must cover all tasks");
+    let two_types = plat.n_types() == 2;
+    if matches!(
+        policy,
+        OnlinePolicy::ErLs | OnlinePolicy::R1 | OnlinePolicy::R2 | OnlinePolicy::R3
+    ) {
+        assert!(two_types, "{} is defined for hybrid platforms", policy.name());
+    }
+
+    let mut st = State {
+        avail: plat.counts.iter().map(|&c| vec![0.0f64; c]).collect(),
+    };
+    let mut rng = match policy {
+        OnlinePolicy::Random(seed) => Some(Rng::new(*seed)),
+        _ => None,
+    };
+    let mut placements: Vec<Option<Placement>> = vec![None; n];
+    let mut seen = vec![false; n];
+
+    for &j in order {
+        // arrival must respect precedences
+        let ready = g.preds[j]
+            .iter()
+            .map(|&p| {
+                placements[p]
+                    .unwrap_or_else(|| panic!("order not topological: {p} after {j}"))
+                    .finish
+            })
+            .fold(0.0f64, f64::max);
+        debug_assert!(!seen[j]);
+        seen[j] = true;
+
+        // choose (type, unit)
+        let (q, unit) = match policy {
+            OnlinePolicy::ErLs => {
+                let tau_gpu = st.earliest_idle(1);
+                let r_gpu = tau_gpu.max(ready);
+                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                    1 // Step 1: GPU side
+                } else {
+                    alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
+                };
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::R1 => {
+                let q = alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::R2 => {
+                let q = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::R3 => {
+                let q = alloc::r3_side(g.p_cpu(j), g.p_gpu(j));
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::Greedy => {
+                let q = (0..plat.n_types())
+                    .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
+                    .unwrap();
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::Random(_) => {
+                let q = rng.as_mut().unwrap().below(plat.n_types());
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::Eft => {
+                // minimize finish across every unit; tie -> GPU-most type
+                let mut best: Option<(f64, usize, usize)> = None;
+                for q in 0..plat.n_types() {
+                    let dur = g.time_on(j, q);
+                    for (u, &a) in st.avail[q].iter().enumerate() {
+                        let finish = ready.max(a) + dur;
+                        let better = match best {
+                            None => true,
+                            Some((bf, bq, _)) => {
+                                finish < bf - 1e-12 || (finish <= bf + 1e-12 && q > bq)
+                            }
+                        };
+                        if better {
+                            best = Some((finish, q, u));
+                        }
+                    }
+                }
+                let (_, q, u) = best.unwrap();
+                (q, u)
+            }
+        };
+
+        let start = ready.max(st.avail[q][unit]);
+        let finish = start + g.time_on(j, q);
+        st.avail[q][unit] = finish;
+        placements[j] = Some(Placement {
+            ptype: q,
+            unit,
+            start,
+            finish,
+        });
+    }
+
+    Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
+}
+
+/// Seed convenience wrapper: arrival order = task-id order.
+pub fn online_by_id(g: &TaskGraph, plat: &Platform, policy: &OnlinePolicy) -> Schedule {
+    let order: Vec<TaskId> = (0..g.n_tasks()).collect();
+    online_schedule(g, plat, &order, policy)
+}

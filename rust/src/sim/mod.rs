@@ -74,7 +74,7 @@ impl Schedule {
         for (q, &cnt) in plat.counts.iter().enumerate() {
             for u in 0..cnt {
                 let tasks = &mut per_unit[row];
-                tasks.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+                tasks.sort_by(|a, b| a.1.start.total_cmp(&b.1.start));
                 out.push_str(&format!("{}[{}]:", plat.names[q], u));
                 for (j, p) in tasks.iter() {
                     out.push_str(&format!(
@@ -143,7 +143,7 @@ pub fn validate(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), Stri
             .push((p.start, p.finish, j));
     }
     for ((q, u), mut iv) in per_unit {
-        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        iv.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in iv.windows(2) {
             if w[1].0 < w[0].1 - 1e-6 {
                 return Err(format!(
@@ -195,7 +195,7 @@ pub fn validate_realized(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result
             .push((p.start, p.finish));
     }
     for ((q, u), mut iv) in per_unit {
-        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        iv.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in iv.windows(2) {
             if w[1].0 < w[0].1 - 1e-6 {
                 return Err(format!("overlap on unit {q}/{u}"));
