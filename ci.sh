@@ -29,6 +29,18 @@ if [[ "${1:-}" == "--perf" ]]; then
     echo "== perf gate: engine >= 5x seed EST (writes BENCH_sched.json) =="
     HETSCHED_BENCH_QUICK=1 cargo bench --bench perf_hot_paths
     cat BENCH_sched.json
+
+    echo "== perf gate: service-mode throughput (writes BENCH_service.json) =="
+    cargo bench --bench service_throughput
+    if [[ ! -s BENCH_service.json ]]; then
+        echo "BENCH_service.json missing or empty" >&2
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        python3 -m json.tool BENCH_service.json >/dev/null \
+            || { echo "BENCH_service.json is not valid JSON" >&2; exit 1; }
+    fi
+    cat BENCH_service.json
 fi
 
 echo "CI OK"

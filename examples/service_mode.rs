@@ -1,0 +1,96 @@
+//! Multi-tenant streaming service demo: 50 applications of 1000 tasks
+//! each arrive over virtual time into one shared 32-CPU + 8-GPU pool and
+//! flow through the irrevocable online policies (ER-LS / EFT / Greedy),
+//! exactly the shared-cluster regime the paper's on-line model (§4.2)
+//! targets for deployment (§7).
+//!
+//!     cargo run --release --example service_mode
+
+use std::time::Instant;
+
+use hetsched::graph::gen;
+use hetsched::platform::Platform;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sched::service::{run_service, Submission};
+use hetsched::sim::validate_service;
+use hetsched::substrate::rng::Rng;
+
+fn main() {
+    let plat = Platform::hybrid(32, 8);
+    let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
+    let mut rng = Rng::new(2027);
+
+    // 50 tenants × 1000 tasks, arrivals staggered so the pool stays
+    // contended but the queue keeps draining
+    let subs: Vec<Submission> = (0..50)
+        .map(|t| {
+            let g = gen::hybrid_dag(&mut rng, 1000, 0.004);
+            let arrival = t as f64 * 40.0;
+            Submission::new(g, arrival, policies[t % policies.len()].clone())
+        })
+        .collect();
+    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+    println!(
+        "service: {} tenants, {} tasks total, pool {} ({} units)",
+        subs.len(),
+        total_tasks,
+        plat.label(),
+        plat.n_units()
+    );
+
+    let t0 = Instant::now();
+    let report = run_service(&plat, &subs);
+    let wall = t0.elapsed();
+    assert_eq!(report.total_tasks, 50 * 1000);
+    assert_eq!(report.decisions.len(), 50 * 1000);
+
+    // pool-wide feasibility: per-tenant precedences + no cross-tenant
+    // overlap on any unit
+    validate_service(&plat, &report.tenant_runs(&subs)).expect("service schedule feasible");
+
+    // golden parity: a lone tenant places exactly like sched::online
+    let lone = vec![Submission::new(
+        subs[0].graph.clone(),
+        0.0,
+        subs[0].policy.clone(),
+    )];
+    let lone_report = run_service(&plat, &lone);
+    let expect = online_by_id(&subs[0].graph, &plat, &subs[0].policy);
+    assert_eq!(
+        lone_report.tenants[0].schedule.placements, expect.placements,
+        "single-tenant service must match the online engine"
+    );
+
+    println!(
+        "scheduled {} decisions in {:?} ({:.0} decisions/s)\n",
+        report.decisions.len(),
+        wall,
+        report.decisions.len() as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "{:>6} {:>8} {:>9} {:>10} {:>10} {:>9} {:>8} {:>12}",
+        "tenant", "policy", "arrival", "complete", "flow", "ideal", "stretch", "p95 dec (us)"
+    );
+    for (t, s) in report.tenants.iter().zip(&subs).take(10) {
+        println!(
+            "{:>6} {:>8} {:>9.1} {:>10.1} {:>10.1} {:>9.1} {:>8.2} {:>12.1}",
+            t.tenant,
+            s.policy.name(),
+            t.arrival,
+            t.completion,
+            t.flow_time,
+            t.ideal_makespan,
+            t.stretch,
+            t.decision_latency.p95 * 1e6
+        );
+    }
+    println!("   ... ({} more tenants)\n", report.tenants.len() - 10);
+    println!(
+        "horizon {:.1} | mean stretch {:.2} | max stretch {:.2} | utilization CPU {:.0}% GPU {:.0}%",
+        report.horizon,
+        report.mean_stretch,
+        report.max_stretch,
+        report.utilization[0] * 100.0,
+        report.utilization[1] * 100.0
+    );
+}

@@ -1,0 +1,86 @@
+//! Bench: multi-tenant service-mode throughput gate.
+//!
+//! Schedules 50 DAGs × 1000 tasks on a 32-CPU + 8-GPU shared pool
+//! through the streaming service engine, reports decision throughput and
+//! stretch statistics, and writes BENCH_service.json so the service-mode
+//! perf trajectory is tracked PR over PR (the optional `ci.sh --perf`
+//! gate checks the file exists and parses).
+
+use std::time::Duration;
+
+use hetsched::graph::gen;
+use hetsched::platform::Platform;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sched::service::{run_service, run_service_with_ideals, Submission};
+use hetsched::sim::validate_service;
+use hetsched::substrate::bench::{bench_with, black_box, BenchOpts};
+use hetsched::substrate::json::Json;
+use hetsched::substrate::rng::Rng;
+
+fn main() {
+    let plat = Platform::hybrid(32, 8);
+    let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
+    let mut rng = Rng::new(2027);
+    let subs: Vec<Submission> = (0..50)
+        .map(|t| {
+            let g = gen::hybrid_dag(&mut rng, 1000, 0.004);
+            Submission::new(g, t as f64 * 40.0, policies[t % policies.len()].clone())
+        })
+        .collect();
+    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+    println!(
+        "== service mode: {} tenants x 1000 tasks on {} ==",
+        subs.len(),
+        plat.label()
+    );
+
+    // feasibility before timing anything
+    let report = run_service(&plat, &subs);
+    validate_service(&plat, &report.tenant_runs(&subs)).expect("service schedule feasible");
+
+    // precompute the per-tenant ideal makespans so the timed region
+    // measures the streaming engine only (not the metrics reruns)
+    let ideals: Vec<f64> = subs
+        .iter()
+        .map(|s| online_by_id(&s.graph, &plat, &s.policy).makespan)
+        .collect();
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(300),
+        measure: Duration::from_millis(2000),
+        min_iters: 3,
+        max_iters: 100_000,
+    };
+    let r = bench_with("service 50x1000 (32x8 pool)", &opts, || {
+        black_box(run_service_with_ideals(&plat, &subs, Some(&ideals)).horizon);
+    });
+    println!("{}", r.report());
+    let tasks_per_sec = r.throughput(total_tasks as f64);
+    println!("    -> {tasks_per_sec:.0} scheduled tasks/s");
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("service_throughput".into())),
+        ("tenants", Json::Num(subs.len() as f64)),
+        ("tasks_total", Json::Num(total_tasks as f64)),
+        ("platform", Json::Str(plat.label())),
+        ("mean_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
+        ("p95_ms", Json::Num(r.p95.as_secs_f64() * 1e3)),
+        ("tasks_per_sec", Json::Num(tasks_per_sec)),
+        ("horizon", Json::Num(report.horizon)),
+        ("mean_stretch", Json::Num(report.mean_stretch)),
+        ("max_stretch", Json::Num(report.max_stretch)),
+        (
+            "utilization",
+            Json::Arr(report.utilization.iter().map(|&u| Json::Num(u)).collect()),
+        ),
+    ]);
+    std::fs::write("BENCH_service.json", out.to_string()).expect("write BENCH_service.json");
+    println!("wrote BENCH_service.json");
+
+    // acceptance: the streaming engine must stay comfortably in the
+    // tens-of-thousands-of-decisions-per-second range even on modest
+    // hardware (50k decisions well under 5 s)
+    assert!(
+        tasks_per_sec >= 10_000.0,
+        "service throughput regressed: {tasks_per_sec:.0} tasks/s"
+    );
+}

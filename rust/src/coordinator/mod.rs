@@ -2,32 +2,43 @@
 //! pool, StarPU-style (the system the paper targets for deployment, §7).
 //!
 //! One OS thread per processor unit (CPU and GPU workers), each with a
-//! FIFO work queue.  The scheduler thread receives the task stream in a
-//! precedence-respecting arrival order, takes the *irrevocable* policy
-//! decision at arrival (ER-LS / EFT / Greedy / ... — the same policies
-//! as `sched::online`), and dispatches to the chosen unit's queue.
-//! Workers block until a task's predecessors have completed, then
-//! "execute" it by sleeping `p · time_scale` (scaled virtual time).
+//! FIFO work queue.  The scheduler thread dispatches the *service*
+//! decision stream — many tenants' task graphs arriving over virtual
+//! time, each decision irrevocable ([`sched::service`](crate::sched::service)) —
+//! to the chosen unit's queue.  Workers block until a task's
+//! predecessors have completed, then "execute" it by sleeping
+//! `p · time_scale` (scaled virtual time).
 //!
-//! The run reports realized makespan (virtual time units), per-type busy
-//! time, and decision latency, and is cross-checked against the
-//! discrete-event prediction of `sched::online` in tests and in
-//! `examples/runtime_serve.rs`.
+//! Two clocks:
+//! * `time_scale > 0` — wall-clock execution: realized start/finish are
+//!   measured on the wall (in virtual units), so the realized makespan
+//!   carries real dispatch/wakeup overhead.
+//! * `time_scale == 0` — deterministic virtual clock: workers replay the
+//!   discrete-event arithmetic (no sleeping), so the realized schedule
+//!   equals the engine prediction *bit for bit* on every run.  This is
+//!   the mocked-clock mode the coordinator↔engine agreement tests pin.
+//!
+//! [`run_live`] (single DAG, kept API) is now a one-tenant special case
+//! of [`run_service_live`], which drives N concurrent DAGs over the
+//! shared pool.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::graph::{TaskGraph, TaskId};
 use crate::platform::Platform;
 use crate::sched::online::OnlinePolicy;
+use crate::sched::service::{run_service, ServiceReport, Submission};
 use crate::sim::{Placement, Schedule};
 use crate::substrate::pool::WorkQueue;
 use crate::substrate::stats::Summary;
 
 #[derive(Clone, Debug)]
 pub struct LiveConfig {
-    /// wall-clock seconds per virtual time unit (keep small in tests)
+    /// wall-clock seconds per virtual time unit (keep small in tests);
+    /// 0.0 selects the deterministic virtual clock (no sleeping,
+    /// realized == predicted exactly)
     pub time_scale: f64,
     pub policy: OnlinePolicy,
 }
@@ -44,7 +55,29 @@ pub struct LiveReport {
     pub n_tasks: usize,
 }
 
+/// Config for the multi-tenant live service run.
+#[derive(Clone, Debug)]
+pub struct ServiceLiveConfig {
+    /// wall-clock seconds per virtual time unit; 0.0 = virtual clock
+    pub time_scale: f64,
+}
+
+/// Outcome of a multi-tenant live run.
+#[derive(Debug)]
+pub struct ServiceLiveReport {
+    /// the engine's prediction (placements, metrics, decision stream)
+    pub predicted: ServiceReport,
+    /// realized per-tenant schedules (virtual time units)
+    pub realized: Vec<Schedule>,
+    /// realized completion − arrival, per tenant
+    pub realized_flow: Vec<f64>,
+    /// realized horizon across all tenants
+    pub realized_makespan: f64,
+    pub wall: Duration,
+}
+
 struct TaskMsg {
+    tenant: usize,
     task: TaskId,
     dur: f64,
 }
@@ -86,8 +119,130 @@ impl Tracker {
     }
 }
 
-/// Run the task graph live.  Returns the report and the realized
-/// schedule (start/finish in virtual time units, measured on the wall).
+/// Drive N concurrent task graphs live over the shared worker pool,
+/// following the service decision stream.  Returns prediction and
+/// realization; with `time_scale == 0` the two agree exactly.
+pub fn run_service_live(
+    plat: &Platform,
+    subs: &[Submission],
+    cfg: &ServiceLiveConfig,
+) -> ServiceLiveReport {
+    // the engine prediction: placements + global decision order
+    let predicted = run_service(plat, subs);
+
+    let n_units = plat.n_units();
+    let queues: Vec<_> = (0..n_units).map(|_| WorkQueue::<TaskMsg>::new()).collect();
+    let linear_id = |q: usize, u: usize| -> usize { plat.counts[..q].iter().sum::<usize>() + u };
+
+    let trackers: Vec<Tracker> = subs.iter().map(|s| Tracker::new(&s.graph)).collect();
+    // realized (start, finish) in virtual units, per tenant per task
+    let spans: Vec<Vec<Mutex<(f64, f64)>>> = subs
+        .iter()
+        .map(|s| (0..s.graph.n_tasks()).map(|_| Mutex::new((0.0, 0.0))).collect())
+        .collect();
+
+    let virtual_clock = cfg.time_scale <= 0.0;
+    let scale = cfg.time_scale;
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        // workers: one thread per unit, FIFO in dispatch (= decision) order
+        for unit_queue in queues.iter() {
+            let trackers = &trackers;
+            let spans = &spans;
+            scope.spawn(move || {
+                // the unit's own virtual free time (virtual-clock replay)
+                let mut unit_free = 0.0f64;
+                while let Some(msg) = unit_queue.pop() {
+                    let g = &subs[msg.tenant].graph;
+                    trackers[msg.tenant].wait_ready(msg.task);
+                    if virtual_clock {
+                        // deterministic discrete-event replay: identical
+                        // arithmetic to the engine's prediction
+                        let ready = g.preds[msg.task]
+                            .iter()
+                            .map(|&p| spans[msg.tenant][p].lock().unwrap().1)
+                            .fold(subs[msg.tenant].arrival, f64::max);
+                        let start = ready.max(unit_free);
+                        let finish = start + msg.dur;
+                        unit_free = finish;
+                        *spans[msg.tenant][msg.task].lock().unwrap() = (start, finish);
+                    } else {
+                        let start_v = t0.elapsed().as_secs_f64() / scale;
+                        std::thread::sleep(Duration::from_secs_f64(msg.dur * scale));
+                        let finish_v = t0.elapsed().as_secs_f64() / scale;
+                        *spans[msg.tenant][msg.task].lock().unwrap() = (start_v, finish_v);
+                    }
+                    trackers[msg.tenant].complete(g, msg.task);
+                }
+            });
+        }
+
+        // dispatcher: release the decision stream in global order,
+        // holding each tenant's tasks back until its arrival time
+        for d in &predicted.decisions {
+            if !virtual_clock {
+                let target = t0 + Duration::from_secs_f64(subs[d.tenant].arrival * scale);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+            }
+            let p = predicted.tenants[d.tenant].schedule.placements[d.task];
+            let dur = subs[d.tenant].graph.time_on(d.task, p.ptype);
+            queues[linear_id(p.ptype, p.unit)].push(TaskMsg {
+                tenant: d.tenant,
+                task: d.task,
+                dur,
+            });
+        }
+        for q in &queues {
+            q.close();
+        }
+        // scope joins workers here
+    });
+    let wall = t0.elapsed();
+
+    // assemble the realized schedules with the decided placements
+    let realized: Vec<Schedule> = subs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Schedule::from_placements(
+                (0..s.graph.n_tasks())
+                    .map(|j| {
+                        let (start, finish) = *spans[i][j].lock().unwrap();
+                        let p = predicted.tenants[i].schedule.placements[j];
+                        Placement {
+                            ptype: p.ptype,
+                            unit: p.unit,
+                            start,
+                            finish,
+                        }
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    let realized_flow: Vec<f64> = realized
+        .iter()
+        .zip(subs)
+        .map(|(r, s)| r.makespan - s.arrival)
+        .collect();
+    let realized_makespan = realized.iter().fold(0.0f64, |a, r| a.max(r.makespan));
+
+    ServiceLiveReport {
+        predicted,
+        realized,
+        realized_flow,
+        realized_makespan,
+        wall,
+    }
+}
+
+/// Run one task graph live (kept API: a single-tenant service run).
+/// Returns the report and the realized schedule (start/finish in virtual
+/// time units; measured on the wall unless `time_scale == 0`).
 pub fn run_live(
     g: &TaskGraph,
     plat: &Platform,
@@ -96,105 +251,31 @@ pub fn run_live(
 ) -> (LiveReport, Schedule) {
     let n = g.n_tasks();
     assert_eq!(order.len(), n);
-
-    // the engine prediction (identical policy and arrival order)
-    let predicted = crate::sched::online::online_schedule(g, plat, order, &cfg.policy);
-
-    // worker pool: one queue + thread per unit
-    let n_units = plat.n_units();
-    let queues: Vec<Arc<WorkQueue<TaskMsg>>> = (0..n_units).map(|_| WorkQueue::new()).collect();
-    let _unit_of = {
-        // flatten (type, unit) -> linear id
-        let mut map = Vec::new();
-        for (q, &c) in plat.counts.iter().enumerate() {
-            for u in 0..c {
-                map.push((q, u));
-            }
-        }
-        map
-    };
-    let linear_id = |q: usize, u: usize| -> usize {
-        plat.counts[..q].iter().sum::<usize>() + u
-    };
-
-    let tracker = Arc::new(Tracker::new(g));
-    let t0 = Instant::now();
-    let scale = cfg.time_scale.max(1e-9);
-    // realized (start, finish) in virtual units, recorded by workers
-    let spans: Arc<Vec<Mutex<(f64, f64)>>> =
-        Arc::new((0..n).map(|_| Mutex::new((0.0, 0.0))).collect());
-
-    std::thread::scope(|scope| {
-        // workers
-        for unit in 0..n_units {
-            let q = Arc::clone(&queues[unit]);
-            let tracker = Arc::clone(&tracker);
-            let spans = Arc::clone(&spans);
-            scope.spawn(move || {
-                while let Some(msg) = q.pop() {
-                    tracker.wait_ready(msg.task);
-                    let start_v = t0.elapsed().as_secs_f64() / scale;
-                    std::thread::sleep(Duration::from_secs_f64(msg.dur * scale));
-                    let finish_v = t0.elapsed().as_secs_f64() / scale;
-                    *spans[msg.task].lock().unwrap() = (start_v, finish_v);
-                    tracker.complete(g, msg.task);
-                }
-            });
-        }
-
-        // scheduler: same decision logic as the engine, driven by the
-        // predicted state (irrevocable decisions at arrival time)
-        let mut latencies = Vec::with_capacity(n);
-        for &j in order {
-            let td = Instant::now();
-            let p = predicted.placements[j];
-            latencies.push(td.elapsed().as_secs_f64() + 1e-9);
-            let dur = g.time_on(j, p.ptype);
-            queues[linear_id(p.ptype, p.unit)].push(TaskMsg { task: j, dur });
-        }
-        for q in &queues {
-            q.close();
-        }
-        // scope joins workers here
-        LAT.with(|l| *l.borrow_mut() = latencies);
-    });
-
-    let wall = t0.elapsed();
-    let latencies = LAT.with(|l| l.borrow().clone());
-
-    // assemble the realized schedule with the decided placements
-    let placements: Vec<Placement> = (0..n)
-        .map(|j| {
-            let (s, f) = *spans[j].lock().unwrap();
-            Placement {
-                ptype: predicted.placements[j].ptype,
-                unit: predicted.placements[j].unit,
-                start: s,
-                finish: f,
-            }
-        })
-        .collect();
-    let realized = Schedule::from_placements(placements);
-
+    let subs = [Submission::new(g.clone(), 0.0, cfg.policy.clone()).with_order(order.to_vec())];
+    let out = run_service_live(
+        plat,
+        &subs,
+        &ServiceLiveConfig {
+            time_scale: cfg.time_scale,
+        },
+    );
+    let realized = out.realized.into_iter().next().unwrap();
     let report = LiveReport {
         realized_makespan: realized.makespan,
-        predicted_makespan: predicted.makespan,
-        wall,
+        predicted_makespan: out.predicted.tenants[0].schedule.makespan,
+        wall: out.wall,
         per_type_busy: realized.loads(plat.n_types()),
-        decision_latency: Summary::of(&latencies),
+        decision_latency: out.predicted.tenants[0].decision_latency.clone(),
         n_tasks: n,
     };
     (report, realized)
 }
 
-thread_local! {
-    static LAT: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::gen;
+    use crate::graph::{gen, Builder};
+    use crate::sched::online::online_by_id;
     use crate::substrate::rng::Rng;
 
     #[test]
@@ -244,5 +325,102 @@ mod tests {
             assert!(report.realized_makespan > 0.0);
             assert_eq!(report.decision_latency.n, 15);
         }
+    }
+
+    #[test]
+    fn virtual_clock_single_tenant_agrees_with_engine_exactly() {
+        // coordinator↔engine agreement: with the deterministic virtual
+        // clock, the realized makespan equals the engine prediction
+        // bit for bit, for every policy
+        let mut rng = Rng::new(29);
+        let g = gen::hybrid_dag(&mut rng, 40, 0.1);
+        let plat = Platform::hybrid(3, 2);
+        let order: Vec<usize> = (0..40).collect();
+        for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+            let engine = online_by_id(&g, &plat, &policy);
+            let cfg = LiveConfig {
+                time_scale: 0.0,
+                policy,
+            };
+            let (report, realized) = run_live(&g, &plat, &order, &cfg);
+            assert_eq!(report.realized_makespan, report.predicted_makespan);
+            assert_eq!(report.predicted_makespan, engine.makespan);
+            assert_eq!(realized.placements, engine.placements);
+        }
+    }
+
+    #[test]
+    fn virtual_clock_contended_realizes_at_least_single_tenant_prediction() {
+        // two identical single-task tenants on one CPU: the realized
+        // (contended) flow of the queued tenant strictly exceeds its
+        // single-tenant predicted makespan, while matching the service
+        // prediction exactly
+        let mk = || {
+            let mut b = Builder::new("one");
+            b.add_task("t", vec![2.0, 50.0]);
+            b.build()
+        };
+        let plat = Platform::hybrid(1, 1);
+        let subs = vec![
+            Submission::new(mk(), 0.0, OnlinePolicy::Greedy),
+            Submission::new(mk(), 0.0, OnlinePolicy::Greedy),
+        ];
+        let out = run_service_live(&plat, &subs, &ServiceLiveConfig { time_scale: 0.0 });
+        for (i, t) in out.predicted.tenants.iter().enumerate() {
+            assert_eq!(out.realized[i].placements, t.schedule.placements);
+            assert_eq!(out.realized_flow[i], t.flow_time);
+            // contended realization never beats the single-tenant ideal here
+            assert!(out.realized_flow[i] >= t.ideal_makespan - 1e-12);
+        }
+        assert_eq!(out.realized_flow[0], 2.0);
+        assert_eq!(out.realized_flow[1], 4.0); // queued behind tenant 0
+        assert_eq!(out.realized_makespan, 4.0);
+    }
+
+    #[test]
+    fn virtual_clock_multi_tenant_random_dags_agree_exactly() {
+        let mut rng = Rng::new(31);
+        let plat = Platform::hybrid(3, 2);
+        let subs: Vec<Submission> = (0..4)
+            .map(|t| {
+                let g = gen::hybrid_dag(&mut rng, 25, 0.12);
+                let policy = if t % 2 == 0 {
+                    OnlinePolicy::ErLs
+                } else {
+                    OnlinePolicy::Eft
+                };
+                Submission::new(g, t as f64 * 2.0, policy)
+            })
+            .collect();
+        let out = run_service_live(&plat, &subs, &ServiceLiveConfig { time_scale: 0.0 });
+        for (i, t) in out.predicted.tenants.iter().enumerate() {
+            assert_eq!(out.realized[i].placements, t.schedule.placements, "tenant {i}");
+        }
+        assert_eq!(out.realized_makespan, out.predicted.horizon);
+    }
+
+    #[test]
+    fn service_live_wall_mode_multi_tenant_completes() {
+        let mut rng = Rng::new(37);
+        let plat = Platform::hybrid(2, 1);
+        let subs: Vec<Submission> = (0..3)
+            .map(|t| {
+                let g = gen::hybrid_dag(&mut rng, 10, 0.2);
+                Submission::new(g, t as f64 * 1.0, OnlinePolicy::Greedy)
+            })
+            .collect();
+        let out = run_service_live(&plat, &subs, &ServiceLiveConfig { time_scale: 0.0005 });
+        assert_eq!(out.realized.len(), 3);
+        for (i, r) in out.realized.iter().enumerate() {
+            // realized respects precedence and the tenant's arrival
+            let g = &subs[i].graph;
+            for j in 0..g.n_tasks() {
+                assert!(r.placements[j].start >= subs[i].arrival - 1e-6);
+                for &s in &g.succs[j] {
+                    assert!(r.placements[s].start >= r.placements[j].finish - 1e-6);
+                }
+            }
+        }
+        assert!(out.realized_makespan >= out.predicted.horizon * 0.9);
     }
 }

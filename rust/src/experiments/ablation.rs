@@ -8,9 +8,6 @@
 //! * **PDHG solver** (§Perf): warm start / Ruiz / restart-to-average
 //!   on-off grid, measured in iterations-to-tolerance.
 
-use std::sync::Mutex;
-
-use crate::algos::{solve_hlp_capped, AllocLp};
 use crate::alloc::greedy_min_time;
 use crate::graph::{paths, TaskGraph};
 use crate::lp::model::{build_hlp, hlp_warm_start, tighten_hlp_box};
@@ -19,12 +16,9 @@ use crate::lp::pdhg::{drive, ChunkBackend, ChunkResult, DriveOpts, RustChunk};
 use crate::platform::Platform;
 use crate::runtime::LpBackendKind;
 use crate::sched::list::list_schedule;
-use crate::substrate::pool::parallel_map;
 use crate::substrate::rng::Rng;
-use crate::workloads::instances;
 
-use super::cache::{cache_key, LpCache};
-use super::offline::configs;
+use super::driver::run_campaign;
 use super::CampaignOpts;
 
 /// Priority rules for the OLS scheduling phase.
@@ -138,36 +132,12 @@ pub const PRIORITY_GRID: [Priority; 4] = [
 /// campaigns, so the expensive HLP solves are paid once and shared with
 /// the figure harnesses when they use the same cache path.
 pub fn run_priority_campaign(opts: &CampaignOpts) -> Vec<AblationRecord> {
-    let insts = instances(opts.scale);
-    let cfgs = configs(2, opts.scale);
-    let cache = Mutex::new(
-        opts.cache_path
-            .as_ref()
-            .map(|p| LpCache::load(p))
-            .unwrap_or_default(),
-    );
-
-    let mut items = Vec::new();
-    for inst in &insts {
-        for cfg in &cfgs {
-            items.push((inst.clone(), cfg.clone()));
-        }
-    }
-
-    let records: Vec<Vec<AblationRecord>> = parallel_map(items, opts.workers, |(inst, cfg)| {
-        let g = inst.generate(2);
-        let key = cache_key(&inst.label(), &cfg.label(), 2, opts.tol);
-        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
-        let hlp = cached.unwrap_or_else(|| {
-            let solved = solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters);
-            cache.lock().unwrap().put(&key, &solved);
-            solved
-        });
+    run_campaign(2, opts, |inst, cfg, g, hlp| {
         PRIORITY_GRID
             .iter()
             .map(|p| {
-                let prio = p.compute(&g, &cfg, &hlp.alloc);
-                let s = list_schedule(&g, &cfg, &hlp.alloc, &prio);
+                let prio = p.compute(g, cfg, &hlp.alloc);
+                let s = list_schedule(g, cfg, &hlp.alloc, &prio);
                 AblationRecord {
                     instance: inst.label(),
                     config: cfg.label(),
@@ -177,12 +147,7 @@ pub fn run_priority_campaign(opts: &CampaignOpts) -> Vec<AblationRecord> {
                 }
             })
             .collect()
-    });
-
-    if let Some(path) = &opts.cache_path {
-        cache.lock().unwrap().save(path).ok();
-    }
-    records.into_iter().flatten().collect()
+    })
 }
 
 /// A chunk backend wrapper that disables restart-to-average by reporting

@@ -98,9 +98,19 @@ impl LpCache {
     }
 }
 
-/// Cache key for an (instance, platform, formulation, tolerance) solve.
-pub fn cache_key(instance: &str, config: &str, n_types: usize, tol: f64) -> String {
-    format!("{instance}|{config}|q{n_types}|tol{tol:.0e}")
+/// Cache key for an (instance, platform, formulation, tolerance,
+/// iteration budget) solve.  `max_iters` is part of the key: a capped
+/// solve that stopped at its budget is *not* the same LP* as a longer
+/// one, so caches keyed without it could serve under-converged solutions
+/// across campaigns run at different budgets.
+pub fn cache_key(
+    instance: &str,
+    config: &str,
+    n_types: usize,
+    tol: f64,
+    max_iters: usize,
+) -> String {
+    format!("{instance}|{config}|q{n_types}|tol{tol:.0e}|it{max_iters}")
 }
 
 #[cfg(test)]
@@ -126,7 +136,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("hetsched-cache-{}", std::process::id()));
         let path = dir.join("cache.json");
         let mut c = LpCache::default();
-        let key = cache_key("potrf-nb5-bs320", "16x2", 2, 1e-4);
+        let key = cache_key("potrf-nb5-bs320", "16x2", 2, 1e-4, 80_000);
         assert!(c.get(&key).is_none());
         c.put(&key, &sample());
         c.save(&path).unwrap();
@@ -146,12 +156,27 @@ mod tests {
     #[test]
     fn keys_distinguish_dimensions() {
         assert_ne!(
-            cache_key("a", "16x2", 2, 1e-4),
-            cache_key("a", "16x2", 3, 1e-4)
+            cache_key("a", "16x2", 2, 1e-4, 80_000),
+            cache_key("a", "16x2", 3, 1e-4, 80_000)
         );
         assert_ne!(
-            cache_key("a", "16x2", 2, 1e-4),
-            cache_key("a", "16x2", 2, 1e-3)
+            cache_key("a", "16x2", 2, 1e-4, 80_000),
+            cache_key("a", "16x2", 2, 1e-3, 80_000)
+        );
+    }
+
+    #[test]
+    fn keys_distinguish_iteration_budget() {
+        // regression (ROADMAP debt): campaigns run at different PDHG
+        // budgets must not share LP* entries — a capped solve that hit
+        // its budget is a different (possibly under-converged) solution
+        assert_ne!(
+            cache_key("a", "16x2", 2, 1e-4, 80_000),
+            cache_key("a", "16x2", 2, 1e-4, 150_000)
+        );
+        assert_eq!(
+            cache_key("a", "16x2", 2, 1e-4, 80_000),
+            cache_key("a", "16x2", 2, 1e-4, 80_000)
         );
     }
 }

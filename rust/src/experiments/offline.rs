@@ -2,16 +2,13 @@
 //! config × {HLP-EST, HLP-OLS, HEFT} (2 types) or the QHLP versions
 //! (3 types), normalized by the LP* of the corresponding relaxation.
 
-use std::sync::Mutex;
-
-use crate::algos::{run_offline, solve_hlp_capped, solve_qhlp_capped, AllocLp, Offline};
+use crate::algos::{run_offline, Offline};
 use crate::analysis::Record;
 use crate::platform::{self, Platform};
 use crate::sim::validate;
-use crate::substrate::pool::parallel_map;
-use crate::workloads::{instances, Scale};
+use crate::workloads::Scale;
 
-use super::cache::{cache_key, LpCache};
+use super::driver::run_campaign;
 use super::CampaignOpts;
 
 /// Machine-configuration grid for the given type count and scale.
@@ -30,37 +27,7 @@ pub fn configs(n_types: usize, scale: Scale) -> Vec<Platform> {
 /// Run the offline campaign for `n_types` ∈ {2, 3}.
 /// Returns one record per (instance, config, algorithm).
 pub fn run(n_types: usize, opts: &CampaignOpts) -> Vec<Record> {
-    let insts = instances(opts.scale);
-    let cfgs = configs(n_types, opts.scale);
-    let cache = Mutex::new(
-        opts.cache_path
-            .as_ref()
-            .map(|p| LpCache::load(p))
-            .unwrap_or_default(),
-    );
-
-    // work items: one per (instance, config)
-    let mut items = Vec::new();
-    for inst in &insts {
-        for cfg in &cfgs {
-            items.push((inst.clone(), cfg.clone()));
-        }
-    }
-
-    let records: Vec<Vec<Record>> = parallel_map(items, opts.workers, |(inst, cfg)| {
-        let g = inst.generate(n_types);
-        let key = cache_key(&inst.label(), &cfg.label(), n_types, opts.tol);
-        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
-        let alloc_lp = cached.unwrap_or_else(|| {
-            let solved = if n_types == 2 {
-                solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters)
-            } else {
-                solve_qhlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters)
-            };
-            cache.lock().unwrap().put(&key, &solved);
-            solved
-        });
-
+    run_campaign(n_types, opts, |inst, cfg, g, alloc_lp| {
         let sqrt_mk = if n_types == 2 {
             (cfg.m() as f64 / cfg.k() as f64).sqrt()
         } else {
@@ -69,9 +36,8 @@ pub fn run(n_types: usize, opts: &CampaignOpts) -> Vec<Record> {
         Offline::ALL
             .iter()
             .map(|&algo| {
-                let (s, _) =
-                    run_offline(algo, &g, &cfg, Some(&alloc_lp), opts.backend, opts.tol);
-                debug_assert!(validate(&g, &cfg, &s).is_ok());
+                let (s, _) = run_offline(algo, g, cfg, Some(alloc_lp), opts.backend, opts.tol);
+                debug_assert!(validate(g, cfg, &s).is_ok());
                 let name = if n_types == 2 {
                     algo.name().to_string()
                 } else {
@@ -88,12 +54,7 @@ pub fn run(n_types: usize, opts: &CampaignOpts) -> Vec<Record> {
                 }
             })
             .collect()
-    });
-
-    if let Some(path) = &opts.cache_path {
-        cache.lock().unwrap().save(path).ok();
-    }
-    records.into_iter().flatten().collect()
+    })
 }
 
 #[cfg(test)]

@@ -2,18 +2,12 @@
 //! baselines on the 2-type configs, normalized by LP* (which also feeds
 //! the competitive-ratio-vs-√(m/k) series of Fig. 6-right).
 
-use std::sync::Mutex;
-
-use crate::algos::{solve_hlp_capped, AllocLp};
 use crate::analysis::Record;
 use crate::sched::online::{online_by_id, OnlinePolicy};
 use crate::sim::validate;
-use crate::substrate::pool::parallel_map;
 use crate::substrate::rng::seed_for;
-use crate::workloads::instances;
 
-use super::cache::{cache_key, LpCache};
-use super::offline::configs;
+use super::driver::run_campaign;
 use super::CampaignOpts;
 
 /// The §6.3 policy set.
@@ -28,38 +22,13 @@ pub fn policies(instance_label: &str) -> Vec<OnlinePolicy> {
 
 /// Run the online campaign (2 types).
 pub fn run(opts: &CampaignOpts) -> Vec<Record> {
-    let insts = instances(opts.scale);
-    let cfgs = configs(2, opts.scale);
-    let cache = Mutex::new(
-        opts.cache_path
-            .as_ref()
-            .map(|p| LpCache::load(p))
-            .unwrap_or_default(),
-    );
-
-    let mut items = Vec::new();
-    for inst in &insts {
-        for cfg in &cfgs {
-            items.push((inst.clone(), cfg.clone()));
-        }
-    }
-
-    let records: Vec<Vec<Record>> = parallel_map(items, opts.workers, |(inst, cfg)| {
-        let g = inst.generate(2);
-        let key = cache_key(&inst.label(), &cfg.label(), 2, opts.tol);
-        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
-        let alloc_lp = cached.unwrap_or_else(|| {
-            let solved = solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters);
-            cache.lock().unwrap().put(&key, &solved);
-            solved
-        });
+    run_campaign(2, opts, |inst, cfg, g, alloc_lp| {
         let sqrt_mk = (cfg.m() as f64 / cfg.k() as f64).sqrt();
-
         policies(&inst.label())
             .iter()
             .map(|policy| {
-                let s = online_by_id(&g, &cfg, policy);
-                debug_assert!(validate(&g, &cfg, &s).is_ok());
+                let s = online_by_id(g, cfg, policy);
+                debug_assert!(validate(g, cfg, &s).is_ok());
                 Record {
                     instance: inst.label(),
                     app: inst.app().to_string(),
@@ -71,12 +40,7 @@ pub fn run(opts: &CampaignOpts) -> Vec<Record> {
                 }
             })
             .collect()
-    });
-
-    if let Some(path) = &opts.cache_path {
-        cache.lock().unwrap().save(path).ok();
-    }
-    records.into_iter().flatten().collect()
+    })
 }
 
 #[cfg(test)]

@@ -149,6 +149,26 @@ impl UnitPool {
     pub fn earliest_idle(&self, q: usize) -> f64 {
         self.types[q].min()
     }
+
+    /// Time `unit` of type `q` becomes free.
+    pub fn free_at(&self, q: usize, unit: usize) -> f64 {
+        self.types[q].get(unit)
+    }
+
+    /// Reserve `unit` of type `q` until `finish`: the unit is busy (its
+    /// free time advances) until then.  This is the single mutation the
+    /// shared-pool service mode and every online policy go through, so a
+    /// pool can be threaded across many tenants' decisions.
+    pub fn reserve(&mut self, q: usize, unit: usize, finish: f64) {
+        debug_assert!(finish >= self.types[q].get(unit), "reservations never rewind");
+        self.types[q].set(unit, finish);
+    }
+
+    /// Release `unit` of type `q` back to `free`: used when a tenant is
+    /// cancelled after a reservation (rewinds the free time).
+    pub fn release(&mut self, q: usize, unit: usize, free: f64) {
+        self.types[q].set(unit, free);
+    }
 }
 
 /// Per-type ready queues for the EST policy (see module docs).
@@ -346,6 +366,20 @@ mod tests {
         assert_eq!(t.min(), 10.0);
         assert_eq!(t.last_at_most(10.0), Some(2));
         assert_eq!(t.argmin_first(), 0);
+    }
+
+    #[test]
+    fn unit_pool_reserve_and_release() {
+        let mut pool = UnitPool::new(&[2, 1]);
+        assert_eq!(pool.earliest_idle(0), 0.0);
+        pool.reserve(0, 0, 5.0);
+        assert_eq!(pool.free_at(0, 0), 5.0);
+        assert_eq!(pool.earliest_idle(0), 0.0); // unit 1 still idle
+        pool.reserve(0, 1, 3.0);
+        assert_eq!(pool.earliest_idle(0), 3.0);
+        pool.release(0, 0, 1.0);
+        assert_eq!(pool.earliest_idle(0), 1.0);
+        assert_eq!(pool.earliest_idle(1), 0.0);
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! * [`est`] — the Earliest Starting Time policy of HLP-EST (§3).
 //! * [`heft`] — HEFT with insertion-based backfilling (§3), Q-type ready.
 //! * [`online`] — the online engine (§4.2): ER-LS, EFT, Greedy, Random
-//!   and the R1/R2/R3 rules, with irrevocable decisions.
+//!   and the R1/R2/R3 rules, with irrevocable decisions taken through
+//!   the shared [`online::PolicyEngine`].
+//! * [`service`] — the multi-tenant streaming service mode: many task
+//!   graphs arriving over virtual time into one shared unit pool, each
+//!   tenant's stream flowing through the same irrevocable policies.
 //! * [`reference`] — the pre-engine (seed) implementations, kept as the
 //!   golden-parity oracle and the perf baseline.
 //!
@@ -40,6 +44,7 @@ pub mod heft;
 pub mod list;
 pub mod online;
 pub mod reference;
+pub mod service;
 
 /// Total order wrapper for f64 priorities (NaN-free by construction).
 #[derive(Clone, Copy, Debug, PartialEq)]

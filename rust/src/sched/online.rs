@@ -52,13 +52,30 @@ impl OnlinePolicy {
     }
 }
 
-/// Mutable machine state visible to online policies: one unit tree per
-/// type, keyed by the time each unit becomes idle.
-struct State {
+/// Shared decision engine for the online policies: one [`UnitPool`] of
+/// per-type unit trees, keyed by the time each unit becomes idle, plus
+/// the irrevocable `(type, unit, start, finish)` decision rule of every
+/// policy.  `online_schedule` drives it for a single task stream; the
+/// multi-tenant service mode ([`super::service`]) threads one engine
+/// across the interleaved streams of many tenants, so single-tenant
+/// service runs are placement-identical to `online_schedule` *by
+/// construction* (and the parity suite pins it anyway).
+pub struct PolicyEngine {
     avail: UnitPool,
 }
 
-impl State {
+impl PolicyEngine {
+    pub fn new(plat: &Platform) -> PolicyEngine {
+        PolicyEngine {
+            avail: UnitPool::new(&plat.counts),
+        }
+    }
+
+    /// The shared pool state (read-only view).
+    pub fn pool(&self) -> &UnitPool {
+        &self.avail
+    }
+
     fn earliest_idle(&self, q: usize) -> f64 {
         self.avail.types[q].min()
     }
@@ -84,6 +101,94 @@ impl State {
             (tau + dur, tree.argmin_first())
         }
     }
+
+    /// Take the irrevocable decision for task `j` of graph `g`, ready at
+    /// `ready` (max of its predecessors' completions and its tenant's
+    /// arrival time), and reserve the chosen unit until the task's
+    /// finish.  `rng` must be `Some` exactly for the Random policy.
+    pub fn decide(
+        &mut self,
+        g: &TaskGraph,
+        plat: &Platform,
+        j: TaskId,
+        ready: f64,
+        policy: &OnlinePolicy,
+        rng: Option<&mut Rng>,
+    ) -> Placement {
+        // choose (type, unit)
+        let (q, unit) = match policy {
+            OnlinePolicy::ErLs => {
+                let tau_gpu = self.earliest_idle(1);
+                let r_gpu = tau_gpu.max(ready);
+                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                    1 // Step 1: GPU side
+                } else {
+                    alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
+                };
+                (q, self.best_unit(q))
+            }
+            OnlinePolicy::R1 => {
+                let q = alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                (q, self.best_unit(q))
+            }
+            OnlinePolicy::R2 => {
+                let q = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                (q, self.best_unit(q))
+            }
+            OnlinePolicy::R3 => {
+                let q = alloc::r3_side(g.p_cpu(j), g.p_gpu(j));
+                (q, self.best_unit(q))
+            }
+            OnlinePolicy::Greedy => {
+                let q = (0..plat.n_types())
+                    .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
+                    .unwrap();
+                (q, self.best_unit(q))
+            }
+            OnlinePolicy::Random(_) => {
+                let q = rng.expect("Random policy needs an rng").below(plat.n_types());
+                (q, self.best_unit(q))
+            }
+            OnlinePolicy::Eft => {
+                // minimize finish across every unit; tie -> GPU-most type
+                let dur0 = g.time_on(j, 0);
+                let mut best = {
+                    let (finish, u) = self.eft_candidate(0, ready, dur0);
+                    (finish, 0usize, u)
+                };
+                for q in 1..plat.n_types() {
+                    let dur = g.time_on(j, q);
+                    let (finish, u) = self.eft_candidate(q, ready, dur);
+                    // better, or tied within the band: the later
+                    // (higher) type wins ties, matching the reference
+                    // scan's `q > bq` rule
+                    if finish <= best.0 + 1e-12 {
+                        best = (finish, q, u);
+                    }
+                }
+                let (_, q, u) = best;
+                (q, u)
+            }
+        };
+
+        let start = ready.max(self.avail.free_at(q, unit));
+        let finish = start + g.time_on(j, q);
+        self.avail.reserve(q, unit, finish);
+        Placement {
+            ptype: q,
+            unit,
+            start,
+            finish,
+        }
+    }
+}
+
+/// Policies that are only defined on hybrid (CPU+GPU, 2-type) platforms.
+pub fn requires_two_types(policy: &OnlinePolicy) -> bool {
+    matches!(
+        policy,
+        OnlinePolicy::ErLs | OnlinePolicy::R1 | OnlinePolicy::R2 | OnlinePolicy::R3
+    )
 }
 
 /// Run the online engine over `order` (must be a topological order —
@@ -96,17 +201,15 @@ pub fn online_schedule(
 ) -> Schedule {
     let n = g.n_tasks();
     assert_eq!(order.len(), n, "arrival order must cover all tasks");
-    let two_types = plat.n_types() == 2;
-    if matches!(
-        policy,
-        OnlinePolicy::ErLs | OnlinePolicy::R1 | OnlinePolicy::R2 | OnlinePolicy::R3
-    ) {
-        assert!(two_types, "{} is defined for hybrid platforms", policy.name());
+    if requires_two_types(policy) {
+        assert!(
+            plat.n_types() == 2,
+            "{} is defined for hybrid platforms",
+            policy.name()
+        );
     }
 
-    let mut st = State {
-        avail: UnitPool::new(&plat.counts),
-    };
+    let mut engine = PolicyEngine::new(plat);
     let mut rng = match policy {
         OnlinePolicy::Random(seed) => Some(Rng::new(*seed)),
         _ => None,
@@ -126,72 +229,7 @@ pub fn online_schedule(
             .fold(0.0f64, f64::max);
         debug_assert!(!seen[j]);
         seen[j] = true;
-
-        // choose (type, unit)
-        let (q, unit) = match policy {
-            OnlinePolicy::ErLs => {
-                let tau_gpu = st.earliest_idle(1);
-                let r_gpu = tau_gpu.max(ready);
-                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
-                    1 // Step 1: GPU side
-                } else {
-                    alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
-                };
-                (q, st.best_unit(q))
-            }
-            OnlinePolicy::R1 => {
-                let q = alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
-                (q, st.best_unit(q))
-            }
-            OnlinePolicy::R2 => {
-                let q = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
-                (q, st.best_unit(q))
-            }
-            OnlinePolicy::R3 => {
-                let q = alloc::r3_side(g.p_cpu(j), g.p_gpu(j));
-                (q, st.best_unit(q))
-            }
-            OnlinePolicy::Greedy => {
-                let q = (0..plat.n_types())
-                    .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
-                    .unwrap();
-                (q, st.best_unit(q))
-            }
-            OnlinePolicy::Random(_) => {
-                let q = rng.as_mut().unwrap().below(plat.n_types());
-                (q, st.best_unit(q))
-            }
-            OnlinePolicy::Eft => {
-                // minimize finish across every unit; tie -> GPU-most type
-                let dur0 = g.time_on(j, 0);
-                let mut best = {
-                    let (finish, u) = st.eft_candidate(0, ready, dur0);
-                    (finish, 0usize, u)
-                };
-                for q in 1..plat.n_types() {
-                    let dur = g.time_on(j, q);
-                    let (finish, u) = st.eft_candidate(q, ready, dur);
-                    // better, or tied within the band: the later
-                    // (higher) type wins ties, matching the reference
-                    // scan's `q > bq` rule
-                    if finish <= best.0 + 1e-12 {
-                        best = (finish, q, u);
-                    }
-                }
-                let (_, q, u) = best;
-                (q, u)
-            }
-        };
-
-        let start = ready.max(st.avail.types[q].get(unit));
-        let finish = start + g.time_on(j, q);
-        st.avail.types[q].set(unit, finish);
-        placements[j] = Some(Placement {
-            ptype: q,
-            unit,
-            start,
-            finish,
-        });
+        placements[j] = Some(engine.decide(g, plat, j, ready, policy, rng.as_mut()));
     }
 
     Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())

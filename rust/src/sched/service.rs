@@ -1,0 +1,485 @@
+//! Multi-tenant streaming service mode: many task graphs arriving over
+//! (virtual) time into one shared unit pool.
+//!
+//! # Mapping to the paper's on-line model (§4.2, §6.3, §7)
+//!
+//! The paper's on-line setting assumes tasks arrive in a
+//! precedence-respecting stream and the scheduler takes an *irrevocable*
+//! (processor, start-time) decision at each arrival.  That regime is
+//! exactly a shared-cluster service: applications (tenants) submit DAGs
+//! over time, and a StarPU-like runtime multiplexes them over one
+//! CPU/GPU pool.  This module grows the single-DAG engine of
+//! [`super::online`] into that service:
+//!
+//! * A [`Submission`] is one tenant's application: a [`TaskGraph`], an
+//!   arrival time, and the online policy (ER-LS / EFT / Greedy / …)
+//!   taking its decisions.  Each tenant keeps its own
+//!   precedence-respecting arrival order (task-id order by default, as
+//!   our generators emit ids topologically).
+//! * Tasks of tenant *i* arrive as a stream: task at stream position
+//!   `p` arrives at `a_p = max(arrival_i, a_{p-1}, r_p)` where
+//!   `r_p = max(arrival_i, max_pred C)` — a task is submitted once its
+//!   predecessors complete, and never before the tenant's earlier
+//!   submissions (the stream is sequential, as in the paper's model
+//!   where the arrival order extends the precedence order).
+//! * A global completion-driven event loop merges the tenant streams by
+//!   arrival time (ties: tenant id, then stream position) and feeds each
+//!   arrival to the shared [`PolicyEngine`] over one
+//!   [`engine::UnitPool`](super::engine::UnitPool).  Decisions are
+//!   irrevocable: the chosen unit is reserved until the task's finish.
+//!
+//! Because each tenant's decisions happen in its own stream order with
+//! the pool state observed at arrival, a *single*-tenant service run
+//! takes exactly the decisions of [`online_schedule`] — golden parity,
+//! pinned by tests.  Under contention the same policies now see a pool
+//! warmed by other tenants, which is the irrevocable-multiplexing regime
+//! the survey literature (Beaumont et al. 2019) describes for hybrid
+//! runtimes.
+//!
+//! Per-tenant metrics follow the service-scheduling literature: *flow
+//! time* (completion − arrival), *stretch* (flow time over the tenant's
+//! ideal single-tenant makespan under the same policy on an empty pool),
+//! and decision latency.  The aggregate [`ServiceReport`] adds the
+//! horizon, utilization, and stretch summaries that
+//! `examples/service_mode.rs` and `benches/service_throughput.rs`
+//! report.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::graph::{TaskGraph, TaskId};
+use crate::platform::Platform;
+use crate::sim::{Placement, Schedule, TenantRun};
+use crate::substrate::rng::Rng;
+use crate::substrate::stats::Summary;
+
+use super::online::{online_schedule, requires_two_types, OnlinePolicy, PolicyEngine};
+use super::OrdF64;
+
+/// One tenant's application entering the service.
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub graph: TaskGraph,
+    /// Virtual time at which the tenant submits the application; no task
+    /// of the tenant may start before it.
+    pub arrival: f64,
+    /// The online policy taking this tenant's irrevocable decisions.
+    pub policy: OnlinePolicy,
+    /// Precedence-respecting arrival order of the tenant's tasks
+    /// (defaults to task-id order, which our generators emit
+    /// topologically).
+    order: Option<Vec<TaskId>>,
+}
+
+impl Submission {
+    pub fn new(graph: TaskGraph, arrival: f64, policy: OnlinePolicy) -> Submission {
+        assert!(arrival.is_finite() && arrival >= 0.0, "bad arrival {arrival}");
+        Submission {
+            graph,
+            arrival,
+            policy,
+            order: None,
+        }
+    }
+
+    /// Use a custom (topological) arrival order for this tenant.
+    pub fn with_order(mut self, order: Vec<TaskId>) -> Submission {
+        assert_eq!(order.len(), self.graph.n_tasks(), "order must cover all tasks");
+        self.order = Some(order);
+        self
+    }
+
+    fn order_vec(&self) -> Vec<TaskId> {
+        self.order
+            .clone()
+            .unwrap_or_else(|| (0..self.graph.n_tasks()).collect())
+    }
+}
+
+/// One irrevocable decision, in global decision order: tenant `tenant`'s
+/// task `task` arrived (and was placed) at virtual time `time`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionRecord {
+    pub tenant: usize,
+    pub task: TaskId,
+    pub time: f64,
+}
+
+/// Per-tenant outcome.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub tenant: usize,
+    pub app: String,
+    pub n_tasks: usize,
+    pub arrival: f64,
+    /// Virtual time the tenant's last task finishes.
+    pub completion: f64,
+    /// completion − arrival.
+    pub flow_time: f64,
+    /// Makespan of the same (graph, order, policy) on an empty pool.
+    pub ideal_makespan: f64,
+    /// flow_time / ideal_makespan (1.0 = no slowdown from contention).
+    pub stretch: f64,
+    /// Wall-clock seconds per irrevocable decision.
+    pub decision_latency: Summary,
+    /// The tenant's placements (absolute virtual times on the shared pool).
+    pub schedule: Schedule,
+}
+
+/// Aggregate outcome of one service run.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub tenants: Vec<TenantReport>,
+    /// Every decision in global order (drives the live coordinator).
+    pub decisions: Vec<DecisionRecord>,
+    /// Virtual time the last task of any tenant finishes.
+    pub horizon: f64,
+    pub total_tasks: usize,
+    pub mean_stretch: f64,
+    pub max_stretch: f64,
+    /// Busy fraction per type over [0, horizon).
+    pub utilization: Vec<f64>,
+}
+
+impl ServiceReport {
+    /// Pair each tenant's schedule with its submission for the
+    /// tenant-aware merge validator
+    /// ([`validate_service`](crate::sim::validate_service)).
+    pub fn tenant_runs<'a>(&'a self, subs: &'a [Submission]) -> Vec<TenantRun<'a>> {
+        assert_eq!(subs.len(), self.tenants.len());
+        subs.iter()
+            .zip(&self.tenants)
+            .map(|(s, t)| TenantRun {
+                graph: &s.graph,
+                schedule: &t.schedule,
+                arrival: s.arrival,
+            })
+            .collect()
+    }
+}
+
+/// ready = max(tenant arrival, predecessors' completions); a task's
+/// predecessors are all decided by the time this runs because the order
+/// is topological and each tenant's stream is processed strictly in
+/// order (non-topological orders panic here).
+fn ready_time(
+    g: &TaskGraph,
+    arrival: f64,
+    placed: &[Option<Placement>],
+    tenant: usize,
+    j: TaskId,
+) -> f64 {
+    g.preds[j]
+        .iter()
+        .map(|&p| {
+            placed[p]
+                .unwrap_or_else(|| panic!("tenant {tenant}: order not topological at task {j}"))
+                .finish
+        })
+        .fold(arrival, f64::max)
+}
+
+/// Run the multi-tenant streaming service: merge the tenants' arrival
+/// streams over virtual time and take every decision through one shared
+/// [`PolicyEngine`].  O(total_tasks · (log tenants + Q log units)), plus
+/// one single-tenant rerun per submission for the ideal/stretch metrics
+/// (precompute those and use [`run_service_with_ideals`] when
+/// benchmarking the streaming engine itself).
+pub fn run_service(plat: &Platform, subs: &[Submission]) -> ServiceReport {
+    run_service_with_ideals(plat, subs, None)
+}
+
+/// [`run_service`] with precomputed per-tenant ideal makespans (one per
+/// submission: the makespan of `online_schedule` for that tenant's
+/// (graph, order, policy) on an empty pool).  `None` computes them here.
+pub fn run_service_with_ideals(
+    plat: &Platform,
+    subs: &[Submission],
+    ideals: Option<&[f64]>,
+) -> ServiceReport {
+    let n_tenants = subs.len();
+    if let Some(v) = ideals {
+        assert_eq!(v.len(), n_tenants, "one ideal makespan per submission");
+    }
+    for s in subs {
+        assert!(s.graph.n_tasks() > 0, "empty submission");
+        // re-checked here because the fields are public (Submission::new
+        // validates, but nothing stops callers mutating afterwards)
+        assert!(
+            s.arrival.is_finite() && s.arrival >= 0.0,
+            "bad arrival {}",
+            s.arrival
+        );
+        if requires_two_types(&s.policy) {
+            assert!(
+                plat.n_types() == 2,
+                "{} is defined for hybrid platforms",
+                s.policy.name()
+            );
+        }
+        assert_eq!(
+            s.graph.n_types(),
+            plat.n_types(),
+            "graph/platform type count mismatch"
+        );
+    }
+
+    let orders: Vec<Vec<TaskId>> = subs.iter().map(|s| s.order_vec()).collect();
+    let mut engine = PolicyEngine::new(plat);
+    let mut rngs: Vec<Option<Rng>> = subs
+        .iter()
+        .map(|s| match s.policy {
+            OnlinePolicy::Random(seed) => Some(Rng::new(seed)),
+            _ => None,
+        })
+        .collect();
+    let mut placements: Vec<Vec<Option<Placement>>> = subs
+        .iter()
+        .map(|s| vec![None; s.graph.n_tasks()])
+        .collect();
+    let mut latencies: Vec<Vec<f64>> = subs
+        .iter()
+        .map(|s| Vec::with_capacity(s.graph.n_tasks()))
+        .collect();
+    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+    let mut decisions = Vec::with_capacity(total_tasks);
+
+    // Stream heap: (arrival time, tenant, stream position, ready time).
+    // One outstanding arrival per tenant keeps the heap at O(tenants),
+    // and carrying the ready time computes each task's fold exactly once.
+    let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize, OrdF64)>> = BinaryHeap::new();
+    for (i, s) in subs.iter().enumerate() {
+        let r0 = ready_time(&s.graph, s.arrival, &placements[i], i, orders[i][0]);
+        heap.push(Reverse((OrdF64(s.arrival.max(r0)), i, 0, OrdF64(r0))));
+    }
+
+    while let Some(Reverse((OrdF64(at), i, pos, OrdF64(ready)))) = heap.pop() {
+        let g = &subs[i].graph;
+        let j = orders[i][pos];
+        debug_assert!(placements[i][j].is_none(), "tenant {i}: task {j} decided twice");
+        debug_assert!(at >= ready, "stream time regressed");
+
+        let td = Instant::now();
+        let p = engine.decide(g, plat, j, ready, &subs[i].policy, rngs[i].as_mut());
+        latencies[i].push(td.elapsed().as_secs_f64() + 1e-9);
+        placements[i][j] = Some(p);
+        decisions.push(DecisionRecord {
+            tenant: i,
+            task: j,
+            time: at,
+        });
+
+        if pos + 1 < orders[i].len() {
+            let r_next = ready_time(g, subs[i].arrival, &placements[i], i, orders[i][pos + 1]);
+            heap.push(Reverse((OrdF64(at.max(r_next)), i, pos + 1, OrdF64(r_next))));
+        }
+    }
+
+    // per-tenant reports
+    let mut tenants = Vec::with_capacity(n_tenants);
+    let mut horizon = 0.0f64;
+    for (i, s) in subs.iter().enumerate() {
+        let schedule = Schedule::from_placements(
+            placements[i]
+                .iter()
+                .map(|p| p.expect("every task decided"))
+                .collect(),
+        );
+        let completion = schedule.makespan;
+        horizon = horizon.max(completion);
+        let ideal = match ideals {
+            Some(v) => v[i],
+            None => online_schedule(&s.graph, plat, &orders[i], &s.policy).makespan,
+        };
+        let flow = completion - s.arrival;
+        tenants.push(TenantReport {
+            tenant: i,
+            app: s.graph.app.clone(),
+            n_tasks: s.graph.n_tasks(),
+            arrival: s.arrival,
+            completion,
+            flow_time: flow,
+            ideal_makespan: ideal,
+            stretch: flow / ideal,
+            decision_latency: Summary::of(&latencies[i]),
+            schedule,
+        });
+    }
+
+    let stretches: Vec<f64> = tenants.iter().map(|t| t.stretch).collect();
+    let mut utilization = vec![0.0; plat.n_types()];
+    if horizon > 0.0 {
+        for t in &tenants {
+            for (q, w) in t.schedule.loads(plat.n_types()).iter().enumerate() {
+                utilization[q] += w / (horizon * plat.counts[q] as f64);
+            }
+        }
+    }
+    ServiceReport {
+        tenants,
+        decisions,
+        horizon,
+        total_tasks,
+        mean_stretch: if stretches.is_empty() {
+            0.0
+        } else {
+            stretches.iter().sum::<f64>() / stretches.len() as f64
+        },
+        max_stretch: stretches.iter().fold(0.0f64, |a, &b| a.max(b)),
+        utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, Builder};
+    use crate::sched::online::{online_by_id, random_topo_order};
+    use crate::sim::validate_service;
+
+    fn plat() -> Platform {
+        Platform::hybrid(4, 2)
+    }
+
+    #[test]
+    fn single_tenant_matches_online_exactly() {
+        let mut rng = Rng::new(41);
+        for case in 0..6u64 {
+            let g = gen::hybrid_dag(&mut rng, 50, 0.1);
+            for policy in [
+                OnlinePolicy::ErLs,
+                OnlinePolicy::Eft,
+                OnlinePolicy::Greedy,
+                OnlinePolicy::Random(case),
+                OnlinePolicy::R1,
+                OnlinePolicy::R2,
+                OnlinePolicy::R3,
+            ] {
+                let expect = online_by_id(&g, &plat(), &policy);
+                let subs = vec![Submission::new(g.clone(), 0.0, policy)];
+                let report = run_service(&plat(), &subs);
+                assert_eq!(report.tenants[0].schedule.placements, expect.placements);
+                assert_eq!(report.tenants[0].stretch, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_tenant_custom_order_matches_online() {
+        let mut rng = Rng::new(43);
+        let g = gen::hybrid_dag(&mut rng, 40, 0.12);
+        let order = random_topo_order(&g, &mut rng);
+        let expect = online_schedule(&g, &plat(), &order, &OnlinePolicy::ErLs);
+        let subs =
+            vec![Submission::new(g.clone(), 0.0, OnlinePolicy::ErLs).with_order(order)];
+        let report = run_service(&plat(), &subs);
+        assert_eq!(report.tenants[0].schedule.placements, expect.placements);
+    }
+
+    #[test]
+    fn arrival_delays_all_tenant_starts() {
+        let mut b = Builder::new("late");
+        b.add_task("t", vec![2.0, 1.0]);
+        let g = b.build();
+        let subs = vec![Submission::new(g, 10.0, OnlinePolicy::Eft)];
+        let report = run_service(&plat(), &subs);
+        let p = report.tenants[0].schedule.placements[0];
+        assert!(p.start >= 10.0);
+        assert_eq!(report.tenants[0].flow_time, p.finish - 10.0);
+    }
+
+    #[test]
+    fn contention_serializes_on_one_unit() {
+        // two single-task tenants, CPU-faster task, 1 CPU + 1 GPU,
+        // Greedy: both pick the CPU, tenant 1 queues behind tenant 0
+        let mk = || {
+            let mut b = Builder::new("one");
+            b.add_task("t", vec![2.0, 50.0]);
+            b.build()
+        };
+        let plat = Platform::hybrid(1, 1);
+        let subs = vec![
+            Submission::new(mk(), 0.0, OnlinePolicy::Greedy),
+            Submission::new(mk(), 0.0, OnlinePolicy::Greedy),
+        ];
+        let report = run_service(&plat, &subs);
+        assert_eq!(report.tenants[0].schedule.placements[0].start, 0.0);
+        assert_eq!(report.tenants[1].schedule.placements[0].start, 2.0);
+        assert_eq!(report.tenants[0].stretch, 1.0);
+        assert_eq!(report.tenants[1].stretch, 2.0);
+        assert!((report.horizon - 4.0).abs() < 1e-12);
+        assert_eq!(report.max_stretch, 2.0);
+        validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn streams_interleave_by_arrival_time() {
+        // tenant 1 arrives while tenant 0's chain is still streaming:
+        // decisions must interleave by virtual time, not tenant order
+        let chain = |len: usize| {
+            let mut b = Builder::new("chain");
+            let mut prev = None;
+            for _ in 0..len {
+                let t = b.add_task("t", vec![1.0, 1.0]);
+                if let Some(p) = prev {
+                    b.add_arc(p, t);
+                }
+                prev = Some(t);
+            }
+            b.build()
+        };
+        let plat = Platform::hybrid(2, 1);
+        let subs = vec![
+            Submission::new(chain(6), 0.0, OnlinePolicy::Greedy),
+            Submission::new(chain(2), 2.5, OnlinePolicy::Greedy),
+        ];
+        let report = run_service(&plat, &subs);
+        // tenant 1's first decision lands between tenant 0's 3rd and 4th
+        let times: Vec<(usize, f64)> = report
+            .decisions
+            .iter()
+            .map(|d| (d.tenant, d.time))
+            .collect();
+        let t1_first = times.iter().position(|&(t, _)| t == 1).unwrap();
+        assert!(t1_first > 2 && t1_first < 6, "interleave position {t1_first}");
+        for w in report.decisions.windows(2) {
+            assert!(w[0].time <= w[1].time, "decision times must be sorted");
+        }
+        validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn mixed_policies_share_one_pool_feasibly() {
+        let mut rng = Rng::new(57);
+        let policies = [
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(3),
+        ];
+        let subs: Vec<Submission> = (0..8)
+            .map(|t| {
+                let g = gen::hybrid_dag(&mut rng, 30, 0.1);
+                Submission::new(g, t as f64 * 3.0, policies[t % policies.len()].clone())
+            })
+            .collect();
+        let report = run_service(&plat(), &subs);
+        assert_eq!(report.total_tasks, 8 * 30);
+        assert_eq!(report.decisions.len(), 8 * 30);
+        // list-scheduling anomalies mean contention is not *pointwise*
+        // worse, but stretches must be positive, finite and bounded by
+        // the reported max
+        assert!(report.mean_stretch > 0.0 && report.mean_stretch.is_finite());
+        assert!(report.max_stretch >= report.mean_stretch - 1e-12);
+        for u in &report.utilization {
+            assert!(*u >= 0.0 && *u <= 1.0 + 1e-9);
+        }
+        validate_service(&plat(), &report.tenant_runs(&subs)).unwrap();
+        // per-tenant decision latency was measured for every task
+        for t in &report.tenants {
+            assert_eq!(t.decision_latency.n, 30);
+            assert!(t.completion >= t.arrival);
+        }
+    }
+}

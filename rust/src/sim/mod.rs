@@ -90,58 +90,69 @@ impl Schedule {
     }
 }
 
-/// Full feasibility validation of a schedule.
-pub fn validate(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), String> {
+/// Per-tenant checks shared by [`validate_schedule`] and
+/// [`validate_service`]: placement count, type/unit ranges, exact
+/// durations, starts after `arrival`, finishes within the schedule's
+/// makespan, precedences respected.  Unit overlap is checked separately
+/// (for a service it must run over the *merged* pool view).
+fn check_tenant(
+    g: &TaskGraph,
+    plat: &Platform,
+    s: &Schedule,
+    arrival: f64,
+    who: &str,
+) -> Result<(), String> {
     let n = g.n_tasks();
     if s.placements.len() != n {
         return Err(format!(
-            "schedule has {} placements for {} tasks",
+            "{who}schedule has {} placements for {} tasks",
             s.placements.len(),
             n
         ));
     }
     for (j, p) in s.placements.iter().enumerate() {
         if p.ptype >= plat.n_types() {
-            return Err(format!("task {j}: type {} out of range", p.ptype));
+            return Err(format!("{who}task {j}: type {} out of range", p.ptype));
         }
         if p.unit >= plat.counts[p.ptype] {
-            return Err(format!("task {j}: unit {} out of range", p.unit));
+            return Err(format!("{who}task {j}: unit {} out of range", p.unit));
         }
-        if p.start < -1e-9 {
-            return Err(format!("task {j}: negative start {}", p.start));
+        if p.start < arrival - 1e-9 {
+            return Err(format!(
+                "{who}task {j}: start {} before arrival {arrival}",
+                p.start
+            ));
         }
         let want = g.time_on(j, p.ptype);
         if (p.finish - p.start - want).abs() > 1e-6 * (1.0 + want) {
             return Err(format!(
-                "task {j}: duration {} != allocated time {}",
+                "{who}task {j}: duration {} != allocated time {}",
                 p.finish - p.start,
                 want
             ));
         }
         if p.finish > s.makespan + 1e-6 {
-            return Err(format!("task {j} finishes after makespan"));
+            return Err(format!("{who}task {j} finishes after makespan"));
         }
     }
-    // precedence
     for j in 0..n {
         for &succ in &g.succs[j] {
             if s.placements[succ].start < s.placements[j].finish - 1e-6 {
                 return Err(format!(
-                    "precedence violated: {j} finishes {} but {succ} starts {}",
+                    "{who}precedence violated: {j} finishes {} but {succ} starts {}",
                     s.placements[j].finish, s.placements[succ].start
                 ));
             }
         }
     }
-    // no overlap per unit
-    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, usize)>> =
-        std::collections::HashMap::new();
-    for (j, p) in s.placements.iter().enumerate() {
-        per_unit
-            .entry((p.ptype, p.unit))
-            .or_default()
-            .push((p.start, p.finish, j));
-    }
+    Ok(())
+}
+
+/// No-overlap check over a merged per-unit interval view; `label` names
+/// the task (e.g. "3" or "t2/7" for tenant 2's task 7).
+fn check_no_overlap(
+    per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>>,
+) -> Result<(), String> {
     for ((q, u), mut iv) in per_unit {
         iv.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in iv.windows(2) {
@@ -154,6 +165,58 @@ pub fn validate(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), Stri
         }
     }
     Ok(())
+}
+
+/// Full feasibility validation of a single-application schedule: every
+/// task placed exactly once on a valid unit, exact durations, all
+/// precedences respected, and no two tasks overlapping on one unit.
+/// The canonical checker behind the `schedule_invariants` property suite
+/// and (via [`validate_service`]) the multi-tenant service mode.
+pub fn validate_schedule(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), String> {
+    check_tenant(g, plat, s, 0.0, "")?;
+    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>> =
+        std::collections::HashMap::new();
+    for (j, p) in s.placements.iter().enumerate() {
+        per_unit
+            .entry((p.ptype, p.unit))
+            .or_default()
+            .push((p.start, p.finish, j.to_string()));
+    }
+    check_no_overlap(per_unit)
+}
+
+/// Back-compat name for [`validate_schedule`].
+pub fn validate(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), String> {
+    validate_schedule(g, plat, s)
+}
+
+/// One tenant's run inside a shared-pool service: its graph, its
+/// placements (absolute virtual times on the shared pool), and the
+/// virtual time it arrived.
+#[derive(Clone, Copy)]
+pub struct TenantRun<'a> {
+    pub graph: &'a TaskGraph,
+    pub schedule: &'a Schedule,
+    pub arrival: f64,
+}
+
+/// Tenant-aware schedule merge + validation: per-tenant feasibility
+/// (placements, durations, precedences, starts after the tenant's
+/// arrival) plus the pool-wide invariant that no two tasks of *any*
+/// tenants overlap on one unit.
+pub fn validate_service(plat: &Platform, runs: &[TenantRun]) -> Result<(), String> {
+    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>> =
+        std::collections::HashMap::new();
+    for (i, r) in runs.iter().enumerate() {
+        check_tenant(r.graph, plat, r.schedule, r.arrival, &format!("tenant {i}: "))?;
+        for (j, p) in r.schedule.placements.iter().enumerate() {
+            per_unit
+                .entry((p.ptype, p.unit))
+                .or_default()
+                .push((p.start, p.finish, format!("t{i}/{j}")));
+        }
+    }
+    check_no_overlap(per_unit)
 }
 
 /// Validation for *realized* (wall-clock measured) schedules from the
@@ -276,6 +339,59 @@ mod tests {
             Placement { ptype: 1, unit: 0, start: 1.0, finish: 2.0 },
         ]);
         assert!(validate(&g, &plat(), &s).unwrap_err().contains("unit"));
+    }
+
+    #[test]
+    fn service_cross_tenant_overlap_caught() {
+        let mut b = Builder::new("one");
+        b.add_task("t", vec![2.0, 1.0]);
+        let g = b.build();
+        let s0 = Schedule::from_placements(vec![Placement {
+            ptype: 0,
+            unit: 0,
+            start: 0.0,
+            finish: 2.0,
+        }]);
+        let s1 = Schedule::from_placements(vec![Placement {
+            ptype: 0,
+            unit: 0,
+            start: 1.0,
+            finish: 3.0,
+        }]);
+        let runs = [
+            TenantRun { graph: &g, schedule: &s0, arrival: 0.0 },
+            TenantRun { graph: &g, schedule: &s1, arrival: 1.0 },
+        ];
+        let err = validate_service(&plat(), &runs).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+        // same placements on distinct units are fine
+        let s1b = Schedule::from_placements(vec![Placement {
+            ptype: 0,
+            unit: 1,
+            start: 1.0,
+            finish: 3.0,
+        }]);
+        let runs_ok = [
+            TenantRun { graph: &g, schedule: &s0, arrival: 0.0 },
+            TenantRun { graph: &g, schedule: &s1b, arrival: 1.0 },
+        ];
+        validate_service(&plat(), &runs_ok).unwrap();
+    }
+
+    #[test]
+    fn service_start_before_arrival_caught() {
+        let mut b = Builder::new("one");
+        b.add_task("t", vec![2.0, 1.0]);
+        let g = b.build();
+        let s = Schedule::from_placements(vec![Placement {
+            ptype: 0,
+            unit: 0,
+            start: 0.0,
+            finish: 2.0,
+        }]);
+        let runs = [TenantRun { graph: &g, schedule: &s, arrival: 5.0 }];
+        let err = validate_service(&plat(), &runs).unwrap_err();
+        assert!(err.contains("before arrival"), "{err}");
     }
 
     #[test]

@@ -115,7 +115,7 @@ fn lp_cache_roundtrip_through_campaign_shape() {
     let g = chameleon::potrs(5, &CostModel::hybrid(128), 4);
     let plat = Platform::hybrid(16, 2);
     let solved = solve_hlp(&g, &plat, LpBackendKind::RustPdhg, 1e-4);
-    let key = cache_key("potrs-nb5-bs128", &plat.label(), 2, 1e-4);
+    let key = cache_key("potrs-nb5-bs128", &plat.label(), 2, 1e-4, 80_000);
     let mut cache = LpCache::default();
     cache.put(&key, &solved);
     cache.save(&path).unwrap();

@@ -1,0 +1,170 @@
+//! Scheduler-invariant property suite: for every scheduler in the crate
+//! — EST, list/OLS, HEFT, every online policy, and the multi-tenant
+//! service mode — on ~100 random DAG/platform draws, the produced
+//! schedule must satisfy:
+//!
+//!   (a) no two tasks overlap on one unit,
+//!   (b) every task starts after all its predecessors finish,
+//!   (c) every task is placed exactly once on a valid unit index
+//!       (with its exact allocated duration).
+//!
+//! All three invariants are checked through the shared
+//! `sim::validate_schedule` helper (and its tenant-aware merge
+//! `sim::validate_service` for the service mode), the same checkers the
+//! service mode uses internally in its own tests.
+
+use hetsched::graph::gen;
+use hetsched::graph::paths::ols_rank;
+use hetsched::platform::Platform;
+use hetsched::sched::est::est_schedule;
+use hetsched::sched::heft::heft_schedule;
+use hetsched::sched::list::list_schedule;
+use hetsched::sched::online::{online_schedule, random_topo_order, OnlinePolicy};
+use hetsched::sched::service::{run_service, Submission};
+use hetsched::sim::{validate_schedule, validate_service};
+use hetsched::substrate::rng::Rng;
+
+fn hybrid_platform(rng: &mut Rng) -> Platform {
+    Platform::hybrid(1 + rng.below(8), 1 + rng.below(4))
+}
+
+fn random_alloc(rng: &mut Rng, n: usize, n_types: usize) -> Vec<usize> {
+    (0..n).map(|_| rng.below(n_types)).collect()
+}
+
+fn all_online_policies(seed: u64) -> Vec<OnlinePolicy> {
+    vec![
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed),
+        OnlinePolicy::R1,
+        OnlinePolicy::R2,
+        OnlinePolicy::R3,
+    ]
+}
+
+#[test]
+fn est_list_heft_invariants_on_random_hybrid_draws() {
+    let mut rng = Rng::new(0xE57);
+    for draw in 0..100u64 {
+        let n = 15 + rng.below(50);
+        let density = 0.03 + 0.2 * rng.f64();
+        let g = gen::hybrid_dag(&mut rng, n, density);
+        let plat = hybrid_platform(&mut rng);
+        let alloc = random_alloc(&mut rng, n, 2);
+
+        let s = est_schedule(&g, &plat, &alloc);
+        validate_schedule(&g, &plat, &s).unwrap_or_else(|e| panic!("EST draw {draw}: {e}"));
+        assert_eq!(s.allocation(), alloc, "EST must respect the allocation");
+
+        let prio = ols_rank(&g, &alloc);
+        let s = list_schedule(&g, &plat, &alloc, &prio);
+        validate_schedule(&g, &plat, &s).unwrap_or_else(|e| panic!("OLS draw {draw}: {e}"));
+
+        let s = heft_schedule(&g, &plat);
+        validate_schedule(&g, &plat, &s).unwrap_or_else(|e| panic!("HEFT draw {draw}: {e}"));
+    }
+}
+
+#[test]
+fn online_policy_invariants_on_random_hybrid_draws() {
+    let mut rng = Rng::new(0x0A1);
+    for draw in 0..100u64 {
+        let n = 15 + rng.below(40);
+        let g = gen::hybrid_dag(&mut rng, n, 0.02 + 0.15 * rng.f64());
+        let plat = hybrid_platform(&mut rng);
+        let order = random_topo_order(&g, &mut rng);
+        for policy in all_online_policies(draw) {
+            let s = online_schedule(&g, &plat, &order, &policy);
+            validate_schedule(&g, &plat, &s)
+                .unwrap_or_else(|e| panic!("{} draw {draw}: {e}", policy.name()));
+        }
+    }
+}
+
+#[test]
+fn three_type_scheduler_invariants() {
+    // the Q-type generalizations: EST / list / HEFT / type-agnostic
+    // online policies on 3-type platforms
+    let mut rng = Rng::new(0x333);
+    for draw in 0..30u64 {
+        let n = 15 + rng.below(35);
+        let g = gen::random_dag(&mut rng, n, 0.02 + 0.1 * rng.f64(), 3);
+        let plat = Platform::new(vec![
+            1 + rng.below(6),
+            1 + rng.below(3),
+            1 + rng.below(3),
+        ]);
+        let alloc = random_alloc(&mut rng, n, 3);
+
+        let s = est_schedule(&g, &plat, &alloc);
+        validate_schedule(&g, &plat, &s).unwrap_or_else(|e| panic!("EST3 draw {draw}: {e}"));
+        let prio = ols_rank(&g, &alloc);
+        let s = list_schedule(&g, &plat, &alloc, &prio);
+        validate_schedule(&g, &plat, &s).unwrap_or_else(|e| panic!("OLS3 draw {draw}: {e}"));
+        let s = heft_schedule(&g, &plat);
+        validate_schedule(&g, &plat, &s).unwrap_or_else(|e| panic!("HEFT3 draw {draw}: {e}"));
+        for policy in [
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(draw),
+        ] {
+            let s = online_schedule(&g, &plat, &(0..n).collect::<Vec<_>>(), &policy);
+            validate_schedule(&g, &plat, &s)
+                .unwrap_or_else(|e| panic!("{}3 draw {draw}: {e}", policy.name()));
+        }
+    }
+}
+
+#[test]
+fn service_mode_invariants_on_random_multi_tenant_draws() {
+    // ~25 service draws × 2–5 tenants each: per-tenant precedence +
+    // pool-wide no-overlap through the tenant-aware merge validator
+    let mut rng = Rng::new(0x5E2);
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(12),
+        OnlinePolicy::R2,
+    ];
+    for draw in 0..25u64 {
+        let plat = hybrid_platform(&mut rng);
+        let n_tenants = 2 + rng.below(4);
+        let subs: Vec<Submission> = (0..n_tenants)
+            .map(|t| {
+                let n = 10 + rng.below(30);
+                let g = gen::hybrid_dag(&mut rng, n, 0.03 + 0.15 * rng.f64());
+                let arrival = rng.f64() * 20.0;
+                Submission::new(g, arrival, policies[(draw as usize + t) % policies.len()].clone())
+            })
+            .collect();
+        let report = run_service(&plat, &subs);
+        validate_service(&plat, &report.tenant_runs(&subs))
+            .unwrap_or_else(|e| panic!("service draw {draw}: {e}"));
+        // every task decided exactly once, globally
+        let total: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+        assert_eq!(report.decisions.len(), total);
+        assert_eq!(report.total_tasks, total);
+    }
+}
+
+#[test]
+fn service_single_tenant_golden_parity_with_online() {
+    // acceptance: single-tenant service-mode placements match
+    // sched::online exactly, for every policy, across random draws
+    let mut rng = Rng::new(0x90D);
+    for draw in 0..12u64 {
+        let g = gen::hybrid_dag(&mut rng, 20 + rng.below(40), 0.1);
+        let plat = hybrid_platform(&mut rng);
+        let order = random_topo_order(&g, &mut rng);
+        for policy in all_online_policies(draw) {
+            let expect = online_schedule(&g, &plat, &order, &policy);
+            let subs =
+                vec![Submission::new(g.clone(), 0.0, policy).with_order(order.clone())];
+            let report = run_service(&plat, &subs);
+            assert_eq!(report.tenants[0].schedule.placements, expect.placements);
+        }
+    }
+}
