@@ -41,6 +41,33 @@ if [[ "${1:-}" == "--perf" ]]; then
             || { echo "BENCH_service.json is not valid JSON" >&2; exit 1; }
     fi
     cat BENCH_service.json
+
+    echo "== perf gate: batched warm-start LP driver (writes BENCH_lp.json) =="
+    cargo bench --bench lp_batch
+    if [[ ! -s BENCH_lp.json ]]; then
+        echo "BENCH_lp.json missing or empty" >&2
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PY' || exit 1
+import json, sys
+with open("BENCH_lp.json") as f:
+    r = json.load(f)
+cold = r["cold"]["wall_s"]
+warm = r["warm"]["wall_s"]
+if warm > cold:
+    sys.exit(f"warm-started grid ({warm:.3f} s) slower than cold per-solve baseline ({cold:.3f} s)")
+# thread-count-independent work gate: total PDHG iterations (5% slack —
+# an individual warm seed is not guaranteed to help, the gate is for
+# systematic regressions)
+wi, ci = r["warm"]["iters"], r["cold_contracted"]["iters"]
+if wi > ci * 1.05:
+    sys.exit(f"warm-started grid needed >5% more iterations ({wi:.0f}) than per-item contracted solves ({ci:.0f})")
+print(f"lp gate OK: warm {warm:.3f} s <= cold {cold:.3f} s ({r['speedup_warm_vs_cold']:.2f}x; "
+      f"fair parallel baseline {r['speedup_warm_vs_cold_parallel']:.2f}x; iters {wi:.0f} <= {ci:.0f})")
+PY
+    fi
+    cat BENCH_lp.json
 fi
 
 echo "CI OK"

@@ -1,0 +1,311 @@
+//! Bench: the batched warm-start LP subsystem on the paper grid
+//! (EXPERIMENTS.md §LP).  Writes BENCH_lp.json; `ci.sh --perf` requires
+//! the file to parse and the batched+warm grid total to be no slower
+//! than the cold per-solve baseline.
+//!
+//! Five ways to solve the same (instance × machine-config) HLP grid:
+//!   cold            — per-item sequential solves, uncontracted models
+//!                     (the per-solve baseline of the acceptance gate)
+//!   cold_parallel   — per-item solves over `parallel_map`, uncontracted:
+//!                     the *pre-subsystem campaign path*, i.e. the fair
+//!                     wall-clock baseline at equal worker count
+//!   cold_contracted — per-item sequential, series chains contracted
+//!                     (isolates the chain-dropping win)
+//!   batched         — all LPs through the shared-pool batch driver,
+//!                     no warm chaining
+//!   warm            — the full subsystem: batched + chain contraction +
+//!                     per-instance primal/dual warm chains + escalating
+//!                     budgets (exactly what `experiments::driver` runs)
+//!
+//! Gates: warm wall < cold wall (per-solve baseline), and warm total
+//! iterations ≤ cold_contracted total iterations (the work win, which
+//! unlike wall clock cannot be bought with thread count; chain heads
+//! are identical solves, warm seeding only removes iterations).
+//!
+//! Set HETSCHED_BENCH_QUICK=1 for a reduced grid (4 configs, 1 app);
+//! set HETSCHED_BENCH_FULL=1 to add a Scale::Full-sized 10k-task row.
+
+use hetsched::algos::{build_hlp_job, solve_alloc_grid};
+use hetsched::alloc::greedy_min_time;
+use hetsched::graph::TaskGraph;
+use hetsched::lp::batch::{solve_batch, BatchJob};
+use hetsched::lp::chain::{plan_chains, ChainPlan};
+use hetsched::lp::pdhg::{solve_rust, DriveOpts};
+use hetsched::platform::{self, Platform};
+use hetsched::substrate::json::Json;
+use hetsched::substrate::pool::parallel_map;
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin};
+use std::time::Instant;
+
+const TOL: f64 = 1e-4;
+const MAX_ITERS: usize = 60_000;
+
+struct GridRun {
+    wall_s: f64,
+    total_iters: usize,
+    objs: Vec<f64>,
+}
+
+fn section(r: &GridRun) -> Json {
+    Json::obj(vec![
+        ("wall_s", Json::Num(r.wall_s)),
+        ("iters", Json::Num(r.total_iters as f64)),
+    ])
+}
+
+fn solve_one(g: &TaskGraph, plat: &Platform, contracted: bool) -> hetsched::lp::LpSolution {
+    let plan = if contracted {
+        plan_chains(g)
+    } else {
+        ChainPlan::default() // identity contraction: the uncontracted model
+    };
+    let (lp, warm, _) = build_hlp_job(g, plat, &greedy_min_time(g), &plan);
+    solve_rust(
+        &lp,
+        &DriveOpts {
+            tol: TOL,
+            max_iters: MAX_ITERS,
+            warm_start: Some(warm),
+            ..Default::default()
+        },
+    )
+}
+
+/// cold per-solve baseline: sequential, one LP at a time.
+fn run_cold(items: &[(&TaskGraph, &Platform)], contracted: bool) -> GridRun {
+    let t = Instant::now();
+    let mut total_iters = 0;
+    let mut objs = Vec::with_capacity(items.len());
+    for &(g, plat) in items {
+        let sol = solve_one(g, plat, contracted);
+        total_iters += sol.iters;
+        objs.push(sol.obj);
+    }
+    GridRun {
+        wall_s: t.elapsed().as_secs_f64(),
+        total_iters,
+        objs,
+    }
+}
+
+/// the pre-subsystem campaign path: per-item solves over the worker
+/// pool (fair wall-clock baseline at equal worker count).
+fn run_cold_parallel(items: &[(&TaskGraph, &Platform)], workers: usize) -> GridRun {
+    let t = Instant::now();
+    let sols = parallel_map(items.to_vec(), workers, |(g, plat)| {
+        solve_one(g, plat, false)
+    });
+    GridRun {
+        wall_s: t.elapsed().as_secs_f64(),
+        total_iters: sols.iter().map(|s| s.iters).sum(),
+        objs: sols.iter().map(|s| s.obj).collect(),
+    }
+}
+
+/// batch driver without warm chaining (independent jobs, shared pool).
+fn run_batched(items: &[(&TaskGraph, &Platform)], workers: usize) -> GridRun {
+    let t = Instant::now();
+    let jobs: Vec<BatchJob> = items
+        .iter()
+        .map(|&(g, plat)| {
+            let (lp, warm, _) = build_hlp_job(g, plat, &greedy_min_time(g), &plan_chains(g));
+            BatchJob::cold(
+                lp,
+                DriveOpts {
+                    tol: TOL,
+                    max_iters: MAX_ITERS,
+                    warm_start: Some(warm),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    let sols = solve_batch(jobs, workers);
+    GridRun {
+        wall_s: t.elapsed().as_secs_f64(),
+        total_iters: sols.iter().map(|s| s.iters).sum(),
+        objs: sols.iter().map(|s| s.obj).collect(),
+    }
+}
+
+/// the full subsystem, exactly as the campaign driver calls it.
+fn run_warm(items: &[(&TaskGraph, &Platform)], workers: usize) -> GridRun {
+    let t = Instant::now();
+    let sols = solve_alloc_grid(items, TOL, MAX_ITERS, workers);
+    GridRun {
+        wall_s: t.elapsed().as_secs_f64(),
+        total_iters: sols.iter().map(|s| s.sol.iters).sum(),
+        objs: sols.iter().map(|s| s.sol.obj).collect(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("HETSCHED_BENCH_QUICK").is_ok();
+    let cm = CostModel::hybrid(320);
+    let apps: Vec<(&str, TaskGraph)> = if quick {
+        vec![("potrf-nb5", chameleon::potrf(5, &cm, 3))]
+    } else {
+        vec![
+            ("potrf-nb5", chameleon::potrf(5, &cm, 3)),
+            ("posv-nb5", chameleon::posv(5, &cm, 3)),
+            ("forkjoin-w100-p2", forkjoin::forkjoin(100, 2, 1, 2026)),
+        ]
+    };
+    let configs: Vec<Platform> = if quick {
+        platform::reduced_two_type_configs()
+    } else {
+        platform::paper_two_type_configs()
+    };
+    // instance-major grid order: each app's configs are consecutive, so
+    // solve_alloc_grid chains warm starts along the config axis
+    let mut items: Vec<(&TaskGraph, &Platform)> = Vec::new();
+    for (_, g) in &apps {
+        for cfg in &configs {
+            items.push((g, cfg));
+        }
+    }
+    let rows_dropped: usize = apps
+        .iter()
+        .map(|(_, g)| plan_chains(g).rows_dropped())
+        .sum();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    println!(
+        "== lp_batch: {} apps x {} configs = {} HLPs, tol {TOL}, {} workers ==",
+        apps.len(),
+        configs.len(),
+        items.len(),
+        workers
+    );
+
+    let cold = run_cold(&items, false);
+    println!(
+        "cold (per-solve, uncontracted):  {:>8.3} s  {:>9} iters",
+        cold.wall_s, cold.total_iters
+    );
+    let cold_p = run_cold_parallel(&items, workers);
+    println!(
+        "cold_parallel (pre-subsystem):   {:>8.3} s  {:>9} iters",
+        cold_p.wall_s, cold_p.total_iters
+    );
+    let cold_c = run_cold(&items, true);
+    println!(
+        "cold (per-solve, contracted):    {:>8.3} s  {:>9} iters",
+        cold_c.wall_s, cold_c.total_iters
+    );
+    let batched = run_batched(&items, workers);
+    println!(
+        "batched (shared pool):           {:>8.3} s  {:>9} iters",
+        batched.wall_s, batched.total_iters
+    );
+    let warm = run_warm(&items, workers);
+    println!(
+        "batched+warm (grid chains):      {:>8.3} s  {:>9} iters",
+        warm.wall_s, warm.total_iters
+    );
+
+    // every variant must land on the same LP*s within tolerance
+    for (i, a) in cold.objs.iter().enumerate() {
+        let scale = 1.0 + a.abs();
+        for (label, run) in [
+            ("cold_parallel", &cold_p),
+            ("contracted", &cold_c),
+            ("batched", &batched),
+            ("warm", &warm),
+        ] {
+            let v = run.objs[i];
+            assert!(
+                (a - v).abs() < 5.0 * TOL * scale,
+                "LP {i}: {label} obj {v} vs cold {a}"
+            );
+        }
+    }
+
+    let speedup = cold.wall_s / warm.wall_s;
+    println!("-> batched+warm vs cold per-solve baseline: {speedup:.2}x");
+    println!(
+        "-> batched+warm vs cold_parallel (fair wall): {:.2}x; work: {} vs {} contracted iters",
+        cold_p.wall_s / warm.wall_s,
+        warm.total_iters,
+        cold_c.total_iters
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("lp_batch".into())),
+        (
+            "grid",
+            Json::obj(vec![
+                (
+                    "instances",
+                    Json::Arr(
+                        apps.iter().map(|(n, _)| Json::Str(n.to_string())).collect(),
+                    ),
+                ),
+                ("configs", Json::Num(configs.len() as f64)),
+                ("lps", Json::Num(items.len() as f64)),
+                ("tol", Json::Num(TOL)),
+                ("workers", Json::Num(workers as f64)),
+                ("chain_rows_dropped", Json::Num(rows_dropped as f64)),
+            ]),
+        ),
+        ("cold", section(&cold)),
+        ("cold_parallel", section(&cold_p)),
+        ("cold_contracted", section(&cold_c)),
+        ("batched", section(&batched)),
+        ("warm", section(&warm)),
+        ("speedup_warm_vs_cold", Json::Num(speedup)),
+        (
+            "speedup_warm_vs_cold_parallel",
+            Json::Num(cold_p.wall_s / warm.wall_s),
+        ),
+    ]);
+    std::fs::write("BENCH_lp.json", report.to_string()).expect("write BENCH_lp.json");
+    println!("wrote BENCH_lp.json");
+
+    // acceptance: the full subsystem beats the cold per-solve baseline on
+    // wall clock, and — the thread-count-independent claim — does less
+    // PDHG work than per-item contracted solves of the same grid
+    assert!(
+        warm.wall_s < cold.wall_s,
+        "acceptance: batched+warm ({:.3} s) must beat the cold per-solve baseline ({:.3} s)",
+        warm.wall_s,
+        cold.wall_s
+    );
+    // 5% slack: a warm seed is not *guaranteed* to help on every single
+    // LP (a misleading neighbor optimum can converge slower than the
+    // cold box projection); the gate catches systematic regressions, not
+    // the occasional bad seed
+    assert!(
+        warm.total_iters as f64 <= cold_c.total_iters as f64 * 1.05,
+        "acceptance: warm grid iterations ({}) must not exceed per-item contracted solves ({}) by >5%",
+        warm.total_iters,
+        cold_c.total_iters
+    );
+
+    if std::env::var("HETSCHED_BENCH_FULL").is_ok() {
+        // Scale::Full-sized row for EXPERIMENTS.md: a 10k-task fork-join
+        // on 128x16, cold vs warm-from-64x16
+        println!("\n== Scale::Full row: forkjoin w=1999 p=5 (10001 tasks) ==");
+        let big = forkjoin::forkjoin(1999, 5, 1, 2026);
+        let near = Platform::hybrid(64, 16);
+        let far = Platform::hybrid(128, 16);
+        let t = Instant::now();
+        let cold_big = run_cold(&[(&big, &far)], true);
+        println!(
+            "cold 128x16: obj {:.4}, {} iters in {:.3} s",
+            cold_big.objs[0], cold_big.total_iters, cold_big.wall_s
+        );
+        let items_big: Vec<(&TaskGraph, &Platform)> = vec![(&big, &near), (&big, &far)];
+        let warm_big = run_warm(&items_big, 2);
+        println!(
+            "warm chain 64x16 -> 128x16: objs {:.4}/{:.4}, {} iters in {:.3} s (total incl. cold head; wall {:.3} s)",
+            warm_big.objs[0],
+            warm_big.objs[1],
+            warm_big.total_iters,
+            warm_big.wall_s,
+            t.elapsed().as_secs_f64()
+        );
+    }
+}

@@ -12,13 +12,14 @@
 
 use crate::alloc::{greedy_min_time, Allocation};
 use crate::graph::TaskGraph;
+use crate::lp::chain;
 use crate::lp::model::{
     build_hlp, build_qhlp, hlp_warm_start, qhlp_warm_start, tighten_hlp_box,
     tighten_qhlp_box, HlpVars, QhlpVars,
 };
 
 use crate::lp::rounding::{round_hlp, round_qhlp};
-use crate::lp::LpSolution;
+use crate::lp::{LpSolution, SparseLp};
 use crate::platform::Platform;
 use crate::runtime::{self, LpBackendKind};
 use crate::sched::est::est_schedule;
@@ -55,8 +56,41 @@ pub struct AllocLp {
     pub alloc: Allocation,
 }
 
+/// Shared prelude of every HLP solve path — build the model, compute
+/// the greedy warm start, tighten the C/λ box to its feasible bound,
+/// contract series chains per `plan`.  The batched and per-item paths
+/// (and the lp_batch bench) all go through here, which is what the
+/// cache-interchangeability contract rests on: every path must solve
+/// the identical model from the identical start.  An empty `plan`
+/// (`ChainPlan::default()`) builds the uncontracted model.
+pub fn build_hlp_job(
+    g: &TaskGraph,
+    plat: &Platform,
+    greedy: &[usize],
+    plan: &chain::ChainPlan,
+) -> (SparseLp, Vec<f64>, HlpVars) {
+    let (mut lp, vars) = build_hlp(g, plat);
+    let warm = hlp_warm_start(g, plat, greedy, &vars);
+    tighten_hlp_box(&mut lp, &vars, warm[vars.lambda]);
+    (chain::contract(&lp, plan), warm, vars)
+}
+
+/// QHLP version of [`build_hlp_job`].
+pub fn build_qhlp_job(
+    g: &TaskGraph,
+    plat: &Platform,
+    greedy: &[usize],
+    plan: &chain::ChainPlan,
+) -> (SparseLp, Vec<f64>, QhlpVars) {
+    let (mut lp, vars) = build_qhlp(g, plat);
+    let warm = qhlp_warm_start(g, plat, greedy, &vars);
+    tighten_qhlp_box(&mut lp, &vars, warm[vars.lambda]);
+    (chain::contract(&lp, plan), warm, vars)
+}
+
 /// Solve + round HLP (2 types).  The greedy warm start both seeds PDHG
-/// and tightens the C/λ box to its (feasible) makespan bound.
+/// and tightens the C/λ box to its (feasible) makespan bound; series
+/// chains are contracted away before solving ([`crate::lp::chain`]).
 pub fn solve_hlp(g: &TaskGraph, plat: &Platform, backend: LpBackendKind, tol: f64) -> AllocLp {
     solve_hlp_capped(g, plat, backend, tol, crate::lp::pdhg::DriveOpts::default().max_iters)
 }
@@ -69,9 +103,8 @@ pub fn solve_hlp_capped(
     tol: f64,
     max_iters: usize,
 ) -> AllocLp {
-    let (mut lp, vars) = build_hlp(g, plat);
-    let warm = hlp_warm_start(g, plat, &greedy_min_time(g), &vars);
-    tighten_hlp_box(&mut lp, &vars, warm[vars.lambda]);
+    let (lp, warm, vars) =
+        build_hlp_job(g, plat, &greedy_min_time(g), &chain::plan_chains(g));
     let sol = runtime::solve_lp_capped(&lp, backend, tol, Some(warm), max_iters);
     let alloc = round_hlp(&sol.z, &vars);
     AllocLp { sol, alloc }
@@ -90,12 +123,94 @@ pub fn solve_qhlp_capped(
     tol: f64,
     max_iters: usize,
 ) -> AllocLp {
-    let (mut lp, vars) = build_qhlp(g, plat);
-    let warm = qhlp_warm_start(g, plat, &greedy_min_time(g), &vars);
-    tighten_qhlp_box(&mut lp, &vars, warm[vars.lambda]);
+    let (lp, warm, vars) =
+        build_qhlp_job(g, plat, &greedy_min_time(g), &chain::plan_chains(g));
     let sol = runtime::solve_lp_capped(&lp, backend, tol, Some(warm), max_iters);
     let alloc = round_qhlp(&sol.z, &vars, g);
     AllocLp { sol, alloc }
+}
+
+/// Batched allocation solves over a slice of the campaign grid: one
+/// (graph, platform) pair per entry, all solved concurrently by the
+/// batched PDHG driver ([`crate::lp::batch`]) over one worker pool.
+///
+/// Consecutive entries referring to the *same* graph (pointer equality —
+/// the campaign driver materializes each instance's graph once) form a
+/// warm-start chain: entry i seeds from entry i−1's final primal/dual
+/// iterates, and close grid neighbors ([`crate::lp::warm::CLOSE_DIST`])
+/// run under the shrunken escalating budget schedule.  Chain plans are
+/// computed once per graph.  Each LP still gets its own greedy warm
+/// start and box tightening (λ bounds must be feasible for *its*
+/// config), so the head of every chain behaves exactly like
+/// [`solve_hlp_capped`] / [`solve_qhlp_capped`] on the Rust backend.
+pub fn solve_alloc_grid(
+    items: &[(&TaskGraph, &Platform)],
+    tol: f64,
+    max_iters: usize,
+    workers: usize,
+) -> Vec<AllocLp> {
+    use crate::lp::batch::{solve_batch, BatchJob};
+    use crate::lp::pdhg::DriveOpts;
+    use crate::lp::warm::{grid_distance, CLOSE_DIST};
+
+    enum Vars {
+        Two(HlpVars),
+        Q(QhlpVars),
+    }
+
+    let mut jobs = Vec::with_capacity(items.len());
+    let mut vars_of = Vec::with_capacity(items.len());
+    // chain plan and greedy allocation depend only on the graph: hoist
+    // them across each graph's run of consecutive configs
+    let mut per_graph: Option<(crate::lp::chain::ChainPlan, Allocation)> = None;
+    for (idx, &(g, plat)) in items.iter().enumerate() {
+        assert_eq!(g.n_types(), plat.n_types(), "graph/platform type mismatch");
+        let same_graph_as_prev = idx > 0 && std::ptr::eq(items[idx - 1].0, g);
+        if !same_graph_as_prev {
+            per_graph = Some((chain::plan_chains(g), greedy_min_time(g)));
+        }
+        let (plan, greedy) = per_graph.as_ref().unwrap();
+        let (lp, warm, vars) = if g.n_types() == 2 {
+            let (lp, warm, v) = build_hlp_job(g, plat, greedy, plan);
+            (lp, warm, Vars::Two(v))
+        } else {
+            let (lp, warm, v) = build_qhlp_job(g, plat, greedy, plan);
+            (lp, warm, Vars::Q(v))
+        };
+        let (seed_from, warm_close) = if same_graph_as_prev {
+            let close =
+                grid_distance(&items[idx - 1].1.counts, &plat.counts) <= CLOSE_DIST;
+            (Some(idx - 1), close)
+        } else {
+            (None, false)
+        };
+        jobs.push(BatchJob {
+            lp,
+            opts: DriveOpts {
+                tol,
+                max_iters,
+                warm_start: Some(warm),
+                ..Default::default()
+            },
+            seed_from,
+            warm_close,
+        });
+        vars_of.push(vars);
+    }
+
+    let sols = solve_batch(jobs, workers);
+    items
+        .iter()
+        .zip(sols)
+        .zip(vars_of)
+        .map(|((&(g, _), sol), vars)| {
+            let alloc = match vars {
+                Vars::Two(v) => round_hlp(&sol.z, &v),
+                Vars::Q(v) => round_qhlp(&sol.z, &v, g),
+            };
+            AllocLp { sol, alloc }
+        })
+        .collect()
 }
 
 /// Run one offline algorithm; returns the schedule and (for the LP-based
@@ -179,6 +294,39 @@ mod tests {
             validate(&g, &plat, &s).unwrap();
             // Q(Q+1) = 12 certificate
             assert!(s.makespan <= 12.0 * qhlp.sol.obj * 1.05);
+        }
+    }
+
+    #[test]
+    fn alloc_grid_matches_per_item_solves() {
+        // the batched grid path (chain contraction + warm chaining) must
+        // land on the same LP* as per-item solves, within solver tolerance
+        let g = chameleon::potrf(5, &CostModel::hybrid(320), 3);
+        let g2 = chameleon::getrf(5, &CostModel::hybrid(128), 5);
+        let plats = [
+            Platform::hybrid(4, 2),
+            Platform::hybrid(8, 2),
+            Platform::hybrid(8, 4),
+        ];
+        let mut items: Vec<(&TaskGraph, &Platform)> = Vec::new();
+        for p in &plats {
+            items.push((&g, p));
+        }
+        for p in &plats {
+            items.push((&g2, p));
+        }
+        let grid = solve_alloc_grid(&items, 1e-4, 80_000, 3);
+        assert_eq!(grid.len(), 6);
+        for (i, &(gr, p)) in items.iter().enumerate() {
+            let solo = solve_hlp_capped(gr, p, LpBackendKind::RustPdhg, 1e-4, 80_000);
+            let scale = 1.0 + solo.sol.obj.abs();
+            assert!(
+                (grid[i].sol.obj - solo.sol.obj).abs() < 1e-3 * scale,
+                "item {i}: grid {} vs solo {}",
+                grid[i].sol.obj,
+                solo.sol.obj
+            );
+            assert_eq!(grid[i].alloc.len(), gr.n_tasks());
         }
     }
 

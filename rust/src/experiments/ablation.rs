@@ -190,6 +190,7 @@ pub fn ablate_pdhg(g: &TaskGraph, plat: &Platform, tol: f64) -> Vec<(String, usi
             max_iters: 150_000,
             ruiz_iters: if ruiz_on { 8 } else { 0 },
             warm_start: warm_on.then(|| warm.clone()),
+            ..Default::default()
         };
         let sol = if restart_on {
             drive(&lp, &opts, |scaled| RustChunk::new(scaled, 250))

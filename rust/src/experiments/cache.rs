@@ -2,6 +2,14 @@
 //! campaign (the paper: ~100 s for the biggest instance), and Figs. 3/4
 //! and 6/7 share the same (instance, config) LPs — so solved relaxations
 //! (objective + rounded allocation) are persisted as JSON.
+//!
+//! Since the batched warm-start driver landed, cache misses are solved
+//! by [`crate::lp::batch`] with warm-start chaining across the config
+//! grid.  The key stays exactly (instance, config, type count,
+//! tolerance, iteration budget): a warm-started solve certifies the same
+//! tolerance as a cold one (`rust/tests/lp_warm_batch.rs` pins LP*
+//! agreement), so entries written by cold, warm or batched solves are
+//! interchangeable and nothing about warm-starting may leak into the key.
 
 use std::collections::BTreeMap;
 use std::path::Path;

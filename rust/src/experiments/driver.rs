@@ -1,20 +1,33 @@
 //! Shared campaign driver: the Mutex<LpCache> + (instance × config)
-//! cross-product + `parallel_map` + solve-or-cache scaffolding that the
-//! offline, online and priority-ablation campaigns previously each
-//! carried a private copy of (ROADMAP "campaign-scaffolding dedup").
+//! cross-product + solve-or-cache scaffolding that the offline, online
+//! and priority-ablation campaigns previously each carried a private
+//! copy of (ROADMAP "campaign-scaffolding dedup").
 //!
-//! One call runs a whole campaign: for every (instance, machine config)
-//! work item, generate the task graph, fetch or solve the (Q)HLP
-//! relaxation — keyed by instance, config, type count, tolerance *and*
-//! PDHG iteration budget — and hand the solved allocation to the
-//! campaign's row closure, sharded across the worker pool with LP reuse
-//! through the shared cache file.
+//! One call runs a whole campaign in two sharded phases:
+//!
+//! 1. **Allocation phase** — every (instance, config) work item's (Q)HLP
+//!    relaxation is fetched from the cache or solved.  Cache misses go
+//!    through the *batched* multi-LP PDHG driver
+//!    ([`crate::algos::solve_alloc_grid`] → [`crate::lp::batch`]): one
+//!    shared worker pool advances all missing LPs concurrently, series
+//!    chains are contracted out of the models, and each instance's
+//!    config grid forms a warm-start chain (primal + dual iterates flow
+//!    from one config to the next, under the escalating budget
+//!    schedule).  Cache keys are unchanged — instance, config, type
+//!    count, tolerance *and* PDHG iteration budget — and a warm-started
+//!    solve certifies the same tolerance a cold solve would, so cached
+//!    LP* semantics are identical (pinned by `rust/tests/lp_warm_batch.rs`).
+//!    Backends that can't run batched (simplex, PJRT artifacts) keep the
+//!    per-item `parallel_map` path.
+//! 2. **Row phase** — the campaign's row closure runs per work item over
+//!    the worker pool, with rows kept in grid order.
 
 use std::sync::Mutex;
 
-use crate::algos::{solve_hlp_capped, solve_qhlp_capped, AllocLp};
+use crate::algos::{solve_alloc_grid, solve_hlp_capped, solve_qhlp_capped, AllocLp};
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
+use crate::runtime::{self, LpBackendKind};
 use crate::substrate::pool::parallel_map;
 use crate::workloads::{instances, Instance};
 
@@ -40,34 +53,126 @@ where
             .unwrap_or_default(),
     );
 
-    // work items: one per (instance, config)
-    let mut items = Vec::new();
-    for inst in &insts {
-        for cfg in &cfgs {
-            items.push((inst.clone(), cfg.clone()));
+    // work items: one per (instance, config), instance-major so each
+    // instance's configs are consecutive (the warm-start chain order);
+    // graphs are generated per slice below, never all at once — a
+    // Scale::Full campaign holds 10k+-task DAGs that must not all be
+    // resident simultaneously (generation is deterministic, so
+    // regenerating an instance's graph for the row phase is cheap and
+    // changes nothing)
+    let mut items: Vec<(usize, usize)> = Vec::new();
+    for ii in 0..insts.len() {
+        for ci in 0..cfgs.len() {
+            items.push((ii, ci));
         }
     }
+    let keys: Vec<String> = items
+        .iter()
+        .map(|&(ii, ci)| {
+            cache_key(
+                &insts[ii].label(),
+                &cfgs[ci].label(),
+                n_types,
+                opts.tol,
+                opts.max_iters,
+            )
+        })
+        .collect();
 
-    let records: Vec<Vec<R>> = parallel_map(items, opts.workers, |(inst, cfg)| {
-        let g = inst.generate(n_types);
-        let key = cache_key(&inst.label(), &cfg.label(), n_types, opts.tol, opts.max_iters);
-        let cached: Option<AllocLp> = cache.lock().unwrap().get(&key);
-        let alloc_lp = cached.unwrap_or_else(|| {
-            let solved = if n_types == 2 {
-                solve_hlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters)
+    // allocation phase: cache hits first, then solve the misses in
+    // instance-grouped slices (bounds resident graphs AND built LPs —
+    // the batch driver keeps every job's SparseLp alive for the batch's
+    // lifetime; slices still span several instances so the batch pool
+    // has independent warm chains to run in parallel)
+    let mut solved: Vec<Option<AllocLp>> = {
+        let cache = cache.lock().unwrap();
+        keys.iter().map(|k| cache.get(k)).collect()
+    };
+    let misses: Vec<usize> = (0..items.len()).filter(|&ix| solved[ix].is_none()).collect();
+    if !misses.is_empty() {
+        let batched = match opts.backend {
+            LpBackendKind::RustPdhg => true,
+            LpBackendKind::Auto => !runtime::pjrt_available(),
+            LpBackendKind::Pjrt | LpBackendKind::Simplex => false,
+        };
+        let min_insts = opts.workers.max(2);
+        let max_items = (8 * opts.workers.max(1)).max(cfgs.len());
+        let mut slice: Vec<usize> = Vec::new(); // miss ixs of whole instances
+        let mut slice_insts = 0usize;
+        let flush = |slice: &mut Vec<usize>, solved: &mut Vec<Option<AllocLp>>| {
+            if slice.is_empty() {
+                return;
+            }
+            // materialize this slice's graphs (one per distinct instance)
+            let mut local: Vec<(usize, TaskGraph)> = Vec::new();
+            for &ix in slice.iter() {
+                let ii = items[ix].0;
+                if local.last().map(|(i, _)| *i) != Some(ii) {
+                    local.push((ii, insts[ii].generate(n_types)));
+                }
+            }
+            fn graph_of<'a>(local: &'a [(usize, TaskGraph)], ii: usize) -> &'a TaskGraph {
+                &local.iter().find(|(i, _)| *i == ii).expect("slice graph").1
+            }
+            let fresh: Vec<AllocLp> = if batched {
+                let grid: Vec<(&TaskGraph, &Platform)> = slice
+                    .iter()
+                    .map(|&ix| (graph_of(&local, items[ix].0), &cfgs[items[ix].1]))
+                    .collect();
+                solve_alloc_grid(&grid, opts.tol, opts.max_iters, opts.workers)
             } else {
-                solve_qhlp_capped(&g, &cfg, opts.backend, opts.tol, opts.max_iters)
+                parallel_map(slice.clone(), opts.workers, |ix| {
+                    let (ii, ci) = items[ix];
+                    let g = graph_of(&local, ii);
+                    if n_types == 2 {
+                        solve_hlp_capped(g, &cfgs[ci], opts.backend, opts.tol, opts.max_iters)
+                    } else {
+                        solve_qhlp_capped(g, &cfgs[ci], opts.backend, opts.tol, opts.max_iters)
+                    }
+                })
             };
-            cache.lock().unwrap().put(&key, &solved);
-            solved
-        });
-        row_fn(&inst, &cfg, &g, &alloc_lp)
-    });
-
+            let mut cache = cache.lock().unwrap();
+            for (&ix, lp) in slice.iter().zip(fresh) {
+                cache.put(&keys[ix], &lp);
+                solved[ix] = Some(lp);
+            }
+            slice.clear();
+        };
+        let mut prev_inst: Option<usize> = None;
+        for &ix in &misses {
+            let ii = items[ix].0;
+            if prev_inst != Some(ii) {
+                // instance boundary: flush once the slice is big enough
+                if slice_insts >= min_insts || slice.len() >= max_items {
+                    flush(&mut slice, &mut solved);
+                    slice_insts = 0;
+                }
+                slice_insts += 1;
+                prev_inst = Some(ii);
+            }
+            slice.push(ix);
+        }
+        flush(&mut slice, &mut solved);
+    }
     if let Some(path) = &opts.cache_path {
         cache.lock().unwrap().save(path).ok();
     }
-    records.into_iter().flatten().collect()
+
+    // row phase: one instance at a time (its graph resident only here),
+    // the instance's items sharded over the pool, rows kept in grid order
+    let mut solved_iter = solved.into_iter().map(Option::unwrap);
+    let mut records: Vec<R> = Vec::new();
+    for inst in &insts {
+        let g = inst.generate(n_types);
+        let work: Vec<(usize, AllocLp)> = (0..cfgs.len())
+            .map(|ci| (ci, solved_iter.next().expect("one solution per item")))
+            .collect();
+        let rows: Vec<Vec<R>> = parallel_map(work, opts.workers, |(ci, alloc_lp)| {
+            row_fn(inst, &cfgs[ci], &g, &alloc_lp)
+        });
+        records.extend(rows.into_iter().flatten());
+    }
+    records
 }
 
 #[cfg(test)]
@@ -75,7 +180,6 @@ mod tests {
     use super::*;
     use crate::algos::{run_offline, Offline};
     use crate::experiments::{ablation, offline, online};
-    use crate::runtime::LpBackendKind;
     use crate::workloads::Scale;
 
     fn opts_with_cache(path: std::path::PathBuf) -> CampaignOpts {
@@ -157,5 +261,39 @@ mod tests {
             assert_eq!(a.lp_star, b.lp_star);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The batched allocation phase must agree with the per-item
+    /// (simplex-free) solve path on LP* within solver tolerance — the
+    /// cache-key-unchanged contract: entries written by either path are
+    /// interchangeable.
+    #[test]
+    fn batched_phase_matches_per_item_solves() {
+        let opts = CampaignOpts {
+            backend: LpBackendKind::RustPdhg,
+            workers: 4,
+            ..CampaignOpts::smoke()
+        };
+        let records = offline::run(2, &opts);
+        let insts = instances(Scale::Smoke);
+        let cfgs = configs(2, Scale::Smoke);
+        // spot-check two work items against solve_hlp_capped
+        for (ii, ci) in [(0usize, 0usize), (2, 3)] {
+            let g = insts[ii].generate(2);
+            let solo = solve_hlp_capped(&g, &cfgs[ci], opts.backend, opts.tol, opts.max_iters);
+            let row = records
+                .iter()
+                .find(|r| r.instance == insts[ii].label() && r.config == cfgs[ci].label())
+                .unwrap();
+            let scale = 1.0 + solo.sol.obj.abs();
+            assert!(
+                (row.lp_star - solo.sol.obj).abs() < 1e-3 * scale,
+                "{}/{}: {} vs {}",
+                row.instance,
+                row.config,
+                row.lp_star,
+                solo.sol.obj
+            );
+        }
     }
 }

@@ -1,0 +1,365 @@
+//! Batched multi-LP PDHG driver: solve many (Q)HLP instances over one
+//! shared worker pool, with per-LP state structs instead of per-LP
+//! thread spawns, and warm-start chaining across the campaign grid.
+//!
+//! A campaign's allocation phase is hundreds of independent LPs whose
+//! solve times differ by orders of magnitude.  Parking one pool thread
+//! per LP (the old `parallel_map` scheme) serializes stragglers behind
+//! whatever shard they landed in; here every solve is a [`PdhgState`]
+//! advanced a few chunks at a time through a shared [`WorkQueue`], so
+//! the pool drains breadth-first and a straggler only ever occupies one
+//! worker-quantum at a time.  Jobs may declare a `seed_from` dependency:
+//! the job starts once its seed finishes and warm-starts primal *and*
+//! dual from the seed's final iterates ([`PdhgState::iterates`]), with
+//! the escalating [`BudgetSchedule`] bounding expected work.
+//!
+//! # Complexity
+//!
+//! With J jobs, worker count W, and per-LP dimensions (n vars, m rows,
+//! nnz nonzeros):
+//!
+//! | phase                  | cost                                        |
+//! |------------------------|---------------------------------------------|
+//! | state construction     | O(ruiz · nnz) once per job (lazy, admitted) |
+//! | one scheduling quantum | O(chunk · nnz) = 1000 PDHG iters            |
+//! | queue traffic          | O(1) push/pop per quantum                   |
+//! | memory                 | O(nnz + n + m) per *admitted* job's solver  |
+//! |                        | state, at most `2W + 4` resident at once;   |
+//! |                        | every job's input `SparseLp` stays resident |
+//! |                        | for the batch's lifetime, so callers bound  |
+//! |                        | the batch size (the campaign driver slices  |
+//! |                        | its miss list at instance boundaries); seed |
+//! |                        | iterates are freed at their last consumer   |
+//! | determinism            | per-LP trajectories are scheduling-         |
+//! |                        | independent: results are bit-identical to   |
+//! |                        | running each state's step loop alone        |
+//!
+//! Dependency chains (`seed_from`) are restricted to earlier job
+//! indices, so the dependency graph is acyclic by construction and a
+//! finished seed always precedes its dependents in the queue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::substrate::pool::WorkQueue;
+
+use super::pdhg::{DriveOpts, PdhgState, RustChunk, StopReason};
+use super::warm::BudgetSchedule;
+use super::{LpSolution, SparseLp};
+
+/// One LP in a batch.
+pub struct BatchJob {
+    pub lp: SparseLp,
+    /// Solve options; `opts.max_iters` is the *cap* of the budget
+    /// schedule.  `opts.warm_start`/`warm_start_dual` are used as given
+    /// unless `seed_from` overrides them.
+    pub opts: DriveOpts,
+    /// Warm-start from the final iterates of an earlier job in this
+    /// batch (must hold `seed_from < index`); the job is held back until
+    /// the seed completes.
+    pub seed_from: Option<usize>,
+    /// Seed is a close grid neighbor: grant a shrunken first allotment
+    /// (escalating back up to `opts.max_iters` if it fails to converge).
+    pub warm_close: bool,
+}
+
+impl BatchJob {
+    /// A plain cold job.
+    pub fn cold(lp: SparseLp, opts: DriveOpts) -> BatchJob {
+        BatchJob {
+            lp,
+            opts,
+            seed_from: None,
+            warm_close: false,
+        }
+    }
+}
+
+/// Chunks each job advances per queue pop: enough to amortize the queue
+/// round-trip, small enough to keep the pool breadth-first.
+const CHUNKS_PER_QUANTUM: usize = 4;
+
+struct Slot {
+    job: BatchJob,
+    state: Option<PdhgState<RustChunk>>,
+    schedule: BudgetSchedule,
+    /// final iterates (original coordinates), kept only until the last
+    /// dependent has consumed them
+    iterates: Option<(Vec<f64>, Vec<f64>)>,
+    /// dependents that still need `iterates`
+    seed_consumers: usize,
+    done: Option<LpSolution>,
+}
+
+/// Closes the queue if a worker panics, so its siblings blocked in
+/// `pop()` drain out and the panic can propagate through the scope.
+struct CloseOnPanic<'a>(&'a WorkQueue<usize>);
+
+impl Drop for CloseOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.close();
+        }
+    }
+}
+
+/// Solve every job, sharing `workers` OS threads across all of them;
+/// results keep job order.  Deterministic: each LP's trajectory depends
+/// only on its own options and (for seeded jobs) its seed's final
+/// iterates, never on worker interleaving.
+pub fn solve_batch(jobs: Vec<BatchJob>, workers: usize) -> Vec<LpSolution> {
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        match job.seed_from {
+            Some(s) => {
+                assert!(s < i, "seed_from must reference an earlier job ({s} >= {i})");
+                dependents[s].push(i);
+            }
+            None => roots.push(i),
+        }
+    }
+    let slots: Vec<Mutex<Slot>> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, job)| {
+            let cap = job.opts.max_iters;
+            let schedule = if job.warm_close {
+                BudgetSchedule::warm(cap)
+            } else {
+                BudgetSchedule::cold(cap)
+            };
+            Mutex::new(Slot {
+                job,
+                state: None,
+                schedule,
+                iterates: None,
+                seed_consumers: dependents[i].len(),
+                done: None,
+            })
+        })
+        .collect();
+
+    let workers = workers.max(1).min(n);
+    let queue = WorkQueue::new();
+    for i in roots {
+        queue.push(i);
+    }
+    let remaining = AtomicUsize::new(n);
+    // cap on simultaneously materialized states (CSR + scratch is the
+    // dominant memory): beyond it, fresh jobs defer in the queue
+    let admit_cap = 2 * workers + 4;
+    let admitted = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let _guard = CloseOnPanic(&queue);
+                while let Some(i) = queue.pop() {
+                    let mut guard = slots[i].lock().unwrap();
+                    let slot = &mut *guard;
+                    if slot.state.is_none() {
+                        // admission: don't materialize more states than
+                        // the pool can actively advance (atomic reserve —
+                        // a plain load+add could overshoot the cap when
+                        // several workers admit at once)
+                        let reserved = admitted
+                            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                                (v < admit_cap).then_some(v + 1)
+                            })
+                            .is_ok();
+                        if !reserved {
+                            drop(guard);
+                            queue.push(i);
+                            std::thread::yield_now();
+                            continue;
+                        }
+                        let mut opts = slot.job.opts.clone();
+                        if let Some(s) = slot.job.seed_from {
+                            // lock order is safe: a worker only ever
+                            // holds slot i and then its seed s < i, and
+                            // seeds are done (never re-queued)
+                            let mut seed = slots[s].lock().unwrap();
+                            let (z, y) = seed
+                                .iterates
+                                .clone()
+                                .expect("seed finished before dependents are queued");
+                            seed.seed_consumers -= 1;
+                            if seed.seed_consumers == 0 {
+                                seed.iterates = None; // last consumer
+                            }
+                            opts.warm_start = Some(z);
+                            opts.warm_start_dual = Some(y);
+                        }
+                        opts.max_iters = slot.schedule.granted();
+                        slot.state = Some(PdhgState::new(&slot.job.lp, &opts, |scaled| {
+                            RustChunk::new(scaled, 250)
+                        }));
+                    }
+
+                    let state = slot.state.as_mut().unwrap();
+                    let mut stopped = false;
+                    for _ in 0..CHUNKS_PER_QUANTUM {
+                        if state.step() {
+                            stopped = true;
+                            break;
+                        }
+                    }
+                    if stopped
+                        && state.stop_reason() == Some(StopReason::Budget)
+                        && slot.schedule.escalate()
+                    {
+                        state.extend_budget(slot.schedule.granted());
+                        stopped = false;
+                    }
+                    if stopped {
+                        let state = slot.state.take().unwrap();
+                        slot.iterates = Some(state.iterates());
+                        slot.done = Some(state.into_solution(&slot.job.lp));
+                        drop(guard);
+                        admitted.fetch_sub(1, Ordering::SeqCst);
+                        for &d in &dependents[i] {
+                            queue.push(d);
+                        }
+                        if remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                            queue.close();
+                        }
+                    } else {
+                        drop(guard);
+                        queue.push(i);
+                    }
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap()
+                .done
+                .expect("batch drained with unfinished job")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::pdhg::solve_rust;
+
+    fn knapsack(b: f64) -> SparseLp {
+        // min -x1-x2 : x1+x2 <= b, x in [0,1]^2  ->  -min(b, 2)
+        let mut lp = SparseLp {
+            n: 2,
+            m: 1,
+            b: vec![b],
+            c: vec![-1.0, -1.0],
+            lo: vec![0.0; 2],
+            hi: vec![1.0; 2],
+            ..Default::default()
+        };
+        lp.push(0, 0, 1.0);
+        lp.push(0, 1, 1.0);
+        lp
+    }
+
+    #[test]
+    fn batch_matches_individual_drives_exactly() {
+        // independent jobs through the pool must reproduce drive()
+        // bit-for-bit (scheduling cannot touch a state's trajectory)
+        let bs = [0.5, 0.9, 1.3, 1.7];
+        let jobs: Vec<BatchJob> = bs
+            .iter()
+            .map(|&b| BatchJob::cold(knapsack(b), DriveOpts::default()))
+            .collect();
+        let sols = solve_batch(jobs, 3);
+        assert_eq!(sols.len(), bs.len());
+        for (&b, sol) in bs.iter().zip(&sols) {
+            let alone = solve_rust(&knapsack(b), &DriveOpts::default());
+            assert_eq!(sol.obj, alone.obj, "b={b}");
+            assert_eq!(sol.iters, alone.iters, "b={b}");
+            assert_eq!(sol.z, alone.z, "b={b}");
+        }
+    }
+
+    #[test]
+    fn seeded_job_waits_for_its_seed_and_converges() {
+        // job 1 warm-starts from job 0's optimum of a nearby LP
+        let jobs = vec![
+            BatchJob::cold(knapsack(1.5), DriveOpts::default()),
+            BatchJob {
+                lp: knapsack(1.4),
+                opts: DriveOpts::default(),
+                seed_from: Some(0),
+                warm_close: true,
+            },
+        ];
+        let sols = solve_batch(jobs, 2);
+        assert!((sols[0].obj + 1.5).abs() < 2e-3, "obj {}", sols[0].obj);
+        assert!((sols[1].obj + 1.4).abs() < 2e-3, "obj {}", sols[1].obj);
+        // the warm-started neighbor should need no more iterations than a
+        // cold solve of the same LP (one-chunk slack: a seed from a
+        // *different* LP's optimum is helpful, not guaranteed-optimal)
+        let cold = solve_rust(&knapsack(1.4), &DriveOpts::default());
+        assert!(
+            sols[1].iters <= cold.iters + 250,
+            "warm {} way beyond cold {}",
+            sols[1].iters,
+            cold.iters
+        );
+    }
+
+    #[test]
+    fn warm_close_budget_still_reaches_cold_quality() {
+        // a deliberately terrible seed with a shrunken first allotment:
+        // escalation must carry the solve to the same tolerance anyway
+        let lp = knapsack(1.5);
+        let bad_seed = BatchJob::cold(knapsack(0.1), DriveOpts::default());
+        let jobs = vec![
+            bad_seed,
+            BatchJob {
+                lp: lp.clone(),
+                opts: DriveOpts::default(),
+                seed_from: Some(0),
+                warm_close: true,
+            },
+        ];
+        let sols = solve_batch(jobs, 2);
+        let cold = solve_rust(&lp, &DriveOpts::default());
+        let scale = 1.0 + cold.obj.abs();
+        assert!(
+            (sols[1].obj - cold.obj).abs() < 5e-3 * scale,
+            "warm {} vs cold {}",
+            sols[1].obj,
+            cold.obj
+        );
+    }
+
+    #[test]
+    fn single_worker_and_empty_batch() {
+        assert!(solve_batch(Vec::new(), 4).is_empty());
+        let sols = solve_batch(
+            vec![BatchJob::cold(knapsack(1.5), DriveOpts::default())],
+            1,
+        );
+        assert!((sols[0].obj + 1.5).abs() < 2e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "seed_from must reference an earlier job")]
+    fn forward_seed_rejected() {
+        let jobs = vec![BatchJob {
+            lp: knapsack(1.5),
+            opts: DriveOpts::default(),
+            seed_from: Some(0), // self-reference: 0 >= 0
+            warm_close: false,
+        }];
+        solve_batch(jobs, 1);
+    }
+}

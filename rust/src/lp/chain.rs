@@ -1,0 +1,299 @@
+//! Series-chain contraction for the (Q)HLP arc rows.
+//!
+//! Linear-algebra DAGs and fork-join graphs are full of *series chains*:
+//! paths v₀ → v₁ → … → v_k whose interior vertices have in-degree 1 and
+//! out-degree 1.  Each chain arc contributes one precedence row to the
+//! LP ((1) for HLP, (9) for QHLP), but the interior completion variables
+//! C_{v₁}, …, C_{v_{k-1}} appear in *only* those two adjacent rows — so
+//! summing a chain's k rows telescopes them away and leaves one
+//! aggregate row
+//!
+//!   C_{v₀} + Σ_{i=1..k} [p̄_{v_i} x_{v_i} + p̠_{v_i}(1 − x_{v_i})] ≤ C_{v_k}
+//!
+//! (QHLP analogously with Σ_q p_{v_i,q} x_{v_i,q}).
+//!
+//! # Equivalence for the fractional relaxation
+//!
+//! * Any point feasible for the k original rows satisfies their sum.
+//! * Conversely, given a point satisfying the aggregate row, setting
+//!   C_{v_i} := C_{v₀} + Σ_{j≤i} (chain increments) satisfies every
+//!   original row with equality; the interior values stay inside their
+//!   box because each increment is positive (processing times are > 0
+//!   and x ∈ [0,1], Σ_q x = 1) so C_{v₀} ≤ C_{v_i} ≤ C_{v_k} ≤ hi.
+//!   Interior vertices are never sources (in-degree 1) nor sinks
+//!   (out-degree 1), so with sink-only cap rows no other row mentions
+//!   their C; with `CapRows::All` their cap row `C ≤ λ` is satisfiable
+//!   by the same construction (C_{v_i} ≤ C_{v_k} ≤ λ).
+//!
+//! Hence the (x, λ) projection of the feasible set — all that rounding
+//! and the objective see — is unchanged, while the model loses one row
+//! per interior vertex.  Fewer rows means a smaller operator norm and a
+//! cheaper matvec, both of which PDHG pays for on every iteration.
+//! Equivalence is pinned against the exact simplex oracle in tests and
+//! in `rust/tests/lp_warm_batch.rs`.
+//!
+//! Implementation note: the aggregate row is *literally the sum* of the
+//! chain's arc rows, so contraction is a generic row-merge transform on
+//! the built COO ([`contract`]) driven by a graph-side plan
+//! ([`plan_chains`]).  It therefore applies unchanged to HLP and QHLP,
+//! whose builders both emit one row per arc, in the same (task-major)
+//! arc order, as rows `0..n_arcs`.
+
+use crate::graph::TaskGraph;
+
+use super::SparseLp;
+
+/// Maximal series chains of a task graph, as groups of arc indices in
+/// the LP builders' arc emission order (arc i is row i of a built
+/// (Q)HLP).  Every group has ≥ 2 arcs; arcs outside any group are left
+/// untouched by [`contract`].
+#[derive(Clone, Debug, Default)]
+pub struct ChainPlan {
+    pub groups: Vec<Vec<usize>>,
+    pub n_arcs: usize,
+}
+
+impl ChainPlan {
+    /// Rows removed by contracting this plan.
+    pub fn rows_dropped(&self) -> usize {
+        self.groups.iter().map(|g| g.len() - 1).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+}
+
+/// Find the maximal series chains of `g`.  O(n + |E|).
+pub fn plan_chains(g: &TaskGraph) -> ChainPlan {
+    let n = g.n_tasks();
+    // arc index = position in the builders' (i, succs[i]) emission order
+    let mut arc_base = vec![0usize; n + 1];
+    for j in 0..n {
+        arc_base[j + 1] = arc_base[j] + g.succs[j].len();
+    }
+    let interior: Vec<bool> = (0..n)
+        .map(|j| g.preds[j].len() == 1 && g.succs[j].len() == 1)
+        .collect();
+    let mut groups = Vec::new();
+    for u in 0..n {
+        if interior[u] {
+            continue; // mid-chain: collected from the chain's start
+        }
+        for (pos, &v) in g.succs[u].iter().enumerate() {
+            if !interior[v] {
+                continue;
+            }
+            // maximal chain u -> v -> ... through interior vertices;
+            // the start arc's source is never interior, and a DAG has
+            // no interior cycles, so every chain is found exactly once
+            let mut group = vec![arc_base[u] + pos];
+            let mut w = v;
+            while interior[w] {
+                group.push(arc_base[w]); // out-degree 1: its only arc
+                w = g.succs[w][0];
+            }
+            groups.push(group);
+        }
+    }
+    ChainPlan {
+        groups,
+        n_arcs: arc_base[n],
+    }
+}
+
+/// Merge each planned chain's arc rows (rows `0..plan.n_arcs` of `lp`)
+/// into their sum; all other rows are kept verbatim.  Row order is
+/// preserved, with each aggregate row sitting where the chain's first
+/// arc row was.  The variable space is untouched: interior completion
+/// columns simply end up unreferenced (their ±1 coefficients cancel
+/// exactly), so warm starts, rounding and variable indices all carry
+/// over unchanged.
+pub fn contract(lp: &SparseLp, plan: &ChainPlan) -> SparseLp {
+    if plan.groups.is_empty() {
+        return lp.clone();
+    }
+    assert!(plan.n_arcs <= lp.m, "plan does not match LP");
+    let mut group_of_row = vec![usize::MAX; lp.m];
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        for &a in grp {
+            assert!(a < plan.n_arcs, "chain arc {a} beyond arc rows");
+            assert!(group_of_row[a] == usize::MAX, "arc {a} in two chains");
+            group_of_row[a] = gi;
+        }
+    }
+    // new row index per old row; a group collapses onto its first row
+    let mut new_index = vec![usize::MAX; lp.m];
+    let mut group_new = vec![usize::MAX; plan.groups.len()];
+    let mut nm = 0usize;
+    for r in 0..lp.m {
+        let gi = group_of_row[r];
+        if gi == usize::MAX {
+            new_index[r] = nm;
+            nm += 1;
+        } else if group_new[gi] == usize::MAX {
+            group_new[gi] = nm;
+            new_index[r] = nm;
+            nm += 1;
+        } else {
+            new_index[r] = group_new[gi];
+        }
+    }
+    let mut b = vec![0.0f64; nm];
+    for r in 0..lp.m {
+        b[new_index[r]] += lp.b[r];
+    }
+    let mut out = SparseLp {
+        n: lp.n,
+        m: nm,
+        b,
+        c: lp.c.clone(),
+        lo: lp.lo.clone(),
+        hi: lp.hi.clone(),
+        ..Default::default()
+    };
+    // merged rows accumulate coefficients per column (the interior C
+    // columns get +1 and -1, cancelling to an exact 0.0 that push drops)
+    let mut acc: Vec<std::collections::BTreeMap<u32, f64>> =
+        vec![Default::default(); plan.groups.len()];
+    for i in 0..lp.vals.len() {
+        let r = lp.rows[i] as usize;
+        let gi = group_of_row[r];
+        if gi == usize::MAX {
+            out.push(new_index[r], lp.cols[i] as usize, lp.vals[i]);
+        } else {
+            *acc[gi].entry(lp.cols[i]).or_insert(0.0) += lp.vals[i];
+        }
+    }
+    for (gi, cols) in acc.iter().enumerate() {
+        for (&col, &val) in cols {
+            out.push(group_new[gi], col as usize, val);
+        }
+    }
+    debug_assert!(out.validate().is_ok());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, Builder};
+    use crate::lp::model::{build_hlp, build_qhlp};
+    use crate::lp::simplex::solve_simplex;
+    use crate::platform::Platform;
+    use crate::substrate::rng::Rng;
+
+    /// a -> b -> c -> d plus a side arc a -> d: one 3-arc chain
+    /// (b, c interior), the side arc untouched.
+    fn chainy() -> TaskGraph {
+        let mut bl = Builder::new("chainy");
+        let a = bl.add_task("a", vec![3.0, 1.0]);
+        let b = bl.add_task("b", vec![2.0, 4.0]);
+        let c = bl.add_task("c", vec![5.0, 2.0]);
+        let d = bl.add_task("d", vec![1.0, 1.0]);
+        bl.add_arc(a, b);
+        bl.add_arc(b, c);
+        bl.add_arc(c, d);
+        bl.add_arc(a, d);
+        bl.build()
+    }
+
+    #[test]
+    fn plan_finds_maximal_chain() {
+        let g = chainy();
+        let plan = plan_chains(&g);
+        assert_eq!(plan.n_arcs, 4);
+        assert_eq!(plan.groups.len(), 1);
+        // arc order: (a,b)=0, (a,d)=1, (b,c)=2, (c,d)=3
+        assert_eq!(plan.groups[0], vec![0, 2, 3]);
+        assert_eq!(plan.rows_dropped(), 2);
+    }
+
+    #[test]
+    fn pure_chain_contracts_to_one_row() {
+        let mut bl = Builder::new("path");
+        let mut prev = bl.add_task("t", vec![1.0, 2.0]);
+        for _ in 0..5 {
+            let t = bl.add_task("t", vec![1.0, 2.0]);
+            bl.add_arc(prev, t);
+            prev = t;
+        }
+        let g = bl.build();
+        let plan = plan_chains(&g);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].len(), 5);
+        let (lp, _) = build_hlp(&g, &Platform::hybrid(2, 1));
+        let slim = contract(&lp, &plan);
+        assert_eq!(slim.m, lp.m - 4);
+        assert_eq!(slim.n, lp.n);
+    }
+
+    #[test]
+    fn no_chains_is_identity() {
+        // diamond: every interior vertex has 2 preds or 2 succs
+        let mut bl = Builder::new("diamond");
+        let a = bl.add_task("a", vec![1.0, 1.0]);
+        let b = bl.add_task("b", vec![1.0, 1.0]);
+        let c = bl.add_task("c", vec![1.0, 1.0]);
+        let d = bl.add_task("d", vec![1.0, 1.0]);
+        bl.add_arc(a, b);
+        bl.add_arc(a, c);
+        bl.add_arc(b, d);
+        bl.add_arc(c, d);
+        let g = bl.build();
+        let plan = plan_chains(&g);
+        assert!(plan.is_empty());
+        let (lp, _) = build_hlp(&g, &Platform::hybrid(2, 1));
+        let same = contract(&lp, &plan);
+        assert_eq!(same.m, lp.m);
+        assert_eq!(same.nnz(), lp.nnz());
+    }
+
+    #[test]
+    fn contracted_hlp_same_optimum_as_full() {
+        let mut rng = Rng::new(0xC0A1);
+        for case in 0..10 {
+            let g = gen::hybrid_dag(&mut rng, 14, 0.18);
+            let plan = plan_chains(&g);
+            let plat = Platform::hybrid(3, 2);
+            let (full, _) = build_hlp(&g, &plat);
+            let slim = contract(&full, &plan);
+            assert_eq!(slim.m, full.m - plan.rows_dropped());
+            let a = solve_simplex(&full).unwrap().obj;
+            let b = solve_simplex(&slim).unwrap().obj;
+            assert!(
+                (a - b).abs() < 1e-7 * (1.0 + a.abs()),
+                "case {case}: {a} vs {b} ({} chains)",
+                plan.groups.len()
+            );
+        }
+    }
+
+    #[test]
+    fn contracted_qhlp_same_optimum_as_full() {
+        let mut rng = Rng::new(0xC0A2);
+        for _ in 0..6 {
+            let g = gen::random_dag(&mut rng, 10, 0.2, 3);
+            let plan = plan_chains(&g);
+            let plat = Platform::new(vec![2, 2, 1]);
+            let (full, _) = build_qhlp(&g, &plat);
+            let slim = contract(&full, &plan);
+            let a = solve_simplex(&full).unwrap().obj;
+            let b = solve_simplex(&slim).unwrap().obj;
+            assert!((a - b).abs() < 1e-7 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn contraction_on_chainy_graph_explicit() {
+        let g = chainy();
+        let plat = Platform::hybrid(2, 1);
+        let plan = plan_chains(&g);
+        let (full, _) = build_hlp(&g, &plat);
+        let slim = contract(&full, &plan);
+        assert_eq!(slim.m, full.m - 2);
+        let a = solve_simplex(&full).unwrap().obj;
+        let b = solve_simplex(&slim).unwrap().obj;
+        assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()));
+    }
+}

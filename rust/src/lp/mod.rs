@@ -6,17 +6,30 @@
 //! * [`scale`] — Ruiz equilibration (preconditioning for PDHG).
 //! * [`pdhg`] — restarted PDHG: the backend-generic chunk driver (used by
 //!   both the in-tree Rust mirror and the AOT JAX/Pallas artifact run via
-//!   PJRT) plus the Rust chunk backend itself.
+//!   PJRT), the reified per-solve [`pdhg::PdhgState`], and the Rust chunk
+//!   backend itself.
+//! * [`chain`] — series-chain contraction: merge the arc rows of linear
+//!   chains into single aggregate rows (provably equivalent for the
+//!   fractional relaxation) before solving.
+//! * [`warm`] — grid warm-starting policy: config-grid distance and the
+//!   escalating convergence-budget schedule (the iterate chaining itself
+//!   lives in [`batch`]).
+//! * [`batch`] — the batched multi-LP PDHG driver: many solves advanced
+//!   chunk-by-chunk over one shared worker pool, with warm-start
+//!   chaining across the campaign grid.
 //! * [`simplex`] — exact dense two-phase simplex (test oracle + small
 //!   instances).
 //! * [`rounding`] — the paper's rounding rules (`x_j ≥ ½` for HLP,
 //!   argmax with min-time tie-break for QHLP).
 
+pub mod batch;
+pub mod chain;
 pub mod model;
 pub mod pdhg;
 pub mod rounding;
 pub mod scale;
 pub mod simplex;
+pub mod warm;
 
 /// A linear program `min cᵀz  s.t.  Az ≤ b,  lo ≤ z ≤ hi` with sparse A.
 #[derive(Clone, Debug, Default)]

@@ -266,6 +266,10 @@ pub struct DriveOpts {
     pub ruiz_iters: usize,
     /// Feasible primal warm start in *original* coordinates.
     pub warm_start: Option<Vec<f64>>,
+    /// Dual warm start (y ≥ 0) in *original* coordinates — the previous
+    /// optimum's multipliers when re-solving the same instance at a
+    /// nearby machine config (`lp::warm`).  Negative entries are clipped.
+    pub warm_start_dual: Option<Vec<f64>>,
 }
 
 impl Default for DriveOpts {
@@ -275,6 +279,210 @@ impl Default for DriveOpts {
             max_iters: 400_000,
             ruiz_iters: 8,
             warm_start: None,
+            warm_start_dual: None,
+        }
+    }
+}
+
+/// Why a [`PdhgState`] stopped stepping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The best iterate is certified within tolerance.
+    Converged,
+    /// The best KKT score stopped improving (precision floor).
+    Stalled,
+    /// The iteration budget ran out (extendable via
+    /// [`PdhgState::extend_budget`]).
+    Budget,
+}
+
+/// The reified outer PDHG loop: everything [`drive`] used to keep on its
+/// stack, packaged so a solve can be advanced one chunk at a time.  This
+/// is what lets the batched driver ([`super::batch`]) interleave many
+/// LPs over one worker pool instead of parking one thread per solve.
+pub struct PdhgState<B: ChunkBackend> {
+    backend: B,
+    scaling: super::scale::Scaling,
+    tol: f64,
+    max_iters: usize,
+    eta: f64,
+    // primal weight ω: τ = η/ω, σ = η·ω (τσ = η² ≤ (0.9/||A||)²)
+    omega: f64,
+    z: Vec<f64>,
+    y: Vec<f64>,
+    iters: usize,
+    best_dobj: f64,
+    // best-scoring iterate seen so far (returned at the end — PDHG with
+    // restarts oscillates, so "last" is not necessarily the best)
+    best: Diag,
+    best_score: f64,
+    best_z: Vec<f64>,
+    // stall detection: an f32 backend can bottom out above a tight
+    // tolerance; stop once the best KKT score stops improving and
+    // return the best point with its honestly-certified gap.
+    chunks_since_improvement: usize,
+    score_at_last_check: f64,
+    stop: Option<StopReason>,
+}
+
+impl<B: ChunkBackend> PdhgState<B> {
+    /// Ruiz-scale `lp`, pick step sizes from the operator-norm bound and
+    /// set up the (possibly warm-started) iterates.  `make_backend`
+    /// receives the scaled LP.
+    pub fn new(
+        lp: &SparseLp,
+        opts: &DriveOpts,
+        make_backend: impl FnOnce(&SparseLp) -> B,
+    ) -> PdhgState<B> {
+        let (scaled, scaling) = ruiz(lp, opts.ruiz_iters);
+        let norm = super::scale::opnorm_power(&scaled, 24);
+        let eta = 0.9 / norm;
+        let backend = make_backend(&scaled);
+        // start from the warm start (scaled into z' = z / dc) or from
+        // the box projection of 0
+        let z: Vec<f64> = match &opts.warm_start {
+            Some(w) => {
+                assert_eq!(w.len(), lp.n, "warm start dimension");
+                w.iter()
+                    .enumerate()
+                    .map(|(j, &v)| (v / scaling.dc[j]).clamp(scaled.lo[j], scaled.hi[j]))
+                    .collect()
+            }
+            None => (0..scaled.n)
+                .map(|j| 0.0f64.clamp(scaled.lo[j], scaled.hi[j]))
+                .collect(),
+        };
+        // dual warm start scaled as y' = y / dr (y = Dr y', see scale.rs)
+        let y: Vec<f64> = match &opts.warm_start_dual {
+            Some(w) => {
+                assert_eq!(w.len(), lp.m, "dual warm start dimension");
+                w.iter()
+                    .enumerate()
+                    .map(|(i, &v)| (v / scaling.dr[i]).max(0.0))
+                    .collect()
+            }
+            None => vec![0.0; scaled.m],
+        };
+        let best_z = z.clone();
+        PdhgState {
+            backend,
+            scaling,
+            tol: opts.tol,
+            max_iters: opts.max_iters,
+            eta,
+            omega: 1.0,
+            z,
+            y,
+            iters: 0,
+            best_dobj: f64::NEG_INFINITY,
+            best: Diag::default(),
+            best_score: f64::INFINITY,
+            best_z,
+            chunks_since_improvement: 0,
+            score_at_last_check: f64::INFINITY,
+            stop: None,
+        }
+    }
+
+    /// Advance one chunk; returns `true` once the solve has stopped
+    /// (see [`Self::stop_reason`]).  Stepping a stopped state is a no-op.
+    pub fn step(&mut self) -> bool {
+        if self.stop.is_some() {
+            return true;
+        }
+        if self.iters >= self.max_iters {
+            self.stop = Some(StopReason::Budget);
+            return true;
+        }
+        let tau = self.eta / self.omega;
+        let sigma = self.eta * self.omega;
+        let res = self.backend.run_chunk(&mut self.z, &mut self.y, tau, sigma);
+        self.iters += self.backend.iters_per_chunk();
+        // restart-to-average (PDLP): adopt the ergodic average whenever
+        // its KKT score beats the last iterate's.
+        let diag = if res.avg.score() < res.last.score() {
+            self.backend.load_avg(&mut self.z, &mut self.y);
+            res.avg
+        } else {
+            res.last
+        };
+        self.best_dobj = self.best_dobj.max(res.last.dobj.max(res.avg.dobj));
+        if diag.score() < self.best_score {
+            self.best_score = diag.score();
+            self.best = diag;
+            self.best_z.copy_from_slice(&self.z);
+        }
+        if self.best.converged(self.tol) {
+            self.stop = Some(StopReason::Converged);
+            return true;
+        }
+        if self.best_score < self.score_at_last_check * 0.98 {
+            self.score_at_last_check = self.best_score;
+            self.chunks_since_improvement = 0;
+        } else {
+            self.chunks_since_improvement += 1;
+            if self.chunks_since_improvement >= 40 {
+                // practical floor for this backend/precision
+                self.stop = Some(StopReason::Stalled);
+                return true;
+            }
+        }
+        // Smoothed primal-weight rebalancing (PDLP's log-space update,
+        // capped per chunk — aggressive jumps destabilize the iteration).
+        // Residuals are floored at a fraction of the convergence target
+        // so a residual that is already "good enough" exerts no pull.
+        // pres high -> grow σ (ω up); dres high -> grow τ (ω down).
+        let floor = 0.1 * self.tol * diag.scale();
+        let (p, d) = (diag.pres.max(floor), diag.dres.max(floor));
+        let target = self.omega * (p / d).sqrt().sqrt();
+        self.omega = (target.clamp(self.omega / 1.3, self.omega * 1.3)).clamp(1e-3, 1e3);
+        if self.iters >= self.max_iters {
+            self.stop = Some(StopReason::Budget);
+            return true;
+        }
+        false
+    }
+
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        self.stop
+    }
+
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// Raise the iteration budget (the warm-start escalation schedule of
+    /// [`super::warm::BudgetSchedule`]); clears a `Budget` stop so
+    /// stepping can resume.  Converged/stalled states stay stopped.
+    pub fn extend_budget(&mut self, new_max: usize) {
+        if new_max > self.max_iters {
+            self.max_iters = new_max;
+            if self.stop == Some(StopReason::Budget) {
+                self.stop = None;
+            }
+        }
+    }
+
+    /// Final (best-primal, current-dual) iterates in *original*
+    /// coordinates — the seed for warm-starting a grid neighbor.
+    pub fn iterates(&self) -> (Vec<f64>, Vec<f64>) {
+        (
+            self.scaling.unscale_z(&self.best_z),
+            self.scaling.unscale_y(&self.y),
+        )
+    }
+
+    /// Package the best iterate as an [`LpSolution`] in original
+    /// coordinates (`lp` must be the LP this state was built from).
+    pub fn into_solution(self, lp: &SparseLp) -> LpSolution {
+        let z_orig = self.scaling.unscale_z(&self.best_z);
+        LpSolution {
+            obj: lp.objective(&z_orig),
+            lower_bound: self.best_dobj,
+            gap: self.best.gap(),
+            z: z_orig,
+            iters: self.iters,
+            backend: self.backend.name(),
         }
     }
 }
@@ -289,92 +497,9 @@ pub fn drive<B: ChunkBackend>(
     opts: &DriveOpts,
     make_backend: impl FnOnce(&SparseLp) -> B,
 ) -> LpSolution {
-    let (scaled, scaling) = ruiz(lp, opts.ruiz_iters);
-    let norm = super::scale::opnorm_power(&scaled, 24);
-    let eta = 0.9 / norm;
-    // primal weight ω: τ = η/ω, σ = η·ω (τσ = η² ≤ (0.9/||A||)²)
-    let mut omega: f64 = 1.0;
-
-    let mut backend = make_backend(&scaled);
-    // start from the warm start (scaled into z' = z / dc) or from the
-    // box projection of 0
-    let mut z: Vec<f64> = match &opts.warm_start {
-        Some(w) => {
-            assert_eq!(w.len(), lp.n, "warm start dimension");
-            w.iter()
-                .enumerate()
-                .map(|(j, &v)| (v / scaling.dc[j]).clamp(scaled.lo[j], scaled.hi[j]))
-                .collect()
-        }
-        None => (0..scaled.n)
-            .map(|j| 0.0f64.clamp(scaled.lo[j], scaled.hi[j]))
-            .collect(),
-    };
-    let mut y = vec![0.0; scaled.m];
-    let mut iters = 0;
-    let mut best_dobj = f64::NEG_INFINITY;
-    // best-scoring iterate seen so far (returned at the end — PDHG with
-    // restarts oscillates, so "last" is not necessarily the best)
-    let mut best = Diag::default();
-    let mut best_score = f64::INFINITY;
-    let mut best_z = z.clone();
-    // stall detection: an f32 backend can bottom out above a tight
-    // tolerance; stop once the best KKT score stops improving and
-    // return the best point with its honestly-certified gap.
-    let mut chunks_since_improvement = 0usize;
-    let mut score_at_last_check = f64::INFINITY;
-
-    while iters < opts.max_iters {
-        let tau = eta / omega;
-        let sigma = eta * omega;
-        let res = backend.run_chunk(&mut z, &mut y, tau, sigma);
-        iters += backend.iters_per_chunk();
-        // restart-to-average (PDLP): adopt the ergodic average whenever
-        // its KKT score beats the last iterate's.
-        let diag = if res.avg.score() < res.last.score() {
-            backend.load_avg(&mut z, &mut y);
-            res.avg
-        } else {
-            res.last
-        };
-        best_dobj = best_dobj.max(res.last.dobj.max(res.avg.dobj));
-        if diag.score() < best_score {
-            best_score = diag.score();
-            best = diag;
-            best_z.copy_from_slice(&z);
-        }
-        if best.converged(opts.tol) {
-            break;
-        }
-        if best_score < score_at_last_check * 0.98 {
-            score_at_last_check = best_score;
-            chunks_since_improvement = 0;
-        } else {
-            chunks_since_improvement += 1;
-            if chunks_since_improvement >= 40 {
-                break; // practical floor for this backend/precision
-            }
-        }
-        // Smoothed primal-weight rebalancing (PDLP's log-space update,
-        // capped per chunk — aggressive jumps destabilize the iteration).
-        // Residuals are floored at a fraction of the convergence target
-        // so a residual that is already "good enough" exerts no pull.
-        // pres high -> grow σ (ω up); dres high -> grow τ (ω down).
-        let floor = 0.1 * opts.tol * diag.scale();
-        let (p, d) = (diag.pres.max(floor), diag.dres.max(floor));
-        let target = omega * (p / d).sqrt().sqrt();
-        omega = (target.clamp(omega / 1.3, omega * 1.3)).clamp(1e-3, 1e3);
-    }
-
-    let z_orig = scaling.unscale_z(&best_z);
-    LpSolution {
-        obj: lp.objective(&z_orig),
-        lower_bound: best_dobj,
-        gap: best.gap(),
-        z: z_orig,
-        iters,
-        backend: backend.name(),
-    }
+    let mut state = PdhgState::new(lp, opts, make_backend);
+    while !state.step() {}
+    state.into_solution(lp)
 }
 
 /// Solve with the in-tree Rust backend.
@@ -450,6 +575,77 @@ mod tests {
         // optimum is exactly -1.5; lower bound must not exceed it
         assert!(sol.lower_bound <= -1.5 + 1e-6, "lb {}", sol.lower_bound);
         assert!(sol.lower_bound > -1.6);
+    }
+
+    #[test]
+    fn state_stepping_matches_drive_exactly() {
+        // PdhgState is the reified drive() loop: stepping it to the end
+        // must reproduce the one-shot solve bit-for-bit
+        let lp = knapsack();
+        let opts = DriveOpts::default();
+        let a = solve_rust(&lp, &opts);
+        let mut st = PdhgState::new(&lp, &opts, |scaled| RustChunk::new(scaled, 250));
+        let mut steps = 0;
+        while !st.step() {
+            steps += 1;
+            assert!(steps < 10_000, "runaway state");
+        }
+        assert!(st.stop_reason().is_some());
+        let b = st.into_solution(&lp);
+        assert_eq!(a.obj, b.obj);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.gap, b.gap);
+        assert_eq!(a.z, b.z);
+    }
+
+    #[test]
+    fn budget_stop_is_extendable() {
+        let lp = knapsack();
+        let opts = DriveOpts {
+            tol: 1e-9,
+            max_iters: 5,
+            ..Default::default()
+        };
+        let mut st = PdhgState::new(&lp, &opts, |scaled| RustChunk::new(scaled, 5));
+        while !st.step() {}
+        assert_eq!(st.stop_reason(), Some(StopReason::Budget));
+        let capped_iters = st.iters();
+        st.extend_budget(100_000);
+        assert!(st.stop_reason().is_none(), "budget stop must clear");
+        while !st.step() {}
+        assert!(st.iters() > capped_iters);
+        let sol = st.into_solution(&lp);
+        assert!((sol.obj + 1.5).abs() < 1e-3, "obj {}", sol.obj);
+    }
+
+    #[test]
+    fn dual_warm_start_accepted_and_not_slower() {
+        let lp = knapsack();
+        let opts = DriveOpts::default();
+        let mut st = PdhgState::new(&lp, &opts, |scaled| RustChunk::new(scaled, 250));
+        while !st.step() {}
+        let (z, y) = st.iterates();
+        assert_eq!(z.len(), lp.n);
+        assert_eq!(y.len(), lp.m);
+        let cold = st.into_solution(&lp);
+        let warm = solve_rust(
+            &lp,
+            &DriveOpts {
+                warm_start: Some(z),
+                warm_start_dual: Some(y),
+                ..Default::default()
+            },
+        );
+        assert!((warm.obj - cold.obj).abs() < 2e-3, "{} vs {}", warm.obj, cold.obj);
+        // starting from the finished iterates, convergence should not
+        // take longer than the cold run (one-chunk slack for the
+        // first-chunk certificate)
+        assert!(
+            warm.iters <= cold.iters + 250,
+            "warm {} way beyond cold {}",
+            warm.iters,
+            cold.iters
+        );
     }
 
     #[test]

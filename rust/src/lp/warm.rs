@@ -1,0 +1,130 @@
+//! Warm-starting (Q)HLP solves across the campaign configuration grid.
+//!
+//! The campaigns solve the *same instance* at many machine configs
+//! (16×2 … 128×16).  Only the load rows ((4)/(5), (12)) and one b entry
+//! depend on (m, k), so the LPs of one instance share a variable/row
+//! layout and their optima move continuously with the config — the
+//! previous optimum's (z, y) is an excellent starting point for the
+//! neighbor's solve.  The chaining itself lives in the batch driver
+//! (`BatchJob::seed_from`, wired by `algos::solve_alloc_grid`); this
+//! module provides the policy pieces:
+//!
+//! * [`grid_distance`] / [`CLOSE_DIST`] — log-scale config distance and
+//!   the "close neighbor" threshold deciding which chains run shrunken.
+//! * [`BudgetSchedule`] — the convergence-budget schedule: a solve whose
+//!   warm start is close (a neighbor within [`CLOSE_DIST`]) gets a
+//!   quarter of the campaign's PDHG budget first and escalates (×2 per
+//!   exhaustion) back to the full budget only if it fails to converge.
+//!   The *cap* is the campaign budget either way, so a warm-started
+//!   solve can always reach exactly the tolerance a cold solve reaches —
+//!   the schedule bounds expected work, never convergence quality
+//!   (pinned by `rust/tests/lp_warm_batch.rs`).
+//!
+//! (A persistent cross-run iterate store is a ROADMAP "next lever", not
+//! part of this module yet — the LP* cache only persists objectives.)
+
+/// Log-scale distance between two machine configs: Σ_q |ln m_q − ln m'_q|.
+/// Adjacent configs of the paper grids (counts doubling per step) are
+/// exactly `ln 2` apart per differing coordinate.
+pub fn grid_distance(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len(), "config type counts differ");
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x as f64).ln() - (y as f64).ln()).abs())
+        .sum()
+}
+
+/// A neighbor within about two doubling steps counts as "close" for the
+/// budget schedule.
+pub const CLOSE_DIST: f64 = 2.1 * std::f64::consts::LN_2;
+
+/// Escalating iteration-budget schedule (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetSchedule {
+    granted: usize,
+    cap: usize,
+}
+
+/// Smallest first allotment a warm-started solve is granted.
+const MIN_WARM_GRANT: usize = 2_000;
+
+impl BudgetSchedule {
+    /// Cold solve: the full campaign budget up front.
+    pub fn cold(cap: usize) -> BudgetSchedule {
+        BudgetSchedule { granted: cap, cap }
+    }
+
+    /// Warm-started solve with a close seed: a quarter of the budget
+    /// first, escalation available up to `cap`.
+    pub fn warm(cap: usize) -> BudgetSchedule {
+        BudgetSchedule {
+            granted: (cap / 4).max(MIN_WARM_GRANT).min(cap),
+            cap,
+        }
+    }
+
+    /// Iterations currently granted.
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Double the grant (up to the cap) after an allotment exhausted
+    /// without convergence.  `false` once the cap is reached — the solve
+    /// then stops exactly where a cold solve at the campaign budget
+    /// would.
+    pub fn escalate(&mut self) -> bool {
+        if self.granted >= self.cap {
+            return false;
+        }
+        self.granted = self.granted.saturating_mul(2).min(self.cap);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_distance_is_log_scale() {
+        assert_eq!(grid_distance(&[16, 2], &[16, 2]), 0.0);
+        let one_step = grid_distance(&[16, 2], &[16, 4]);
+        assert!((one_step - std::f64::consts::LN_2).abs() < 1e-12);
+        // symmetric, additive over coordinates
+        assert_eq!(one_step, grid_distance(&[16, 4], &[16, 2]));
+        let two = grid_distance(&[16, 2], &[32, 4]);
+        assert!((two - 2.0 * std::f64::consts::LN_2).abs() < 1e-12);
+        assert!(two <= CLOSE_DIST);
+        assert!(grid_distance(&[16, 2], &[128, 16]) > CLOSE_DIST);
+    }
+
+    #[test]
+    fn budget_schedule_escalates_to_cap() {
+        let mut s = BudgetSchedule::warm(80_000);
+        assert_eq!(s.granted(), 20_000);
+        assert!(s.escalate());
+        assert_eq!(s.granted(), 40_000);
+        assert!(s.escalate());
+        assert_eq!(s.granted(), 80_000);
+        assert!(!s.escalate(), "cap reached");
+        assert_eq!(s.granted(), s.cap());
+
+        let mut c = BudgetSchedule::cold(80_000);
+        assert_eq!(c.granted(), 80_000);
+        assert!(!c.escalate());
+    }
+
+    #[test]
+    fn tiny_budgets_stay_within_cap() {
+        let s = BudgetSchedule::warm(500);
+        assert_eq!(s.granted(), 500); // MIN_WARM_GRANT clamped to cap
+        let mut s = BudgetSchedule::warm(10_000);
+        assert_eq!(s.granted(), 2_500);
+        while s.escalate() {}
+        assert_eq!(s.granted(), 10_000);
+    }
+}

@@ -83,6 +83,14 @@ pub fn with_runtime<R>(f: impl FnOnce(&mut PjrtRuntime) -> R) -> Option<R> {
     })
 }
 
+/// Whether this thread can solve through the PJRT artifact backend
+/// (loads the runtime on first call; cheap afterwards).  The campaign
+/// driver uses this to decide between the batched Rust-PDHG path and the
+/// per-item artifact path under `LpBackendKind::Auto`.
+pub fn pjrt_available() -> bool {
+    with_runtime(|_| ()).is_some()
+}
+
 /// Solve an LP with the selected backend (the campaign entry point).
 /// `warm` is a feasible primal point in original coordinates, if known.
 pub fn solve_lp(

@@ -19,14 +19,22 @@
 //! * [`Timeline`] — one unit's busy intervals for insertion-based
 //!   policies (HEFT backfilling).
 //!
-//! Tie-break contract: the engine reproduces the seed semantics exactly
-//! for exact floating-point ties (the only ties that arise from the
-//! deterministic generators): `Iterator::min_by` resolves equal keys
-//! towards the *first* index, EST ties resolve towards the smaller task
-//! id, and the EFT ready-clamp resolves towards the smallest unit
-//! index.  The
-//! golden-parity suite (`rust/tests/golden_parity.rs`) pins this against
-//! the retained reference implementations in [`super::reference`].
+//! Tie-break contract: the engine reproduces the seed semantics — both
+//! exact floating-point ties (`Iterator::min_by` resolves equal keys
+//! towards the *first* index, EST ties towards the smaller task id, the
+//! EFT ready-clamp towards the smallest unit index) *and* the
+//! reference's ±[`TIE_BAND`] float comparison band: candidates whose
+//! keys differ by at most 1e-12 count as tied, exactly as the seed
+//! scans' `< b - 1e-12 || (<= b + 1e-12 && id <)` comparators treat
+//! them.  Values that land strictly inside the open band (distinct but
+//! within 1e-12) only arise from repeated non-representable cost
+//! constants summed along different paths; those ulp clusters are many
+//! orders of magnitude narrower than the band, so band membership is
+//! unambiguous in practice and the heap-based selection below matches
+//! the seed scans candidate-for-candidate.  The golden-parity suite
+//! (`rust/tests/golden_parity.rs`, including the repeated-constant
+//! tie farms) pins this against the retained reference implementations
+//! in [`super::reference`].
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -34,6 +42,10 @@ use std::collections::BinaryHeap;
 use crate::graph::TaskId;
 
 use super::OrdF64;
+
+/// The reference schedulers' float-comparison tie band: keys within
+/// ±1e-12 of each other are ties (broken by task/unit/type index rules).
+pub const TIE_BAND: f64 = 1e-12;
 
 /// Indexed min segment tree over one processor type's units, keyed by
 /// the time each unit becomes free.  All queries take finite thresholds.
@@ -173,56 +185,79 @@ impl UnitPool {
 
 /// Per-type ready queues for the EST policy (see module docs).
 pub struct EstReady {
-    /// tasks with ready time ≤ the type's idle horizon: their starting
-    /// time is the horizon itself, so only the id orders them
+    /// tasks whose ready time is at (or within [`TIE_BAND`] of) the
+    /// type's idle horizon: their starting times all tie with the
+    /// horizon under the reference's band comparison, so only the id
+    /// orders them
     arrived: Vec<BinaryHeap<Reverse<TaskId>>>,
-    /// tasks still waiting on a predecessor finish beyond the horizon,
-    /// ordered by (ready_time, id)
-    pending: Vec<BinaryHeap<Reverse<(OrdF64, TaskId)>>>,
+    /// tasks still waiting on a predecessor finish beyond the horizon's
+    /// band, ordered by (ready_time, id); a BTreeSet (not a heap) so the
+    /// head's ±[`TIE_BAND`] cluster can be range-scanned for the
+    /// smallest id, matching the reference's banded comparator when two
+    /// pending ready times differ only by summation ulps
+    pending: Vec<std::collections::BTreeSet<(OrdF64, TaskId)>>,
 }
 
 impl EstReady {
     pub fn new(n_types: usize) -> EstReady {
         EstReady {
             arrived: (0..n_types).map(|_| BinaryHeap::new()).collect(),
-            pending: (0..n_types).map(|_| BinaryHeap::new()).collect(),
+            pending: (0..n_types).map(|_| Default::default()).collect(),
         }
     }
 
     /// Insert a task that just became ready; `tau` is the current idle
-    /// horizon of its allocated type `q`.
+    /// horizon of its allocated type `q`.  A ready time within
+    /// [`TIE_BAND`] of the horizon already *ties* with it in the
+    /// reference comparator, so such tasks go straight to the id-ordered
+    /// bucket (their true EST — `max(ready, tau)` — is restored by the
+    /// caller when it starts them).
     pub fn push(&mut self, q: usize, ready: f64, tau: f64, j: TaskId) {
-        if ready <= tau {
+        if ready <= tau + TIE_BAND {
             self.arrived[q].push(Reverse(j));
         } else {
-            self.pending[q].push(Reverse((OrdF64(ready), j)));
+            self.pending[q].insert((OrdF64(ready), j));
         }
     }
 
-    /// Move tasks whose ready time the advancing horizon has passed into
-    /// the id-ordered bucket.  Call after every assignment on type `q`.
+    /// Move tasks whose ready time the advancing horizon has passed (to
+    /// within the band) into the id-ordered bucket.  Call after every
+    /// assignment on type `q`.
     pub fn promote(&mut self, q: usize, tau: f64) {
-        while let Some(Reverse((OrdF64(r), j))) = self.pending[q].peek().copied() {
-            if r > tau {
+        while let Some(&(OrdF64(r), j)) = self.pending[q].first() {
+            if r > tau + TIE_BAND {
                 break;
             }
-            self.pending[q].pop();
+            self.pending[q].remove(&(OrdF64(r), j));
             self.arrived[q].push(Reverse(j));
         }
+    }
+
+    /// The reference comparator's winner within the pending queue of
+    /// type `q`: the smallest id among the head's ±[`TIE_BAND`] cluster
+    /// (ready times within the band tie, smaller id wins; everything
+    /// past the band loses outright to the head).
+    fn pending_best(&self, q: usize) -> Option<(OrdF64, TaskId)> {
+        let &(OrdF64(r0), j0) = self.pending[q].first()?;
+        let mut best = (OrdF64(r0), j0);
+        for &(r, j) in self.pending[q].range(..=(OrdF64(r0 + TIE_BAND), TaskId::MAX)) {
+            if j < best.1 {
+                best = (r, j);
+            }
+        }
+        Some(best)
     }
 
     /// Best (starting time, id) candidate on type `q` under horizon
-    /// `tau`, without removing it.  Arrived tasks all start at `tau`;
-    /// pending tasks start at their own ready time (> `tau`), so an
-    /// arrived task always dominates when present.
+    /// `tau`, without removing it.  Arrived tasks all start at (within
+    /// the band of) `tau`; pending tasks start at their own ready time
+    /// (> `tau` + band), so an arrived task always dominates when
+    /// present.
     pub fn peek(&self, q: usize, tau: f64) -> Option<(f64, TaskId)> {
         if let Some(Reverse(j)) = self.arrived[q].peek().copied() {
             return Some((tau, j));
         }
-        self.pending[q]
-            .peek()
-            .copied()
-            .map(|Reverse((OrdF64(r), j))| (r, j))
+        self.pending_best(q).map(|(OrdF64(r), j)| (r, j))
     }
 
     /// Remove the candidate [`Self::peek`] reported for type `q`.
@@ -230,7 +265,9 @@ impl EstReady {
         if let Some(Reverse(j)) = self.arrived[q].pop() {
             return Some(j);
         }
-        self.pending[q].pop().map(|Reverse((_, j))| j)
+        let best = self.pending_best(q)?;
+        self.pending[q].remove(&best);
+        Some(best.1)
     }
 }
 
@@ -400,6 +437,35 @@ mod tests {
         assert_eq!(r.pop(0), Some(1));
         assert_eq!(r.peek(0, 6.0), None);
         assert_eq!(r.pop(0), None);
+    }
+
+    #[test]
+    fn est_ready_band_ties_resolve_by_id() {
+        // two pending tasks mathematically tied but ulps apart: the
+        // reference's ±1e-12 band makes the smaller id win even though
+        // its ready time is the (negligibly) later one
+        let mut r = EstReady::new(1);
+        r.push(0, 10.0 + 5e-13, 0.0, 7);
+        r.push(0, 10.0, 0.0, 9);
+        assert_eq!(r.peek(0, 0.0), Some((10.0 + 5e-13, 7)));
+        assert_eq!(r.pop(0), Some(7));
+        assert_eq!(r.pop(0), Some(9));
+        assert_eq!(r.pop(0), None);
+
+        // a ready time within the band of the horizon counts as arrived
+        // (id-ordered bucket), not pending
+        let mut r = EstReady::new(1);
+        r.push(0, 5.0 + 5e-13, 5.0, 3);
+        r.push(0, 5.0, 5.0, 8);
+        assert_eq!(r.pop(0), Some(3));
+        assert_eq!(r.pop(0), Some(8));
+
+        // past the band: strictly earlier ready time wins regardless of id
+        let mut r = EstReady::new(1);
+        r.push(0, 10.0, 0.0, 9);
+        r.push(0, 10.1, 0.0, 1);
+        assert_eq!(r.pop(0), Some(9));
+        assert_eq!(r.pop(0), Some(1));
     }
 
     #[test]

@@ -12,14 +12,17 @@
 //! ([`engine::EstReady`]) make the global earliest-start selection
 //! O(Q log n) per step — O((n + |E|) log n) per instance overall, versus
 //! the O(n · (|ready| + units)) rescan of the retained reference
-//! implementation ([`super::reference::est_schedule`]).  Both produce
-//! identical schedules (golden-parity suite).
+//! implementation ([`super::reference::est_schedule`]).  Selection uses
+//! the reference's ±1e-12 comparison band ([`engine::TIE_BAND`]):
+//! starting times within the band tie towards the smaller task id.  Both
+//! produce identical schedules (golden-parity suite, including the
+//! repeated-cost-constant tie farms).
 
 use crate::graph::{TaskGraph, TaskId};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
-use super::engine::{EstReady, UnitPool};
+use super::engine::{EstReady, UnitPool, TIE_BAND};
 
 /// Schedule with a fixed allocation under the EST policy.
 pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
@@ -41,14 +44,22 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
     }
 
     for _ in 0..n {
-        // earliest (starting time, id) over the per-type candidates; the
-        // id tie-break is global, exactly as the reference scan's
+        // earliest (starting time, id) over the per-type candidates,
+        // compared with the reference scan's ±1e-12 band: a candidate
+        // wins outright only when it is more than TIE_BAND earlier, and
+        // candidates within the band tie towards the smaller task id —
+        // exactly `reference::est_schedule`'s comparator.
         let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, type)
         for q in 0..n_types {
             if let Some((est, j)) = ready.peek(q, units.earliest_idle(q)) {
+                // band-promoted tasks report the horizon; their true EST
+                // is their own ready time (≤ TIE_BAND later)
+                let est = est.max(ready_time[j]);
                 let better = match best {
                     None => true,
-                    Some((b_est, b_j, _)) => est < b_est || (est == b_est && j < b_j),
+                    Some((b_est, b_j, _)) => {
+                        est < b_est - TIE_BAND || (est <= b_est + TIE_BAND && j < b_j)
+                    }
                 };
                 if better {
                     best = Some((est, j, q));

@@ -25,7 +25,7 @@ use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 use crate::substrate::rng::Rng;
 
-use super::engine::UnitPool;
+use super::engine::{UnitPool, TIE_BAND};
 
 #[derive(Clone, Debug)]
 pub enum OnlinePolicy {
@@ -76,6 +76,13 @@ impl PolicyEngine {
         &self.avail
     }
 
+    /// Rewind one unit's free time (tenant-cancellation path: the
+    /// service releases a cancelled tenant's not-yet-started
+    /// reservations through here, via [`UnitPool::release`]).
+    pub fn release_unit(&mut self, q: usize, unit: usize, free: f64) {
+        self.avail.release(q, unit, free);
+    }
+
     fn earliest_idle(&self, q: usize) -> f64 {
         self.avail.types[q].min()
     }
@@ -87,19 +94,22 @@ impl PolicyEngine {
     }
 
     /// EFT candidate on type `q` for a task ready at `ready` with
-    /// duration `dur`: (finish, unit).  When some unit is already idle
-    /// by `ready`, every such unit finishes at `ready + dur` and the
-    /// seed scan kept the first one; otherwise the earliest-idle unit
-    /// (again first index on ties) is the unique minimizer.
+    /// duration `dur`: (finish, unit).  Mirrors the seed scan's ±1e-12
+    /// band ([`engine::TIE_BAND`](super::engine::TIE_BAND)): the optimal
+    /// finish is `max(ready, τ_q) + dur`, every unit idle within the
+    /// band of that clamp ties, and the seed scan kept the *first* such
+    /// unit — including a slightly-later-idle unit with a lower index
+    /// beating the exact minimizer.  The returned finish uses the chosen
+    /// unit's true idle time, exactly as the seed computed it.
     fn eft_candidate(&self, q: usize, ready: f64, dur: f64) -> (f64, usize) {
         let tree = &self.avail.types[q];
         let tau = tree.min();
-        if tau <= ready {
-            let u = tree.first_at_most(ready).expect("tau <= ready");
-            (ready + dur, u)
-        } else {
-            (tau + dur, tree.argmin_first())
-        }
+        let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
+        let u = tree
+            .first_at_most(clamp + TIE_BAND)
+            .expect("idle horizon lies within its own band");
+        let start = ready.max(tree.get(u));
+        (start + dur, u)
     }
 
     /// Take the irrevocable decision for task `j` of graph `g`, ready at
@@ -162,7 +172,7 @@ impl PolicyEngine {
                     // better, or tied within the band: the later
                     // (higher) type wins ties, matching the reference
                     // scan's `q > bq` rule
-                    if finish <= best.0 + 1e-12 {
+                    if finish <= best.0 + TIE_BAND {
                         best = (finish, q, u);
                     }
                 }

@@ -43,6 +43,14 @@
 //! horizon, utilization, and stretch summaries that
 //! `examples/service_mode.rs` and `benches/service_throughput.rs`
 //! report.
+//!
+//! The loop is reified as [`Service`] (new/step/run/cancel/report):
+//! [`Service::cancel`] removes a tenant mid-stream, releasing its
+//! not-yet-started unit reservations back to the pool via
+//! [`UnitPool::release`](super::engine::UnitPool::release) and reporting
+//! the tenant's partial metrics, while every survivor's schedule stays
+//! feasible (invariant tests).  [`run_service`] is the drained
+//! one-call form.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -112,19 +120,31 @@ pub struct TenantReport {
     pub tenant: usize,
     pub app: String,
     pub n_tasks: usize,
+    /// Tasks that actually ran (equals `n_tasks` unless cancelled).
+    pub n_placed: usize,
     pub arrival: f64,
-    /// Virtual time the tenant's last task finishes.
+    /// Virtual time the tenant's last (kept) task finishes.
     pub completion: f64,
     /// completion − arrival.
     pub flow_time: f64,
     /// Makespan of the same (graph, order, policy) on an empty pool.
     pub ideal_makespan: f64,
     /// flow_time / ideal_makespan (1.0 = no slowdown from contention).
+    /// Partial (an underestimate) for cancelled tenants.
     pub stretch: f64,
     /// Wall-clock seconds per irrevocable decision.
     pub decision_latency: Summary,
-    /// The tenant's placements (absolute virtual times on the shared pool).
+    /// The tenant's placements (absolute virtual times on the shared
+    /// pool).  For a cancelled tenant this holds only the kept tasks in
+    /// task-id order, so it is *not* graph-aligned — consumers must
+    /// check `cancelled_at` (see [`ServiceReport::tenant_runs`]) and can
+    /// map entries back to task ids through `kept_tasks`.
     pub schedule: Schedule,
+    /// Task ids of `schedule.placements`, in order (simply `0..n_tasks`
+    /// for a tenant that was not cancelled).
+    pub kept_tasks: Vec<TaskId>,
+    /// Virtual time at which [`Service::cancel`] hit this tenant.
+    pub cancelled_at: Option<f64>,
 }
 
 /// Aggregate outcome of one service run.
@@ -145,11 +165,15 @@ pub struct ServiceReport {
 impl ServiceReport {
     /// Pair each tenant's schedule with its submission for the
     /// tenant-aware merge validator
-    /// ([`validate_service`](crate::sim::validate_service)).
+    /// ([`validate_service`](crate::sim::validate_service)).  Cancelled
+    /// tenants are skipped — their kept-task schedules are not
+    /// graph-aligned (validate those with a manual overlap check, as the
+    /// cancellation tests do).
     pub fn tenant_runs<'a>(&'a self, subs: &'a [Submission]) -> Vec<TenantRun<'a>> {
         assert_eq!(subs.len(), self.tenants.len());
         subs.iter()
             .zip(&self.tenants)
+            .filter(|(_, t)| t.cancelled_at.is_none())
             .map(|(s, t)| TenantRun {
                 graph: &s.graph,
                 schedule: &t.schedule,
@@ -180,6 +204,374 @@ fn ready_time(
         .fold(arrival, f64::max)
 }
 
+/// One unit reservation in decision order (the cancellation ledger):
+/// enough to rewind trailing reservations of a cancelled tenant.
+#[derive(Clone, Copy, Debug)]
+struct Reservation {
+    tenant: usize,
+    task: TaskId,
+    /// the unit's free time before this reservation (rewind target)
+    prev_free: f64,
+    start: f64,
+}
+
+/// Outcome of a [`Service::cancel`] call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CancelOutcome {
+    pub tenant: usize,
+    /// Virtual time the cancellation took effect.
+    pub at: f64,
+    /// Placed-but-not-yet-started tasks whose reservations were rewound.
+    pub dropped_tasks: usize,
+    /// Units whose free time was rewound via `UnitPool::release`.
+    pub released_units: usize,
+}
+
+/// The reified multi-tenant streaming scheduler: [`run_service`] drained
+/// in one call is the common case, but the struct form lets a caller
+/// step the stream ([`Self::step`]) and cancel tenants mid-stream
+/// ([`Self::cancel`]).
+///
+/// Cancellation semantics: at the current virtual time `t` (the last
+/// processed arrival), the tenant's pending stream entry is dropped, and
+/// its placed tasks that have not started by `t` are rewound — each
+/// unit's *trailing* reservations belonging to the tenant are popped and
+/// the unit's free time released to what it was before them
+/// ([`super::engine::UnitPool::release`]).  Tasks already running at `t`
+/// finish (decisions are irrevocable and the work is half done), and a
+/// cancelled reservation buried under another tenant's later reservation
+/// stays blocked — the later decision was taken on top of it and is
+/// itself irrevocable.  Dropping then *cascades* within the tenant:
+/// every kept task depending on a dropped one is dropped too (buried
+/// ones leave an unused gap on their unit), so the reported partial
+/// schedule never contains a task whose predecessor did not run.
+/// Survivors' schedules remain feasible either way (pinned by the
+/// invariant tests).
+pub struct Service<'a> {
+    plat: &'a Platform,
+    subs: &'a [Submission],
+    orders: Vec<Vec<TaskId>>,
+    engine: PolicyEngine,
+    rngs: Vec<Option<Rng>>,
+    placements: Vec<Vec<Option<Placement>>>,
+    latencies: Vec<Vec<f64>>,
+    decisions: Vec<DecisionRecord>,
+    // Stream heap: (arrival time, tenant, stream position, ready time).
+    // One outstanding arrival per tenant keeps the heap at O(tenants),
+    // and carrying the ready time computes each task's fold exactly once.
+    heap: BinaryHeap<Reverse<(OrdF64, usize, usize, OrdF64)>>,
+    /// per (type, unit): reservation stack in decision order
+    ledger: Vec<Vec<Vec<Reservation>>>,
+    cancelled: Vec<Option<f64>>,
+    /// virtual time of the last processed arrival
+    now: f64,
+}
+
+impl<'a> Service<'a> {
+    pub fn new(plat: &'a Platform, subs: &'a [Submission]) -> Service<'a> {
+        for s in subs {
+            assert!(s.graph.n_tasks() > 0, "empty submission");
+            // re-checked here because the fields are public
+            // (Submission::new validates, but nothing stops callers
+            // mutating afterwards)
+            assert!(
+                s.arrival.is_finite() && s.arrival >= 0.0,
+                "bad arrival {}",
+                s.arrival
+            );
+            if requires_two_types(&s.policy) {
+                assert!(
+                    plat.n_types() == 2,
+                    "{} is defined for hybrid platforms",
+                    s.policy.name()
+                );
+            }
+            assert_eq!(
+                s.graph.n_types(),
+                plat.n_types(),
+                "graph/platform type count mismatch"
+            );
+        }
+
+        let orders: Vec<Vec<TaskId>> = subs.iter().map(|s| s.order_vec()).collect();
+        let placements: Vec<Vec<Option<Placement>>> = subs
+            .iter()
+            .map(|s| vec![None; s.graph.n_tasks()])
+            .collect();
+        let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize, OrdF64)>> = BinaryHeap::new();
+        for (i, s) in subs.iter().enumerate() {
+            let r0 = ready_time(&s.graph, s.arrival, &placements[i], i, orders[i][0]);
+            heap.push(Reverse((OrdF64(s.arrival.max(r0)), i, 0, OrdF64(r0))));
+        }
+        Service {
+            plat,
+            subs,
+            orders,
+            engine: PolicyEngine::new(plat),
+            rngs: subs
+                .iter()
+                .map(|s| match s.policy {
+                    OnlinePolicy::Random(seed) => Some(Rng::new(seed)),
+                    _ => None,
+                })
+                .collect(),
+            placements,
+            latencies: subs
+                .iter()
+                .map(|s| Vec::with_capacity(s.graph.n_tasks()))
+                .collect(),
+            decisions: Vec::with_capacity(subs.iter().map(|s| s.graph.n_tasks()).sum()),
+            heap,
+            ledger: plat
+                .counts
+                .iter()
+                .map(|&c| (0..c).map(|_| Vec::new()).collect())
+                .collect(),
+            cancelled: vec![None; subs.len()],
+            now: 0.0,
+        }
+    }
+
+    /// Process the next arrival in the merged stream; `None` once the
+    /// stream is drained.
+    pub fn step(&mut self) -> Option<DecisionRecord> {
+        let Reverse((OrdF64(at), i, pos, OrdF64(ready))) = self.heap.pop()?;
+        debug_assert!(self.cancelled[i].is_none(), "cancelled tenant left in stream");
+        let g = &self.subs[i].graph;
+        let j = self.orders[i][pos];
+        debug_assert!(
+            self.placements[i][j].is_none(),
+            "tenant {i}: task {j} decided twice"
+        );
+        debug_assert!(at >= ready, "stream time regressed");
+        self.now = at;
+
+        let td = Instant::now();
+        let p = self
+            .engine
+            .decide(g, self.plat, j, ready, &self.subs[i].policy, self.rngs[i].as_mut());
+        self.latencies[i].push(td.elapsed().as_secs_f64() + 1e-9);
+        // the unit's free time before this reservation: the ledger
+        // mirrors every reserve/release on the pool, so it is the last
+        // entry's finish (or 0) — recorded for exact rewinds on cancel
+        let prev_free = self.ledger[p.ptype][p.unit]
+            .last()
+            .map(|r| {
+                self.placements[r.tenant][r.task]
+                    .expect("ledger entries are placed")
+                    .finish
+            })
+            .unwrap_or(0.0);
+        self.ledger[p.ptype][p.unit].push(Reservation {
+            tenant: i,
+            task: j,
+            prev_free,
+            start: p.start,
+        });
+        self.placements[i][j] = Some(p);
+        let record = DecisionRecord {
+            tenant: i,
+            task: j,
+            time: at,
+        };
+        self.decisions.push(record);
+
+        if pos + 1 < self.orders[i].len() {
+            let r_next = ready_time(
+                g,
+                self.subs[i].arrival,
+                &self.placements[i],
+                i,
+                self.orders[i][pos + 1],
+            );
+            self.heap
+                .push(Reverse((OrdF64(at.max(r_next)), i, pos + 1, OrdF64(r_next))));
+        }
+        Some(record)
+    }
+
+    /// Drain the stream.
+    pub fn run(&mut self) {
+        while self.step().is_some() {}
+    }
+
+    /// Virtual time of the last processed arrival.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Cancel `tenant` at the current virtual time (see the struct docs
+    /// for the exact semantics).
+    pub fn cancel(&mut self, tenant: usize) -> CancelOutcome {
+        assert!(tenant < self.subs.len(), "no tenant {tenant}");
+        assert!(
+            self.cancelled[tenant].is_none(),
+            "tenant {tenant} cancelled twice"
+        );
+        let at = self.now;
+        self.cancelled[tenant] = Some(at);
+
+        // drop the tenant's pending stream entry
+        let kept: Vec<_> = std::mem::take(&mut self.heap)
+            .into_vec()
+            .into_iter()
+            .filter(|&Reverse((_, i, _, _))| i != tenant)
+            .collect();
+        self.heap = kept.into();
+
+        // rewind the tenant's trailing not-yet-started reservations
+        let mut dropped_tasks = 0usize;
+        let mut released_units = 0usize;
+        for q in 0..self.plat.n_types() {
+            for u in 0..self.plat.counts[q] {
+                let mut popped_any = false;
+                while let Some(&res) = self.ledger[q][u].last() {
+                    if res.tenant != tenant || res.start < at {
+                        break;
+                    }
+                    self.ledger[q][u].pop();
+                    self.engine.release_unit(q, u, res.prev_free);
+                    self.placements[tenant][res.task] = None;
+                    dropped_tasks += 1;
+                    popped_any = true;
+                }
+                if popped_any {
+                    released_units += 1;
+                }
+            }
+        }
+        // cascade: a kept task whose predecessor was just dropped cannot
+        // run either.  A placed task's predecessors were all placed when
+        // it streamed, so a `None` pred here can only mean "dropped"; one
+        // pass in the tenant's (topological) stream order reaches the
+        // fixpoint.  Such tasks are usually buried under a survivor's
+        // later reservation, which is irrevocable — the unit then simply
+        // keeps a gap where the cascaded task would have run.
+        let order = self.orders[tenant].clone();
+        for &j in &order {
+            let Some(p) = self.placements[tenant][j] else {
+                continue;
+            };
+            let orphaned = self.subs[tenant].graph.preds[j]
+                .iter()
+                .any(|&pr| self.placements[tenant][pr].is_none());
+            if !orphaned {
+                continue;
+            }
+            // only not-yet-started tasks can be orphaned: a dropped pred
+            // has start >= at, and j starts after that pred finishes
+            debug_assert!(p.start >= at, "running task with dropped pred");
+            self.placements[tenant][j] = None;
+            dropped_tasks += 1;
+            let stack = &mut self.ledger[p.ptype][p.unit];
+            let pos = stack
+                .iter()
+                .position(|r| r.tenant == tenant && r.task == j)
+                .expect("placed task has a ledger entry");
+            if pos == stack.len() - 1 {
+                let res = stack.pop().unwrap();
+                self.engine.release_unit(p.ptype, p.unit, res.prev_free);
+                released_units += 1;
+            } else {
+                stack.remove(pos);
+            }
+        }
+        CancelOutcome {
+            tenant,
+            at,
+            dropped_tasks,
+            released_units,
+        }
+    }
+
+    /// Build the final report.  Call after the stream drained
+    /// ([`Self::run`]); `ideals` as in [`run_service_with_ideals`].
+    pub fn report(&self, ideals: Option<&[f64]>) -> ServiceReport {
+        assert!(self.heap.is_empty(), "report before the stream drained");
+        let n_tenants = self.subs.len();
+        if let Some(v) = ideals {
+            assert_eq!(v.len(), n_tenants, "one ideal makespan per submission");
+        }
+
+        let mut tenants = Vec::with_capacity(n_tenants);
+        let mut horizon = 0.0f64;
+        for (i, s) in self.subs.iter().enumerate() {
+            let kept: Vec<Placement> = self.placements[i].iter().flatten().copied().collect();
+            let kept_tasks: Vec<TaskId> = self.placements[i]
+                .iter()
+                .enumerate()
+                .filter_map(|(j, p)| p.map(|_| j))
+                .collect();
+            if self.cancelled[i].is_none() {
+                assert_eq!(kept.len(), s.graph.n_tasks(), "undecided task in report");
+            }
+            let n_placed = kept.len();
+            let schedule = Schedule::from_placements(kept);
+            // a cancelled tenant that never ran anything contributes
+            // nothing to the horizon (completion = arrival is only a
+            // flow-time anchor, not an event on the pool)
+            let completion = if n_placed == 0 {
+                s.arrival
+            } else {
+                schedule.makespan
+            };
+            if n_placed > 0 {
+                horizon = horizon.max(completion);
+            }
+            let ideal = match ideals {
+                Some(v) => v[i],
+                None => online_schedule(&s.graph, self.plat, &self.orders[i], &s.policy)
+                    .makespan,
+            };
+            let flow = completion - s.arrival;
+            tenants.push(TenantReport {
+                tenant: i,
+                app: s.graph.app.clone(),
+                n_tasks: s.graph.n_tasks(),
+                n_placed,
+                arrival: s.arrival,
+                completion,
+                flow_time: flow,
+                ideal_makespan: ideal,
+                stretch: flow / ideal,
+                decision_latency: Summary::of(&self.latencies[i]),
+                schedule,
+                kept_tasks,
+                cancelled_at: self.cancelled[i],
+            });
+        }
+
+        // stretch aggregates cover completed tenants only: a cancelled
+        // tenant's partial stretch would understate contention
+        let stretches: Vec<f64> = tenants
+            .iter()
+            .filter(|t| t.cancelled_at.is_none())
+            .map(|t| t.stretch)
+            .collect();
+        let mut utilization = vec![0.0; self.plat.n_types()];
+        if horizon > 0.0 {
+            for t in &tenants {
+                for (q, w) in t.schedule.loads(self.plat.n_types()).iter().enumerate() {
+                    utilization[q] += w / (horizon * self.plat.counts[q] as f64);
+                }
+            }
+        }
+        ServiceReport {
+            tenants,
+            decisions: self.decisions.clone(),
+            horizon,
+            total_tasks: self.subs.iter().map(|s| s.graph.n_tasks()).sum(),
+            mean_stretch: if stretches.is_empty() {
+                0.0
+            } else {
+                stretches.iter().sum::<f64>() / stretches.len() as f64
+            },
+            max_stretch: stretches.iter().fold(0.0f64, |a, &b| a.max(b)),
+            utilization,
+        }
+    }
+}
+
 /// Run the multi-tenant streaming service: merge the tenants' arrival
 /// streams over virtual time and take every decision through one shared
 /// [`PolicyEngine`].  O(total_tasks · (log tenants + Q log units)), plus
@@ -198,137 +590,9 @@ pub fn run_service_with_ideals(
     subs: &[Submission],
     ideals: Option<&[f64]>,
 ) -> ServiceReport {
-    let n_tenants = subs.len();
-    if let Some(v) = ideals {
-        assert_eq!(v.len(), n_tenants, "one ideal makespan per submission");
-    }
-    for s in subs {
-        assert!(s.graph.n_tasks() > 0, "empty submission");
-        // re-checked here because the fields are public (Submission::new
-        // validates, but nothing stops callers mutating afterwards)
-        assert!(
-            s.arrival.is_finite() && s.arrival >= 0.0,
-            "bad arrival {}",
-            s.arrival
-        );
-        if requires_two_types(&s.policy) {
-            assert!(
-                plat.n_types() == 2,
-                "{} is defined for hybrid platforms",
-                s.policy.name()
-            );
-        }
-        assert_eq!(
-            s.graph.n_types(),
-            plat.n_types(),
-            "graph/platform type count mismatch"
-        );
-    }
-
-    let orders: Vec<Vec<TaskId>> = subs.iter().map(|s| s.order_vec()).collect();
-    let mut engine = PolicyEngine::new(plat);
-    let mut rngs: Vec<Option<Rng>> = subs
-        .iter()
-        .map(|s| match s.policy {
-            OnlinePolicy::Random(seed) => Some(Rng::new(seed)),
-            _ => None,
-        })
-        .collect();
-    let mut placements: Vec<Vec<Option<Placement>>> = subs
-        .iter()
-        .map(|s| vec![None; s.graph.n_tasks()])
-        .collect();
-    let mut latencies: Vec<Vec<f64>> = subs
-        .iter()
-        .map(|s| Vec::with_capacity(s.graph.n_tasks()))
-        .collect();
-    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
-    let mut decisions = Vec::with_capacity(total_tasks);
-
-    // Stream heap: (arrival time, tenant, stream position, ready time).
-    // One outstanding arrival per tenant keeps the heap at O(tenants),
-    // and carrying the ready time computes each task's fold exactly once.
-    let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize, OrdF64)>> = BinaryHeap::new();
-    for (i, s) in subs.iter().enumerate() {
-        let r0 = ready_time(&s.graph, s.arrival, &placements[i], i, orders[i][0]);
-        heap.push(Reverse((OrdF64(s.arrival.max(r0)), i, 0, OrdF64(r0))));
-    }
-
-    while let Some(Reverse((OrdF64(at), i, pos, OrdF64(ready)))) = heap.pop() {
-        let g = &subs[i].graph;
-        let j = orders[i][pos];
-        debug_assert!(placements[i][j].is_none(), "tenant {i}: task {j} decided twice");
-        debug_assert!(at >= ready, "stream time regressed");
-
-        let td = Instant::now();
-        let p = engine.decide(g, plat, j, ready, &subs[i].policy, rngs[i].as_mut());
-        latencies[i].push(td.elapsed().as_secs_f64() + 1e-9);
-        placements[i][j] = Some(p);
-        decisions.push(DecisionRecord {
-            tenant: i,
-            task: j,
-            time: at,
-        });
-
-        if pos + 1 < orders[i].len() {
-            let r_next = ready_time(g, subs[i].arrival, &placements[i], i, orders[i][pos + 1]);
-            heap.push(Reverse((OrdF64(at.max(r_next)), i, pos + 1, OrdF64(r_next))));
-        }
-    }
-
-    // per-tenant reports
-    let mut tenants = Vec::with_capacity(n_tenants);
-    let mut horizon = 0.0f64;
-    for (i, s) in subs.iter().enumerate() {
-        let schedule = Schedule::from_placements(
-            placements[i]
-                .iter()
-                .map(|p| p.expect("every task decided"))
-                .collect(),
-        );
-        let completion = schedule.makespan;
-        horizon = horizon.max(completion);
-        let ideal = match ideals {
-            Some(v) => v[i],
-            None => online_schedule(&s.graph, plat, &orders[i], &s.policy).makespan,
-        };
-        let flow = completion - s.arrival;
-        tenants.push(TenantReport {
-            tenant: i,
-            app: s.graph.app.clone(),
-            n_tasks: s.graph.n_tasks(),
-            arrival: s.arrival,
-            completion,
-            flow_time: flow,
-            ideal_makespan: ideal,
-            stretch: flow / ideal,
-            decision_latency: Summary::of(&latencies[i]),
-            schedule,
-        });
-    }
-
-    let stretches: Vec<f64> = tenants.iter().map(|t| t.stretch).collect();
-    let mut utilization = vec![0.0; plat.n_types()];
-    if horizon > 0.0 {
-        for t in &tenants {
-            for (q, w) in t.schedule.loads(plat.n_types()).iter().enumerate() {
-                utilization[q] += w / (horizon * plat.counts[q] as f64);
-            }
-        }
-    }
-    ServiceReport {
-        tenants,
-        decisions,
-        horizon,
-        total_tasks,
-        mean_stretch: if stretches.is_empty() {
-            0.0
-        } else {
-            stretches.iter().sum::<f64>() / stretches.len() as f64
-        },
-        max_stretch: stretches.iter().fold(0.0f64, |a, &b| a.max(b)),
-        utilization,
-    }
+    let mut service = Service::new(plat, subs);
+    service.run();
+    service.report(ideals)
 }
 
 #[cfg(test)]
@@ -447,6 +711,142 @@ mod tests {
             assert!(w[0].time <= w[1].time, "decision times must be sorted");
         }
         validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn cancel_before_start_releases_the_unit() {
+        // 1 CPU + 1 GPU; tenant 0's CPU task is placed at t=0, then the
+        // tenant is cancelled before the task starts "running" past any
+        // later arrival: the reservation is rewound, so tenant 1 (arrival
+        // 5) starts at 5 instead of queueing behind the ghost until 10.
+        let mk = |cpu: f64| {
+            let mut b = Builder::new("one");
+            b.add_task("t", vec![cpu, 100.0]);
+            b.build()
+        };
+        let plat = Platform::hybrid(1, 1);
+        let subs = vec![
+            Submission::new(mk(10.0), 0.0, OnlinePolicy::Greedy),
+            Submission::new(mk(1.0), 5.0, OnlinePolicy::Greedy),
+        ];
+        let mut svc = Service::new(&plat, &subs);
+        assert!(svc.step().is_some()); // tenant 0 placed on the CPU [0, 10)
+        let out = svc.cancel(0);
+        assert_eq!(out, CancelOutcome { tenant: 0, at: 0.0, dropped_tasks: 1, released_units: 1 });
+        svc.run();
+        let report = svc.report(None);
+        assert_eq!(report.tenants[0].cancelled_at, Some(0.0));
+        assert_eq!(report.tenants[0].n_placed, 0);
+        assert!(report.tenants[0].schedule.placements.is_empty());
+        // the survivor got the freed unit at its own arrival
+        assert_eq!(report.tenants[1].schedule.placements[0].start, 5.0);
+        assert_eq!(report.tenants[1].schedule.placements[0].finish, 6.0);
+        validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn cancel_keeps_running_tasks_and_drops_the_stream() {
+        // tenant 0: 2-task CPU chain; cancelled after its first task
+        // started (now = 5 when tenant 1's arrival is processed): the
+        // running task finishes, the second task never arrives, and the
+        // survivor's already-irrevocable decision stands.
+        let chain2 = || {
+            let mut b = Builder::new("chain");
+            let a = b.add_task("a", vec![10.0, 100.0]);
+            let c = b.add_task("b", vec![10.0, 100.0]);
+            b.add_arc(a, c);
+            b.build()
+        };
+        let one = || {
+            let mut b = Builder::new("one");
+            b.add_task("t", vec![1.0, 100.0]);
+            b.build()
+        };
+        let plat = Platform::hybrid(1, 1);
+        let subs = vec![
+            Submission::new(chain2(), 0.0, OnlinePolicy::Greedy),
+            Submission::new(one(), 5.0, OnlinePolicy::Greedy),
+        ];
+        let mut svc = Service::new(&plat, &subs);
+        assert!(svc.step().is_some()); // t0/a on CPU [0, 10)
+        assert!(svc.step().is_some()); // t1 arrives at 5, queues [10, 11)
+        assert_eq!(svc.now(), 5.0);
+        let out = svc.cancel(0);
+        assert_eq!(out.dropped_tasks, 0, "running task is kept");
+        assert_eq!(out.released_units, 0);
+        svc.run();
+        let report = svc.report(None);
+        assert_eq!(report.tenants[0].n_placed, 1, "second chain task never ran");
+        assert_eq!(report.tenants[0].completion, 10.0);
+        assert_eq!(report.tenants[1].schedule.placements[0].start, 10.0);
+        assert!((report.horizon - 11.0).abs() < 1e-12);
+        validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn cancel_mid_stream_keeps_survivors_valid() {
+        let mut rng = Rng::new(91);
+        for case in 0..6usize {
+            let subs: Vec<Submission> = (0..6)
+                .map(|t| {
+                    let g = gen::hybrid_dag(&mut rng, 25, 0.12);
+                    let policy = if t % 2 == 0 {
+                        OnlinePolicy::Greedy
+                    } else {
+                        OnlinePolicy::Eft
+                    };
+                    Submission::new(g, t as f64 * 2.0, policy)
+                })
+                .collect();
+            let mut svc = Service::new(&plat(), &subs);
+            for _ in 0..(6 * 25) / 3 {
+                let _ = svc.step();
+            }
+            let victim = case % 6;
+            let out = svc.cancel(victim);
+            assert_eq!(out.tenant, victim);
+            svc.run();
+            let report = svc.report(None);
+            // survivors are complete and jointly feasible on the pool
+            validate_service(&plat(), &report.tenant_runs(&subs))
+                .unwrap_or_else(|e| panic!("case {case}: {e}"));
+            for t in &report.tenants {
+                if t.cancelled_at.is_none() {
+                    assert_eq!(t.n_placed, t.n_tasks);
+                } else {
+                    assert!(t.n_placed <= t.n_tasks);
+                }
+            }
+            // and nothing overlaps anywhere — including the cancelled
+            // tenant's kept (already-running) tasks
+            crate::sim::validate_placements_no_overlap(
+                report.tenants.iter().flat_map(|t| &t.schedule.placements),
+            )
+            .unwrap_or_else(|e| panic!("case {case}: overlap after cancel: {e}"));
+            // cascade invariant: no kept task of a cancelled tenant may
+            // depend on a dropped one, and kept precedences hold
+            for (i, t) in report.tenants.iter().enumerate() {
+                if t.cancelled_at.is_none() {
+                    continue;
+                }
+                let g = &subs[i].graph;
+                let mut placed: Vec<Option<Placement>> = vec![None; g.n_tasks()];
+                for (&j, p) in t.kept_tasks.iter().zip(&t.schedule.placements) {
+                    placed[j] = Some(*p);
+                }
+                for &j in &t.kept_tasks {
+                    for &pr in &g.preds[j] {
+                        let pp = placed[pr].unwrap_or_else(|| {
+                            panic!("case {case}: kept task {j} depends on dropped {pr}")
+                        });
+                        assert!(
+                            placed[j].unwrap().start >= pp.finish - 1e-9,
+                            "case {case}: kept precedence violated {pr}->{j}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

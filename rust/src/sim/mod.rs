@@ -219,6 +219,25 @@ pub fn validate_service(plat: &Platform, runs: &[TenantRun]) -> Result<(), Strin
     check_no_overlap(per_unit)
 }
 
+/// Pool-wide no-overlap check over raw placements from any mix of
+/// tenants (labels are ordinals).  Used where per-tenant schedules are
+/// not graph-aligned — e.g. the cancellation tests, whose cancelled
+/// tenants report only their kept tasks — so [`validate_service`] cannot
+/// run on them.
+pub fn validate_placements_no_overlap<'a>(
+    placements: impl IntoIterator<Item = &'a Placement>,
+) -> Result<(), String> {
+    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>> =
+        std::collections::HashMap::new();
+    for (idx, p) in placements.into_iter().enumerate() {
+        per_unit
+            .entry((p.ptype, p.unit))
+            .or_default()
+            .push((p.start, p.finish, idx.to_string()));
+    }
+    check_no_overlap(per_unit)
+}
+
 /// Validation for *realized* (wall-clock measured) schedules from the
 /// live coordinator: precedence + no-overlap + duration ≥ allocated
 /// time.  Realized durations legitimately exceed the nominal processing

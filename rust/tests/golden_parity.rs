@@ -172,6 +172,86 @@ fn parity_on_adversarial_tie_heavy_instances() {
 }
 
 #[test]
+fn parity_on_repeated_constant_costs() {
+    // The ROADMAP tie-band gap: the engine used exact float comparison
+    // where the reference scans use a ±1e-12 band, so instances with
+    // repeated cost constants (chameleon-style integer costs, or
+    // non-representable constants like 0.1 whose path sums differ by
+    // ulps) could diverge.  Both comparators are banded now; these tie
+    // farms pin EST, OLS and every deterministic online policy on
+    // exactly that regime.
+    let int_costs: [(f64, f64); 4] = [(1.0, 2.0), (2.0, 1.0), (3.0, 2.0), (4.0, 1.0)];
+    let frac_costs: [(f64, f64); 4] = [(0.1, 0.3), (0.3, 0.1), (0.2, 0.3), (0.6, 0.2)];
+    let mut rng = Rng::new(0xBA4D_0007);
+    for (farm, label) in [(int_costs, "int"), (frac_costs, "frac")] {
+        for case in 0..15 {
+            let n = 40 + rng.below(60);
+            let density = 0.04 + 0.1 * rng.f64();
+            let mut g = gen::hybrid_dag(&mut rng, n, density);
+            for j in 0..n {
+                let (pc, pg) = farm[rng.below(farm.len())];
+                g.proc_times[j] = vec![pc, pg];
+            }
+            let plat = random_platform(&mut rng);
+            let alloc = speed_alloc(&g);
+
+            let e = est::est_schedule(&g, &plat, &alloc);
+            let s = reference::est_schedule(&g, &plat, &alloc);
+            validate(&g, &plat, &e).unwrap_or_else(|err| panic!("{label} {case}: {err}"));
+            assert_eq!(e.placements, s.placements, "EST {label} tie farm case {case}");
+
+            let e = list::ols_schedule(&g, &plat, &alloc);
+            let s = reference::ols_schedule(&g, &plat, &alloc);
+            assert_eq!(e.placements, s.placements, "OLS {label} tie farm case {case}");
+
+            let order = random_topo_order(&g, &mut rng);
+            for policy in [
+                OnlinePolicy::Eft,
+                OnlinePolicy::ErLs,
+                OnlinePolicy::Greedy,
+                OnlinePolicy::R1,
+                OnlinePolicy::R2,
+                OnlinePolicy::R3,
+            ] {
+                let a = online_schedule(&g, &plat, &order, &policy);
+                let b = reference::online_schedule(&g, &plat, &order, &policy);
+                assert_eq!(
+                    a.placements,
+                    b.placements,
+                    "{} {label} tie farm case {case}",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_on_chameleon_instances() {
+    // real benchmark DAGs (block-size-derived repeated costs) through
+    // EST and the online policies — the from_json/chameleon regime the
+    // ROADMAP flagged for the tie-band fix
+    use hetsched::workloads::{chameleon, costs::CostModel};
+    for (nb, bs) in [(5usize, 320usize), (8, 128)] {
+        let cm = CostModel::hybrid(bs);
+        for app in ["potrf", "getrf", "posv"] {
+            let g = chameleon::by_name(app, nb, &cm, 3).unwrap();
+            let plat = Platform::hybrid(8, 2);
+            let alloc = speed_alloc(&g);
+            let a = est::est_schedule(&g, &plat, &alloc);
+            let b = reference::est_schedule(&g, &plat, &alloc);
+            assert_eq!(a.placements, b.placements, "EST {app} nb={nb} bs={bs}");
+            let order: Vec<usize> = (0..g.n_tasks()).collect();
+            for policy in [OnlinePolicy::Eft, OnlinePolicy::ErLs, OnlinePolicy::Greedy] {
+                let x = online_schedule(&g, &plat, &order, &policy);
+                let y = reference::online_schedule(&g, &plat, &order, &policy);
+                assert_eq!(x.placements, y.placements, "{} {app}", policy.name());
+            }
+        }
+    }
+}
+
+#[test]
 fn engine_ranks_unchanged_by_refactor() {
     // ols_rank feeds both engine and reference OLS; pin that the rank
     // computation itself is untouched by asserting monotonicity along

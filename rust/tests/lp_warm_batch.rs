@@ -1,0 +1,192 @@
+//! Warm-start / batch / chain-contraction correctness suite — the
+//! acceptance pins of the batched warm-start LP subsystem:
+//!
+//! * warm-started and cold PDHG solves reach the same LP* within the
+//!   solver tolerance, across ≥ 50 random (instance, m, k) grid-neighbor
+//!   pairs (primal+dual seeding, shrunken escalating budget and all);
+//! * chain-contracted models have the same objective as uncontracted
+//!   ones (exact via simplex on small instances, within tolerance via
+//!   PDHG on campaign-shaped ones);
+//! * the batched driver agrees with the per-item solve path, so LP*
+//!   cache entries stay interchangeable.
+
+use hetsched::algos::{solve_alloc_grid, solve_hlp_capped};
+use hetsched::graph::{gen, TaskGraph};
+use hetsched::lp::batch::{solve_batch, BatchJob};
+use hetsched::lp::chain::{contract, plan_chains};
+use hetsched::lp::model::{build_hlp, build_qhlp, hlp_warm_start, tighten_hlp_box};
+use hetsched::lp::pdhg::{solve_rust, DriveOpts};
+use hetsched::lp::simplex::solve_simplex;
+use hetsched::platform::Platform;
+use hetsched::substrate::rng::Rng;
+use hetsched::workloads::forkjoin;
+
+const TOL: f64 = 1e-3;
+
+fn rel_close(a: f64, b: f64, factor: f64) -> bool {
+    (a - b).abs() <= factor * TOL * (1.0 + a.abs().max(b.abs()))
+}
+
+/// A random (m, k) and a neighboring config one or two grid steps away.
+fn neighbor_configs(rng: &mut Rng) -> (Platform, Platform) {
+    let m = 4usize << rng.below(4); // 4..32
+    let k = 2usize << rng.below(3); // 2..8
+    let (m2, k2) = match rng.below(4) {
+        0 => (m * 2, k),
+        1 => (m, k * 2),
+        2 => (m * 2, k * 2),
+        _ => ((m / 2).max(1), k),
+    };
+    (Platform::hybrid(m, k), Platform::hybrid(m2, k2))
+}
+
+#[test]
+fn warm_started_grid_solves_match_cold_lp_star() {
+    // ≥ 50 (instance, m, k) grid-neighbor pairs: the seeded + contracted
+    // + budget-scheduled solve of the neighbor must land on the cold
+    // per-item LP* within the PDHG tolerance
+    let mut rng = Rng::new(0x3A21);
+    let mut pairs = 0;
+    for case in 0..50 {
+        let n = 10 + rng.below(20);
+        let g = gen::hybrid_dag(&mut rng, n, 0.08 + 0.15 * rng.f64());
+        let (p1, p2) = neighbor_configs(&mut rng);
+
+        // batched: p2 seeded from p1 (same graph pointer back-to-back)
+        let items: Vec<(&TaskGraph, &Platform)> = vec![(&g, &p1), (&g, &p2)];
+        let grid = solve_alloc_grid(&items, TOL, 200_000, 2);
+
+        // cold per-item solves of the same two LPs
+        let cold1 = solve_hlp_capped(&g, &p1, hetsched::runtime::LpBackendKind::RustPdhg, TOL, 200_000);
+        let cold2 = solve_hlp_capped(&g, &p2, hetsched::runtime::LpBackendKind::RustPdhg, TOL, 200_000);
+
+        assert!(
+            rel_close(grid[0].sol.obj, cold1.sol.obj, 3.0),
+            "case {case} head: {} vs {}",
+            grid[0].sol.obj,
+            cold1.sol.obj
+        );
+        assert!(
+            rel_close(grid[1].sol.obj, cold2.sol.obj, 3.0),
+            "case {case} warm neighbor: {} vs {}",
+            grid[1].sol.obj,
+            cold2.sol.obj
+        );
+        pairs += 1;
+    }
+    assert!(pairs >= 50);
+}
+
+#[test]
+fn warm_solution_certifies_same_tolerance_as_cold() {
+    // the warm-started neighbor's certificate (duality gap) must be as
+    // tight as the tolerance demands — warm starting may not loosen it
+    let mut rng = Rng::new(0x3A22);
+    for _ in 0..8 {
+        let g = gen::hybrid_dag(&mut rng, 18, 0.12);
+        let (p1, p2) = neighbor_configs(&mut rng);
+        let items: Vec<(&TaskGraph, &Platform)> = vec![(&g, &p1), (&g, &p2)];
+        let grid = solve_alloc_grid(&items, TOL, 400_000, 2);
+        for s in &grid {
+            assert!(
+                s.sol.gap <= TOL * 1.01,
+                "uncertified solve: gap {} > tol {TOL}",
+                s.sol.gap
+            );
+        }
+    }
+}
+
+#[test]
+fn chain_contracted_models_match_uncontracted_exactly() {
+    // simplex oracle: contraction preserves the optimum exactly, for
+    // HLP and QHLP, on random DAGs and on the chain-heavy fork-join app
+    let mut rng = Rng::new(0x3A23);
+    for _ in 0..12 {
+        let g = gen::hybrid_dag(&mut rng, 12, 0.15);
+        let plat = Platform::hybrid(3, 2);
+        let plan = plan_chains(&g);
+        let (full, _) = build_hlp(&g, &plat);
+        let slim = contract(&full, &plan);
+        let a = solve_simplex(&full).unwrap().obj;
+        let b = solve_simplex(&slim).unwrap().obj;
+        assert!((a - b).abs() < 1e-7 * (1.0 + a.abs()), "HLP {a} vs {b}");
+    }
+    // fork-join: every branch task is interior, so contraction halves
+    // the arc rows — the regime the campaign win comes from
+    let fj = forkjoin::forkjoin(6, 2, 1, 7);
+    let plan = plan_chains(&fj);
+    assert!(!plan.is_empty(), "fork-join must contain chains");
+    let plat = Platform::hybrid(2, 2);
+    let (full, _) = build_hlp(&fj, &plat);
+    let slim = contract(&full, &plan);
+    assert!(slim.m < full.m);
+    let a = solve_simplex(&full).unwrap().obj;
+    let b = solve_simplex(&slim).unwrap().obj;
+    assert!((a - b).abs() < 1e-7 * (1.0 + a.abs()), "forkjoin {a} vs {b}");
+    // QHLP variant
+    let g3 = gen::random_dag(&mut rng, 10, 0.2, 3);
+    let plan = plan_chains(&g3);
+    let plat3 = Platform::new(vec![2, 2, 1]);
+    let (full, _) = build_qhlp(&g3, &plat3);
+    let slim = contract(&full, &plan);
+    let a = solve_simplex(&full).unwrap().obj;
+    let b = solve_simplex(&slim).unwrap().obj;
+    assert!((a - b).abs() < 1e-7 * (1.0 + a.abs()), "QHLP {a} vs {b}");
+}
+
+#[test]
+fn contracted_pdhg_matches_full_pdhg_on_campaign_shapes() {
+    // PDHG on contracted vs uncontracted models of a campaign-sized
+    // instance: same LP* within tolerance, with the same warm start
+    let fj = forkjoin::forkjoin(40, 2, 1, 2026);
+    let plat = Platform::hybrid(8, 2);
+    let (mut full, vars) = build_hlp(&fj, &plat);
+    let warm = hlp_warm_start(
+        &fj,
+        &plat,
+        &hetsched::alloc::greedy_min_time(&fj),
+        &vars,
+    );
+    tighten_hlp_box(&mut full, &vars, warm[vars.lambda]);
+    let slim = contract(&full, &plan_chains(&fj));
+    assert!(slim.m < full.m, "contraction must drop rows here");
+    let opts = DriveOpts {
+        tol: TOL,
+        warm_start: Some(warm),
+        ..Default::default()
+    };
+    let a = solve_rust(&full, &opts);
+    let b = solve_rust(&slim, &opts);
+    assert!(
+        rel_close(a.obj, b.obj, 3.0),
+        "full {} vs contracted {}",
+        a.obj,
+        b.obj
+    );
+}
+
+#[test]
+fn batch_driver_interchangeable_with_sequential_drives() {
+    // independent batch jobs reproduce sequential solves bit-for-bit
+    // (the cache-interchangeability contract at the driver level)
+    let mut rng = Rng::new(0x3A24);
+    let mut lps = Vec::new();
+    for _ in 0..6 {
+        let g = gen::hybrid_dag(&mut rng, 15, 0.1);
+        let plat = Platform::hybrid(1 + rng.below(8), 1 + rng.below(4));
+        let (lp, _) = build_hlp(&g, &plat);
+        lps.push(lp);
+    }
+    let jobs: Vec<BatchJob> = lps
+        .iter()
+        .map(|lp| BatchJob::cold(lp.clone(), DriveOpts { tol: TOL, ..Default::default() }))
+        .collect();
+    let batched = solve_batch(jobs, 3);
+    for (lp, sol) in lps.iter().zip(&batched) {
+        let alone = solve_rust(lp, &DriveOpts { tol: TOL, ..Default::default() });
+        assert_eq!(sol.obj, alone.obj);
+        assert_eq!(sol.iters, alone.iters);
+        assert_eq!(sol.z, alone.z);
+    }
+}

@@ -21,7 +21,7 @@ use hetsched::sched::heft::heft_schedule;
 use hetsched::sched::list::list_schedule;
 use hetsched::sched::online::{online_schedule, random_topo_order, OnlinePolicy};
 use hetsched::sched::service::{run_service, Submission};
-use hetsched::sim::{validate_schedule, validate_service};
+use hetsched::sim::{validate_placements_no_overlap, validate_schedule, validate_service};
 use hetsched::substrate::rng::Rng;
 
 fn hybrid_platform(rng: &mut Rng) -> Platform {
@@ -147,6 +147,94 @@ fn service_mode_invariants_on_random_multi_tenant_draws() {
         let total: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
         assert_eq!(report.decisions.len(), total);
         assert_eq!(report.total_tasks, total);
+    }
+}
+
+#[test]
+fn service_cancellation_invariants_on_random_draws() {
+    // ~20 draws: cancel 1–2 tenants mid-stream, drain, then require
+    // (a) survivors complete and jointly feasible (merge validator),
+    // (b) the cancelled tenants' kept tasks still occupy conflict-free
+    //     intervals against everyone, and
+    // (c) the shared pool really released the dropped reservations —
+    //     total placed tasks + dropped tasks == total submitted.
+    use hetsched::sched::service::Service;
+    let mut rng = Rng::new(0xCA2C);
+    let policies = [OnlinePolicy::Greedy, OnlinePolicy::Eft, OnlinePolicy::ErLs];
+    for draw in 0..20u64 {
+        let plat = hybrid_platform(&mut rng);
+        let n_tenants = 3 + rng.below(3);
+        let subs: Vec<Submission> = (0..n_tenants)
+            .map(|t| {
+                let n = 10 + rng.below(25);
+                let g = gen::hybrid_dag(&mut rng, n, 0.03 + 0.15 * rng.f64());
+                let arrival = rng.f64() * 10.0;
+                Submission::new(g, arrival, policies[(draw as usize + t) % 3].clone())
+            })
+            .collect();
+        let total: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+
+        let mut svc = Service::new(&plat, &subs);
+        for _ in 0..rng.below(total) {
+            let _ = svc.step();
+        }
+        let victims: Vec<usize> = if draw % 2 == 0 {
+            vec![draw as usize % n_tenants]
+        } else {
+            vec![0, 1 + (draw as usize % (n_tenants - 1))]
+        };
+        let mut dropped = 0;
+        for &v in &victims {
+            dropped += svc.cancel(v).dropped_tasks;
+        }
+        svc.run();
+        let report = svc.report(None);
+
+        validate_service(&plat, &report.tenant_runs(&subs))
+            .unwrap_or_else(|e| panic!("cancel draw {draw}: {e}"));
+        // decision accounting: every processed arrival is either a kept
+        // placement or one of the reservations the cancel rewound
+        let placed: usize = report.tenants.iter().map(|t| t.n_placed).sum();
+        assert_eq!(
+            report.decisions.len(),
+            placed + dropped,
+            "draw {draw}: kept + dropped must cover all processed arrivals"
+        );
+        assert!(placed <= total);
+        for t in &report.tenants {
+            assert_eq!(t.cancelled_at.is_some(), victims.contains(&t.tenant));
+            if t.cancelled_at.is_none() {
+                assert_eq!(t.n_placed, t.n_tasks, "draw {draw}: survivor incomplete");
+            }
+        }
+        // merged no-overlap including cancelled tenants' kept tasks
+        validate_placements_no_overlap(
+            report.tenants.iter().flat_map(|t| &t.schedule.placements),
+        )
+        .unwrap_or_else(|e| panic!("draw {draw}: overlap after cancel: {e}"));
+        // cascade invariant: a cancelled tenant's kept tasks never depend
+        // on dropped ones, and their precedences hold
+        for (i, t) in report.tenants.iter().enumerate() {
+            if t.cancelled_at.is_none() {
+                continue;
+            }
+            let g = &subs[i].graph;
+            let mut placed = vec![None; g.n_tasks()];
+            for (&j, p) in t.kept_tasks.iter().zip(&t.schedule.placements) {
+                placed[j] = Some(*p);
+            }
+            for &j in &t.kept_tasks {
+                for &pr in &g.preds[j] {
+                    let pp = placed[pr].unwrap_or_else(|| {
+                        panic!("draw {draw}: kept task {j} depends on dropped {pr}")
+                    });
+                    assert!(
+                        placed[j].unwrap().start >= pp.finish - 1e-9,
+                        "draw {draw}: kept precedence {pr}->{j}"
+                    );
+                }
+            }
+        }
     }
 }
 
