@@ -26,8 +26,22 @@ cargo build --release
 cargo test -q
 
 if [[ "${1:-}" == "--perf" ]]; then
-    echo "== perf gate: engine >= 5x seed EST (writes BENCH_sched.json) =="
+    echo "== perf gate: engine >= 5x seed EST, gap-index HEFT >= 1x scan (writes BENCH_sched.json) =="
     HETSCHED_BENCH_QUICK=1 cargo bench --bench perf_hot_paths
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PY' || exit 1
+import json, sys
+with open("BENCH_sched.json") as f:
+    r = json.load(f)
+est = r["est"]["speedup"]
+if est < 5.0:
+    sys.exit(f"EST engine speedup {est:.1f}x below the 5x acceptance gate")
+heft = r["heft"]["speedup"]
+if heft < 1.0:
+    sys.exit(f"gap-index HEFT ({heft:.2f}x) must beat the 256-unit linear scan")
+print(f"sched gate OK: EST {est:.1f}x, gap-index HEFT {heft:.2f}x on {r['heft_instance']['platform']}")
+PY
+    fi
     cat BENCH_sched.json
 
     echo "== perf gate: service-mode throughput (writes BENCH_service.json) =="
@@ -63,8 +77,14 @@ if warm > cold:
 wi, ci = r["warm"]["iters"], r["cold_contracted"]["iters"]
 if wi > ci * 1.05:
     sys.exit(f"warm-started grid needed >5% more iterations ({wi:.0f}) than per-item contracted solves ({ci:.0f})")
+# blocked-kernel gate: the fused RustChunk must not lose to the scalar
+# oracle (5% noise slack)
+kb, ks = r["kernel"]["blocked_s"], r["kernel"]["scalar_s"]
+if kb > ks * 1.05:
+    sys.exit(f"blocked PDHG kernel ({kb:.4f} s) lost to the scalar oracle ({ks:.4f} s)")
 print(f"lp gate OK: warm {warm:.3f} s <= cold {cold:.3f} s ({r['speedup_warm_vs_cold']:.2f}x; "
-      f"fair parallel baseline {r['speedup_warm_vs_cold_parallel']:.2f}x; iters {wi:.0f} <= {ci:.0f})")
+      f"fair parallel baseline {r['speedup_warm_vs_cold_parallel']:.2f}x; iters {wi:.0f} <= {ci:.0f}; "
+      f"kernel blocked/scalar {r['kernel']['speedup']:.2f}x)")
 PY
     fi
     cat BENCH_lp.json

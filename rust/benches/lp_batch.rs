@@ -22,19 +22,25 @@
 //! unlike wall clock cannot be bought with thread count; chain heads
 //! are identical solves, warm seeding only removes iterations).
 //!
+//! Also timed and gated: the blocked (fused) `RustChunk` kernel vs the
+//! retained `ScalarChunk` oracle on a ~1000-task HLP — blocked must not
+//! lose (the `kernel` row of BENCH_lp.json).
+//!
 //! Set HETSCHED_BENCH_QUICK=1 for a reduced grid (4 configs, 1 app);
-//! set HETSCHED_BENCH_FULL=1 to add a Scale::Full-sized 10k-task row.
+//! set HETSCHED_BENCH_FULL=1 to add the Scale::Full rows: the 10k-task
+//! fork-join chain plus the 10k/50k/100k-task `ggen-layers` instances
+//! on the 256-unit (192+64) platform.
 
 use hetsched::algos::{build_hlp_job, solve_alloc_grid};
 use hetsched::alloc::greedy_min_time;
 use hetsched::graph::TaskGraph;
 use hetsched::lp::batch::{solve_batch, BatchJob};
 use hetsched::lp::chain::{plan_chains, ChainPlan};
-use hetsched::lp::pdhg::{solve_rust, DriveOpts};
+use hetsched::lp::pdhg::{solve_rust, ChunkBackend, DriveOpts, RustChunk, ScalarChunk};
 use hetsched::platform::{self, Platform};
 use hetsched::substrate::json::Json;
 use hetsched::substrate::pool::parallel_map;
-use hetsched::workloads::{chameleon, costs::CostModel, forkjoin};
+use hetsched::workloads::{chameleon, costs::CostModel, forkjoin, Instance};
 use std::time::Instant;
 
 const TOL: f64 = 1e-4;
@@ -223,6 +229,44 @@ fn main() {
         }
     }
 
+    // ---- blocked vs scalar PDHG kernel -------------------------------
+    // same LP, same iterate stream, pure chunk wall clock: the blocked
+    // (fused matvec+prox) RustChunk must not lose to the retained
+    // scalar oracle.  A ~1000-task fork-join HLP keeps the matrix big
+    // enough to measure and small enough to run in the quick gate.
+    let kernel_g = forkjoin::forkjoin(499, 2, 1, 9);
+    let kernel_plat = Platform::hybrid(64, 16);
+    let (kernel_lp, _, _) = build_hlp_job(
+        &kernel_g,
+        &kernel_plat,
+        &greedy_min_time(&kernel_g),
+        &plan_chains(&kernel_g),
+    );
+    const KERNEL_CHUNKS: usize = 16; // x250 iters each
+    let time_kernel = |backend: &mut dyn ChunkBackend| {
+        let mut z = vec![0.0; kernel_lp.n];
+        let mut y = vec![0.0; kernel_lp.m];
+        backend.run_chunk(&mut z, &mut y, 1e-3, 1e-3); // warmup
+        let t = Instant::now();
+        for _ in 0..KERNEL_CHUNKS {
+            backend.run_chunk(&mut z, &mut y, 1e-3, 1e-3);
+        }
+        (t.elapsed().as_secs_f64(), z[0] + y[0]) // sink defeats DCE
+    };
+    let (blocked_s, sink_b) = time_kernel(&mut RustChunk::new(&kernel_lp, 250));
+    let (scalar_s, sink_s) = time_kernel(&mut ScalarChunk::new(&kernel_lp, 250));
+    // sanity, not the equivalence test (that lives in tier-1): the two
+    // kernels' trajectories agree to accumulated rounding
+    assert!(
+        (sink_b - sink_s).abs() < 1e-3 * (1.0 + sink_s.abs()),
+        "blocked and scalar kernels diverged: {sink_b} vs {sink_s}"
+    );
+    let kernel_speedup = scalar_s / blocked_s;
+    println!(
+        "kernel ({} vars x {} rows, {} chunks): blocked {:.4} s, scalar {:.4} s -> {:.2}x",
+        kernel_lp.n, kernel_lp.m, KERNEL_CHUNKS, blocked_s, scalar_s, kernel_speedup
+    );
+
     let speedup = cold.wall_s / warm.wall_s;
     println!("-> batched+warm vs cold per-solve baseline: {speedup:.2}x");
     println!(
@@ -260,6 +304,14 @@ fn main() {
             "speedup_warm_vs_cold_parallel",
             Json::Num(cold_p.wall_s / warm.wall_s),
         ),
+        (
+            "kernel",
+            Json::obj(vec![
+                ("blocked_s", Json::Num(blocked_s)),
+                ("scalar_s", Json::Num(scalar_s)),
+                ("speedup", Json::Num(kernel_speedup)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_lp.json", report.to_string()).expect("write BENCH_lp.json");
     println!("wrote BENCH_lp.json");
@@ -282,6 +334,12 @@ fn main() {
         "acceptance: warm grid iterations ({}) must not exceed per-item contracted solves ({}) by >5%",
         warm.total_iters,
         cold_c.total_iters
+    );
+    // the blocked kernel must not lose to the scalar oracle (5% noise
+    // slack; the same gate runs off BENCH_lp.json in ci.sh --perf)
+    assert!(
+        blocked_s <= scalar_s * 1.05,
+        "acceptance: blocked kernel ({blocked_s:.4} s) must not lose to scalar ({scalar_s:.4} s)"
     );
 
     if std::env::var("HETSCHED_BENCH_FULL").is_ok() {
@@ -307,5 +365,34 @@ fn main() {
             warm_big.wall_s,
             t.elapsed().as_secs_f64()
         );
+
+        // the lifted Scale::Full grid (EXPERIMENTS.md §Scale::Full):
+        // 10k/50k/100k-task layered DAGs on the 256-unit platform,
+        // cold-contracted at 192x64 vs a warm chain from the paper
+        // grid's biggest config.  The 100k row is minutes of PDHG —
+        // that is the point of running it behind the FULL flag.
+        for n in hetsched::workloads::FULL_GGEN_TASKS {
+            let inst = Instance::Ggen { n_tasks: n };
+            let g = inst.generate(2);
+            println!(
+                "\n== Scale::Full row: {} ({} tasks, {} arcs) ==",
+                inst.label(),
+                g.n_tasks(),
+                g.n_arcs()
+            );
+            let far = Platform::hybrid(192, 64);
+            let near = Platform::hybrid(128, 16);
+            let cold_row = run_cold(&[(&g, &far)], true);
+            println!(
+                "cold 192x64: obj {:.4}, {} iters in {:.3} s",
+                cold_row.objs[0], cold_row.total_iters, cold_row.wall_s
+            );
+            let chain: Vec<(&TaskGraph, &Platform)> = vec![(&g, &near), (&g, &far)];
+            let warm_row = run_warm(&chain, 2);
+            println!(
+                "warm chain 128x16 -> 192x64: objs {:.4}/{:.4}, {} iters, wall {:.3} s",
+                warm_row.objs[0], warm_row.objs[1], warm_row.total_iters, warm_row.wall_s
+            );
+        }
     }
 }

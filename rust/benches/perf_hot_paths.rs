@@ -2,9 +2,11 @@
 //!
 //! Sections:
 //!   0. engine vs seed schedulers on a 5000-task, 32+8-unit instance —
-//!      the event-driven-core acceptance gate.  Results (and speedups)
-//!      are written to BENCH_sched.json so the perf trajectory is
-//!      tracked PR over PR.
+//!      the event-driven-core acceptance gate — plus gap-indexed HEFT vs
+//!      the reference timeline scan on a 10k-task, 256-unit (192+64)
+//!      instance.  Results (and speedups) are written to
+//!      BENCH_sched.json so the perf trajectory is tracked PR over PR;
+//!      gates: EST >= 5x seed, HEFT >= 1x the linear scan.
 //!   L3: LP build, Ruiz scaling, list/EST/HEFT schedulers, ranks,
 //!       validator, and the end-to-end offline pipeline.
 //!   L1+L2: PDHG chunk execution through PJRT (skipped without
@@ -89,6 +91,26 @@ fn main() {
         || online_by_id(&big, &bigplat, &OnlinePolicy::ErLs).makespan,
         || reference::online_by_id(&big, &bigplat, &OnlinePolicy::ErLs).makespan,
     );
+
+    // ---- gap-indexed HEFT: 10k tasks on a 256-unit (192+64) platform —
+    // the cluster-scale regime the gap index unlocks.  The reference is
+    // the per-task scan over every unit's timeline.
+    println!("\n== gap-index HEFT vs reference scan (10k-task DAG, 192x64) ==");
+    let huge = gen::hybrid_dag(&mut rng, 10_000, 0.001);
+    let hugeplat = Platform::hybrid(192, 64);
+    println!(
+        "instance: {} tasks, {} arcs, platform {}",
+        huge.n_tasks(),
+        huge.n_arcs(),
+        hugeplat.label()
+    );
+    let (heft_e, heft_s, heft_speedup) = sched_pair(
+        "HEFT 10k/256u",
+        &opts,
+        || heft_schedule(&huge, &hugeplat).makespan,
+        || reference::heft_schedule(&huge, &hugeplat).makespan,
+    );
+
     let ms = |r: &BenchResult| Json::Num(r.mean.as_secs_f64() * 1e3);
     let section = |e: &BenchResult, s: &BenchResult, speedup: f64| {
         Json::obj(vec![
@@ -110,12 +132,25 @@ fn main() {
         ("est", section(&est_e, &est_s, est_speedup)),
         ("ols", section(&ols_e, &ols_s, ols_speedup)),
         ("online_erls", section(&onl_e, &onl_s, onl_speedup)),
+        (
+            "heft_instance",
+            Json::obj(vec![
+                ("tasks", Json::Num(huge.n_tasks() as f64)),
+                ("arcs", Json::Num(huge.n_arcs() as f64)),
+                ("platform", Json::Str(hugeplat.label())),
+            ]),
+        ),
+        ("heft", section(&heft_e, &heft_s, heft_speedup)),
     ]);
     std::fs::write("BENCH_sched.json", report.to_string()).expect("write BENCH_sched.json");
     println!("wrote BENCH_sched.json\n");
     assert!(
         est_speedup >= 5.0,
         "acceptance: EST engine must be >= 5x the seed (got {est_speedup:.1}x)"
+    );
+    assert!(
+        heft_speedup >= 1.0,
+        "acceptance: gap-index HEFT must beat the 256-unit linear scan (got {heft_speedup:.2}x)"
     );
 
     if std::env::var("HETSCHED_BENCH_QUICK").is_ok() {

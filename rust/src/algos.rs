@@ -149,7 +149,49 @@ pub fn solve_alloc_grid(
     max_iters: usize,
     workers: usize,
 ) -> Vec<AllocLp> {
-    use crate::lp::batch::{solve_batch, BatchJob};
+    solve_alloc_grid_seeded(items, Vec::new(), tol, max_iters, workers)
+        .into_iter()
+        .map(|(a, _)| a)
+        .collect()
+}
+
+/// External seeding options for one item of [`solve_alloc_grid_seeded`]
+/// (all off by default — a default seed vector reproduces
+/// [`solve_alloc_grid`] exactly).
+#[derive(Default)]
+pub struct GridSeed {
+    /// Cross-run warm start: final (z, y) iterates — in the contracted
+    /// model's original coordinates — persisted by a previous campaign
+    /// run ([`crate::experiments::cache`]).  Applied only to chain heads
+    /// and only if the dimensions still match the freshly built LP
+    /// (model construction is deterministic, so a mismatch means the
+    /// entry is from an older model layout and is silently dropped).
+    pub iterates: Option<(Vec<f64>, Vec<f64>)>,
+    /// Cross-*instance* chain: seed from the given earlier item index (a
+    /// same-app instance with nearby parameters at the same config —
+    /// the caller scores proximity via
+    /// [`crate::lp::warm::grid_distance`] over
+    /// [`crate::workloads::Instance::warm_params`]).  The bool is the
+    /// "close" flag for the shrunken budget schedule.  Ignored when the
+    /// item already chains within its own instance, or when the LP
+    /// dimensions differ (different DAG structure).
+    pub chain_from: Option<(usize, bool)>,
+    /// Return this item's final iterates for persistence.
+    pub keep_iterates: bool,
+}
+
+/// [`solve_alloc_grid`] with external seeding: per-item cross-run warm
+/// starts, cross-instance chains and iterate keep flags ([`GridSeed`]).
+/// Warm starts and chains only change where PDHG *starts* — every solve
+/// still certifies `tol`, so LP* cache semantics are untouched.
+pub fn solve_alloc_grid_seeded(
+    items: &[(&TaskGraph, &Platform)],
+    mut seeds: Vec<GridSeed>,
+    tol: f64,
+    max_iters: usize,
+    workers: usize,
+) -> Vec<(AllocLp, Option<(Vec<f64>, Vec<f64>)>)> {
+    use crate::lp::batch::{solve_batch_full, BatchJob};
     use crate::lp::pdhg::DriveOpts;
     use crate::lp::warm::{grid_distance, CLOSE_DIST};
 
@@ -158,7 +200,8 @@ pub fn solve_alloc_grid(
         Q(QhlpVars),
     }
 
-    let mut jobs = Vec::with_capacity(items.len());
+    seeds.resize_with(items.len(), GridSeed::default);
+    let mut jobs: Vec<BatchJob> = Vec::with_capacity(items.len());
     let mut vars_of = Vec::with_capacity(items.len());
     // chain plan and greedy allocation depend only on the graph: hoist
     // them across each graph's run of consecutive configs
@@ -177,38 +220,61 @@ pub fn solve_alloc_grid(
             let (lp, warm, v) = build_qhlp_job(g, plat, greedy, plan);
             (lp, warm, Vars::Q(v))
         };
-        let (seed_from, warm_close) = if same_graph_as_prev {
+        let seed = &mut seeds[idx];
+        let (seed_from, mut warm_close) = if same_graph_as_prev {
             let close =
                 grid_distance(&items[idx - 1].1.counts, &plat.counts) <= CLOSE_DIST;
             (Some(idx - 1), close)
+        } else if let Some((x, close)) = seed.chain_from {
+            // cross-instance chain: only sound when the LP layout is
+            // identical (same DAG structure, e.g. Chameleon instances
+            // differing only in block size)
+            if x < idx && jobs[x].lp.n == lp.n && jobs[x].lp.m == lp.m {
+                (Some(x), close)
+            } else {
+                (None, false)
+            }
         } else {
             (None, false)
         };
+        let mut opts = DriveOpts {
+            tol,
+            max_iters,
+            warm_start: Some(warm),
+            ..Default::default()
+        };
+        if seed_from.is_none() {
+            // chain heads may warm-start from a previous run's persisted
+            // iterates (primal + dual) instead of the greedy point
+            if let Some((z, y)) = seed.iterates.take() {
+                if z.len() == lp.n && y.len() == lp.m {
+                    opts.warm_start = Some(z);
+                    opts.warm_start_dual = Some(y);
+                    warm_close = true;
+                }
+            }
+        }
         jobs.push(BatchJob {
             lp,
-            opts: DriveOpts {
-                tol,
-                max_iters,
-                warm_start: Some(warm),
-                ..Default::default()
-            },
+            opts,
             seed_from,
             warm_close,
+            keep_iterates: seed.keep_iterates,
         });
         vars_of.push(vars);
     }
 
-    let sols = solve_batch(jobs, workers);
+    let sols = solve_batch_full(jobs, workers);
     items
         .iter()
         .zip(sols)
         .zip(vars_of)
-        .map(|((&(g, _), sol), vars)| {
+        .map(|((&(g, _), (sol, kept)), vars)| {
             let alloc = match vars {
                 Vars::Two(v) => round_hlp(&sol.z, &v),
                 Vars::Q(v) => round_qhlp(&sol.z, &v, g),
             };
-            AllocLp { sol, alloc }
+            (AllocLp { sol, alloc }, kept)
         })
         .collect()
 }
@@ -328,6 +394,80 @@ mod tests {
             );
             assert_eq!(grid[i].alloc.len(), gr.n_tasks());
         }
+    }
+
+    #[test]
+    fn cross_instance_chain_matches_solo_solves() {
+        // same app, same nb, different block size: identical DAG
+        // structure (hence LP layout), different costs — the
+        // cross-instance chain regime.  LP* must match per-item solves.
+        let g320 = chameleon::potrf(5, &CostModel::hybrid(320), 3);
+        let g512 = chameleon::potrf(5, &CostModel::hybrid(512), 3);
+        let plat = Platform::hybrid(8, 2);
+        let items: Vec<(&TaskGraph, &Platform)> = vec![(&g320, &plat), (&g512, &plat)];
+        let seeds = vec![
+            GridSeed { keep_iterates: true, ..Default::default() },
+            GridSeed { chain_from: Some((0, true)), ..Default::default() },
+        ];
+        let out = solve_alloc_grid_seeded(&items, seeds, 1e-4, 80_000, 2);
+        assert!(out[0].1.is_some(), "kept iterates");
+        for (i, &(gr, p)) in items.iter().enumerate() {
+            let solo = solve_hlp_capped(gr, p, LpBackendKind::RustPdhg, 1e-4, 80_000);
+            let scale = 1.0 + solo.sol.obj.abs();
+            assert!(
+                (out[i].0.sol.obj - solo.sol.obj).abs() < 1e-3 * scale,
+                "item {i}: chained {} vs solo {}",
+                out[i].0.sol.obj,
+                solo.sol.obj
+            );
+        }
+        // a dimension-mismatched chain (different nb => different DAG)
+        // is dropped silently, not an error
+        let g10 = chameleon::potrf(10, &CostModel::hybrid(320), 3);
+        let items2: Vec<(&TaskGraph, &Platform)> = vec![(&g320, &plat), (&g10, &plat)];
+        let seeds2 = vec![
+            GridSeed::default(),
+            GridSeed { chain_from: Some((0, true)), ..Default::default() },
+        ];
+        let out2 = solve_alloc_grid_seeded(&items2, seeds2, 1e-4, 80_000, 2);
+        let solo10 = solve_hlp_capped(&g10, &plat, LpBackendKind::RustPdhg, 1e-4, 80_000);
+        let scale = 1.0 + solo10.sol.obj.abs();
+        assert!(
+            (out2[1].0.sol.obj - solo10.sol.obj).abs() < 1e-3 * scale,
+            "dropped chain must fall back to the plain solve"
+        );
+    }
+
+    #[test]
+    fn cross_run_iterate_seed_accepted_and_dimension_checked() {
+        let g = chameleon::potrf(5, &CostModel::hybrid(320), 3);
+        let plat = Platform::hybrid(8, 2);
+        let items: Vec<(&TaskGraph, &Platform)> = vec![(&g, &plat)];
+        let keep = vec![GridSeed { keep_iterates: true, ..Default::default() }];
+        let run1 = solve_alloc_grid_seeded(&items, keep, 1e-4, 80_000, 1);
+        let (z, y) = run1[0].1.clone().expect("kept iterates");
+
+        // "next process": seed from the persisted iterates — same LP*,
+        // and convergence from the finished point is not slower than
+        // the cold run (one-chunk certificate slack)
+        let seeded = vec![GridSeed { iterates: Some((z, y)), ..Default::default() }];
+        let run2 = solve_alloc_grid_seeded(&items, seeded, 1e-4, 80_000, 1);
+        let scale = 1.0 + run1[0].0.sol.obj.abs();
+        assert!(
+            (run2[0].0.sol.obj - run1[0].0.sol.obj).abs() < 1e-3 * scale,
+            "warm {} vs cold {}",
+            run2[0].0.sol.obj,
+            run1[0].0.sol.obj
+        );
+        assert!(run2[0].0.sol.iters <= run1[0].0.sol.iters + 250);
+
+        // stale iterates with wrong dimensions are dropped silently
+        let bad = vec![GridSeed {
+            iterates: Some((vec![0.0; 3], vec![0.0; 2])),
+            ..Default::default()
+        }];
+        let run3 = solve_alloc_grid_seeded(&items, bad, 1e-4, 80_000, 1);
+        assert!((run3[0].0.sol.obj - run1[0].0.sol.obj).abs() < 1e-3 * scale);
     }
 
     #[test]

@@ -10,6 +10,17 @@
 //! tolerance as a cold one (`rust/tests/lp_warm_batch.rs` pins LP*
 //! agreement), so entries written by cold, warm or batched solves are
 //! interchangeable and nothing about warm-starting may leak into the key.
+//!
+//! The cache additionally persists **final PDHG iterates** (primal z +
+//! dual y, in the contracted model's original coordinates) under a
+//! separate `iter|…` keyspace ([`iterate_key`]): a later campaign run in
+//! a *different process* — typically at a different tolerance or budget,
+//! so its LP* keys all miss — warm-starts its chain heads from the
+//! previous run's iterates instead of the greedy point.  Iterate entries
+//! are advisory (a seed, never a solution): they are keyed without
+//! tolerance/budget, bounded per entry by [`MAX_ITERATE_FLOATS`], and
+//! their presence or absence never changes what an LP* lookup returns —
+//! `cache_key` semantics are untouched.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -18,9 +29,18 @@ use crate::algos::AllocLp;
 use crate::lp::LpSolution;
 use crate::substrate::json::{parse, Json};
 
+/// Upper bound on `z.len() + y.len()` for a persisted iterate entry
+/// (~200k floats ≈ a 10k-task HLP; the 50k/100k-task instances skip
+/// persistence rather than ballooning the cache file).
+pub const MAX_ITERATE_FLOATS: usize = 200_000;
+
+/// Prefix separating iterate entries from LP* entries in the JSON file.
+const ITER_PREFIX: &str = "iter|";
+
 #[derive(Default)]
 pub struct LpCache {
     entries: BTreeMap<String, (f64, f64, Vec<usize>)>, // obj, lower_bound, alloc
+    iterates: BTreeMap<String, (Vec<f64>, Vec<f64>)>,  // final (z, y)
     dirty: bool,
 }
 
@@ -30,6 +50,16 @@ impl LpCache {
         if let Ok(text) = std::fs::read_to_string(path) {
             if let Ok(Json::Obj(map)) = parse(&text) {
                 for (k, v) in map {
+                    if k.starts_with(ITER_PREFIX) {
+                        let (Some(z), Some(y)) = (
+                            v.get("z").and_then(Json::as_arr).and_then(floats),
+                            v.get("y").and_then(Json::as_arr).and_then(floats),
+                        ) else {
+                            continue;
+                        };
+                        cache.iterates.insert(k, (z, y));
+                        continue;
+                    }
                     let (Some(obj), Some(lb), Some(alloc)) = (
                         v.get("obj").and_then(Json::as_f64),
                         v.get("lb").and_then(Json::as_f64),
@@ -78,6 +108,28 @@ impl LpCache {
         self.dirty = true;
     }
 
+    /// Persisted final iterates for a cross-run warm start, if a
+    /// previous run stored them (and they fit the size bound).
+    pub fn get_iterates(&self, key: &str) -> Option<(Vec<f64>, Vec<f64>)> {
+        self.iterates.get(key).cloned()
+    }
+
+    /// Store final iterates; entries beyond [`MAX_ITERATE_FLOATS`] are
+    /// silently skipped (a bound on cache-file growth, not an error —
+    /// oversized instances just cold-start next run).
+    pub fn put_iterates(&mut self, key: &str, z: &[f64], y: &[f64]) {
+        if z.len() + y.len() > MAX_ITERATE_FLOATS {
+            return;
+        }
+        self.iterates
+            .insert(key.to_string(), (z.to_vec(), y.to_vec()));
+        self.dirty = true;
+    }
+
+    pub fn n_iterate_entries(&self) -> usize {
+        self.iterates.len()
+    }
+
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if !self.dirty {
             return Ok(());
@@ -85,7 +137,7 @@ impl LpCache {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let obj: BTreeMap<String, Json> = self
+        let mut obj: BTreeMap<String, Json> = self
             .entries
             .iter()
             .map(|(k, (obj, lb, alloc))| {
@@ -102,8 +154,21 @@ impl LpCache {
                 )
             })
             .collect();
+        for (k, (z, y)) in &self.iterates {
+            obj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("z", Json::Arr(z.iter().map(|&v| Json::Num(v)).collect())),
+                    ("y", Json::Arr(y.iter().map(|&v| Json::Num(v)).collect())),
+                ]),
+            );
+        }
         std::fs::write(path, Json::Obj(obj).to_string())
     }
+}
+
+fn floats(arr: &[Json]) -> Option<Vec<f64>> {
+    arr.iter().map(Json::as_f64).collect()
 }
 
 /// Cache key for an (instance, platform, formulation, tolerance,
@@ -119,6 +184,14 @@ pub fn cache_key(
     max_iters: usize,
 ) -> String {
     format!("{instance}|{config}|q{n_types}|tol{tol:.0e}|it{max_iters}")
+}
+
+/// Key for a persisted-iterate entry.  Deliberately *without* tolerance
+/// or budget: iterates are a warm-start seed, useful across any solve of
+/// the same (instance, config, formulation) — the solve itself still
+/// certifies whatever tolerance its caller asked for.
+pub fn iterate_key(instance: &str, config: &str, n_types: usize) -> String {
+    format!("{ITER_PREFIX}{instance}|{config}|q{n_types}")
 }
 
 #[cfg(test)]
@@ -186,5 +259,50 @@ mod tests {
             cache_key("a", "16x2", 2, 1e-4, 80_000),
             cache_key("a", "16x2", 2, 1e-4, 80_000)
         );
+    }
+
+    #[test]
+    fn iterates_roundtrip_and_leave_lp_star_alone() {
+        let dir = std::env::temp_dir()
+            .join(format!("hetsched-cache-it-{}", std::process::id()));
+        let path = dir.join("cache.json");
+        let mut c = LpCache::default();
+        let lk = cache_key("potrf-nb5-bs320", "16x2", 2, 1e-4, 80_000);
+        let ik = iterate_key("potrf-nb5-bs320", "16x2", 2);
+        c.put(&lk, &sample());
+        c.put_iterates(&ik, &[0.5, 1.25, -3.0e-7], &[2.0, 0.0]);
+        c.save(&path).unwrap();
+
+        let c2 = LpCache::load(&path);
+        // LP* lookups are untouched by the iterate keyspace
+        assert_eq!(c2.len(), 1);
+        assert_eq!(c2.get(&lk).unwrap().sol.obj, 3.25);
+        assert!(c2.get(&ik).is_none(), "iterate keys never serve LP*");
+        // iterates round-trip losslessly (shortest-repr float printing)
+        let (z, y) = c2.get_iterates(&ik).unwrap();
+        assert_eq!(z, vec![0.5, 1.25, -3.0e-7]);
+        assert_eq!(y, vec![2.0, 0.0]);
+        assert!(c2.get_iterates(&lk).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_iterates_are_not_persisted() {
+        let mut c = LpCache::default();
+        let big = vec![1.0; MAX_ITERATE_FLOATS];
+        c.put_iterates("iter|big|16x2|q2", &big, &[1.0]);
+        assert_eq!(c.n_iterate_entries(), 0, "beyond the size bound");
+        c.put_iterates("iter|ok|16x2|q2", &[1.0; 10], &[1.0; 5]);
+        assert_eq!(c.n_iterate_entries(), 1);
+    }
+
+    #[test]
+    fn iterate_keys_ignore_tolerance_and_budget() {
+        // the whole point of the iterate keyspace: a run at a new
+        // tolerance/budget (whose LP* keys all miss) still finds seeds
+        assert_eq!(iterate_key("a", "16x2", 2), iterate_key("a", "16x2", 2));
+        assert!(iterate_key("a", "16x2", 2).starts_with("iter|"));
+        assert_ne!(iterate_key("a", "16x2", 2), iterate_key("a", "16x2", 3));
+        assert_ne!(iterate_key("a", "16x2", 2), iterate_key("a", "32x2", 2));
     }
 }

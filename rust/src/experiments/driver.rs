@@ -18,20 +18,31 @@
 //!    solve certifies the same tolerance a cold solve would, so cached
 //!    LP* semantics are identical (pinned by `rust/tests/lp_warm_batch.rs`).
 //!    Backends that can't run batched (simplex, PJRT artifacts) keep the
-//!    per-item `parallel_map` path.
+//!    per-item `parallel_map` path.  Chain heads additionally (a) seed
+//!    from the previous *process run's* persisted final iterates
+//!    ([`super::cache::iterate_key`]) when present — so repeated
+//!    campaigns warm-start across processes even when their LP* keys
+//!    miss — falling back to (b) a cross-instance chain onto a same-app,
+//!    nearby-parameter instance in the same slice
+//!    ([`Instance::warm_params`] scored by
+//!    [`crate::lp::warm::grid_distance`]); and heads' final iterates are
+//!    persisted back (size-bounded) for the next run.
 //! 2. **Row phase** — the campaign's row closure runs per work item over
 //!    the worker pool, with rows kept in grid order.
 
 use std::sync::Mutex;
 
-use crate::algos::{solve_alloc_grid, solve_hlp_capped, solve_qhlp_capped, AllocLp};
+use crate::algos::{
+    solve_alloc_grid_seeded, solve_hlp_capped, solve_qhlp_capped, AllocLp, GridSeed,
+};
 use crate::graph::TaskGraph;
+use crate::lp::warm::{grid_distance, CLOSE_DIST};
 use crate::platform::Platform;
 use crate::runtime::{self, LpBackendKind};
 use crate::substrate::pool::parallel_map;
 use crate::workloads::{instances, Instance};
 
-use super::cache::{cache_key, LpCache};
+use super::cache::{cache_key, iterate_key, LpCache};
 use super::offline::configs;
 use super::CampaignOpts;
 
@@ -119,7 +130,70 @@ where
                     .iter()
                     .map(|&ix| (graph_of(&local, items[ix].0), &cfgs[items[ix].1]))
                     .collect();
-                solve_alloc_grid(&grid, opts.tol, opts.max_iters, opts.workers)
+                // seed the chain heads: a previous *process run* may have
+                // persisted final iterates for exactly this (instance,
+                // config) — if so, warm-start from them; otherwise chain
+                // the head onto a same-app, nearby-parameter instance
+                // already in this slice (cross-instance warm start).
+                // Heads keep their final iterates so the next run can do
+                // the same; the cache bounds entry sizes.
+                let mut seeds: Vec<GridSeed> = Vec::with_capacity(slice.len());
+                {
+                    let cache = cache.lock().unwrap();
+                    for (pos, &ix) in slice.iter().enumerate() {
+                        let (ii, ci) = items[ix];
+                        let head = pos == 0 || items[slice[pos - 1]].0 != ii;
+                        let mut seed = GridSeed {
+                            keep_iterates: head,
+                            ..Default::default()
+                        };
+                        if head {
+                            let ikey =
+                                iterate_key(&insts[ii].label(), &cfgs[ci].label(), n_types);
+                            if let Some(it) = cache.get_iterates(&ikey) {
+                                seed.iterates = Some(it);
+                            } else {
+                                let (app, params) = insts[ii].warm_params();
+                                let mut best: Option<(usize, f64)> = None;
+                                for (ppos, &pix) in slice[..pos].iter().enumerate() {
+                                    let (pii, pci) = items[pix];
+                                    if pii == ii || pci != ci {
+                                        continue;
+                                    }
+                                    let (papp, pparams) = insts[pii].warm_params();
+                                    if papp != app || pparams.len() != params.len() {
+                                        continue;
+                                    }
+                                    let d = grid_distance(&pparams, &params);
+                                    if d <= CLOSE_DIST
+                                        && best.map_or(true, |(_, bd)| d < bd)
+                                    {
+                                        best = Some((ppos, d));
+                                    }
+                                }
+                                if let Some((ppos, _)) = best {
+                                    seed.chain_from = Some((ppos, true));
+                                }
+                            }
+                        }
+                        seeds.push(seed);
+                    }
+                }
+                let full =
+                    solve_alloc_grid_seeded(&grid, seeds, opts.tol, opts.max_iters, opts.workers);
+                let mut cache = cache.lock().unwrap();
+                full.into_iter()
+                    .zip(slice.iter())
+                    .map(|((lp, kept), &ix)| {
+                        if let Some((z, y)) = kept {
+                            let (ii, ci) = items[ix];
+                            let ikey =
+                                iterate_key(&insts[ii].label(), &cfgs[ci].label(), n_types);
+                            cache.put_iterates(&ikey, &z, &y);
+                        }
+                        lp
+                    })
+                    .collect()
             } else {
                 parallel_map(slice.clone(), opts.workers, |ix| {
                     let (ii, ci) = items[ix];
@@ -259,6 +333,50 @@ mod tests {
             assert_eq!(a.algo, b.algo);
             assert_eq!(a.makespan, b.makespan);
             assert_eq!(a.lp_star, b.lp_star);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Cross-run warm starts (ROADMAP "next lever"): the first campaign
+    /// run persists its chain heads' final PDHG iterates; a later run at
+    /// a *different budget* — whose LP* keys therefore all miss — seeds
+    /// from them and lands on the same LP* (iterates are advisory, the
+    /// tolerance certificate is the solve's own).
+    #[test]
+    fn iterates_persist_across_process_runs() {
+        let dir =
+            std::env::temp_dir().join(format!("hetsched-xrun-{}", std::process::id()));
+        let path = dir.join("lp_cache.json");
+        let mk = |max_iters: usize| CampaignOpts {
+            backend: LpBackendKind::RustPdhg,
+            workers: 4,
+            cache_path: Some(path.clone()),
+            max_iters,
+            ..CampaignOpts::smoke()
+        };
+
+        let off_a = offline::run(2, &mk(80_000));
+        let cache = LpCache::load(&path);
+        assert!(
+            cache.n_iterate_entries() > 0,
+            "chain heads must persist iterates"
+        );
+
+        // different budget => every cache_key misses, iterate keys hit
+        let off_b = offline::run(2, &mk(100_000));
+        assert_eq!(off_a.len(), off_b.len());
+        for (a, b) in off_a.iter().zip(&off_b) {
+            assert_eq!(a.instance, b.instance);
+            assert_eq!(a.config, b.config);
+            let scale = 1.0 + a.lp_star.abs();
+            assert!(
+                (a.lp_star - b.lp_star).abs() < 2e-3 * scale,
+                "{}/{}: {} vs {}",
+                a.instance,
+                a.config,
+                a.lp_star,
+                b.lp_star
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }

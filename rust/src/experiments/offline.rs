@@ -12,9 +12,12 @@ use super::driver::run_campaign;
 use super::CampaignOpts;
 
 /// Machine-configuration grid for the given type count and scale.
+/// `Scale::Full` runs the extended hybrid grid — the paper's 16
+/// configurations plus the 256-/320-unit cluster platforms the
+/// gap-indexed engine unlocks.
 pub fn configs(n_types: usize, scale: Scale) -> Vec<Platform> {
     match (n_types, scale) {
-        (2, Scale::Full) => platform::paper_two_type_configs(),
+        (2, Scale::Full) => platform::extended_two_type_configs(),
         (2, Scale::Default) => platform::paper_two_type_configs(),
         (2, Scale::Smoke) => platform::reduced_two_type_configs(),
         (3, Scale::Full) => platform::paper_three_type_configs(),

@@ -61,6 +61,11 @@ pub struct BatchJob {
     /// Seed is a close grid neighbor: grant a shrunken first allotment
     /// (escalating back up to `opts.max_iters` if it fails to converge).
     pub warm_close: bool,
+    /// Return this job's final (z, y) iterates from
+    /// [`solve_batch_full`] — the campaign driver persists them for
+    /// cross-run warm starts.  Off by default: iterates of unmarked
+    /// jobs are freed as soon as their last dependent consumes them.
+    pub keep_iterates: bool,
 }
 
 impl BatchJob {
@@ -71,6 +76,7 @@ impl BatchJob {
             opts,
             seed_from: None,
             warm_close: false,
+            keep_iterates: false,
         }
     }
 }
@@ -108,6 +114,19 @@ impl Drop for CloseOnPanic<'_> {
 /// only on its own options and (for seeded jobs) its seed's final
 /// iterates, never on worker interleaving.
 pub fn solve_batch(jobs: Vec<BatchJob>, workers: usize) -> Vec<LpSolution> {
+    solve_batch_full(jobs, workers)
+        .into_iter()
+        .map(|(sol, _)| sol)
+        .collect()
+}
+
+/// [`solve_batch`], additionally returning the final (z, y) iterates —
+/// in *original* (pre-scaling) coordinates — of every job that set
+/// [`BatchJob::keep_iterates`] (`None` for the rest).
+pub fn solve_batch_full(
+    jobs: Vec<BatchJob>,
+    workers: usize,
+) -> Vec<(LpSolution, Option<(Vec<f64>, Vec<f64>)>)> {
     let n = jobs.len();
     if n == 0 {
         return Vec::new();
@@ -189,7 +208,7 @@ pub fn solve_batch(jobs: Vec<BatchJob>, workers: usize) -> Vec<LpSolution> {
                                 .clone()
                                 .expect("seed finished before dependents are queued");
                             seed.seed_consumers -= 1;
-                            if seed.seed_consumers == 0 {
+                            if seed.seed_consumers == 0 && !seed.job.keep_iterates {
                                 seed.iterates = None; // last consumer
                             }
                             opts.warm_start = Some(z);
@@ -218,7 +237,11 @@ pub fn solve_batch(jobs: Vec<BatchJob>, workers: usize) -> Vec<LpSolution> {
                     }
                     if stopped {
                         let state = slot.state.take().unwrap();
-                        slot.iterates = Some(state.iterates());
+                        // materialize final iterates only for consumers:
+                        // dependents still to seed, or a caller keep flag
+                        if slot.seed_consumers > 0 || slot.job.keep_iterates {
+                            slot.iterates = Some(state.iterates());
+                        }
                         slot.done = Some(state.into_solution(&slot.job.lp));
                         drop(guard);
                         admitted.fetch_sub(1, Ordering::SeqCst);
@@ -240,10 +263,14 @@ pub fn solve_batch(jobs: Vec<BatchJob>, workers: usize) -> Vec<LpSolution> {
     slots
         .into_iter()
         .map(|s| {
-            s.into_inner()
-                .unwrap()
-                .done
-                .expect("batch drained with unfinished job")
+            let slot = s.into_inner().unwrap();
+            let sol = slot.done.expect("batch drained with unfinished job");
+            let kept = if slot.job.keep_iterates {
+                slot.iterates
+            } else {
+                None
+            };
+            (sol, kept)
         })
         .collect()
 }
@@ -298,6 +325,7 @@ mod tests {
                 opts: DriveOpts::default(),
                 seed_from: Some(0),
                 warm_close: true,
+                keep_iterates: false,
             },
         ];
         let sols = solve_batch(jobs, 2);
@@ -328,6 +356,7 @@ mod tests {
                 opts: DriveOpts::default(),
                 seed_from: Some(0),
                 warm_close: true,
+                keep_iterates: false,
             },
         ];
         let sols = solve_batch(jobs, 2);
@@ -339,6 +368,45 @@ mod tests {
             sols[1].obj,
             cold.obj
         );
+    }
+
+    #[test]
+    fn keep_iterates_returns_final_points() {
+        // marked jobs hand back their final (z, y); unmarked jobs don't,
+        // and a kept seed still feeds its dependents
+        let jobs = vec![
+            BatchJob {
+                keep_iterates: true,
+                ..BatchJob::cold(knapsack(1.5), DriveOpts::default())
+            },
+            BatchJob {
+                lp: knapsack(1.4),
+                opts: DriveOpts::default(),
+                seed_from: Some(0),
+                warm_close: true,
+                keep_iterates: false,
+            },
+        ];
+        let full = solve_batch_full(jobs, 2);
+        let (z, y) = full[0].1.as_ref().expect("kept iterates");
+        assert_eq!(z.len(), 2);
+        assert_eq!(y.len(), 1);
+        // the kept primal is the solution's primal (original coordinates)
+        assert_eq!(z, &full[0].0.z);
+        assert!(full[1].1.is_none(), "unmarked job keeps nothing");
+        assert!((full[1].0.obj + 1.4).abs() < 2e-3);
+        // a restarted solve seeded from the kept iterates converges
+        // immediately-ish (certificate in the first chunks)
+        let warm = solve_rust(
+            &knapsack(1.5),
+            &DriveOpts {
+                warm_start: Some(z.clone()),
+                warm_start_dual: Some(y.clone()),
+                ..Default::default()
+            },
+        );
+        assert!((warm.obj + 1.5).abs() < 2e-3);
+        assert!(warm.iters <= full[0].0.iters + 250);
     }
 
     #[test]
@@ -359,6 +427,7 @@ mod tests {
             opts: DriveOpts::default(),
             seed_from: Some(0), // self-reference: 0 >= 0
             warm_close: false,
+            keep_iterates: false,
         }];
         solve_batch(jobs, 1);
     }

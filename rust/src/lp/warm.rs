@@ -9,8 +9,15 @@
 //! (`BatchJob::seed_from`, wired by `algos::solve_alloc_grid`); this
 //! module provides the policy pieces:
 //!
-//! * [`grid_distance`] / [`CLOSE_DIST`] — log-scale config distance and
-//!   the "close neighbor" threshold deciding which chains run shrunken.
+//! * [`grid_distance`] / [`CLOSE_DIST`] — log-scale parameter distance
+//!   and the "close neighbor" threshold deciding which chains run
+//!   shrunken.  The distance is generic over any positive integer
+//!   parameter vector: machine configs (`Platform::counts`) for
+//!   within-instance chains, and *instance* parameters
+//!   (`Instance::warm_params` — e.g. a Chameleon `(nb, bs)`) for
+//!   cross-instance chains between same-app jobs, which the campaign
+//!   driver links when two instances share an LP layout and sit within
+//!   [`CLOSE_DIST`] of each other.
 //! * [`BudgetSchedule`] — the convergence-budget schedule: a solve whose
 //!   warm start is close (a neighbor within [`CLOSE_DIST`]) gets a
 //!   quarter of the campaign's PDHG budget first and escalates (×2 per
@@ -23,11 +30,14 @@
 //! (A persistent cross-run iterate store is a ROADMAP "next lever", not
 //! part of this module yet — the LP* cache only persists objectives.)
 
-/// Log-scale distance between two machine configs: Σ_q |ln m_q − ln m'_q|.
-/// Adjacent configs of the paper grids (counts doubling per step) are
-/// exactly `ln 2` apart per differing coordinate.
+/// Log-scale distance between two parameter vectors (machine configs or
+/// same-app instance parameters): Σ_q |ln m_q − ln m'_q|.  Adjacent
+/// configs of the paper grids (counts doubling per step) are exactly
+/// `ln 2` apart per differing coordinate; neighboring Chameleon block
+/// sizes (64…960) are ≤ ln 2 apart in their coordinate too, which is
+/// what makes the same threshold meaningful for cross-instance chains.
 pub fn grid_distance(a: &[usize], b: &[usize]) -> f64 {
-    assert_eq!(a.len(), b.len(), "config type counts differ");
+    assert_eq!(a.len(), b.len(), "parameter vector lengths differ");
     a.iter()
         .zip(b)
         .map(|(&x, &y)| ((x as f64).ln() - (y as f64).ln()).abs())

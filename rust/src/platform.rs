@@ -68,6 +68,17 @@ pub fn paper_two_type_configs() -> Vec<Platform> {
     out
 }
 
+/// Cluster-scale hybrid configs beyond the paper's grid (ROADMAP "scale
+/// the campaign grids"): the paper's 16 configurations plus 256-unit
+/// (192 CPUs + 64 GPUs) and 320-unit (256 + 64) platforms — the sizes
+/// the gap-indexed HEFT and blocked PDHG kernels are gated on.
+pub fn extended_two_type_configs() -> Vec<Platform> {
+    let mut out = paper_two_type_configs();
+    out.push(Platform::hybrid(192, 64));
+    out.push(Platform::hybrid(256, 64));
+    out
+}
+
 /// The paper's 3-type grid (§6.2): triplets (CPUs, GPU1s, GPU2s) over the
 /// same value sets, 64 configurations in total.
 pub fn paper_three_type_configs() -> Vec<Platform> {
@@ -134,5 +145,15 @@ mod tests {
     #[should_panic]
     fn zero_count_rejected() {
         Platform::new(vec![4, 0]);
+    }
+
+    #[test]
+    fn extended_grid_appends_cluster_scale_configs() {
+        let ext = extended_two_type_configs();
+        assert_eq!(ext.len(), 18);
+        assert_eq!(&ext[..16], &paper_two_type_configs()[..]);
+        assert_eq!(ext[16].n_units(), 256);
+        assert_eq!((ext[16].m(), ext[16].k()), (192, 64));
+        assert_eq!(ext[17].n_units(), 320);
     }
 }

@@ -7,19 +7,25 @@
 //! one by one on the unit minimizing the *earliest finish time*, with
 //! insertion-based backfilling (a task may slot into an idle gap).
 //! Ties between a CPU and a GPU go to the GPU (the paper's Theorem 1
-//! convention); ties within a type go to the lowest unit index.
+//! convention); ties within a type go to the lowest unit index.  The tie
+//! comparison uses the engine-wide ±[`engine::TIE_BAND`] float band,
+//! like every other selection path (the seed's ad-hoc 1e-9 band was
+//! retired with the gap index — a 1e-10 EFT difference now *separates*
+//! two candidates instead of tying them).
 //!
-//! Built on the shared [`engine::Timeline`].  Unlike the EST/OLS/online
-//! schedulers, insertion-based EFT must inspect every unit's gap
-//! structure per task (a min-heap over tail times cannot see gaps), so
-//! HEFT's selection remains O(n · units); the engine refactor shares the
-//! timeline plumbing rather than changing the asymptotics.
+//! Selection rides the [`engine::GapIndex`]: a tail min-tree over unit
+//! finish times plus per-unit sorted gap lists, so each decision costs
+//! O(Q (log c + |gapped units|)) instead of scanning every unit's
+//! timeline — near-O(log c) on mostly-gapless workloads, and what makes
+//! 100k-task / 256-unit `Scale::Full` campaigns tractable.  Placements
+//! are pinned bit-identical to the retained reference scan
+//! ([`super::reference::heft_schedule`]) by the golden-parity suite.
 
 use crate::graph::{paths, TaskGraph};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
-use super::engine::Timeline;
+use super::engine::{GapIndex, TIE_BAND};
 
 /// HEFT / QHEFT schedule.
 pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
@@ -29,11 +35,7 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
     // non-increasing rank; ties by id for determinism
     order.sort_by(|&a, &b| rank[b].total_cmp(&rank[a]).then(a.cmp(&b)));
 
-    let mut timelines: Vec<Vec<Timeline>> = plat
-        .counts
-        .iter()
-        .map(|&c| vec![Timeline::default(); c])
-        .collect();
+    let mut index: Vec<GapIndex> = plat.counts.iter().map(|&c| GapIndex::new(c)).collect();
     let mut placements: Vec<Option<Placement>> = vec![None; n];
 
     for &j in &order {
@@ -41,27 +43,24 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
             .iter()
             .map(|&p| placements[p].expect("rank order is topological").finish)
             .fold(0.0f64, f64::max);
-        // choose (type, unit) minimizing EFT; tie -> larger type index
-        // (GPU over CPU), then lower unit index
+        // choose (type, unit) minimizing EFT; tie (within the band) ->
+        // larger type index (GPU over CPU), then lower unit index.
+        // Types ascend, so the reference comparator's `q > b_q` arm is
+        // always true for a later type: band-tied means replace.
         let mut best: Option<(f64, usize, usize, f64)> = None; // (eft, q, unit, start)
         for q in 0..plat.n_types() {
             let dur = g.time_on(j, q);
-            for (u, tl) in timelines[q].iter().enumerate() {
-                let start = tl.earliest_start(ready, dur);
-                let eft = start + dur;
-                let better = match best {
-                    None => true,
-                    Some((b_eft, b_q, _, _)) => {
-                        eft < b_eft - 1e-9 || (eft <= b_eft + 1e-9 && q > b_q)
-                    }
-                };
-                if better {
-                    best = Some((eft, q, u, start));
-                }
+            let (eft, unit, start) = index[q].best_eft(ready, dur);
+            let better = match best {
+                None => true,
+                Some((b_eft, _, _, _)) => eft <= b_eft + TIE_BAND,
+            };
+            if better {
+                best = Some((eft, q, unit, start));
             }
         }
         let (eft, q, unit, start) = best.unwrap();
-        timelines[q][unit].insert(start, eft);
+        index[q].insert(unit, start, eft);
         placements[j] = Some(Placement {
             ptype: q,
             unit,
@@ -77,6 +76,7 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
 mod tests {
     use super::*;
     use crate::graph::{gen, Builder};
+    use crate::sched::reference;
     use crate::sim::validate;
     use crate::substrate::rng::Rng;
 
@@ -99,6 +99,31 @@ mod tests {
         let plat = Platform::hybrid(1, 1);
         let s = heft_schedule(&g, &plat);
         assert_eq!(s.placements[0].ptype, 1);
+    }
+
+    #[test]
+    fn tie_band_is_engine_wide_not_1e9() {
+        // the seed's ad-hoc 1e-9 band tied a GPU EFT 1e-10 above the CPU
+        // EFT and sent the task to the GPU; under engine::TIE_BAND
+        // (±1e-12) the difference separates them and the earlier finish
+        // wins.  This is the one deliberate behavior change of the
+        // gap-index PR (reference updated together, per the ROADMAP
+        // golden-parity protocol).
+        let mut b = Builder::new("band");
+        b.add_task("a", vec![1.0, 1.0 + 1e-10]);
+        let g = b.build();
+        let plat = Platform::hybrid(1, 1);
+        let s = heft_schedule(&g, &plat);
+        assert_eq!(s.placements[0].ptype, 0, "1e-10 is beyond the band");
+        let r = reference::heft_schedule(&g, &plat);
+        assert_eq!(s.placements, r.placements);
+        // a 1e-13 difference is inside the band: still a tie -> GPU
+        let mut b = Builder::new("band2");
+        b.add_task("a", vec![1.0, 1.0 + 1e-13]);
+        let g = b.build();
+        let s = heft_schedule(&g, &plat);
+        assert_eq!(s.placements[0].ptype, 1, "1e-13 stays a tie");
+        assert_eq!(s.placements, reference::heft_schedule(&g, &plat).placements);
     }
 
     #[test]
@@ -128,12 +153,14 @@ mod tests {
             let plat = Platform::hybrid(4, 2);
             let s = heft_schedule(&g, &plat);
             validate(&g, &plat, &s).unwrap();
+            assert_eq!(s.placements, reference::heft_schedule(&g, &plat).placements);
         }
         for _ in 0..5 {
             let g = gen::random_dag(&mut rng, 40, 0.1, 3);
             let plat = Platform::new(vec![4, 2, 2]);
             let s = heft_schedule(&g, &plat);
             validate(&g, &plat, &s).unwrap();
+            assert_eq!(s.placements, reference::heft_schedule(&g, &plat).placements);
         }
     }
 

@@ -22,17 +22,20 @@
 //! With n tasks, E precedence arcs, Q processor types and c units per
 //! type (c = max_q m_q):
 //!
-//! | scheduler         | engine-backed            | reference (seed)     |
-//! |-------------------|--------------------------|----------------------|
-//! | `est_schedule`    | O((n + E) log n)         | O(n · (ready + c))   |
-//! | `list_schedule`   | O((n + E) log n)         | O((n + E) log n)     |
-//! | `online_schedule` | O((n + E) + n·Q·log c)   | O((n + E) + n·Q·c)   |
-//! | `heft_schedule`   | O(n · Q · c · gaps)      | same (see below)     |
+//! | scheduler         | engine-backed              | reference (seed)      |
+//! |-------------------|----------------------------|-----------------------|
+//! | `est_schedule`    | O((n + E) log n)           | O(n · (ready + c))    |
+//! | `list_schedule`   | O((n + E) log n)           | O((n + E) log n)      |
+//! | `online_schedule` | O((n + E) + n·Q·log c)     | O((n + E) + n·Q·c)    |
+//! | `heft_schedule`   | O(n·Q·(log c + G log n/c)) | O(n · Q · c · gaps)   |
 //!
-//! HEFT's insertion-based EFT must inspect each unit's gap structure per
-//! task, which no aggregate (heap/tree) over units can summarize, so its
-//! selection stays linear in the unit count; the engine contributes the
-//! shared [`engine::Timeline`] rather than a complexity change.
+//! HEFT's insertion-based EFT rides the per-type [`engine::GapIndex`]:
+//! a tail min-tree answers the no-gap case in O(log c), and only the G
+//! units currently owning idle gaps are probed (first-fit over their
+//! sorted gap lists).  Mostly-gapless workloads keep G near zero, so
+//! selection is near-O(log c) per task instead of the reference's scan
+//! over every unit's timeline; gap-heavy adversarial workloads degrade
+//! gracefully back to the reference cost, never worse.
 //!
 //! Tie-breaks are preserved exactly for exact floating-point ties (see
 //! `engine` docs); `rust/tests/golden_parity.rs` pins engine-vs-reference

@@ -101,6 +101,13 @@ impl PolicyEngine {
     /// unit — including a slightly-later-idle unit with a lower index
     /// beating the exact minimizer.  The returned finish uses the chosen
     /// unit's true idle time, exactly as the seed computed it.
+    ///
+    /// This is the tail-candidate half of the gap-indexed selection
+    /// ([`engine::GapIndex::best_eft`](super::engine::GapIndex)): online
+    /// decisions are irrevocable (no backfilling), so units never own
+    /// idle gaps and the tail tree alone answers the query in
+    /// O(log units) — the same clamp-and-band rule HEFT's gap index
+    /// applies before folding in its gap candidates.
     fn eft_candidate(&self, q: usize, ready: f64, dur: f64) -> (f64, usize) {
         let tree = &self.avail.types[q];
         let tau = tree.min();

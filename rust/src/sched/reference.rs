@@ -5,9 +5,12 @@
 //! engine speedup against.
 //!
 //! Do NOT "optimize" these: their value is being the old behavior.  The
-//! only change from the seed code is `f64::total_cmp` in place of the
+//! only changes from the seed code are `f64::total_cmp` in place of the
 //! panic-prone `partial_cmp(..).unwrap()` chains (identical ordering on
-//! the finite, NaN-free values the graph builder now enforces).
+//! the finite, NaN-free values the graph builder now enforces) and, for
+//! [`heft_schedule`], the engine-wide ±1e-12 tie band in place of the
+//! seed's ad-hoc 1e-9 (a deliberate, CHANGES.md-flagged update made
+//! together with the gap-indexed engine HEFT it is the oracle for).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -18,8 +21,71 @@ use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 use crate::substrate::rng::Rng;
 
+use super::engine::{Timeline, TIE_BAND};
 use super::online::OnlinePolicy;
 use super::OrdF64;
+
+/// Reference HEFT: insertion-based EFT with the per-task scan over every
+/// unit's [`Timeline`] — the oracle the gap-indexed engine HEFT
+/// ([`super::heft::heft_schedule`]) is pinned against.
+///
+/// One deliberate change from the seed body (made when the gap index
+/// landed, per the ROADMAP golden-parity protocol, and flagged in
+/// CHANGES.md): the EFT tie comparison uses the engine-wide
+/// ±[`TIE_BAND`] (1e-12) instead of the seed's ad-hoc 1e-9, so HEFT ties
+/// the same way every other selection path does.  Candidates whose EFTs
+/// differ by more than 1e-12 (for example by 1e-10) are now *distinct*,
+/// where the seed band called them tied and sent the task to the GPU.
+pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
+    let n = g.n_tasks();
+    let rank = crate::graph::paths::heft_rank(g, &plat.counts);
+    let mut order: Vec<usize> = (0..n).collect();
+    // non-increasing rank; ties by id for determinism
+    order.sort_by(|&a, &b| rank[b].total_cmp(&rank[a]).then(a.cmp(&b)));
+
+    let mut timelines: Vec<Vec<Timeline>> = plat
+        .counts
+        .iter()
+        .map(|&c| vec![Timeline::default(); c])
+        .collect();
+    let mut placements: Vec<Option<Placement>> = vec![None; n];
+
+    for &j in &order {
+        let ready = g.preds[j]
+            .iter()
+            .map(|&p| placements[p].expect("rank order is topological").finish)
+            .fold(0.0f64, f64::max);
+        // choose (type, unit) minimizing EFT; tie -> larger type index
+        // (GPU over CPU), then lower unit index
+        let mut best: Option<(f64, usize, usize, f64)> = None; // (eft, q, unit, start)
+        for q in 0..plat.n_types() {
+            let dur = g.time_on(j, q);
+            for (u, tl) in timelines[q].iter().enumerate() {
+                let start = tl.earliest_start(ready, dur);
+                let eft = start + dur;
+                let better = match best {
+                    None => true,
+                    Some((b_eft, b_q, _, _)) => {
+                        eft < b_eft - TIE_BAND || (eft <= b_eft + TIE_BAND && q > b_q)
+                    }
+                };
+                if better {
+                    best = Some((eft, q, u, start));
+                }
+            }
+        }
+        let (eft, q, unit, start) = best.unwrap();
+        timelines[q][unit].insert(start, eft);
+        placements[j] = Some(Placement {
+            ptype: q,
+            unit,
+            start,
+            finish: eft,
+        });
+    }
+
+    Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
+}
 
 /// Seed EST: O(n · (|ready| + units)) selection per instance.
 pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {

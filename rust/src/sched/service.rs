@@ -577,7 +577,13 @@ impl<'a> Service<'a> {
 /// [`PolicyEngine`].  O(total_tasks · (log tenants + Q log units)), plus
 /// one single-tenant rerun per submission for the ideal/stretch metrics
 /// (precompute those and use [`run_service_with_ideals`] when
-/// benchmarking the streaming engine itself).
+/// benchmarking the streaming engine itself).  The per-decision
+/// `Q log units` term covers every policy including EFT: service
+/// decisions are irrevocable (no backfilling), so the pool's unit trees
+/// never hold idle gaps and `PolicyEngine::eft_candidate`'s tail-clamp
+/// rule — the tail half of the engine's gap-indexed selection
+/// ([`super::engine::GapIndex`]) — is the whole query, which is what
+/// keeps 256-unit service pools cheap per arrival.
 pub fn run_service(plat: &Platform, subs: &[Submission]) -> ServiceReport {
     run_service_with_ideals(plat, subs, None)
 }

@@ -87,6 +87,28 @@ pub fn layer_by_layer(
     b.build()
 }
 
+/// Campaign-scale layered DAG: a `layer_by_layer` instance sized to at
+/// least `n_tasks` tasks (the exact count is the smallest
+/// layers × width grid covering it) — the `Scale::Full` workload family
+/// behind the 10k/50k/100k-task campaign rows.
+///
+/// Width saturates at [`BIG_LAYER_WIDTH_MAX`] so very large instances
+/// grow in depth (layers) rather than unbounded parallelism, matching
+/// how long-running DAG workloads scale in practice; the predecessor
+/// probability is normalized to ~4 arcs per task so the arc count stays
+/// O(n) and a 100k-task instance streams through generation, LP build
+/// and scheduling without quadratic blowup.
+pub fn big_layered(n_tasks: usize, n_gpu_types: usize, seed: u64) -> TaskGraph {
+    let n = n_tasks.max(4);
+    let width = (n / 64).clamp(8, BIG_LAYER_WIDTH_MAX);
+    let layers = (n + width - 1) / width;
+    let p = (4.0 / width as f64).min(1.0);
+    layer_by_layer(layers, width, p, n_gpu_types, seed)
+}
+
+/// Widest layer `big_layered` generates.
+pub const BIG_LAYER_WIDTH_MAX: usize = 512;
+
 /// Out-tree (fork-only divide): root spawns `fanout` children per node
 /// down to `depth` levels.
 pub fn out_tree(depth: usize, fanout: usize, n_gpu_types: usize, seed: u64) -> TaskGraph {
@@ -229,6 +251,22 @@ mod tests {
         for j in 0..g.n_tasks() {
             assert!(g.preds[j].len() + g.succs[j].len() > 0 || g.n_tasks() == 1);
         }
+    }
+
+    #[test]
+    fn big_layered_sizes_and_streams() {
+        let g = big_layered(1000, 1, 7);
+        assert!(g.n_tasks() >= 1000, "{} tasks", g.n_tasks());
+        // width clamp keeps the grid near-minimal: no more than one
+        // extra layer of slack
+        assert!(g.n_tasks() < 1000 + 512, "{} tasks", g.n_tasks());
+        g.validate().unwrap();
+        // O(n) arcs: ~4 preds per task plus the at-least-one fallback
+        assert!(g.n_arcs() < 8 * g.n_tasks(), "{} arcs", g.n_arcs());
+        // deterministic
+        let h = big_layered(1000, 1, 7);
+        assert_eq!(g.proc_times, h.proc_times);
+        assert_eq!(g.n_arcs(), h.n_arcs());
     }
 
     #[test]

@@ -17,6 +17,9 @@ use costs::CostModel;
 pub enum Instance {
     Chameleon { app: String, nb_blocks: usize, block_size: usize },
     ForkJoin { width: usize, phases: usize },
+    /// Campaign-scale layered GGen DAG ([`ggen::big_layered`]) — the
+    /// 10k/50k/100k-task `Scale::Full` rows beyond the paper's grid.
+    Ggen { n_tasks: usize },
 }
 
 impl Instance {
@@ -26,6 +29,7 @@ impl Instance {
                 format!("{app}-nb{nb_blocks}-bs{block_size}")
             }
             Instance::ForkJoin { width, phases } => format!("forkjoin-w{width}-p{phases}"),
+            Instance::Ggen { n_tasks } => format!("ggen-layers-n{n_tasks}"),
         }
     }
 
@@ -33,6 +37,25 @@ impl Instance {
         match self {
             Instance::Chameleon { app, .. } => app,
             Instance::ForkJoin { .. } => "fork-join",
+            Instance::Ggen { .. } => "ggen-layers",
+        }
+    }
+
+    /// Application key + numeric parameter vector for cross-instance
+    /// warm-start chaining ([`crate::lp::warm::grid_distance`] over the
+    /// parameters decides whether two same-app instances are "close").
+    /// Chaining additionally requires identical LP dimensions — e.g.
+    /// two Chameleon instances share a DAG (hence an LP layout) exactly
+    /// when `app` and `nb_blocks` match and only `block_size` differs —
+    /// which the batch-grid builder verifies structurally; this method
+    /// only scores proximity.
+    pub fn warm_params(&self) -> (&str, Vec<usize>) {
+        match self {
+            Instance::Chameleon { app, nb_blocks, block_size } => {
+                (app.as_str(), vec![*nb_blocks, *block_size])
+            }
+            Instance::ForkJoin { width, phases } => ("fork-join", vec![*width, *phases]),
+            Instance::Ggen { n_tasks } => ("ggen-layers", vec![*n_tasks]),
         }
     }
 
@@ -53,6 +76,7 @@ impl Instance {
             Instance::ForkJoin { width, phases } => {
                 forkjoin::forkjoin(*width, *phases, n_types - 1, seed)
             }
+            Instance::Ggen { n_tasks } => ggen::big_layered(*n_tasks, n_types - 1, seed),
         }
     }
 }
@@ -77,7 +101,14 @@ impl Scale {
     }
 }
 
-/// The benchmark instance grid at a given scale.
+/// The `Scale::Full` campaign-scale DAG sizes beyond the paper's grid
+/// (ROADMAP "scale the campaign grids"): 10k/50k/100k tasks.
+pub const FULL_GGEN_TASKS: [usize; 3] = [10_000, 50_000, 100_000];
+
+/// The benchmark instance grid at a given scale.  `Scale::Full` is the
+/// paper's grid *plus* the [`FULL_GGEN_TASKS`] layered instances; the
+/// campaign driver generates graphs per slice, so the 100k-task DAGs
+/// are never all resident at once.
 pub fn instances(scale: Scale) -> Vec<Instance> {
     let (nbs, bss, widths, phases): (&[usize], &[usize], &[usize], &[usize]) = match scale {
         Scale::Smoke => (&[5], &[320], &[100], &[2]),
@@ -104,6 +135,11 @@ pub fn instances(scale: Scale) -> Vec<Instance> {
     for &w in widths {
         for &p in phases {
             out.push(Instance::ForkJoin { width: w, phases: p });
+        }
+    }
+    if scale == Scale::Full {
+        for &n in &FULL_GGEN_TASKS {
+            out.push(Instance::Ggen { n_tasks: n });
         }
     }
     out
@@ -145,6 +181,37 @@ mod tests {
     fn grids_have_expected_sizes() {
         assert_eq!(instances(Scale::Smoke).len(), 5 + 1);
         assert_eq!(instances(Scale::Default).len(), 5 * 2 * 3 + 3 * 2);
-        assert_eq!(instances(Scale::Full).len(), 5 * 3 * 6 + 5 * 3);
+        // paper grid + the 10k/50k/100k layered campaign instances
+        assert_eq!(instances(Scale::Full).len(), 5 * 3 * 6 + 5 * 3 + 3);
+    }
+
+    #[test]
+    fn ggen_instance_labels_and_generation() {
+        let i = Instance::Ggen { n_tasks: 10_000 };
+        assert_eq!(i.label(), "ggen-layers-n10000");
+        assert_eq!(i.app(), "ggen-layers");
+        // generate at a test-friendly size through the same path
+        let small = Instance::Ggen { n_tasks: 600 };
+        let g = small.generate(2);
+        assert!(g.n_tasks() >= 600);
+        assert_eq!(g.n_types(), 2);
+        g.validate().unwrap();
+        assert_eq!(small.generate(2).proc_times, g.proc_times);
+    }
+
+    #[test]
+    fn warm_params_score_instance_proximity() {
+        use crate::lp::warm::{grid_distance, CLOSE_DIST};
+        let a = Instance::Chameleon { app: "potrf".into(), nb_blocks: 5, block_size: 320 };
+        let b = Instance::Chameleon { app: "potrf".into(), nb_blocks: 5, block_size: 512 };
+        let c = Instance::Chameleon { app: "potrf".into(), nb_blocks: 20, block_size: 64 };
+        let (app_a, pa) = a.warm_params();
+        let (app_b, pb) = b.warm_params();
+        let (app_c, pc) = c.warm_params();
+        assert_eq!(app_a, app_b);
+        assert_eq!(app_a, app_c);
+        // neighboring block sizes are close; a 4x nb + 5x bs jump is not
+        assert!(grid_distance(&pa, &pb) <= CLOSE_DIST);
+        assert!(grid_distance(&pa, &pc) > CLOSE_DIST);
     }
 }

@@ -10,7 +10,7 @@
 use hetsched::graph::{gen, paths, TaskGraph};
 use hetsched::platform::Platform;
 use hetsched::sched::online::{online_schedule, random_topo_order, OnlinePolicy};
-use hetsched::sched::{est, list, reference};
+use hetsched::sched::{est, heft, list, reference};
 use hetsched::sim::validate;
 use hetsched::substrate::rng::Rng;
 
@@ -114,6 +114,82 @@ fn online_engine_matches_seed_all_policies() {
             assert_eq!(engine.makespan, seed.makespan);
         }
     }
+}
+
+#[test]
+fn heft_gap_index_matches_reference_scan() {
+    // the gap-index property suite: random DAG/platform draws, engine
+    // HEFT (tail tree + gap lists) vs the reference per-unit timeline
+    // scan, placement-for-placement.  Insertion-based backfilling is
+    // exactly where an index could drift (gap splits, exact fits, band
+    // ties between a gap and a tail), so this sweep is the acceptance
+    // bar for the gap index.
+    let mut rng = Rng::new(0x6A9_0008);
+    for case in 0..CASES {
+        let g = random_instance(&mut rng);
+        let plat = random_platform(&mut rng);
+        let engine = heft::heft_schedule(&g, &plat);
+        let seed = reference::heft_schedule(&g, &plat);
+        validate(&g, &plat, &engine).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(
+            engine.placements, seed.placements,
+            "HEFT diverged from reference on case {case}"
+        );
+        assert_eq!(engine.makespan, seed.makespan, "HEFT makespan case {case}");
+    }
+}
+
+#[test]
+fn heft_gap_index_parity_on_gap_heavy_and_tie_instances() {
+    // adversarial shapes for the gap index specifically: wide fork-join
+    // layers (every join opens gaps on the losing units), repeated
+    // integer and 0.1-style constants (band ties between gap and tail
+    // candidates), and tiny unit counts (gap churn on every unit)
+    use hetsched::workloads::forkjoin;
+    let mut rng = Rng::new(0x6A9_0009);
+    for case in 0..10u64 {
+        let g = forkjoin::forkjoin(20 + rng.below(60), 2 + rng.below(3), 1, 77 + case);
+        let plat = random_platform(&mut rng);
+        let a = heft::heft_schedule(&g, &plat);
+        let b = reference::heft_schedule(&g, &plat);
+        validate(&g, &plat, &a).unwrap_or_else(|e| panic!("forkjoin case {case}: {e}"));
+        assert_eq!(a.placements, b.placements, "forkjoin case {case}");
+    }
+    let int_costs: [(f64, f64); 4] = [(1.0, 2.0), (2.0, 1.0), (3.0, 2.0), (4.0, 1.0)];
+    let frac_costs: [(f64, f64); 4] = [(0.1, 0.3), (0.3, 0.1), (0.2, 0.3), (0.6, 0.2)];
+    for (farm, label) in [(int_costs, "int"), (frac_costs, "frac")] {
+        for case in 0..10 {
+            let n = 40 + rng.below(60);
+            let density = 0.04 + 0.1 * rng.f64();
+            let mut g = gen::hybrid_dag(&mut rng, n, density);
+            for j in 0..n {
+                let (pc, pg) = farm[rng.below(farm.len())];
+                g.proc_times[j] = vec![pc, pg];
+            }
+            let plat = Platform::hybrid(1 + rng.below(4), 1 + rng.below(3));
+            let a = heft::heft_schedule(&g, &plat);
+            let b = reference::heft_schedule(&g, &plat);
+            validate(&g, &plat, &a).unwrap_or_else(|e| panic!("{label} {case}: {e}"));
+            assert_eq!(a.placements, b.placements, "HEFT {label} tie farm case {case}");
+        }
+    }
+}
+
+#[test]
+fn heft_band_change_is_pinned() {
+    // the deliberate behavior change of the gap-index PR: a 1e-10 EFT
+    // difference tied under the seed's 1e-9 band (tie -> GPU) but
+    // separates under the engine-wide 1e-12 band (earlier finish, the
+    // CPU, wins).  Engine and reference agree on the NEW semantics.
+    use hetsched::graph::Builder;
+    let mut b = Builder::new("band");
+    b.add_task("a", vec![1.0, 1.0 + 1e-10]);
+    let g = b.build();
+    let plat = Platform::hybrid(1, 1);
+    let e = heft::heft_schedule(&g, &plat);
+    let r = reference::heft_schedule(&g, &plat);
+    assert_eq!(e.placements, r.placements);
+    assert_eq!(e.placements[0].ptype, 0, "beyond the band: CPU finishes first");
 }
 
 #[test]

@@ -8,15 +8,22 @@
 //!   ones (exact via simplex on small instances, within tolerance via
 //!   PDHG on campaign-shaped ones);
 //! * the batched driver agrees with the per-item solve path, so LP*
-//!   cache entries stay interchangeable.
+//!   cache entries stay interchangeable;
+//! * the blocked (fused) `RustChunk` kernel agrees with the retained
+//!   `ScalarChunk` oracle — chunk-for-chunk to rounding and
+//!   solve-for-solve within certificate tolerance — over random LPs and
+//!   campaign-shaped HLPs.
 
 use hetsched::algos::{solve_alloc_grid, solve_hlp_capped};
 use hetsched::graph::{gen, TaskGraph};
 use hetsched::lp::batch::{solve_batch, BatchJob};
 use hetsched::lp::chain::{contract, plan_chains};
 use hetsched::lp::model::{build_hlp, build_qhlp, hlp_warm_start, tighten_hlp_box};
-use hetsched::lp::pdhg::{solve_rust, DriveOpts};
+use hetsched::lp::pdhg::{
+    solve_rust, solve_rust_scalar, ChunkBackend, DriveOpts, RustChunk, ScalarChunk,
+};
 use hetsched::lp::simplex::solve_simplex;
+use hetsched::lp::SparseLp;
 use hetsched::platform::Platform;
 use hetsched::substrate::rng::Rng;
 use hetsched::workloads::forkjoin;
@@ -188,5 +195,87 @@ fn batch_driver_interchangeable_with_sequential_drives() {
         assert_eq!(sol.obj, alone.obj);
         assert_eq!(sol.iters, alone.iters);
         assert_eq!(sol.z, alone.z);
+    }
+}
+
+/// A random box LP with feasible interior (b drawn above A·midpoint is
+/// not required — PDHG handles infeasible-at-start fine; bounds keep
+/// everything finite).
+fn random_box_lp(rng: &mut Rng) -> SparseLp {
+    let n = 3 + rng.below(12);
+    let m = 2 + rng.below(10);
+    let mut lp = SparseLp {
+        n,
+        m,
+        b: (0..m).map(|_| rng.uniform(0.5, 4.0)).collect(),
+        c: (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+        lo: vec![0.0; n],
+        hi: (0..n).map(|_| rng.uniform(0.5, 3.0)).collect(),
+        ..Default::default()
+    };
+    for r in 0..m {
+        for c in 0..n {
+            if rng.chance(0.4) {
+                lp.push(r, c, rng.uniform(-1.5, 1.5));
+            }
+        }
+    }
+    lp
+}
+
+#[test]
+fn blocked_kernel_matches_scalar_oracle_on_random_lps() {
+    // the blocked (fused matvec+prox) RustChunk vs the retained scalar
+    // kernel: chunk-for-chunk agreement to rounding on random LPs, and
+    // full-solve agreement within certificate tolerance.  Per-row sums
+    // are column-reordered by the blocked layout, so equality is ε, not
+    // bitwise — the ε here is far below the 1e-3/1e-4 campaign
+    // tolerances the kernels certify.
+    let mut rng = Rng::new(0x3A25);
+    for case in 0..25 {
+        let lp = random_box_lp(&mut rng);
+        let mut blocked = RustChunk::new(&lp, 40);
+        let mut scalar = ScalarChunk::new(&lp, 40);
+        let (mut zb, mut yb) = (vec![0.0; lp.n], vec![0.0; lp.m]);
+        let (mut zs, mut ys) = (vec![0.0; lp.n], vec![0.0; lp.m]);
+        for chunk in 0..4 {
+            let rb = blocked.run_chunk(&mut zb, &mut yb, 1e-2, 1e-2);
+            let rs = scalar.run_chunk(&mut zs, &mut ys, 1e-2, 1e-2);
+            for (a, b) in zb.iter().zip(&zs) {
+                assert!((a - b).abs() < 1e-9, "case {case} chunk {chunk}: z {a} vs {b}");
+            }
+            for (a, b) in yb.iter().zip(&ys) {
+                assert!((a - b).abs() < 1e-9, "case {case} chunk {chunk}: y {a} vs {b}");
+            }
+            assert!(
+                (rb.last.score() - rs.last.score()).abs()
+                    < 1e-9 * (1.0 + rs.last.score().abs()),
+                "case {case} chunk {chunk}: diag scores diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_solve_matches_scalar_solve_on_campaign_shapes() {
+    // end-to-end drives through both kernels on HLP models (the shapes
+    // the campaign actually solves): LP* within certificate tolerance
+    let mut rng = Rng::new(0x3A26);
+    for _ in 0..6 {
+        let g = gen::hybrid_dag(&mut rng, 12 + rng.below(25), 0.1);
+        let plat = Platform::hybrid(2 + rng.below(8), 1 + rng.below(4));
+        let (lp, _) = build_hlp(&g, &plat);
+        let opts = DriveOpts { tol: TOL, ..Default::default() };
+        let b = solve_rust(&lp, &opts);
+        let s = solve_rust_scalar(&lp, &opts);
+        assert!(
+            rel_close(b.obj, s.obj, 5.0),
+            "blocked {} vs scalar {}",
+            b.obj,
+            s.obj
+        );
+        // both are certified dual bounds for the same LP
+        assert!(b.lower_bound <= b.obj + TOL * (1.0 + b.obj.abs()));
+        assert!(s.lower_bound <= s.obj + TOL * (1.0 + s.obj.abs()));
     }
 }
