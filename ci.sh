@@ -44,15 +44,38 @@ PY
     fi
     cat BENCH_sched.json
 
-    echo "== perf gate: service-mode throughput (writes BENCH_service.json) =="
+    echo "== perf gate: service-mode throughput + fairness policies (writes BENCH_service.json) =="
     cargo bench --bench service_throughput
     if [[ ! -s BENCH_service.json ]]; then
         echo "BENCH_service.json missing or empty" >&2
         exit 1
     fi
     if command -v python3 >/dev/null 2>&1; then
-        python3 -m json.tool BENCH_service.json >/dev/null \
-            || { echo "BENCH_service.json is not valid JSON" >&2; exit 1; }
+        python3 - <<'PY' || exit 1
+import json, sys
+with open("BENCH_service.json") as f:
+    r = json.load(f)
+# every admission policy must have produced its row
+for key in ("fifo", "quota", "stretch"):
+    if key not in r:
+        sys.exit(f"BENCH_service.json is missing the {key} policy row")
+fifo, ws = r["fifo"], r["stretch"]
+# fairness gate: on the contended 50x1000 bench, weighted-stretch
+# admission must strictly beat FIFO on the stretch tail (the sim-
+# measured margin is ~24%, so strictness costs no flakiness)
+if ws["max_stretch"] >= fifo["max_stretch"]:
+    sys.exit(
+        f"WeightedStretch max stretch {ws['max_stretch']:.3f} must be strictly "
+        f"below FIFO's {fifo['max_stretch']:.3f} on the contended bench"
+    )
+print(
+    f"service gate OK: max stretch FIFO {fifo['max_stretch']:.2f} >= "
+    f"WStretch {ws['max_stretch']:.2f} "
+    f"(p99 {fifo['p99_stretch']:.2f} -> {ws['p99_stretch']:.2f}, "
+    f"Jain {fifo['jain_index']:.3f} -> {ws['jain_index']:.3f}; "
+    f"quota row max {r['quota']['max_stretch']:.2f})"
+)
+PY
     fi
     cat BENCH_service.json
 

@@ -2,60 +2,76 @@
 //! each arrive over virtual time into one shared 32-CPU + 8-GPU pool and
 //! flow through the irrevocable online policies (ER-LS / EFT / Greedy),
 //! exactly the shared-cluster regime the paper's on-line model (§4.2)
-//! targets for deployment (§7).
+//! targets for deployment (§7) — then the same contended workload is
+//! replayed under each admission policy (FIFO / Quota / WeightedStretch)
+//! and the fairness aggregates are compared side by side.
 //!
 //!     cargo run --release --example service_mode
 
 use std::time::Instant;
 
 use hetsched::graph::gen;
+use hetsched::graph::TaskGraph;
 use hetsched::platform::Platform;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
-use hetsched::sched::service::{run_service, Submission};
+use hetsched::sched::service::{run_service, ServiceReport, Submission, TenantPolicy};
 use hetsched::sim::validate_service;
 use hetsched::substrate::rng::Rng;
 
-fn main() {
-    let plat = Platform::hybrid(32, 8);
+fn make_graphs() -> Vec<(TaskGraph, f64, OnlinePolicy)> {
     let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
     let mut rng = Rng::new(2027);
-
     // 50 tenants × 1000 tasks, arrivals staggered so the pool stays
     // contended but the queue keeps draining
-    let subs: Vec<Submission> = (0..50)
+    (0..50)
         .map(|t| {
             let g = gen::hybrid_dag(&mut rng, 1000, 0.004);
-            let arrival = t as f64 * 40.0;
-            Submission::new(g, arrival, policies[t % policies.len()].clone())
+            (g, t as f64 * 40.0, policies[t % policies.len()].clone())
         })
-        .collect();
-    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+        .collect()
+}
+
+fn subs_with(base: &[(TaskGraph, f64, OnlinePolicy)], admission: &TenantPolicy) -> Vec<Submission> {
+    base.iter()
+        .map(|(g, arrival, policy)| {
+            Submission::new(g.clone(), *arrival, policy.clone())
+                .with_admission(admission.clone())
+        })
+        .collect()
+}
+
+fn main() {
+    let plat = Platform::hybrid(32, 8);
+    let base = make_graphs();
+    let total_tasks: usize = base.iter().map(|(g, _, _)| g.n_tasks()).sum();
     println!(
         "service: {} tenants, {} tasks total, pool {} ({} units)",
-        subs.len(),
+        base.len(),
         total_tasks,
         plat.label(),
         plat.n_units()
     );
 
+    // ---- FIFO (the golden baseline) --------------------------------
+    let subs = subs_with(&base, &TenantPolicy::Fifo);
     let t0 = Instant::now();
-    let report = run_service(&plat, &subs);
+    let fifo = run_service(&plat, &subs);
     let wall = t0.elapsed();
-    assert_eq!(report.total_tasks, 50 * 1000);
-    assert_eq!(report.decisions.len(), 50 * 1000);
+    assert_eq!(fifo.total_tasks, 50 * 1000);
+    assert_eq!(fifo.decisions.len(), 50 * 1000);
 
     // pool-wide feasibility: per-tenant precedences + no cross-tenant
     // overlap on any unit
-    validate_service(&plat, &report.tenant_runs(&subs)).expect("service schedule feasible");
+    validate_service(&plat, &fifo.tenant_runs(&subs)).expect("service schedule feasible");
 
     // golden parity: a lone tenant places exactly like sched::online
     let lone = vec![Submission::new(
-        subs[0].graph.clone(),
+        base[0].0.clone(),
         0.0,
-        subs[0].policy.clone(),
+        base[0].2.clone(),
     )];
     let lone_report = run_service(&plat, &lone);
-    let expect = online_by_id(&subs[0].graph, &plat, &subs[0].policy);
+    let expect = online_by_id(&base[0].0, &plat, &base[0].2);
     assert_eq!(
         lone_report.tenants[0].schedule.placements, expect.placements,
         "single-tenant service must match the online engine"
@@ -63,15 +79,15 @@ fn main() {
 
     println!(
         "scheduled {} decisions in {:?} ({:.0} decisions/s)\n",
-        report.decisions.len(),
+        fifo.decisions.len(),
         wall,
-        report.decisions.len() as f64 / wall.as_secs_f64()
+        fifo.decisions.len() as f64 / wall.as_secs_f64()
     );
     println!(
         "{:>6} {:>8} {:>9} {:>10} {:>10} {:>9} {:>8} {:>12}",
         "tenant", "policy", "arrival", "complete", "flow", "ideal", "stretch", "p95 dec (us)"
     );
-    for (t, s) in report.tenants.iter().zip(&subs).take(10) {
+    for (t, s) in fifo.tenants.iter().zip(&subs).take(10) {
         println!(
             "{:>6} {:>8} {:>9.1} {:>10.1} {:>10.1} {:>9.1} {:>8.2} {:>12.1}",
             t.tenant,
@@ -84,13 +100,56 @@ fn main() {
             t.decision_latency.p95 * 1e6
         );
     }
-    println!("   ... ({} more tenants)\n", report.tenants.len() - 10);
+    println!("   ... ({} more tenants)\n", fifo.tenants.len() - 10);
+
+    // ---- the same contended workload under each admission policy ---
+    let quota = TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 0.25 };
+    let ws = TenantPolicy::WeightedStretch { weight: 1.0 };
+    let rows: Vec<(&str, ServiceReport)> = vec![
+        ("FIFO", fifo),
+        ("Quota .25/.25", {
+            let subs = subs_with(&base, &quota);
+            let r = run_service(&plat, &subs);
+            validate_service(&plat, &r.tenant_runs(&subs)).expect("quota schedule feasible");
+            r
+        }),
+        ("WStretch w=1", {
+            let subs = subs_with(&base, &ws);
+            let r = run_service(&plat, &subs);
+            validate_service(&plat, &r.tenant_runs(&subs)).expect("ws schedule feasible");
+            r
+        }),
+    ];
+
     println!(
-        "horizon {:.1} | mean stretch {:.2} | max stretch {:.2} | utilization CPU {:.0}% GPU {:.0}%",
-        report.horizon,
-        report.mean_stretch,
-        report.max_stretch,
-        report.utilization[0] * 100.0,
-        report.utilization[1] * 100.0
+        "{:>14} {:>9} {:>11} {:>10} {:>9} {:>7} {:>9} {:>9}",
+        "admission", "horizon", "mean str", "max str", "p99 str", "Jain", "util CPU", "util GPU"
+    );
+    for (name, r) in &rows {
+        println!(
+            "{:>14} {:>9.1} {:>11.2} {:>10.2} {:>9.2} {:>7.3} {:>8.0}% {:>8.0}%",
+            name,
+            r.horizon,
+            r.mean_stretch,
+            r.max_stretch,
+            r.stretch_p99,
+            r.jain_index,
+            r.utilization[0] * 100.0,
+            r.utilization[1] * 100.0
+        );
+    }
+
+    // the acceptance property the test suite and ci.sh --perf pin:
+    // weighted stretch strictly reduces the stretch tail vs FIFO
+    let (fifo_max, ws_max) = (rows[0].1.max_stretch, rows[2].1.max_stretch);
+    assert!(
+        ws_max < fifo_max,
+        "WeightedStretch must strictly reduce max stretch ({ws_max} vs {fifo_max})"
+    );
+    println!(
+        "\nWeightedStretch cuts max stretch {:.2} -> {:.2} ({:.0}% of FIFO)",
+        fifo_max,
+        ws_max,
+        ws_max / fifo_max * 100.0
     );
 }

@@ -1,17 +1,22 @@
-//! Bench: multi-tenant service-mode throughput gate.
+//! Bench: multi-tenant service-mode throughput + fairness-policy gate.
 //!
 //! Schedules 50 DAGs × 1000 tasks on a 32-CPU + 8-GPU shared pool
-//! through the streaming service engine, reports decision throughput and
-//! stretch statistics, and writes BENCH_service.json so the service-mode
-//! perf trajectory is tracked PR over PR (the optional `ci.sh --perf`
-//! gate checks the file exists and parses).
+//! through the streaming service engine under each admission policy
+//! (FIFO / Quota / WeightedStretch), reports decision throughput and
+//! stretch statistics per policy, and writes BENCH_service.json so the
+//! service-mode perf + fairness trajectory is tracked PR over PR.  The
+//! `ci.sh --perf` gate parses the policy rows and requires
+//! WeightedStretch's max stretch at or below FIFO's on this contended
+//! instance (the fairness acceptance), on top of the throughput floor.
 
 use std::time::Duration;
 
 use hetsched::graph::gen;
 use hetsched::platform::Platform;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
-use hetsched::sched::service::{run_service, run_service_with_ideals, Submission};
+use hetsched::sched::service::{
+    run_service_with_ideals, Submission, TenantPolicy,
+};
 use hetsched::sim::validate_service;
 use hetsched::substrate::bench::{bench_with, black_box, BenchOpts};
 use hetsched::substrate::json::Json;
@@ -21,26 +26,24 @@ fn main() {
     let plat = Platform::hybrid(32, 8);
     let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
     let mut rng = Rng::new(2027);
-    let subs: Vec<Submission> = (0..50)
+    let base: Vec<Submission> = (0..50)
         .map(|t| {
             let g = gen::hybrid_dag(&mut rng, 1000, 0.004);
             Submission::new(g, t as f64 * 40.0, policies[t % policies.len()].clone())
         })
         .collect();
-    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+    let total_tasks: usize = base.iter().map(|s| s.graph.n_tasks()).sum();
     println!(
         "== service mode: {} tenants x 1000 tasks on {} ==",
-        subs.len(),
+        base.len(),
         plat.label()
     );
 
-    // feasibility before timing anything
-    let report = run_service(&plat, &subs);
-    validate_service(&plat, &report.tenant_runs(&subs)).expect("service schedule feasible");
-
     // precompute the per-tenant ideal makespans so the timed region
-    // measures the streaming engine only (not the metrics reruns)
-    let ideals: Vec<f64> = subs
+    // measures the streaming engine only (not the metrics reruns); the
+    // ideal depends on (graph, order, policy), not on the admission
+    // layer, so one set serves all three variants
+    let ideals: Vec<f64> = base
         .iter()
         .map(|s| online_by_id(&s.graph, &plat, &s.policy).makespan)
         .collect();
@@ -50,37 +53,71 @@ fn main() {
         min_iters: 3,
         max_iters: 100_000,
     };
-    let r = bench_with("service 50x1000 (32x8 pool)", &opts, || {
-        black_box(run_service_with_ideals(&plat, &subs, Some(&ideals)).horizon);
-    });
-    println!("{}", r.report());
-    let tasks_per_sec = r.throughput(total_tasks as f64);
-    println!("    -> {tasks_per_sec:.0} scheduled tasks/s");
 
-    let out = Json::obj(vec![
+    let admissions: [(&str, TenantPolicy); 3] = [
+        ("fifo", TenantPolicy::Fifo),
+        ("quota", TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 0.25 }),
+        ("stretch", TenantPolicy::WeightedStretch { weight: 1.0 }),
+    ];
+
+    let mut rows: Vec<(&str, Json)> = vec![
         ("bench", Json::Str("service_throughput".into())),
-        ("tenants", Json::Num(subs.len() as f64)),
+        ("tenants", Json::Num(base.len() as f64)),
         ("tasks_total", Json::Num(total_tasks as f64)),
         ("platform", Json::Str(plat.label())),
-        ("mean_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
-        ("p95_ms", Json::Num(r.p95.as_secs_f64() * 1e3)),
-        ("tasks_per_sec", Json::Num(tasks_per_sec)),
-        ("horizon", Json::Num(report.horizon)),
-        ("mean_stretch", Json::Num(report.mean_stretch)),
-        ("max_stretch", Json::Num(report.max_stretch)),
-        (
-            "utilization",
-            Json::Arr(report.utilization.iter().map(|&u| Json::Num(u)).collect()),
-        ),
-    ]);
+    ];
+    let mut min_tps = f64::INFINITY;
+    for (key, admission) in &admissions {
+        let subs: Vec<Submission> = base
+            .iter()
+            .map(|s| s.clone().with_admission(admission.clone()))
+            .collect();
+        // feasibility before timing anything
+        let report = run_service_with_ideals(&plat, &subs, Some(&ideals));
+        validate_service(&plat, &report.tenant_runs(&subs))
+            .unwrap_or_else(|e| panic!("{key}: infeasible service schedule: {e}"));
+
+        let r = bench_with(&format!("service 50x1000 (32x8 pool, {key})"), &opts, || {
+            black_box(run_service_with_ideals(&plat, &subs, Some(&ideals)).horizon);
+        });
+        println!("{}", r.report());
+        let tasks_per_sec = r.throughput(total_tasks as f64);
+        println!(
+            "    -> {tasks_per_sec:.0} scheduled tasks/s | max stretch {:.2} | p99 {:.2} | Jain {:.3}",
+            report.max_stretch, report.stretch_p99, report.jain_index
+        );
+        min_tps = min_tps.min(tasks_per_sec);
+        rows.push((
+            *key,
+            Json::obj(vec![
+                ("mean_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
+                ("p95_ms", Json::Num(r.p95.as_secs_f64() * 1e3)),
+                ("tasks_per_sec", Json::Num(tasks_per_sec)),
+                ("horizon", Json::Num(report.horizon)),
+                ("mean_stretch", Json::Num(report.mean_stretch)),
+                ("max_stretch", Json::Num(report.max_stretch)),
+                ("p99_stretch", Json::Num(report.stretch_p99)),
+                ("jain_index", Json::Num(report.jain_index)),
+                (
+                    "utilization",
+                    Json::Arr(report.utilization.iter().map(|&u| Json::Num(u)).collect()),
+                ),
+            ]),
+        ));
+    }
+
+    let out = Json::obj(rows);
     std::fs::write("BENCH_service.json", out.to_string()).expect("write BENCH_service.json");
     println!("wrote BENCH_service.json");
 
     // acceptance: the streaming engine must stay comfortably in the
     // tens-of-thousands-of-decisions-per-second range even on modest
-    // hardware (50k decisions well under 5 s)
+    // hardware (50k decisions well under 5 s) — under EVERY admission
+    // policy, so a pathological quota/reordering path cannot hide; the
+    // fairness gate (stretch max_stretch strictly below fifo's) is
+    // re-checked from the JSON by ci.sh --perf
     assert!(
-        tasks_per_sec >= 10_000.0,
-        "service throughput regressed: {tasks_per_sec:.0} tasks/s"
+        min_tps >= 10_000.0,
+        "service throughput regressed: {min_tps:.0} tasks/s on the slowest policy"
     );
 }

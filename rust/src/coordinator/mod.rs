@@ -400,6 +400,50 @@ mod tests {
     }
 
     #[test]
+    fn virtual_clock_honors_admission_policies_exactly() {
+        // quota-capped and weighted-stretch tenants through the live
+        // coordinator: the virtual-clock realization must equal the
+        // policy-aware prediction bit for bit, and the quota tenant's
+        // realized placements must respect its held-units cap
+        use crate::sched::service::TenantPolicy;
+        let mut rng = Rng::new(41);
+        let plat = Platform::hybrid(4, 2);
+        let admissions = [
+            TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 0.5 },
+            TenantPolicy::WeightedStretch { weight: 2.0 },
+            TenantPolicy::Fifo,
+            TenantPolicy::WeightedStretch { weight: 0.5 },
+        ];
+        let subs: Vec<Submission> = (0..4)
+            .map(|t| {
+                let g = gen::hybrid_dag(&mut rng, 20, 0.12);
+                let policy = if t % 2 == 0 {
+                    OnlinePolicy::Greedy
+                } else {
+                    OnlinePolicy::Eft
+                };
+                Submission::new(g, t as f64 * 1.5, policy).with_admission(admissions[t].clone())
+            })
+            .collect();
+        let out = run_service_live(&plat, &subs, &ServiceLiveConfig { time_scale: 0.0 });
+        for (i, t) in out.predicted.tenants.iter().enumerate() {
+            assert_eq!(out.realized[i].placements, t.schedule.placements, "tenant {i}");
+        }
+        assert_eq!(out.realized_makespan, out.predicted.horizon);
+        // the quota tenant (caps: 1 CPU, 1 GPU) never holds two units of
+        // one type at once: any two time-overlapping same-type tasks of
+        // its realized schedule must share their unit
+        let ps = &out.realized[0].placements;
+        for a in ps.iter() {
+            for b in ps.iter() {
+                if a.ptype == b.ptype && a.start < b.finish && b.start < a.finish {
+                    assert_eq!(a.unit, b.unit, "cap-1 tenant spread across units");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn service_live_wall_mode_multi_tenant_completes() {
         let mut rng = Rng::new(37);
         let plat = Platform::hybrid(2, 1);

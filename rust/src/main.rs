@@ -23,7 +23,7 @@ use hetsched::graph::{io as gio, TaskGraph};
 use hetsched::platform::Platform;
 use hetsched::runtime::LpBackendKind;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
-use hetsched::sched::service::{run_service, Submission};
+use hetsched::sched::service::{run_service, Submission, TenantPolicy};
 use hetsched::sim::{validate, validate_realized, validate_service};
 use hetsched::substrate::cli::Args;
 use hetsched::workloads::{chameleon, forkjoin, Instance, Scale};
@@ -59,7 +59,8 @@ fn usage() {
          [--workers N] [--out DIR]\n  \
          lower-bounds [--thm 1|2|4]\n  \
          serve      (gen flags) --m M --k K --policy P [--time-scale S]\n  \
-         service    --tenants N --tasks T --m M --k K [--gap G] [--seed S]\n  \
+         service    --tenants N --tasks T --m M --k K [--gap G] [--seed S] \
+         [--admission fifo|quota|stretch] [--cpu-share F --gpu-share F] [--weight W]\n  \
          artifacts"
     );
     std::process::exit(2);
@@ -484,11 +485,29 @@ fn cmd_serve(args: &Args) {
     );
 }
 
+fn admission_from_args(args: &Args) -> TenantPolicy {
+    match args.string("admission", "fifo").as_str() {
+        "fifo" => TenantPolicy::Fifo,
+        "quota" => TenantPolicy::Quota {
+            cpu_share: args.f64("cpu-share", 0.5),
+            gpu_share: args.f64("gpu-share", 0.5),
+        },
+        "stretch" | "weighted-stretch" => TenantPolicy::WeightedStretch {
+            weight: args.f64("weight", 1.0),
+        },
+        other => {
+            eprintln!("unknown admission policy {other} (fifo|quota|stretch)");
+            std::process::exit(2)
+        }
+    }
+}
+
 fn cmd_service(args: &Args) {
     let n_tenants = args.usize("tenants", 8);
     let n_tasks = args.usize("tasks", 200);
     let plat = Platform::hybrid(args.usize("m", 16), args.usize("k", 4));
     let gap = args.f64("gap", 20.0);
+    let admission = admission_from_args(args);
     let mut rng = hetsched::substrate::rng::Rng::new(args.usize("seed", 7) as u64);
     let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
     let subs: Vec<Submission> = (0..n_tenants)
@@ -496,11 +515,13 @@ fn cmd_service(args: &Args) {
             let density = (4.0 / n_tasks as f64).min(0.2);
             let g = hetsched::graph::gen::hybrid_dag(&mut rng, n_tasks, density);
             Submission::new(g, t as f64 * gap, policies[t % policies.len()].clone())
+                .with_admission(admission.clone())
         })
         .collect();
     println!(
-        "service: {n_tenants} tenants x {n_tasks} tasks on {} (arrival gap {gap})",
-        plat.label()
+        "service: {n_tenants} tenants x {n_tasks} tasks on {} (arrival gap {gap}, admission {})",
+        plat.label(),
+        admission.name()
     );
     let t0 = std::time::Instant::now();
     let report = run_service(&plat, &subs);
@@ -522,10 +543,12 @@ fn cmd_service(args: &Args) {
         );
     }
     println!(
-        "horizon {:.1} | mean stretch {:.2} | max stretch {:.2} | {} decisions in {:?}",
+        "horizon {:.1} | mean stretch {:.2} | max {:.2} | p99 {:.2} | Jain {:.3} | {} decisions in {:?}",
         report.horizon,
         report.mean_stretch,
         report.max_stretch,
+        report.stretch_p99,
+        report.jain_index,
         report.decisions.len(),
         wall
     );

@@ -143,6 +143,27 @@ impl UnitTree {
     pub fn argmin_last(&self) -> usize {
         self.last_at_most(self.min()).expect("tree is non-empty")
     }
+
+    /// Earliest free time among `units` (+∞ for an empty slice) — the
+    /// restricted-set form of [`Self::min`], used by the service's
+    /// quota admission layer when a tenant at its held-units cap may
+    /// only select among the units it already holds.  Exact min over
+    /// the same leaf values the tree holds, so on the full unit set it
+    /// equals [`Self::min`] bit-for-bit.
+    pub fn min_over(&self, units: &[usize]) -> f64 {
+        units
+            .iter()
+            .map(|&u| self.get(u))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Lowest unit in `units` (which must be ascending) free by time
+    /// `t` — the restricted-set form of [`Self::first_at_most`]; on the
+    /// full ascending unit set the two agree by construction.
+    pub fn first_at_most_over(&self, units: &[usize], t: f64) -> Option<usize> {
+        debug_assert!(units.windows(2).all(|w| w[0] < w[1]), "units must ascend");
+        units.iter().copied().find(|&u| self.get(u) <= t)
+    }
 }
 
 /// One [`UnitTree`] per processor type.
@@ -551,6 +572,25 @@ mod tests {
         assert_eq!(t.last_at_most(6.0), Some(1));
         assert_eq!(t.first_at_most(2.0), None);
         assert_eq!(t.last_at_most(9.0), Some(2));
+    }
+
+    #[test]
+    fn unit_tree_restricted_set_queries_match_full_scans() {
+        let mut t = UnitTree::new(5);
+        for (u, f) in [4.0, 2.0, 2.0, 9.0, 1.0].iter().enumerate() {
+            t.set(u, *f);
+        }
+        // restricted min + first-at-most over a subset
+        assert_eq!(t.min_over(&[0, 3]), 4.0);
+        assert_eq!(t.min_over(&[1, 2, 3]), 2.0);
+        assert_eq!(t.min_over(&[]), f64::INFINITY);
+        assert_eq!(t.first_at_most_over(&[1, 2, 3], 2.0), Some(1));
+        assert_eq!(t.first_at_most_over(&[0, 3], 3.0), None);
+        // full ascending set degenerates to the tree queries
+        let all = [0, 1, 2, 3, 4];
+        assert_eq!(t.min_over(&all), t.min());
+        assert_eq!(t.first_at_most_over(&all, 2.0), t.first_at_most(2.0));
+        assert_eq!(t.first_at_most_over(&all, 0.5), t.first_at_most(0.5));
     }
 
     #[test]

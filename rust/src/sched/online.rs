@@ -52,6 +52,38 @@ impl OnlinePolicy {
     }
 }
 
+/// Admission-layer constraint on which units of one processor type a
+/// decision may use.  Built per-decision by the service's quota policy
+/// ([`TenantPolicy::Quota`](super::service::policy::TenantPolicy)):
+/// a tenant below its held-units cap sees [`UnitSet::All`]; at the cap
+/// it sees [`UnitSet::Only`] its currently-held units (it may stack
+/// work behind itself but not spread further); a zero share makes the
+/// whole type [`UnitSet::Banned`].  The unconstrained decision path
+/// passes no sets at all, and every restricted query degenerates to the
+/// exact tree query on the full unit set, so constrained and
+/// unconstrained selection share one rule structure.
+#[derive(Clone, Copy, Debug)]
+pub enum UnitSet<'a> {
+    /// No cap binding: every unit of the type is allowed.
+    All,
+    /// Only these units (ascending ids — the tenant's held set).
+    Only(&'a [usize]),
+    /// The type is forbidden (zero quota share).
+    Banned,
+}
+
+impl UnitSet<'_> {
+    fn banned(&self) -> bool {
+        matches!(self, UnitSet::Banned)
+    }
+}
+
+/// The constraint for type `q` out of a per-type slice; an empty (or
+/// short) slice means unconstrained — the common no-admission path.
+fn set_for<'a>(allowed: &[UnitSet<'a>], q: usize) -> UnitSet<'a> {
+    allowed.get(q).copied().unwrap_or(UnitSet::All)
+}
+
 /// Shared decision engine for the online policies: one [`UnitPool`] of
 /// per-type unit trees, keyed by the time each unit becomes idle, plus
 /// the irrevocable `(type, unit, start, finish)` decision rule of every
@@ -83,14 +115,36 @@ impl PolicyEngine {
         self.avail.release(q, unit, free);
     }
 
-    fn earliest_idle(&self, q: usize) -> f64 {
-        self.avail.types[q].min()
+    /// Earliest idle time among the allowed units of type `q` (+∞ when
+    /// the type is banned).  [`UnitSet::All`] is the exact tree query.
+    fn earliest_idle_in(&self, q: usize, s: UnitSet) -> f64 {
+        match s {
+            UnitSet::All => self.avail.types[q].min(),
+            UnitSet::Only(units) => self.avail.types[q].min_over(units),
+            UnitSet::Banned => f64::INFINITY,
+        }
     }
 
-    /// The unit the seed's `min_by` scan picked: lowest index among the
-    /// earliest-idle units.
-    fn best_unit(&self, q: usize) -> usize {
-        self.avail.types[q].argmin_first()
+    /// The unit the seed's `min_by` scan picks among the allowed units:
+    /// lowest index among the earliest-idle ones.  On [`UnitSet::All`]
+    /// this is the tree's `argmin_first`; on a restricted set it is the
+    /// same first-strict-minimum scan over the set.
+    fn best_unit_in(&self, q: usize, s: UnitSet) -> usize {
+        let tree = &self.avail.types[q];
+        match s {
+            UnitSet::All => tree.argmin_first(),
+            UnitSet::Only(units) => {
+                assert!(!units.is_empty(), "at-cap tenant must hold a unit");
+                let mut best = units[0];
+                for &u in &units[1..] {
+                    if tree.get(u) < tree.get(best) {
+                        best = u;
+                    }
+                }
+                best
+            }
+            UnitSet::Banned => unreachable!("banned type selected"),
+        }
     }
 
     /// EFT candidate on type `q` for a task ready at `ready` with
@@ -119,6 +173,27 @@ impl PolicyEngine {
         (start + dur, u)
     }
 
+    /// [`Self::eft_candidate`] restricted to the allowed units of type
+    /// `q`: same clamp-and-band rule over the restricted idle horizon,
+    /// first allowed unit within the band.  `None` for a banned type.
+    fn eft_candidate_in(&self, q: usize, ready: f64, dur: f64, s: UnitSet) -> Option<(f64, usize)> {
+        match s {
+            UnitSet::All => Some(self.eft_candidate(q, ready, dur)),
+            UnitSet::Only(units) => {
+                assert!(!units.is_empty(), "at-cap tenant must hold a unit");
+                let tree = &self.avail.types[q];
+                let tau = tree.min_over(units);
+                let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
+                let u = tree
+                    .first_at_most_over(units, clamp + TIE_BAND)
+                    .expect("restricted idle horizon lies within its own band");
+                let start = ready.max(tree.get(u));
+                Some((start + dur, u))
+            }
+            UnitSet::Banned => None,
+        }
+    }
+
     /// Take the irrevocable decision for task `j` of graph `g`, ready at
     /// `ready` (max of its predecessors' completions and its tenant's
     /// arrival time), and reserve the chosen unit until the task's
@@ -132,58 +207,107 @@ impl PolicyEngine {
         policy: &OnlinePolicy,
         rng: Option<&mut Rng>,
     ) -> Placement {
+        self.decide_in(g, plat, j, ready, policy, rng, &[])
+    }
+
+    /// [`Self::decide`] under per-type admission constraints (`allowed`;
+    /// an empty slice is unconstrained).  The rule structure is the
+    /// paper's own, applied to the restricted availability: the
+    /// two-sided rules keep their side unless the quota bans it (then
+    /// they fall through to the other side), ER-LS Step 1 reads the GPU
+    /// idle horizon *of the allowed GPU units* (a capped tenant sees its
+    /// own earliest-free held GPU as `τ_gpu`), and EFT minimizes finish
+    /// over the allowed units of every non-banned type.  With `allowed`
+    /// empty, every branch reduces to the unconstrained expressions
+    /// operation for operation — the golden-parity guarantees are
+    /// untouched by construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decide_in(
+        &mut self,
+        g: &TaskGraph,
+        plat: &Platform,
+        j: TaskId,
+        ready: f64,
+        policy: &OnlinePolicy,
+        rng: Option<&mut Rng>,
+        allowed: &[UnitSet],
+    ) -> Placement {
+        // a two-sided rule's side, quota-adjusted: banned sides fall
+        // through to the other side (validation guarantees one is open)
+        let flip = |q: usize| -> usize {
+            if set_for(allowed, q).banned() {
+                1 - q
+            } else {
+                q
+            }
+        };
         // choose (type, unit)
         let (q, unit) = match policy {
             OnlinePolicy::ErLs => {
-                let tau_gpu = self.earliest_idle(1);
-                let r_gpu = tau_gpu.max(ready);
-                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
-                    1 // Step 1: GPU side
+                let q = if set_for(allowed, 1).banned() {
+                    0
+                } else if set_for(allowed, 0).banned() {
+                    1
                 } else {
-                    alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
+                    let tau_gpu = self.earliest_idle_in(1, set_for(allowed, 1));
+                    let r_gpu = tau_gpu.max(ready);
+                    if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                        1 // Step 1: GPU side
+                    } else {
+                        alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
+                    }
                 };
-                (q, self.best_unit(q))
+                (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::R1 => {
-                let q = alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
-                (q, self.best_unit(q))
+                let q = flip(alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k()));
+                (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::R2 => {
-                let q = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
-                (q, self.best_unit(q))
+                let q = flip(alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k()));
+                (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::R3 => {
-                let q = alloc::r3_side(g.p_cpu(j), g.p_gpu(j));
-                (q, self.best_unit(q))
+                let q = flip(alloc::r3_side(g.p_cpu(j), g.p_gpu(j)));
+                (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::Greedy => {
                 let q = (0..plat.n_types())
+                    .filter(|&q| !set_for(allowed, q).banned())
                     .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
-                    .unwrap();
-                (q, self.best_unit(q))
+                    .expect("quota leaves no usable type");
+                (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::Random(_) => {
-                let q = rng.expect("Random policy needs an rng").below(plat.n_types());
-                (q, self.best_unit(q))
+                // draw first (identical rng consumption with or without
+                // a quota), then walk to the next open type if banned
+                let drawn = rng.expect("Random policy needs an rng").below(plat.n_types());
+                let q = (0..plat.n_types())
+                    .map(|step| (drawn + step) % plat.n_types())
+                    .find(|&q| !set_for(allowed, q).banned())
+                    .expect("quota leaves no usable type");
+                (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::Eft => {
-                // minimize finish across every unit; tie -> GPU-most type
-                let dur0 = g.time_on(j, 0);
-                let mut best = {
-                    let (finish, u) = self.eft_candidate(0, ready, dur0);
-                    (finish, 0usize, u)
-                };
-                for q in 1..plat.n_types() {
+                // minimize finish across every allowed unit; tie -> the
+                // later (higher) type wins within the band, matching the
+                // reference scan's `q > bq` rule
+                let mut best: Option<(f64, usize, usize)> = None;
+                for q in 0..plat.n_types() {
                     let dur = g.time_on(j, q);
-                    let (finish, u) = self.eft_candidate(q, ready, dur);
-                    // better, or tied within the band: the later
-                    // (higher) type wins ties, matching the reference
-                    // scan's `q > bq` rule
-                    if finish <= best.0 + TIE_BAND {
-                        best = (finish, q, u);
+                    let Some((finish, u)) = self.eft_candidate_in(q, ready, dur, set_for(allowed, q))
+                    else {
+                        continue;
+                    };
+                    let better = match best {
+                        None => true,
+                        Some((bf, _, _)) => finish <= bf + TIE_BAND,
+                    };
+                    if better {
+                        best = Some((finish, q, u));
                     }
                 }
-                let (_, q, u) = best;
+                let (_, q, u) = best.expect("quota leaves no usable type");
                 (q, u)
             }
         };
@@ -404,6 +528,88 @@ mod tests {
             // engine accepts it
             let s = online_schedule(&g, &plat(), &order, &OnlinePolicy::ErLs);
             validate(&g, &plat(), &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn decide_in_banned_type_falls_through_to_the_other_side() {
+        // CPU-faster task, CPU banned: every two-sided rule and EFT land
+        // on the GPU side instead
+        let mut b = Builder::new("ban");
+        b.add_task("t", vec![1.0, 50.0]);
+        let g = b.build();
+        let plat = plat();
+        let banned_cpu = [UnitSet::Banned, UnitSet::All];
+        for policy in [
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::R1,
+            OnlinePolicy::R2,
+            OnlinePolicy::R3,
+        ] {
+            let mut engine = PolicyEngine::new(&plat);
+            let p = engine.decide_in(&g, &plat, 0, 0.0, &policy, None, &banned_cpu);
+            assert_eq!(p.ptype, 1, "{}", policy.name());
+        }
+        // Random consumes one draw and walks off the banned type
+        let mut engine = PolicyEngine::new(&plat);
+        let mut rng = Rng::new(5);
+        let p = engine.decide_in(
+            &g,
+            &plat,
+            0,
+            0.0,
+            &OnlinePolicy::Random(5),
+            Some(&mut rng),
+            &banned_cpu,
+        );
+        assert_eq!(p.ptype, 1);
+    }
+
+    #[test]
+    fn decide_in_restricted_set_stacks_on_held_units() {
+        // 4 CPUs, CPU-fast task; the tenant is capped to CPU unit 2 only:
+        // Greedy and EFT must queue there even though units 0/1/3 idle
+        let mut b = Builder::new("held");
+        b.add_task("t", vec![2.0, 50.0]);
+        let g = b.build();
+        let plat = plat();
+        let held = [2usize];
+        let only = [UnitSet::Only(&held), UnitSet::All];
+        let mut engine = PolicyEngine::new(&plat);
+        let p1 = engine.decide_in(&g, &plat, 0, 0.0, &OnlinePolicy::Greedy, None, &only);
+        assert_eq!((p1.ptype, p1.unit, p1.start), (0, 2, 0.0));
+        let p2 = engine.decide_in(&g, &plat, 0, 0.0, &OnlinePolicy::Greedy, None, &only);
+        assert_eq!((p2.ptype, p2.unit, p2.start), (0, 2, 2.0), "stacks behind itself");
+        // EFT with the CPU restricted to the busy unit 2 now prefers the
+        // idle GPU despite the slower processing time cap
+        let mut b = Builder::new("held2");
+        b.add_task("t", vec![2.0, 5.0]);
+        let g2 = b.build();
+        let p3 = engine.decide_in(&g2, &plat, 0, 0.0, &OnlinePolicy::Eft, None, &only);
+        assert_eq!(p3.ptype, 1, "restricted CPU EFT 6 loses to GPU EFT 5");
+    }
+
+    #[test]
+    fn decide_in_unconstrained_slice_matches_decide() {
+        let mut rng = Rng::new(99);
+        let g = gen::hybrid_dag(&mut rng, 30, 0.1);
+        for policy in all_policies(2) {
+            let mut a = PolicyEngine::new(&plat());
+            let mut b = PolicyEngine::new(&plat());
+            let mut ra = match policy {
+                OnlinePolicy::Random(s) => Some(Rng::new(s)),
+                _ => None,
+            };
+            let mut rb = ra.clone();
+            let all = [UnitSet::All, UnitSet::All];
+            for j in 0..g.n_tasks() {
+                let ready = j as f64 * 0.5;
+                let pa = a.decide(&g, &plat(), j, ready, &policy, ra.as_mut());
+                let pb = b.decide_in(&g, &plat(), j, ready, &policy, rb.as_mut(), &all);
+                assert_eq!(pa, pb, "{}", policy.name());
+            }
         }
     }
 

@@ -2,7 +2,9 @@
 //! verbatim (quadratic selection loops and all) as the oracle for the
 //! golden-parity suite (`rust/tests/golden_parity.rs`) and as the
 //! baseline the perf bench (`benches/perf_hot_paths.rs`) measures the
-//! engine speedup against.
+//! engine speedup against.  [`run_service`] freezes the *pre-policy*
+//! multi-tenant service path the same way: the FIFO admission baseline
+//! the service's policy layer is pinned against.
 //!
 //! Do NOT "optimize" these: their value is being the old behavior.  The
 //! only changes from the seed code are `f64::total_cmp` in place of the
@@ -366,4 +368,128 @@ pub fn online_schedule(
 pub fn online_by_id(g: &TaskGraph, plat: &Platform, policy: &OnlinePolicy) -> Schedule {
     let order: Vec<TaskId> = (0..g.n_tasks()).collect();
     online_schedule(g, plat, &order, policy)
+}
+
+/// The pre-policy multi-tenant service path, frozen as the golden
+/// baseline for the admission-control layer: merge the tenants' arrival
+/// streams by (time, tenant, stream position) and commit every arrival
+/// immediately through the seed linear-scan decision rules above —
+/// first-come-first-served over one shared pool, no quotas, no
+/// reordering.  `sched::service` under all-FIFO admission must stay
+/// placement-identical to this (the cross-policy differential suite in
+/// `rust/tests/schedule_invariants.rs` pins it); per the ROADMAP
+/// golden-parity protocol, any deliberate change to the FIFO service
+/// semantics must update this body in the same PR and say so in
+/// CHANGES.md.
+///
+/// Returns one [`Schedule`] per submission (absolute virtual times on
+/// the shared pool).  Independently-maintained body: the decision match
+/// below deliberately duplicates [`online_schedule`]'s, like the other
+/// reference oracles in this module.
+pub fn run_service(plat: &Platform, subs: &[super::service::Submission]) -> Vec<Schedule> {
+    let mut st = State {
+        avail: plat.counts.iter().map(|&c| vec![0.0f64; c]).collect(),
+    };
+    let orders: Vec<Vec<TaskId>> = subs.iter().map(|s| s.order_vec()).collect();
+    let mut rngs: Vec<Option<Rng>> = subs
+        .iter()
+        .map(|s| match s.policy {
+            OnlinePolicy::Random(seed) => Some(Rng::new(seed)),
+            _ => None,
+        })
+        .collect();
+    let mut placements: Vec<Vec<Option<Placement>>> = subs
+        .iter()
+        .map(|s| vec![None; s.graph.n_tasks()])
+        .collect();
+
+    let ready_of = |g: &TaskGraph, arrival: f64, placed: &[Option<Placement>], j: TaskId| {
+        g.preds[j]
+            .iter()
+            .map(|&p| placed[p].expect("stream order not topological").finish)
+            .fold(arrival, f64::max)
+    };
+    let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize, OrdF64)>> = BinaryHeap::new();
+    for (i, s) in subs.iter().enumerate() {
+        let r0 = ready_of(&s.graph, s.arrival, &placements[i], orders[i][0]);
+        heap.push(Reverse((OrdF64(s.arrival.max(r0)), i, 0, OrdF64(r0))));
+    }
+
+    while let Some(Reverse((OrdF64(at), i, pos, OrdF64(ready)))) = heap.pop() {
+        let g = &subs[i].graph;
+        let j = orders[i][pos];
+        let (q, unit) = match &subs[i].policy {
+            OnlinePolicy::ErLs => {
+                let tau_gpu = st.earliest_idle(1);
+                let r_gpu = tau_gpu.max(ready);
+                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                    1
+                } else {
+                    alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
+                };
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::R1 => {
+                let q = alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::R2 => {
+                let q = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::R3 => {
+                let q = alloc::r3_side(g.p_cpu(j), g.p_gpu(j));
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::Greedy => {
+                let q = (0..plat.n_types())
+                    .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
+                    .unwrap();
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::Random(_) => {
+                let q = rngs[i].as_mut().unwrap().below(plat.n_types());
+                (q, st.best_unit(q))
+            }
+            OnlinePolicy::Eft => {
+                let mut best: Option<(f64, usize, usize)> = None;
+                for q in 0..plat.n_types() {
+                    let dur = g.time_on(j, q);
+                    for (u, &a) in st.avail[q].iter().enumerate() {
+                        let finish = ready.max(a) + dur;
+                        let better = match best {
+                            None => true,
+                            Some((bf, bq, _)) => {
+                                finish < bf - 1e-12 || (finish <= bf + 1e-12 && q > bq)
+                            }
+                        };
+                        if better {
+                            best = Some((finish, q, u));
+                        }
+                    }
+                }
+                let (_, q, u) = best.unwrap();
+                (q, u)
+            }
+        };
+        let start = ready.max(st.avail[q][unit]);
+        let finish = start + g.time_on(j, q);
+        st.avail[q][unit] = finish;
+        placements[i][j] = Some(Placement {
+            ptype: q,
+            unit,
+            start,
+            finish,
+        });
+        if pos + 1 < orders[i].len() {
+            let jn = orders[i][pos + 1];
+            let rn = ready_of(g, subs[i].arrival, &placements[i], jn);
+            heap.push(Reverse((OrdF64(at.max(rn)), i, pos + 1, OrdF64(rn))));
+        }
+    }
+
+    placements
+        .into_iter()
+        .map(|ps| Schedule::from_placements(ps.into_iter().map(Option::unwrap).collect()))
+        .collect()
 }

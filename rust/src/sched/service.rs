@@ -51,19 +51,37 @@
 //! the tenant's partial metrics, while every survivor's schedule stays
 //! feasible (invariant tests).  [`run_service`] is the drained
 //! one-call form.
+//!
+//! Admission control and fairness live one layer above the per-task
+//! decision rules, in [`policy`]: each [`Submission`] carries a
+//! [`TenantPolicy`] ([`Submission::with_admission`]) — FIFO (the golden
+//! baseline, bit-identical to the pre-policy path pinned against
+//! [`reference::run_service`](super::reference::run_service)), hard
+//! per-type held-units quotas enforced at the
+//! [`PolicyEngine`]/[`UnitPool`](super::engine::UnitPool) reservation
+//! boundary, or weighted-stretch reordering of admissions inside
+//! fully-busy pool windows.  The [`ServiceReport`] carries the fairness
+//! aggregates (max/p99 stretch, Jain's index over
+//! [`ServiceReport::completed_stretches`]) the policy comparison tables
+//! report.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, BTreeMap};
 use std::time::Instant;
 
 use crate::graph::{TaskGraph, TaskId};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule, TenantRun};
 use crate::substrate::rng::Rng;
-use crate::substrate::stats::Summary;
+use crate::substrate::stats::{percentile, Summary};
 
-use super::online::{online_schedule, requires_two_types, OnlinePolicy, PolicyEngine};
+use super::engine::TIE_BAND;
+use super::online::{online_schedule, requires_two_types, OnlinePolicy, PolicyEngine, UnitSet};
 use super::OrdF64;
+
+pub mod policy;
+
+pub use policy::TenantPolicy;
 
 /// One tenant's application entering the service.
 #[derive(Clone, Debug)]
@@ -74,6 +92,9 @@ pub struct Submission {
     pub arrival: f64,
     /// The online policy taking this tenant's irrevocable decisions.
     pub policy: OnlinePolicy,
+    /// The admission-control policy governing this tenant's share of the
+    /// pool (defaults to [`TenantPolicy::Fifo`], today's behavior).
+    pub admission: TenantPolicy,
     /// Precedence-respecting arrival order of the tenant's tasks
     /// (defaults to task-id order, which our generators emit
     /// topologically).
@@ -87,6 +108,7 @@ impl Submission {
             graph,
             arrival,
             policy,
+            admission: TenantPolicy::Fifo,
             order: None,
         }
     }
@@ -98,7 +120,13 @@ impl Submission {
         self
     }
 
-    fn order_vec(&self) -> Vec<TaskId> {
+    /// Set this tenant's admission-control policy (see [`policy`]).
+    pub fn with_admission(mut self, admission: TenantPolicy) -> Submission {
+        self.admission = admission;
+        self
+    }
+
+    pub(crate) fn order_vec(&self) -> Vec<TaskId> {
         self.order
             .clone()
             .unwrap_or_else(|| (0..self.graph.n_tasks()).collect())
@@ -158,11 +186,32 @@ pub struct ServiceReport {
     pub total_tasks: usize,
     pub mean_stretch: f64,
     pub max_stretch: f64,
+    /// 99th-percentile stretch over completed tenants (the fairness
+    /// tail the admission policies are compared on).
+    pub stretch_p99: f64,
+    /// Jain's fairness index over completed tenants' stretches —
+    /// (Σs)²/(n·Σs²) ∈ (0, 1], 1 when every tenant is slowed equally.
+    pub jain_index: f64,
     /// Busy fraction per type over [0, horizon).
     pub utilization: Vec<f64>,
 }
 
 impl ServiceReport {
+    /// Stretches of the tenants that ran to completion, the *single*
+    /// source for every stretch aggregate (mean/max/p99/Jain) in and
+    /// around this report.  A cancelled tenant's partial stretch is an
+    /// underestimate of its contention (its tail never ran), so mixing
+    /// it into percentiles would understate unfairness — consumers that
+    /// previously folded `tenants` directly into their own aggregates
+    /// should use this helper instead.
+    pub fn completed_stretches(&self) -> Vec<f64> {
+        self.tenants
+            .iter()
+            .filter(|t| t.cancelled_at.is_none())
+            .map(|t| t.stretch)
+            .collect()
+    }
+
     /// Pair each tenant's schedule with its submission for the
     /// tenant-aware merge validator
     /// ([`validate_service`](crate::sim::validate_service)).  Cancelled
@@ -265,10 +314,34 @@ pub struct Service<'a> {
     cancelled: Vec<Option<f64>>,
     /// virtual time of the last processed arrival
     now: f64,
+    /// per tenant: per-type held-unit caps (quota tenants only)
+    caps: Vec<Option<Vec<usize>>>,
+    /// per tenant per type: unit → latest outstanding finish — the
+    /// held-units ledger the quota caps are enforced on (empty vec for
+    /// tenants without a quota)
+    held: Vec<Vec<BTreeMap<usize, f64>>>,
+    /// per tenant: weighted-stretch reordering weight
+    weights: Vec<Option<f64>>,
+    /// per tenant: ideal single-tenant makespan (NaN unless the tenant
+    /// is weighted-stretch; the reordering key needs it up front)
+    ws_ideals: Vec<f64>,
+    any_ws: bool,
 }
 
 impl<'a> Service<'a> {
     pub fn new(plat: &'a Platform, subs: &'a [Submission]) -> Service<'a> {
+        Service::new_with_ideals(plat, subs, None)
+    }
+
+    /// [`Service::new`] with precomputed per-tenant ideal makespans (one
+    /// per submission, as in [`run_service_with_ideals`]) so
+    /// weighted-stretch tenants do not trigger a single-tenant rerun
+    /// here.  `None` computes them for the tenants that need one.
+    pub fn new_with_ideals(
+        plat: &'a Platform,
+        subs: &'a [Submission],
+        ideals: Option<&[f64]>,
+    ) -> Service<'a> {
         for s in subs {
             assert!(s.graph.n_tasks() > 0, "empty submission");
             // re-checked here because the fields are public
@@ -291,6 +364,10 @@ impl<'a> Service<'a> {
                 plat.n_types(),
                 "graph/platform type count mismatch"
             );
+            s.admission.validate(plat);
+        }
+        if let Some(v) = ideals {
+            assert_eq!(v.len(), subs.len(), "one ideal makespan per submission");
         }
 
         let orders: Vec<Vec<TaskId>> = subs.iter().map(|s| s.order_vec()).collect();
@@ -303,6 +380,29 @@ impl<'a> Service<'a> {
             let r0 = ready_time(&s.graph, s.arrival, &placements[i], i, orders[i][0]);
             heap.push(Reverse((OrdF64(s.arrival.max(r0)), i, 0, OrdF64(r0))));
         }
+        let weights: Vec<Option<f64>> = subs.iter().map(|s| s.admission.weight()).collect();
+        let any_ws = weights.iter().any(Option::is_some);
+        let ws_ideals: Vec<f64> = subs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if weights[i].is_none() {
+                    f64::NAN
+                } else if let Some(v) = ideals {
+                    v[i]
+                } else {
+                    online_schedule(&s.graph, plat, &orders[i], &s.policy).makespan
+                }
+            })
+            .collect();
+        let caps: Vec<Option<Vec<usize>>> = subs.iter().map(|s| s.admission.caps(plat)).collect();
+        let held: Vec<Vec<BTreeMap<usize, f64>>> = caps
+            .iter()
+            .map(|c| match c {
+                Some(_) => plat.counts.iter().map(|_| BTreeMap::new()).collect(),
+                None => Vec::new(),
+            })
+            .collect();
         Service {
             plat,
             subs,
@@ -329,13 +429,84 @@ impl<'a> Service<'a> {
                 .collect(),
             cancelled: vec![None; subs.len()],
             now: 0.0,
+            caps,
+            held,
+            weights,
+            ws_ideals,
+            any_ws,
         }
+    }
+
+    /// Pop the next head to admit.  Pure-FIFO/quota services take the
+    /// merged stream strictly in arrival order (the pre-policy path).
+    /// With weighted-stretch tenants present, a head entering a *fully
+    /// busy* pool window may be leapfrogged: every unit's free time lies
+    /// beyond the head's arrival, so any competing head inside the
+    /// window would start no earlier than the window's end anyway, and
+    /// the service is free to admit the most-behind tenant first — the
+    /// one maximizing `weight · (t − arrival) / ideal makespan`.  Heads
+    /// of FIFO/quota tenants are barriers: they are never bypassed, so
+    /// mixing policies keeps their arrival-order guarantee intact.  With
+    /// an idle unit anywhere (in particular for a single tenant on an
+    /// empty pool, or with no contention) the window is empty and the
+    /// order is exactly FIFO.
+    fn next_head(&mut self) -> Option<Reverse<(OrdF64, usize, usize, OrdF64)>> {
+        let first = self.heap.pop()?;
+        if !self.any_ws {
+            return Some(first);
+        }
+        let Reverse((OrdF64(t0), i0, _, _)) = first;
+        if self.weights[i0].is_none() {
+            return Some(first);
+        }
+        // the pool's global idle horizon: an idle unit by t0 means the
+        // pool is not saturated, and FIFO order stands
+        let tau = (0..self.plat.n_types())
+            .map(|q| self.engine.pool().earliest_idle(q))
+            .fold(f64::INFINITY, f64::min);
+        if tau <= t0 {
+            return Some(first);
+        }
+        // collect the weighted-stretch heads inside the busy window
+        // [t0, tau]; stop at the first FIFO/quota head (a barrier)
+        let mut cands = vec![first];
+        while let Some(&Reverse((OrdF64(t), i, _, _))) = self.heap.peek() {
+            if t > tau || self.weights[i].is_none() {
+                break;
+            }
+            cands.push(self.heap.pop().unwrap());
+        }
+        if cands.len() == 1 {
+            return cands.pop();
+        }
+        // admit the most-behind tenant first; everyone's stretch is
+        // evaluated at the window head so the comparison is common-time,
+        // and band ties keep the FIFO (time, tenant, position) order
+        let t_eval = t0.max(self.now);
+        let mut best = 0usize;
+        let mut best_key = f64::NEG_INFINITY;
+        for (idx, &Reverse((_, i, _, _))) in cands.iter().enumerate() {
+            // elapsed flow clamps at 0 (a head can sit in the window
+            // before its tenant's arrival-relative clock started)
+            let key = self.weights[i].expect("only weighted-stretch heads compete")
+                * (t_eval - self.subs[i].arrival).max(0.0)
+                / self.ws_ideals[i];
+            if idx == 0 || key > best_key + TIE_BAND {
+                best = idx;
+                best_key = key;
+            }
+        }
+        let chosen = cands.swap_remove(best);
+        for c in cands {
+            self.heap.push(c);
+        }
+        Some(chosen)
     }
 
     /// Process the next arrival in the merged stream; `None` once the
     /// stream is drained.
     pub fn step(&mut self) -> Option<DecisionRecord> {
-        let Reverse((OrdF64(at), i, pos, OrdF64(ready))) = self.heap.pop()?;
+        let Reverse((OrdF64(at), i, pos, OrdF64(ready))) = self.next_head()?;
         debug_assert!(self.cancelled[i].is_none(), "cancelled tenant left in stream");
         let g = &self.subs[i].graph;
         let j = self.orders[i][pos];
@@ -344,12 +515,72 @@ impl<'a> Service<'a> {
             "tenant {i}: task {j} decided twice"
         );
         debug_assert!(at >= ready, "stream time regressed");
+        // a leapfrogged head's admission happens at the preemptor's
+        // (later) time; for FIFO/quota heads `at >= self.now` always, so
+        // this is exactly the old `self.now = at`
+        let at = at.max(self.now);
         self.now = at;
 
         let td = Instant::now();
-        let p = self
-            .engine
-            .decide(g, self.plat, j, ready, &self.subs[i].policy, self.rngs[i].as_mut());
+        let p = match &self.caps[i] {
+            None => self
+                .engine
+                .decide(g, self.plat, j, ready, &self.subs[i].policy, self.rngs[i].as_mut()),
+            Some(caps) => {
+                // quota path: expire finished reservations from the
+                // held-units ledger at the admission time, then restrict
+                // the decision to what the caps leave open
+                for m in self.held[i].iter_mut() {
+                    m.retain(|_, f| *f > at);
+                }
+                // the held-units key list is only materialized for
+                // types actually AT their cap (the off-cap common case
+                // stays allocation-light on this hot path)
+                let held_units: Vec<Vec<usize>> = self.held[i]
+                    .iter()
+                    .zip(caps)
+                    .map(|(m, &cap)| {
+                        if cap != 0 && m.len() >= cap {
+                            m.keys().copied().collect()
+                        } else {
+                            Vec::new()
+                        }
+                    })
+                    .collect();
+                let sets: Vec<UnitSet> = caps
+                    .iter()
+                    .enumerate()
+                    .map(|(q, &cap)| {
+                        if cap == 0 {
+                            UnitSet::Banned
+                        } else if self.held[i][q].len() < cap {
+                            UnitSet::All
+                        } else {
+                            UnitSet::Only(&held_units[q])
+                        }
+                    })
+                    .collect();
+                let p = self.engine.decide_in(
+                    g,
+                    self.plat,
+                    j,
+                    ready,
+                    &self.subs[i].policy,
+                    self.rngs[i].as_mut(),
+                    &sets,
+                );
+                let entry = self.held[i][p.ptype].entry(p.unit).or_insert(p.finish);
+                if p.finish > *entry {
+                    *entry = p.finish;
+                }
+                debug_assert!(
+                    self.held[i][p.ptype].len() <= caps[p.ptype],
+                    "tenant {i}: quota exceeded on type {}",
+                    p.ptype
+                );
+                p
+            }
+        };
         self.latencies[i].push(td.elapsed().as_secs_f64() + 1e-9);
         // the unit's free time before this reservation: the ledger
         // mirrors every reserve/release on the pool, so it is the last
@@ -410,6 +641,11 @@ impl<'a> Service<'a> {
         );
         let at = self.now;
         self.cancelled[tenant] = Some(at);
+        // the tenant takes no further decisions, so its quota ledger is
+        // moot; clearing keeps the held-units invariant trivially true
+        for m in self.held[tenant].iter_mut() {
+            m.clear();
+        }
 
         // drop the tenant's pending stream entry
         let kept: Vec<_> = std::mem::take(&mut self.heap)
@@ -520,6 +756,9 @@ impl<'a> Service<'a> {
             }
             let ideal = match ideals {
                 Some(v) => v[i],
+                // a weighted-stretch tenant's ideal was already computed
+                // for the reordering key (same expression, same value)
+                None if self.ws_ideals[i].is_finite() => self.ws_ideals[i],
                 None => online_schedule(&s.graph, self.plat, &self.orders[i], &s.policy)
                     .makespan,
             };
@@ -541,13 +780,6 @@ impl<'a> Service<'a> {
             });
         }
 
-        // stretch aggregates cover completed tenants only: a cancelled
-        // tenant's partial stretch would understate contention
-        let stretches: Vec<f64> = tenants
-            .iter()
-            .filter(|t| t.cancelled_at.is_none())
-            .map(|t| t.stretch)
-            .collect();
         let mut utilization = vec![0.0; self.plat.n_types()];
         if horizon > 0.0 {
             for t in &tenants {
@@ -556,19 +788,32 @@ impl<'a> Service<'a> {
                 }
             }
         }
-        ServiceReport {
+        let mut report = ServiceReport {
             tenants,
             decisions: self.decisions.clone(),
             horizon,
             total_tasks: self.subs.iter().map(|s| s.graph.n_tasks()).sum(),
-            mean_stretch: if stretches.is_empty() {
-                0.0
-            } else {
-                stretches.iter().sum::<f64>() / stretches.len() as f64
-            },
-            max_stretch: stretches.iter().fold(0.0f64, |a, &b| a.max(b)),
+            mean_stretch: 0.0,
+            max_stretch: 0.0,
+            stretch_p99: 0.0,
+            jain_index: 1.0,
             utilization,
+        };
+        // every stretch aggregate flows through the one
+        // completed-tenants helper: a cancelled tenant's partial stretch
+        // is an underestimate and must not leak into any of them
+        let mut stretches = report.completed_stretches();
+        if !stretches.is_empty() {
+            stretches.sort_by(|a, b| a.total_cmp(b));
+            let n = stretches.len() as f64;
+            let sum: f64 = stretches.iter().sum();
+            let sum_sq: f64 = stretches.iter().map(|s| s * s).sum();
+            report.mean_stretch = sum / n;
+            report.max_stretch = stretches[stretches.len() - 1];
+            report.stretch_p99 = percentile(&stretches, 0.99);
+            report.jain_index = if sum_sq > 0.0 { sum * sum / (n * sum_sq) } else { 1.0 };
         }
+        report
     }
 }
 
@@ -596,7 +841,7 @@ pub fn run_service_with_ideals(
     subs: &[Submission],
     ideals: Option<&[f64]>,
 ) -> ServiceReport {
-    let mut service = Service::new(plat, subs);
+    let mut service = Service::new_with_ideals(plat, subs, ideals);
     service.run();
     service.report(ideals)
 }
@@ -853,6 +1098,195 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn cpu_chain(app: &str, len: usize, dur: f64) -> TaskGraph {
+        let mut b = Builder::new(app);
+        let mut prev = None;
+        for _ in 0..len {
+            let t = b.add_task("t", vec![dur, dur * 100.0]);
+            if let Some(p) = prev {
+                b.add_arc(p, t);
+            }
+            prev = Some(t);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn quota_cap_one_stacks_on_a_single_cpu() {
+        // 4 CPUs + 2 GPUs, but the tenant's cpu_share grants one unit:
+        // its independent CPU-fast tasks must serialize on one CPU while
+        // 3 CPUs sit idle (hard caps are enforced even on an idle pool)
+        let mut b = Builder::new("wide");
+        for _ in 0..4 {
+            b.add_task("t", vec![2.0, 200.0]);
+        }
+        let g = b.build();
+        let subs = vec![Submission::new(g, 0.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 1.0 })];
+        let report = run_service(&plat(), &subs);
+        let t = &report.tenants[0];
+        for (k, p) in t.schedule.placements.iter().enumerate() {
+            assert_eq!((p.ptype, p.unit), (0, 0), "task {k} must stay on CPU 0");
+            assert_eq!(p.start, k as f64 * 2.0, "task {k} queues behind the cap");
+        }
+        validate_service(&plat(), &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn quota_frees_units_as_reservations_expire() {
+        // cap 1 on CPUs; two independent tasks — the second stacks on the
+        // held unit; a third task arriving after both finished may pick a
+        // fresh unit again (the ledger expired)
+        let mut b = Builder::new("w3");
+        b.add_task("a", vec![2.0, 200.0]);
+        b.add_task("b", vec![2.0, 200.0]);
+        let c = b.add_task("c", vec![2.0, 200.0]);
+        let a = 0;
+        b.add_arc(a, c);
+        let g = b.build();
+        let subs = vec![Submission::new(g, 0.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 1.0 })];
+        let report = run_service(&plat(), &subs);
+        let p = &report.tenants[0].schedule.placements;
+        assert_eq!((p[0].start, p[0].unit), (0.0, 0));
+        assert_eq!((p[1].start, p[1].unit), (2.0, 0), "at cap: stacks behind itself");
+        // c streams after a finishes (ready 2.0) but decides at time 2.0
+        // when b's reservation (finish 4.0) still holds unit 0
+        assert_eq!((p[2].start, p[2].unit), (4.0, 0));
+    }
+
+    #[test]
+    fn quota_zero_share_bans_the_type() {
+        let mut b = Builder::new("cpuonly");
+        b.add_task("t", vec![1.0, 50.0]);
+        let g = b.build();
+        // CPU-fast task, but cpu_share 0: Greedy must fall through to GPU
+        let subs = vec![Submission::new(g, 0.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::Quota { cpu_share: 0.0, gpu_share: 1.0 })];
+        let report = run_service(&plat(), &subs);
+        assert_eq!(report.tenants[0].schedule.placements[0].ptype, 1);
+    }
+
+    #[test]
+    fn single_tenant_parity_under_every_admission_policy() {
+        // full-share quota and any weighted-stretch weight leave a lone
+        // tenant's placements exactly the online engine's
+        let mut rng = Rng::new(47);
+        let g = gen::hybrid_dag(&mut rng, 40, 0.1);
+        for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+            let expect = online_by_id(&g, &plat(), &policy);
+            for admission in [
+                TenantPolicy::Fifo,
+                TenantPolicy::Quota { cpu_share: 1.0, gpu_share: 1.0 },
+                TenantPolicy::WeightedStretch { weight: 0.25 },
+                TenantPolicy::WeightedStretch { weight: 4.0 },
+            ] {
+                let subs = vec![
+                    Submission::new(g.clone(), 0.0, policy.clone()).with_admission(admission)
+                ];
+                let report = run_service(&plat(), &subs);
+                assert_eq!(
+                    report.tenants[0].schedule.placements, expect.placements,
+                    "{} under {}",
+                    policy.name(),
+                    subs[0].admission.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_stretch_admits_the_most_behind_tenant_first() {
+        // 1 CPU + 1 GPU; tenant 0 hogs the GPU [0, 100); tenants 1 and 2
+        // run CPU chains.  At the t=4 window the pool is busy until 10,
+        // and both remaining heads (t1's second task at 4, t2's second
+        // task at 10) compete:
+        //   equal weights  -> t1 (stretch 4/8 = 0.5 beats 4/12 = 0.33)
+        //   t1 weight 0.1  -> t2 jumps the queue (0.05 vs 0.33)
+        let plat = Platform::hybrid(1, 1);
+        let hog = || {
+            let mut b = Builder::new("hog");
+            b.add_task("t", vec![10000.0, 100.0]);
+            b.build()
+        };
+        let mk = |subs_w: [f64; 2]| -> Vec<Submission> {
+            vec![
+                Submission::new(hog(), 0.0, OnlinePolicy::Greedy)
+                    .with_admission(TenantPolicy::WeightedStretch { weight: 1.0 }),
+                Submission::new(cpu_chain("t1", 2, 4.0), 0.0, OnlinePolicy::Greedy)
+                    .with_admission(TenantPolicy::WeightedStretch { weight: subs_w[0] }),
+                Submission::new(cpu_chain("t2", 2, 6.0), 0.0, OnlinePolicy::Greedy)
+                    .with_admission(TenantPolicy::WeightedStretch { weight: subs_w[1] }),
+            ]
+        };
+
+        // equal weights: t1 keeps its FIFO slot at the window
+        let subs = mk([1.0, 1.0]);
+        let report = run_service(&plat, &subs);
+        assert_eq!(report.tenants[1].schedule.placements[1].start, 10.0);
+        assert_eq!(report.tenants[2].schedule.placements[1].start, 14.0);
+        for w in report.decisions.windows(2) {
+            assert!(w[0].time <= w[1].time, "decision times must be sorted");
+        }
+        validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+
+        // deprioritize t1: t2's second task takes the [10, 16) slot
+        let subs = mk([0.1, 1.0]);
+        let report = run_service(&plat, &subs);
+        assert_eq!(report.tenants[2].schedule.placements[1].start, 10.0);
+        assert_eq!(report.tenants[1].schedule.placements[1].start, 16.0);
+        for w in report.decisions.windows(2) {
+            assert!(w[0].time <= w[1].time, "decision times must be sorted");
+        }
+        validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+    }
+
+    #[test]
+    fn fairness_aggregates_exclude_cancelled_partials() {
+        // tenant 0 is cancelled after one running task: its partial
+        // stretch must not leak into mean/max/p99/Jain (regression for
+        // the tenant_runs-consumer mixup)
+        let plat = Platform::hybrid(1, 1);
+        let subs = vec![
+            Submission::new(cpu_chain("victim", 3, 10.0), 0.0, OnlinePolicy::Greedy),
+            Submission::new(cpu_chain("survivor", 1, 2.0), 5.0, OnlinePolicy::Greedy),
+        ];
+        let mut svc = Service::new(&plat, &subs);
+        assert!(svc.step().is_some()); // victim task 0 on CPU [0, 10)
+        assert!(svc.step().is_some()); // survivor arrives at 5, queues
+        let _ = svc.cancel(0);
+        svc.run();
+        let report = svc.report(None);
+        // the cancelled tenant reports its (partial, underestimating)
+        // stretch, but the aggregates only see the survivor
+        let survivor_stretch = report.tenants[1].stretch;
+        assert_eq!(report.completed_stretches(), vec![survivor_stretch]);
+        assert_eq!(report.mean_stretch, survivor_stretch);
+        assert_eq!(report.max_stretch, survivor_stretch);
+        assert_eq!(report.stretch_p99, survivor_stretch);
+        assert_eq!(report.jain_index, 1.0);
+    }
+
+    #[test]
+    fn jain_index_measures_stretch_dispersion() {
+        // two identical single-task tenants colliding on one CPU:
+        // stretches (1, 2) -> Jain (1+2)^2 / (2 * (1+4)) = 0.9
+        let mk = || {
+            let mut b = Builder::new("one");
+            b.add_task("t", vec![2.0, 50.0]);
+            b.build()
+        };
+        let plat = Platform::hybrid(1, 1);
+        let subs = vec![
+            Submission::new(mk(), 0.0, OnlinePolicy::Greedy),
+            Submission::new(mk(), 0.0, OnlinePolicy::Greedy),
+        ];
+        let report = run_service(&plat, &subs);
+        assert_eq!(report.max_stretch, 2.0);
+        assert!((report.stretch_p99 - 1.99).abs() < 1e-9);
+        assert!((report.jain_index - 0.9).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Admission-control and fairness policies for the multi-tenant service.
+//!
+//! The service's base regime is first-come-first-served: every arrival is
+//! committed the moment it enters the merged stream, and whichever tenant
+//! arrived first grabs the earliest unit slots.  That is exactly the
+//! paper's on-line model per tenant, but across tenants it lets one heavy
+//! application starve everyone behind it — the fairness gap the
+//! two-resource survey literature (Beaumont et al. 2019) flags for
+//! CPU/GPU clusters.  A [`TenantPolicy`] closes it at the *admission*
+//! layer, i.e. strictly above the per-task decision rules: each tenant's
+//! own stream still flows in precedence order through the same
+//! irrevocable [`PolicyEngine`](crate::sched::online::PolicyEngine)
+//! rules, so the paper's per-tenant guarantees are untouched.
+//!
+//! * [`TenantPolicy::Fifo`] — the golden baseline: commit at arrival, no
+//!   caps.  Bit-identical to the pre-policy service path (pinned against
+//!   [`reference::run_service`](crate::sched::reference::run_service)).
+//! * [`TenantPolicy::Quota`] — hard per-tenant caps on *concurrently
+//!   held units* of each type.  A unit counts as held from the moment a
+//!   task is (irrevocably) placed on it until the tenant's last
+//!   reservation on it finishes.  An at-cap tenant may still stack work
+//!   on units it already holds (queueing behind itself — "waiting"), and
+//!   its decision rules fall through to the other type exactly like the
+//!   paper's two-sided rules: the restricted GPU idle time feeds ER-LS
+//!   Step 1, EFT compares the restricted candidates of both sides, and a
+//!   zero share forbids the side outright.  Caps are enforced even when
+//!   the pool is idle (predictable isolation beats work conservation
+//!   here), so the quota-never-exceeded ledger invariant is
+//!   unconditional.
+//! * [`TenantPolicy::WeightedStretch`] — contended-window reordering:
+//!   when the pool is fully busy at the head of the stream (every unit's
+//!   free time lies beyond the next arrival), every competing
+//!   weighted-stretch head inside that busy window would start no
+//!   earlier anyway, so the service is free to admit them in fairness
+//!   order instead of arrival order.  It picks the head maximizing
+//!   `weight · (t − arrival) / ideal_makespan` (the tenant currently
+//!   most behind, scaled by its weight), so heavy tenants can be
+//!   deprioritized by assigning them a small weight.  With an idle pool
+//!   — in particular for a single tenant — the window is empty and the
+//!   order degrades to FIFO, which is what keeps single-tenant runs
+//!   placement-identical to `sched::online`.
+//!
+//! Policies are per-tenant
+//! ([`Submission::with_admission`](super::Submission::with_admission))
+//! and mix freely: FIFO/Quota heads are never bypassed by
+//! weighted-stretch reordering.
+
+use crate::platform::Platform;
+
+/// Per-tenant admission policy (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TenantPolicy {
+    /// Commit every arrival immediately, no caps — today's service
+    /// behavior, retained as the golden baseline.
+    Fifo,
+    /// Hard caps on concurrently-held units per type, as fractions of
+    /// the pool: the tenant may hold at most `ceil(share · count_q)`
+    /// distinct units of type `q` at any instant (a zero share forbids
+    /// the type).  Hybrid (CPU+GPU) platforms only.
+    Quota { cpu_share: f64, gpu_share: f64 },
+    /// Reorder admissions inside fully-busy windows by descending
+    /// `weight · current stretch`; `weight > 1` prioritizes the tenant,
+    /// `weight < 1` deprioritizes it.
+    WeightedStretch { weight: f64 },
+}
+
+impl TenantPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantPolicy::Fifo => "FIFO",
+            TenantPolicy::Quota { .. } => "Quota",
+            TenantPolicy::WeightedStretch { .. } => "WStretch",
+        }
+    }
+
+    /// Validate the policy against the platform it will run on (shares
+    /// in [0, 1] with at least one unit reachable, positive finite
+    /// weight, quota restricted to hybrid platforms).
+    pub fn validate(&self, plat: &Platform) {
+        match self {
+            TenantPolicy::Fifo => {}
+            TenantPolicy::Quota { cpu_share, gpu_share } => {
+                assert!(
+                    plat.n_types() == 2,
+                    "Quota shares are defined for hybrid (CPU+GPU) platforms"
+                );
+                for share in [cpu_share, gpu_share] {
+                    assert!(
+                        share.is_finite() && (0.0..=1.0).contains(share),
+                        "quota share {share} outside [0, 1]"
+                    );
+                }
+                assert!(
+                    *cpu_share > 0.0 || *gpu_share > 0.0,
+                    "a quota must leave at least one type usable"
+                );
+            }
+            TenantPolicy::WeightedStretch { weight } => {
+                assert!(
+                    weight.is_finite() && *weight > 0.0,
+                    "weighted-stretch weight {weight} must be positive"
+                );
+            }
+        }
+    }
+
+    /// Per-type held-unit caps on `plat`, or `None` when the policy
+    /// imposes none.  `cap_q = ceil(share_q · count_q)` clamped to the
+    /// type's unit count; a zero share gives cap 0 (type forbidden).
+    pub fn caps(&self, plat: &Platform) -> Option<Vec<usize>> {
+        match self {
+            TenantPolicy::Quota { cpu_share, gpu_share } => Some(
+                [*cpu_share, *gpu_share]
+                    .iter()
+                    .zip(&plat.counts)
+                    .map(|(&share, &count)| share_cap(share, count))
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    /// The reordering weight, or `None` for admission-at-arrival
+    /// policies.
+    pub fn weight(&self) -> Option<f64> {
+        match self {
+            TenantPolicy::WeightedStretch { weight } => Some(*weight),
+            _ => None,
+        }
+    }
+}
+
+/// cap = ceil(share · count), clamped to [1, count] for positive shares;
+/// 0 for a zero share (type forbidden).
+fn share_cap(share: f64, count: usize) -> usize {
+    if share <= 0.0 {
+        0
+    } else {
+        ((share * count as f64).ceil() as usize).clamp(1, count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caps_round_up_and_clamp() {
+        let plat = Platform::hybrid(8, 3);
+        let p = TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 1.0 };
+        assert_eq!(p.caps(&plat), Some(vec![2, 3]));
+        let p = TenantPolicy::Quota { cpu_share: 0.01, gpu_share: 0.0 };
+        // tiny positive share still grants one unit; zero share forbids
+        assert_eq!(p.caps(&plat), Some(vec![1, 0]));
+        assert_eq!(TenantPolicy::Fifo.caps(&plat), None);
+        assert_eq!(
+            TenantPolicy::WeightedStretch { weight: 2.0 }.caps(&plat),
+            None
+        );
+    }
+
+    #[test]
+    fn weight_accessor() {
+        assert_eq!(TenantPolicy::Fifo.weight(), None);
+        assert_eq!(
+            TenantPolicy::WeightedStretch { weight: 0.5 }.weight(),
+            Some(0.5)
+        );
+    }
+
+    #[test]
+    fn validate_accepts_sane_policies() {
+        let plat = Platform::hybrid(4, 2);
+        TenantPolicy::Fifo.validate(&plat);
+        TenantPolicy::Quota { cpu_share: 0.5, gpu_share: 0.0 }.validate(&plat);
+        TenantPolicy::WeightedStretch { weight: 3.0 }.validate(&plat);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn validate_rejects_oversized_share() {
+        TenantPolicy::Quota { cpu_share: 1.5, gpu_share: 0.5 }.validate(&Platform::hybrid(4, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one type")]
+    fn validate_rejects_all_zero_shares() {
+        TenantPolicy::Quota { cpu_share: 0.0, gpu_share: 0.0 }.validate(&Platform::hybrid(4, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn validate_rejects_zero_weight() {
+        TenantPolicy::WeightedStretch { weight: 0.0 }.validate(&Platform::hybrid(4, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "hybrid")]
+    fn validate_rejects_quota_on_three_types() {
+        TenantPolicy::Quota { cpu_share: 0.5, gpu_share: 0.5 }
+            .validate(&Platform::new(vec![2, 2, 2]));
+    }
+}

@@ -13,6 +13,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub geo_mean: f64,
 }
 
@@ -45,6 +46,7 @@ impl Summary {
             max: sorted[n - 1],
             p50: percentile(&sorted, 0.50),
             p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
             geo_mean: geo,
         }
     }
@@ -158,6 +160,7 @@ mod tests {
         assert_eq!(s.n, 1);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p95, 7.0);
+        assert_eq!(s.p99, 7.0);
     }
 
     #[test]

@@ -238,6 +238,103 @@ fn service_cancellation_invariants_on_random_draws() {
     }
 }
 
+/// Seed matrix for the cross-policy differential fuzz: one deterministic
+/// multi-tenant draw per (seed row, tenant-count column).
+fn differential_draw(seed: u64, n_tenants: usize) -> (Platform, Vec<Submission>) {
+    let mut rng = Rng::new(0xD1FF ^ (seed * 1337 + n_tenants as u64));
+    let plat = hybrid_platform(&mut rng);
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed),
+        OnlinePolicy::R2,
+    ];
+    let subs: Vec<Submission> = (0..n_tenants)
+        .map(|t| {
+            let n = 10 + rng.below(30);
+            let g = gen::hybrid_dag(&mut rng, n, 0.03 + 0.15 * rng.f64());
+            let arrival = rng.f64() * 20.0;
+            Submission::new(g, arrival, policies[(seed as usize + t) % policies.len()].clone())
+        })
+        .collect();
+    (plat, subs)
+}
+
+#[test]
+fn service_fifo_bit_identical_to_prepolicy_reference() {
+    // cross-policy differential fuzz, leg 1: the policy-aware service
+    // under all-FIFO admission must reproduce the retained pre-policy
+    // service path (sched::reference::run_service) placement for
+    // placement, across the whole seed matrix
+    use hetsched::sched::reference;
+    for seed in 0..6u64 {
+        for n_tenants in [2usize, 4, 6] {
+            let (plat, subs) = differential_draw(seed, n_tenants);
+            let report = run_service(&plat, &subs);
+            let golden = reference::run_service(&plat, &subs);
+            for (i, t) in report.tenants.iter().enumerate() {
+                assert_eq!(
+                    t.schedule.placements, golden[i].placements,
+                    "seed {seed}, {n_tenants} tenants, tenant {i}: FIFO drifted \
+                     from the pre-policy reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn service_weighted_stretch_equal_weights_band_equivalent_to_fifo() {
+    // cross-policy differential fuzz, leg 2: WeightedStretch with equal
+    // weights only ever reorders admissions *inside fully-busy pool
+    // windows* — whenever the pool has an idle unit at the head of the
+    // stream the order is FIFO by construction.  Across the seed matrix
+    // that pins band-equivalence with the FIFO baseline: same tasks at
+    // the same virtual times feasibly placed, per-tenant stream order
+    // intact, and the fairness metrics within a band of FIFO's (never
+    // collapsing, and on net no worse — reordering by current stretch
+    // is a max-stretch lever, not a throughput lever).
+    use hetsched::sched::service::TenantPolicy;
+    let mut ratio_log_sum = 0.0f64;
+    let mut n_runs = 0usize;
+    for seed in 0..6u64 {
+        for n_tenants in [2usize, 4, 6] {
+            let (plat, subs) = differential_draw(seed, n_tenants);
+            let fifo = run_service(&plat, &subs);
+            let ws_subs: Vec<Submission> = subs
+                .iter()
+                .map(|s| {
+                    s.clone()
+                        .with_admission(TenantPolicy::WeightedStretch { weight: 1.0 })
+                })
+                .collect();
+            let ws = run_service(&plat, &ws_subs);
+            validate_service(&plat, &ws.tenant_runs(&ws_subs))
+                .unwrap_or_else(|e| panic!("seed {seed}/{n_tenants}: {e}"));
+            assert_eq!(ws.total_tasks, fifo.total_tasks);
+            assert_eq!(ws.decisions.len(), fifo.decisions.len());
+            // per-draw band: equal-weight reordering must never blow up
+            // the stretch tail relative to FIFO
+            assert!(
+                ws.max_stretch <= fifo.max_stretch * 1.25 + 1e-9,
+                "seed {seed}/{n_tenants}: WS max stretch {} vs FIFO {}",
+                ws.max_stretch,
+                fifo.max_stretch
+            );
+            ratio_log_sum += (ws.max_stretch / fifo.max_stretch).ln();
+            n_runs += 1;
+        }
+    }
+    // on net across the matrix the reordering helps (geometric mean of
+    // the max-stretch ratio at or below 1)
+    let geo_mean = (ratio_log_sum / n_runs as f64).exp();
+    assert!(
+        geo_mean <= 1.0 + 1e-9,
+        "equal-weight WS should not lose to FIFO on net: geo-mean ratio {geo_mean}"
+    );
+}
+
 #[test]
 fn service_single_tenant_golden_parity_with_online() {
     // acceptance: single-tenant service-mode placements match

@@ -1,0 +1,378 @@
+//! Fairness property suite for the service admission-control layer
+//! (`sched::service::policy`): ~100 random multi-tenant draws ×
+//! {FIFO, Quota, WeightedStretch} asserting, for every draw,
+//!
+//!   (a) quota-never-exceeded — an *independent replay* of the per-type
+//!       held-units ledger (a unit is held from the decision that placed
+//!       a task on it until the tenant's last reservation on it
+//!       finishes) stays ≤ the tenant's cap at every decision time,
+//!   (b) per-tenant precedence order preserved — each tenant's decisions
+//!       appear in its stream (topological) order in the global decision
+//!       stream, whatever the admission layer reorders across tenants,
+//!   (c) every placement set passes the tenant-aware merge validator
+//!       (`sim::validate_service`), and
+//!   (d) single-tenant parity — a lone tenant's placements equal
+//!       `sched::online` under every admission policy (full-share quota,
+//!       any weight).
+//!
+//! Plus the deterministic interaction tests the admission layer owes the
+//! cancellation path, and the contended-example acceptance pin:
+//! WeightedStretch strictly reduces max stretch vs FIFO while FIFO's
+//! placements stay bit-identical to the pre-policy reference path.
+
+use hetsched::graph::gen;
+use hetsched::graph::Builder;
+use hetsched::platform::Platform;
+use hetsched::sched::online::{online_schedule, random_topo_order, OnlinePolicy};
+use hetsched::sched::reference;
+use hetsched::sched::service::{run_service, Service, Submission, TenantPolicy};
+use hetsched::sim::validate_service;
+use hetsched::substrate::rng::Rng;
+
+fn all_online_policies(seed: u64) -> Vec<OnlinePolicy> {
+    vec![
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed),
+        OnlinePolicy::R1,
+        OnlinePolicy::R2,
+        OnlinePolicy::R3,
+    ]
+}
+
+/// Random admission policy of the requested kind (0 = FIFO, 1 = Quota,
+/// 2 = WeightedStretch).
+fn draw_admission(kind: usize, rng: &mut Rng) -> TenantPolicy {
+    match kind {
+        0 => TenantPolicy::Fifo,
+        1 => {
+            // occasionally ban one side outright (zero share)
+            let cpu_share = match rng.below(4) {
+                0 => 0.0,
+                _ => 0.2 + 0.8 * rng.f64(),
+            };
+            let gpu_share = if cpu_share == 0.0 {
+                0.2 + 0.8 * rng.f64()
+            } else {
+                match rng.below(4) {
+                    0 => 0.0,
+                    _ => 0.2 + 0.8 * rng.f64(),
+                }
+            };
+            TenantPolicy::Quota { cpu_share, gpu_share }
+        }
+        _ => TenantPolicy::WeightedStretch { weight: 0.25 + 3.75 * rng.f64() },
+    }
+}
+
+fn random_subs(rng: &mut Rng, draw: u64, kind: usize) -> (Platform, Vec<Submission>) {
+    let plat = Platform::hybrid(1 + rng.below(6), 1 + rng.below(3));
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(draw),
+        OnlinePolicy::R2,
+    ];
+    let n_tenants = 2 + rng.below(4);
+    let subs: Vec<Submission> = (0..n_tenants)
+        .map(|t| {
+            let n = 10 + rng.below(25);
+            let g = gen::hybrid_dag(rng, n, 0.03 + 0.15 * rng.f64());
+            let arrival = rng.f64() * 15.0;
+            Submission::new(g, arrival, policies[(draw as usize + t) % policies.len()].clone())
+                .with_admission(draw_admission(kind, rng))
+        })
+        .collect();
+    (plat, subs)
+}
+
+/// Independent quota replay: for each quota tenant, at every decision
+/// time in the run, count the distinct units of each type the tenant
+/// holds (reservations with decision time ≤ t and finish > t) and
+/// assert the count never exceeds the cap.
+fn assert_quota_never_exceeded(
+    plat: &Platform,
+    subs: &[Submission],
+    report: &hetsched::sched::service::ServiceReport,
+    label: &str,
+) {
+    // decision time per (tenant, task)
+    let mut decided_at: Vec<Vec<f64>> = subs
+        .iter()
+        .map(|s| vec![f64::NAN; s.graph.n_tasks()])
+        .collect();
+    for d in &report.decisions {
+        decided_at[d.tenant][d.task] = d.time;
+    }
+    let event_times: Vec<f64> = report.decisions.iter().map(|d| d.time).collect();
+    for (i, s) in subs.iter().enumerate() {
+        let Some(caps) = s.admission.caps(plat) else {
+            continue;
+        };
+        let t_rep = &report.tenants[i];
+        for &t in &event_times {
+            let mut held: Vec<std::collections::BTreeSet<usize>> =
+                (0..plat.n_types()).map(|_| Default::default()).collect();
+            for (&j, p) in t_rep.kept_tasks.iter().zip(&t_rep.schedule.placements) {
+                let d = decided_at[i][j];
+                if d <= t && p.finish > t {
+                    held[p.ptype].insert(p.unit);
+                }
+            }
+            for (q, h) in held.iter().enumerate() {
+                assert!(
+                    h.len() <= caps[q],
+                    "{label}: tenant {i} holds {} units of type {q} at t={t} (cap {})",
+                    h.len(),
+                    caps[q]
+                );
+            }
+        }
+    }
+}
+
+/// Per-tenant precedence/stream order: each tenant's decisions appear in
+/// its stream order (task-id order here) in the global stream.
+fn assert_stream_order_preserved(
+    subs: &[Submission],
+    report: &hetsched::sched::service::ServiceReport,
+    label: &str,
+) {
+    let mut next: Vec<usize> = vec![0; subs.len()];
+    for d in &report.decisions {
+        assert_eq!(
+            d.task, next[d.tenant],
+            "{label}: tenant {} decided out of stream order",
+            d.tenant
+        );
+        next[d.tenant] += 1;
+    }
+    for (i, s) in subs.iter().enumerate() {
+        assert_eq!(next[i], s.graph.n_tasks(), "{label}: tenant {i} incomplete");
+    }
+}
+
+#[test]
+fn fairness_invariants_on_random_draws_all_policies() {
+    // 34 draws × 3 admission kinds ≈ 100 multi-tenant service runs
+    let mut rng = Rng::new(0xFA1E);
+    for draw in 0..34u64 {
+        for kind in 0..3usize {
+            let (plat, subs) = random_subs(&mut rng, draw, kind);
+            let report = run_service(&plat, &subs);
+            let label = format!("draw {draw} kind {kind}");
+            validate_service(&plat, &report.tenant_runs(&subs))
+                .unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_stream_order_preserved(&subs, &report, &label);
+            assert_quota_never_exceeded(&plat, &subs, &report, &label);
+            // decision times never regress, even under WS reordering
+            for w in report.decisions.windows(2) {
+                assert!(w[0].time <= w[1].time, "{label}: decision times regressed");
+            }
+            // aggregates are consistent with the completed-stretch helper
+            let stretches = report.completed_stretches();
+            assert_eq!(stretches.len(), subs.len());
+            let max = stretches.iter().fold(0.0f64, |a, &b| a.max(b));
+            assert_eq!(report.max_stretch, max, "{label}");
+            assert!(report.jain_index > 0.0 && report.jain_index <= 1.0 + 1e-12, "{label}");
+            assert!(report.stretch_p99 <= report.max_stretch + 1e-12, "{label}");
+        }
+    }
+}
+
+#[test]
+fn single_tenant_parity_with_online_under_every_policy() {
+    // a lone tenant must place exactly like sched::online under FIFO,
+    // full-share Quota and any WeightedStretch weight, for every online
+    // policy (the admission layer is invisible without contention)
+    let mut rng = Rng::new(0x51A7);
+    for draw in 0..8u64 {
+        let g = gen::hybrid_dag(&mut rng, 15 + rng.below(35), 0.1);
+        let plat = Platform::hybrid(1 + rng.below(6), 1 + rng.below(3));
+        let order = random_topo_order(&g, &mut rng);
+        let weight = 0.25 + 3.75 * rng.f64();
+        for policy in all_online_policies(draw) {
+            let expect = online_schedule(&g, &plat, &order, &policy);
+            for admission in [
+                TenantPolicy::Fifo,
+                TenantPolicy::Quota { cpu_share: 1.0, gpu_share: 1.0 },
+                TenantPolicy::WeightedStretch { weight },
+            ] {
+                let subs = vec![Submission::new(g.clone(), 0.0, policy.clone())
+                    .with_order(order.clone())
+                    .with_admission(admission.clone())];
+                let report = run_service(&plat, &subs);
+                assert_eq!(
+                    report.tenants[0].schedule.placements, expect.placements,
+                    "draw {draw}: {} under {}",
+                    policy.name(),
+                    admission.name()
+                );
+                assert_eq!(report.tenants[0].stretch, 1.0);
+            }
+        }
+    }
+}
+
+/// The contended example, scaled to test size (the full 50×1k version
+/// lives in `benches/service_throughput.rs` and is gated by
+/// `ci.sh --perf`): 12 tenants × 150 tasks on 6+2, staggered arrivals.
+fn contended_subs(admission: fn(usize) -> TenantPolicy) -> (Platform, Vec<Submission>) {
+    let plat = Platform::hybrid(6, 2);
+    let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
+    let mut rng = Rng::new(2027);
+    let subs: Vec<Submission> = (0..12)
+        .map(|t| {
+            let g = gen::hybrid_dag(&mut rng, 150, 0.03);
+            Submission::new(g, t as f64 * 5.0, policies[t % policies.len()].clone())
+                .with_admission(admission(t))
+        })
+        .collect();
+    (plat, subs)
+}
+
+#[test]
+fn weighted_stretch_strictly_reduces_max_stretch_on_contended_example() {
+    // acceptance pin: on the contended example, equal-weight
+    // WeightedStretch strictly beats FIFO on max stretch, and FIFO's
+    // placements stay bit-identical to the pre-policy reference path
+    let (plat, fifo_subs) = contended_subs(|_| TenantPolicy::Fifo);
+    let fifo = run_service(&plat, &fifo_subs);
+    let golden = reference::run_service(&plat, &fifo_subs);
+    for (i, t) in fifo.tenants.iter().enumerate() {
+        assert_eq!(
+            t.schedule.placements, golden[i].placements,
+            "tenant {i}: FIFO drifted from the pre-policy service path"
+        );
+    }
+
+    let (_, ws_subs) = contended_subs(|_| TenantPolicy::WeightedStretch { weight: 1.0 });
+    let ws = run_service(&plat, &ws_subs);
+    validate_service(&plat, &ws.tenant_runs(&ws_subs)).unwrap();
+    assert!(
+        ws.max_stretch < fifo.max_stretch,
+        "WeightedStretch must strictly reduce max stretch: {} vs FIFO {}",
+        ws.max_stretch,
+        fifo.max_stretch
+    );
+}
+
+#[test]
+fn cancelling_a_quota_capped_tenant_frees_its_share() {
+    // 1 CPU + 1 GPU; tenant 0 (cap: 1 CPU) stacks two chain tasks on the
+    // CPU, [0,10) then [10,20), and is cancelled at t=10 before the
+    // second starts: the trailing reservation is rewound, so tenant 1 —
+    // itself CPU-capped — reuses the freed capacity at its own arrival
+    // (15) instead of queueing behind the ghost until 20
+    let chain = |dur: f64| {
+        let mut b = Builder::new("c");
+        let a = b.add_task("a", vec![dur, dur * 100.0]);
+        let c = b.add_task("b", vec![dur, dur * 100.0]);
+        b.add_arc(a, c);
+        b.build()
+    };
+    let one = || {
+        let mut b = Builder::new("one");
+        b.add_task("t", vec![1.0, 100.0]);
+        b.build()
+    };
+    let plat = Platform::hybrid(1, 1);
+    let subs = vec![
+        Submission::new(chain(10.0), 0.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::Quota { cpu_share: 1.0, gpu_share: 0.0 }),
+        Submission::new(one(), 15.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::Quota { cpu_share: 1.0, gpu_share: 0.0 }),
+    ];
+    let mut svc = Service::new(&plat, &subs);
+    assert!(svc.step().is_some()); // t0/a on CPU [0, 10)
+    assert!(svc.step().is_some()); // t0/b on CPU [10, 20), decided at 10
+    let out = svc.cancel(0);
+    assert_eq!(out.at, 10.0);
+    assert_eq!(out.dropped_tasks, 1, "trailing not-yet-started task rewound");
+    assert_eq!(out.released_units, 1);
+    svc.run();
+    let report = svc.report(None);
+    assert_eq!(report.tenants[0].n_placed, 1, "running task kept");
+    // the survivor starts at its own arrival, not behind the ghost
+    assert_eq!(report.tenants[1].schedule.placements[0].start, 15.0);
+    assert_eq!(report.tenants[1].stretch, 1.0);
+    validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+}
+
+#[test]
+fn cancellation_under_weighted_stretch_recomputes_ordering() {
+    // three WS tenants on one CPU; the one whose stretch would dominate
+    // the reordering is cancelled mid-run: already-started tasks stay
+    // untouched (bit-identical prefix), the survivors' remaining
+    // admissions re-rank among themselves, and everything stays feasible
+    let chain = |app: &str, len: usize, dur: f64| {
+        let mut b = Builder::new(app);
+        let mut prev = None;
+        for _ in 0..len {
+            let t = b.add_task("t", vec![dur, dur * 100.0]);
+            if let Some(p) = prev {
+                b.add_arc(p, t);
+            }
+            prev = Some(t);
+        }
+        b.build()
+    };
+    let hog = || {
+        let mut b = Builder::new("hog");
+        b.add_task("t", vec![10000.0, 100.0]);
+        b.build()
+    };
+    let plat = Platform::hybrid(1, 1);
+    // tenant 0 hogs the GPU so the pool saturates and weighted-stretch
+    // windows actually open on the CPU side; tenants 1–3 compete there
+    let subs: Vec<Submission> = std::iter::once(
+        Submission::new(hog(), 0.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::WeightedStretch { weight: 1.0 }),
+    )
+    .chain((1..4).map(|t| {
+        Submission::new(chain(&format!("t{t}"), 4, 1.0 + t as f64), 0.0, OnlinePolicy::Greedy)
+            .with_admission(TenantPolicy::WeightedStretch { weight: 1.0 })
+    }))
+    .collect();
+
+    let mut svc = Service::new(&plat, &subs);
+    let mut prefix = Vec::new();
+    for _ in 0..6 {
+        prefix.push(svc.step().unwrap());
+    }
+    let victim = 1usize;
+    let pre_cancel_tasks: Vec<usize> = prefix
+        .iter()
+        .filter(|d| d.tenant == victim)
+        .map(|d| d.task)
+        .collect();
+    let _ = svc.cancel(victim);
+    svc.run();
+    let report = svc.report(None);
+    // already-started tasks untouched: the victim's kept tasks are a
+    // subset of what was decided before the cancel — nothing re-placed
+    for &j in &report.tenants[victim].kept_tasks {
+        assert!(pre_cancel_tasks.contains(&j), "kept task {j} was not pre-cancel");
+    }
+    // survivors complete and in stream order (the remaining WS heads
+    // re-rank among themselves only)
+    assert_eq!(report.tenants[0].n_placed, 1);
+    for i in 2..4 {
+        assert_eq!(report.tenants[i].n_placed, 4, "tenant {i}");
+    }
+    let mut next = vec![0usize; 4];
+    for d in &report.decisions {
+        assert_eq!(d.task, next[d.tenant], "stream order broken after cancel");
+        next[d.tenant] += 1;
+    }
+    for w in report.decisions.windows(2) {
+        assert!(w[0].time <= w[1].time, "decision times regressed after cancel");
+    }
+    hetsched::sim::validate_placements_no_overlap(
+        report.tenants.iter().flat_map(|t| &t.schedule.placements),
+    )
+    .unwrap();
+    validate_service(&plat, &report.tenant_runs(&subs)).unwrap();
+}
