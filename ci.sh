@@ -21,11 +21,70 @@ else
     echo "(clippy not installed; skipping lints)"
 fi
 
+echo "== hetlint =="
+if cargo --version >/dev/null 2>&1; then
+    # always-on static analysis: writes ANALYSIS.json, exits 1 on any
+    # unsuppressed finding (see tools/hetlint/src/main.rs for the rules)
+    cargo run -p hetlint --release
+    cargo test -q -p hetlint
+else
+    echo "(cargo not installed; skipping hetlint)"
+fi
+
+echo "== reference-coupling check =="
+# The golden-parity protocol, made mechanical: a diff that touches the
+# engine decision files must also touch the parity pin or the reference
+# oracle.  Base ref overridable for CI ranges (HETSCHED_COUPLE_BASE).
+couple_base="${HETSCHED_COUPLE_BASE:-HEAD~1}"
+if git rev-parse --verify -q "$couple_base" >/dev/null 2>&1; then
+    changed="$(git diff --name-only "$couple_base" HEAD --)"
+    engine_touched="$(printf '%s\n' "$changed" \
+        | grep -E '^rust/src/sched/(engine|est|heft|online)\.rs$' || true)"
+    if [[ -n "$engine_touched" ]] && ! printf '%s\n' "$changed" \
+        | grep -qE '^(rust/tests/golden_parity\.rs|rust/src/sched/reference\.rs)$'; then
+        echo "reference-coupling violation: $couple_base..HEAD touches" >&2
+        printf '%s\n' "$engine_touched" >&2
+        echo "without touching rust/tests/golden_parity.rs or rust/src/sched/reference.rs." >&2
+        echo "Engine behavior changes must update the parity pin or the reference oracle (ROADMAP protocol)." >&2
+        exit 1
+    fi
+    echo "coupling OK ($couple_base..HEAD)"
+else
+    echo "(base $couple_base not resolvable; skipping coupling check)"
+fi
+
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
 if [[ "${1:-}" == "--perf" ]]; then
+    echo "== perf gate: hetlint ANALYSIS.json clean =="
+    if [[ ! -s ANALYSIS.json ]]; then
+        echo "ANALYSIS.json missing or empty (the hetlint stage must have run)" >&2
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PY' || exit 1
+import json, sys
+with open("ANALYSIS.json") as f:
+    r = json.load(f)
+findings = r.get("findings", [])
+if findings:
+    first = findings[0]
+    sys.exit(
+        f"ANALYSIS.json has {len(findings)} unsuppressed finding(s), e.g. "
+        f"{first['file']}:{first['line']} [{first['rule']}]"
+    )
+bare = [s for s in r.get("suppressed", []) if not s.get("justification", "").strip()]
+if bare:
+    sys.exit(f"{len(bare)} suppression(s) without justification")
+print(
+    f"hetlint gate OK: 0 findings, {len(r.get('suppressed', []))} justified "
+    f"suppressions over {r.get('files_scanned')} files"
+)
+PY
+    fi
+
     echo "== perf gate: engine >= 5x seed EST, gap-index HEFT >= 1x scan (writes BENCH_sched.json) =="
     HETSCHED_BENCH_QUICK=1 cargo bench --bench perf_hot_paths
     if command -v python3 >/dev/null 2>&1; then

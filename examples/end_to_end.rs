@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! END-TO-END driver: proves all three layers compose on a real small
 //! workload (recorded in EXPERIMENTS.md §End-to-end).
 //!
@@ -47,7 +49,7 @@ fn main() {
         );
 
         // --- Layers 1+2: the AOT PDHG artifact through PJRT ---------
-        let t = std::time::Instant::now();
+        let t = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
         let hlp = solve_hlp(g, &plat, LpBackendKind::Pjrt, 1e-4);
         println!(
             "LP* = {:.4}  [{}; gap {:.1e}; {} iters; {:?}]",
@@ -71,7 +73,7 @@ fn main() {
 
         // --- Layer 3: offline algorithms ----------------------------
         for algo in Offline::ALL {
-            let t = std::time::Instant::now();
+            let t = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
             let (s, _) = run_offline(algo, g, &plat, Some(&hlp), LpBackendKind::Pjrt, 1e-4);
             if let Err(e) = validate(g, &plat, &s) {
                 println!("!! {} produced an INVALID schedule: {e}", algo.name());
@@ -100,7 +102,7 @@ fn main() {
             OnlinePolicy::Greedy,
             OnlinePolicy::Random(2026),
         ] {
-            let t = std::time::Instant::now();
+            let t = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
             let s = online_by_id(g, &plat, &policy);
             validate(g, &plat, &s).expect("online schedule feasible");
             let ratio = s.makespan / hlp.sol.obj;

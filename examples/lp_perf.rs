@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! LP-backend performance harness (EXPERIMENTS.md §Perf): times the full
 //! HLP solve (build + Ruiz + warm start + PDHG drive) on campaign-sized
 //! instances for the PJRT artifact backend vs the Rust mirror.
@@ -20,7 +22,7 @@ fn main() {
     for (name, g, plat) in cases {
         println!("{name}:");
         for backend in [LpBackendKind::RustPdhg, LpBackendKind::Pjrt] {
-            let t = Instant::now();
+            let t = Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
             let sol = solve_hlp(&g, &plat, backend, 1e-4);
             let dt = t.elapsed();
             println!(

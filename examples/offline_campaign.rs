@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Offline campaign driver (Figures 3, 4 and 5 of the paper).
 //!
 //!     cargo run --release --example offline_campaign [-- --scale smoke]
@@ -23,7 +25,7 @@ fn main() {
     std::fs::create_dir_all("results").ok();
 
     // ---- 2 resource types: Fig. 3 + Fig. 4 --------------------------
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
     let records = offline::run(2, &opts);
     eprintln!("2-type campaign: {} records in {:?}", records.len(), t.elapsed());
     std::fs::write("results/fig3_fig4_records.csv", records_csv(&records)).ok();
@@ -61,7 +63,7 @@ fn main() {
     );
 
     // ---- 3 resource types: Fig. 5 -----------------------------------
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
     let records3 = offline::run(3, &opts);
     eprintln!("3-type campaign: {} records in {:?}", records3.len(), t.elapsed());
     std::fs::write("results/fig5_records.csv", records_csv(&records3)).ok();

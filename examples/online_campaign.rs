@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Online campaign driver (Figures 6 and 7 of the paper).
 //!
 //!     cargo run --release --example online_campaign [-- --scale smoke]
@@ -22,7 +24,7 @@ fn main() {
     };
     std::fs::create_dir_all("results").ok();
 
-    let t = std::time::Instant::now();
+    let t = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
     let records = online::run(&opts);
     eprintln!("online campaign: {} records in {:?}", records.len(), t.elapsed());
     std::fs::write("results/fig6_fig7_records.csv", records_csv(&records)).ok();

@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Probe PJRT vs Rust convergence on campaign LPs (dev/perf tool).
 use hetsched::algos::solve_hlp_capped;
 use hetsched::platform::Platform;
@@ -9,7 +11,7 @@ fn main() {
     let g = chameleon::posv(10, &CostModel::hybrid(320), 3);
     let plat = Platform::hybrid(16, 4);
     for backend in [LpBackendKind::RustPdhg, LpBackendKind::Pjrt] {
-        let t = Instant::now();
+        let t = Instant::now(); // hetlint: allow(no-wallclock-in-core) -- demo timing readout only; printed, never fed into a schedule
         let sol = solve_hlp_capped(&g, &plat, backend, 1e-4, 400_000);
         println!("{}: obj {:.5} gap {:.2e} iters {} in {:?}", sol.sol.backend, sol.sol.obj, sol.sol.gap, sol.sol.iters, t.elapsed());
     }

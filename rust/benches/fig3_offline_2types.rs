@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: regenerate Figure 3 — makespan/LP* per application for
 //! HLP-EST / HLP-OLS / HEFT on 2 resource types — and time the offline
 //! pipeline stages on a representative instance.

@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: regenerate Figure 4 — pairwise makespan ratios
 //! HLP-EST/HLP-OLS (left) and HEFT/HLP-OLS (right), grouped by app.
 

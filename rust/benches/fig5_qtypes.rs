@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: regenerate Figure 5 — the 3-resource-type experiment:
 //! QHLP-EST / QHLP-OLS / QHEFT over LP* (left) and QHEFT/QHLP-OLS
 //! pairwise (right).

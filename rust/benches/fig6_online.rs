@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: regenerate Figure 6 — online algorithms over LP* (left) and
 //! the mean competitive ratio as a function of √(m/k) (right) — plus
 //! decision-throughput micro-benches of the online engine.

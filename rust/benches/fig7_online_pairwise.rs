@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: regenerate Figure 7 — pairwise Greedy/ER-LS (left) and
 //! EFT/ER-LS (right) makespan ratios per application.
 

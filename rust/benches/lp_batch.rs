@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: the batched warm-start LP subsystem on the paper grid
 //! (EXPERIMENTS.md §LP).  Writes BENCH_lp.json; `ci.sh --perf` requires
 //! the file to parse and the batched+warm grid total to be no slower

@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: hot-path performance (EXPERIMENTS.md §Perf).
 //!
 //! Sections:

@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: the adversarial instances of Theorems 1, 2 and 4
 //! (Tables 1–3, Figures 1–2): measured ratios vs closed forms.
 

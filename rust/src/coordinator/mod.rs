@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Live coordinator runtime: the online scheduler driving a real worker
 //! pool, StarPU-style (the system the paper targets for deployment, §7).
 //!

@@ -17,6 +17,12 @@
 //! See DESIGN.md for the module inventory and EXPERIMENTS.md for the
 //! reproduced tables/figures.
 
+// The determinism story (golden parity, replay == rerun) is only as
+// strong as memory safety and visibility hygiene; tools/hetlint adds
+// the repo-specific rules on top of these crate-wide lints.
+#![forbid(unsafe_code)]
+#![deny(unreachable_pub)]
+
 pub mod analysis;
 pub mod experiments;
 pub mod graph;

@@ -54,6 +54,7 @@ impl SparseLp {
 
     pub fn push(&mut self, row: usize, col: usize, val: f64) {
         debug_assert!(row < self.m && col < self.n);
+        // hetlint: allow(no-raw-float-eq) -- structural sparsity: exact zeros are dropped from the triplet store, not a tolerance test
         if val != 0.0 {
             self.rows.push(row as u32);
             self.cols.push(col as u32);

@@ -43,6 +43,7 @@ impl Tableau {
         for (i, row) in self.t.iter_mut().enumerate() {
             if i != r {
                 let f = row[c];
+                // hetlint: allow(no-raw-float-eq) -- exact-zero skip: eliminating with f == 0 is a no-op, not a tolerance test
                 if f != 0.0 {
                     for (x, p) in row.iter_mut().zip(&prow) {
                         *x -= f * p;
@@ -216,6 +217,7 @@ pub fn solve_simplex(lp: &SparseLp) -> Result<LpSolution, SimplexError> {
     // subtract basic rows to zero reduced costs of the basis
     for i in 0..m {
         let f = t[m][basis[i]];
+        // hetlint: allow(no-raw-float-eq) -- exact-zero skip: a zero reduced cost needs no row update, not a tolerance test
         if f != 0.0 {
             let row = t[i].clone();
             for (x, p) in t[m].iter_mut().zip(&row) {

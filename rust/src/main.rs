@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! `hetsched` — CLI for the heterogeneous-scheduling framework.
 //!
 //! Subcommands:

@@ -52,6 +52,20 @@ use super::OrdF64;
 /// ±1e-12 of each other are ties (broken by task/unit/type index rules).
 pub const TIE_BAND: f64 = 1e-12;
 
+/// Banded float equality: `a` ties `b` iff they lie within ±[`TIE_BAND`]
+/// of each other.  The `no-raw-float-eq` hetlint rule requires float
+/// `==`/`!=` in `sched/` and `lp/` to go through these helpers (or to
+/// carry a justified suppression when a comparison is intentionally
+/// exact, e.g. structural zero filters in the LP kernels).
+pub fn band_eq(a: f64, b: f64) -> bool {
+    (a - b).abs() <= TIE_BAND
+}
+
+/// Banded float inequality; see [`band_eq`].
+pub fn band_ne(a: f64, b: f64) -> bool {
+    !band_eq(a, b)
+}
+
 /// Indexed min segment tree over one processor type's units, keyed by
 /// the time each unit becomes free.  All queries take finite thresholds.
 #[derive(Clone, Debug)]
@@ -134,6 +148,7 @@ impl UnitTree {
     /// element `Iterator::min_by` returns on ties, which is what the
     /// seed schedulers' linear scans picked.
     pub fn argmin_first(&self) -> usize {
+        // hetlint: allow(no-panic-in-hot-path) -- UnitTree is built with len >= 1, so the min is always achieved
         self.first_at_most(self.min()).expect("tree is non-empty")
     }
 
@@ -141,6 +156,7 @@ impl UnitTree {
     /// `max_by`-style tie-break; kept for policies that want to spread
     /// load away from low-index units).
     pub fn argmin_last(&self) -> usize {
+        // hetlint: allow(no-panic-in-hot-path) -- UnitTree is built with len >= 1, so the min is always achieved
         self.last_at_most(self.min()).expect("tree is non-empty")
     }
 
@@ -383,6 +399,7 @@ impl GapIndex {
         let ut = self
             .tails
             .first_at_most(clamp + TIE_BAND)
+            // hetlint: allow(no-panic-in-hot-path) -- clamp >= tails.min() by construction, so some unit is always at most clamp + band
             .expect("idle horizon lies within its own band");
         let start_t = ready.max(self.tails.get(ut));
         let mut best = (start_t + dur, ut, start_t);

@@ -41,6 +41,7 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
     for &j in &order {
         let ready = g.preds[j]
             .iter()
+            // hetlint: allow(no-panic-in-hot-path) -- rank order is topological, so every predecessor is already placed
             .map(|&p| placements[p].expect("rank order is topological").finish)
             .fold(0.0f64, f64::max);
         // choose (type, unit) minimizing EFT; tie (within the band) ->
@@ -59,6 +60,7 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
                 best = Some((eft, q, unit, start));
             }
         }
+        // hetlint: allow(no-panic-in-hot-path) -- n_types >= 1, so the loop above always sets best
         let (eft, q, unit, start) = best.unwrap();
         index[q].insert(unit, start, eft);
         placements[j] = Some(Placement {

@@ -54,7 +54,9 @@ pub fn list_schedule(
         // start everything startable at time t
         for q in 0..q_types {
             while !idle[q].is_empty() && !ready[q].is_empty() {
+                // hetlint: allow(no-panic-in-hot-path) -- loop guard checked both heaps non-empty
                 let (_, Reverse(j)) = ready[q].pop().unwrap();
+                // hetlint: allow(no-panic-in-hot-path) -- loop guard checked both heaps non-empty
                 let unit = idle[q].pop().unwrap();
                 let dur = g.time_on(j, q);
                 let finish = t + dur;
@@ -83,6 +85,7 @@ pub fn list_schedule(
                 break;
             }
             events.pop();
+            // hetlint: allow(no-panic-in-hot-path) -- a completion event exists only for a task already placed
             let p = placements[j].unwrap();
             idle[p.ptype].push(p.unit);
             for &s in &g.succs[j] {

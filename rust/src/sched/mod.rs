@@ -49,13 +49,27 @@ pub mod online;
 pub mod reference;
 pub mod service;
 
-/// Total order wrapper for f64 priorities (NaN-free by construction).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Total order wrapper for f64 priorities.
+///
+/// Backed by `f64::total_cmp`, so even a NaN priority (which
+/// `graph::Builder` already rejects at the cost level, but rank
+/// arithmetic could in principle produce) orders deterministically
+/// instead of panicking mid-schedule.  All priorities in this repo are
+/// non-negative finite values, for which total_cmp agrees exactly with
+/// the old `partial_cmp` ordering — golden parity is unaffected.
+#[derive(Clone, Copy, Debug)]
 pub struct OrdF64(pub f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == std::cmp::Ordering::Equal
+    }
+}
 
 impl Eq for OrdF64 {}
 
 impl PartialOrd for OrdF64 {
+    // hetlint: allow(float-total-order) -- required trait method; delegates to the total_cmp-backed Ord below
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
@@ -63,7 +77,7 @@ impl PartialOrd for OrdF64 {
 
 impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("NaN priority")
+        self.0.total_cmp(&other.0)
     }
 }
 
@@ -79,8 +93,14 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "NaN")]
-    fn ordf64_rejects_nan() {
-        let _ = OrdF64(f64::NAN).cmp(&OrdF64(1.0));
+    fn ordf64_totally_orders_nan() {
+        // A NaN priority must order deterministically, never panic:
+        // total_cmp puts positive NaN above +inf.
+        let mut v = vec![OrdF64(f64::NAN), OrdF64(1.0), OrdF64(f64::INFINITY)];
+        v.sort();
+        assert_eq!(v[0], OrdF64(1.0));
+        assert_eq!(v[1], OrdF64(f64::INFINITY));
+        assert!(v[2].0.is_nan());
+        assert_eq!(OrdF64(f64::NAN).cmp(&OrdF64(f64::NAN)), std::cmp::Ordering::Equal);
     }
 }

@@ -168,6 +168,7 @@ impl PolicyEngine {
         let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
         let u = tree
             .first_at_most(clamp + TIE_BAND)
+            // hetlint: allow(no-panic-in-hot-path) -- clamp >= tree.min() by construction, so some unit is always within the band
             .expect("idle horizon lies within its own band");
         let start = ready.max(tree.get(u));
         (start + dur, u)
@@ -186,6 +187,7 @@ impl PolicyEngine {
                 let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
                 let u = tree
                     .first_at_most_over(units, clamp + TIE_BAND)
+                    // hetlint: allow(no-panic-in-hot-path) -- clamp >= min over the (asserted non-empty) unit set, so a unit is always within the band
                     .expect("restricted idle horizon lies within its own band");
                 let start = ready.max(tree.get(u));
                 Some((start + dur, u))
@@ -275,16 +277,19 @@ impl PolicyEngine {
                 let q = (0..plat.n_types())
                     .filter(|&q| !set_for(allowed, q).banned())
                     .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
+                    // hetlint: allow(no-panic-in-hot-path) -- admission control guarantees every admitted task at least one open type
                     .expect("quota leaves no usable type");
                 (q, self.best_unit_in(q, set_for(allowed, q)))
             }
             OnlinePolicy::Random(_) => {
                 // draw first (identical rng consumption with or without
                 // a quota), then walk to the next open type if banned
+                // hetlint: allow(no-panic-in-hot-path) -- Random is only constructed with an rng (policy ctor invariant)
                 let drawn = rng.expect("Random policy needs an rng").below(plat.n_types());
                 let q = (0..plat.n_types())
                     .map(|step| (drawn + step) % plat.n_types())
                     .find(|&q| !set_for(allowed, q).banned())
+                    // hetlint: allow(no-panic-in-hot-path) -- admission control guarantees every admitted task at least one open type
                     .expect("quota leaves no usable type");
                 (q, self.best_unit_in(q, set_for(allowed, q)))
             }
@@ -307,6 +312,7 @@ impl PolicyEngine {
                         best = Some((finish, q, u));
                     }
                 }
+                // hetlint: allow(no-panic-in-hot-path) -- admission control guarantees every admitted task at least one open type
                 let (_, q, u) = best.expect("quota leaves no usable type");
                 (q, u)
             }

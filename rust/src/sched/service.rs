@@ -521,6 +521,8 @@ impl<'a> Service<'a> {
         let at = at.max(self.now);
         self.now = at;
 
+        #[allow(clippy::disallowed_methods)]
+        // hetlint: allow(no-wallclock-in-core) -- decision-latency metric only: td feeds self.latencies, which no placement, admission or tie-break ever reads (pinned by service_fairness::latency_metric_never_feeds_placement)
         let td = Instant::now();
         let p = match &self.caps[i] {
             None => self

@@ -59,7 +59,7 @@ impl Schedule {
     /// the `hetsched schedule --gantt` CLI.
     pub fn gantt(&self, g: &TaskGraph, plat: &Platform) -> String {
         let mut per_unit: Vec<Vec<(TaskId, &Placement)>> = Vec::new();
-        let mut unit_index = std::collections::HashMap::new();
+        let mut unit_index = std::collections::BTreeMap::new();
         for (q, &cnt) in plat.counts.iter().enumerate() {
             for u in 0..cnt {
                 unit_index.insert((q, u), per_unit.len());
@@ -151,7 +151,7 @@ fn check_tenant(
 /// No-overlap check over a merged per-unit interval view; `label` names
 /// the task (e.g. "3" or "t2/7" for tenant 2's task 7).
 fn check_no_overlap(
-    per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>>,
+    per_unit: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64, String)>>,
 ) -> Result<(), String> {
     for ((q, u), mut iv) in per_unit {
         iv.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -174,8 +174,8 @@ fn check_no_overlap(
 /// and (via [`validate_service`]) the multi-tenant service mode.
 pub fn validate_schedule(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result<(), String> {
     check_tenant(g, plat, s, 0.0, "")?;
-    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>> =
-        std::collections::HashMap::new();
+    let mut per_unit: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64, String)>> =
+        std::collections::BTreeMap::new();
     for (j, p) in s.placements.iter().enumerate() {
         per_unit
             .entry((p.ptype, p.unit))
@@ -205,8 +205,8 @@ pub struct TenantRun<'a> {
 /// arrival) plus the pool-wide invariant that no two tasks of *any*
 /// tenants overlap on one unit.
 pub fn validate_service(plat: &Platform, runs: &[TenantRun]) -> Result<(), String> {
-    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>> =
-        std::collections::HashMap::new();
+    let mut per_unit: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64, String)>> =
+        std::collections::BTreeMap::new();
     for (i, r) in runs.iter().enumerate() {
         check_tenant(r.graph, plat, r.schedule, r.arrival, &format!("tenant {i}: "))?;
         for (j, p) in r.schedule.placements.iter().enumerate() {
@@ -227,8 +227,8 @@ pub fn validate_service(plat: &Platform, runs: &[TenantRun]) -> Result<(), Strin
 pub fn validate_placements_no_overlap<'a>(
     placements: impl IntoIterator<Item = &'a Placement>,
 ) -> Result<(), String> {
-    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64, String)>> =
-        std::collections::HashMap::new();
+    let mut per_unit: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64, String)>> =
+        std::collections::BTreeMap::new();
     for (idx, p) in placements.into_iter().enumerate() {
         per_unit
             .entry((p.ptype, p.unit))
@@ -268,8 +268,8 @@ pub fn validate_realized(g: &TaskGraph, plat: &Platform, s: &Schedule) -> Result
             }
         }
     }
-    let mut per_unit: std::collections::HashMap<(usize, usize), Vec<(f64, f64)>> =
-        std::collections::HashMap::new();
+    let mut per_unit: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64)>> =
+        std::collections::BTreeMap::new();
     for p in &s.placements {
         per_unit
             .entry((p.ptype, p.unit))

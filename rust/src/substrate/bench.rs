@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Micro-benchmark harness (criterion stand-in for the offline build).
 //!
 //! Every `rust/benches/*.rs` target is `harness = false` and drives this:
@@ -81,7 +83,7 @@ pub fn bench_with<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchRe
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     BenchResult {
         name: name.to_string(),

@@ -31,7 +31,7 @@ impl Summary {
         };
         let std = var.sqrt();
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let geo = if xs.iter().all(|&x| x > 0.0) {
             (xs.iter().map(|x| x.ln()).sum::<f64>() / n as f64).exp()
         } else {

@@ -6,6 +6,15 @@
 //! random platforms and asserts placement-for-placement equality (hence
 //! identical makespans) for EST, OLS and every online policy, plus
 //! feasibility through `sim::validate`.
+//!
+//! This coupling is enforced mechanically: `ci.sh`'s reference-coupling
+//! check rejects any diff that touches the engine decision files
+//! (`sched/{engine,est,heft,online}.rs`) without also touching this
+//! suite or `sched/reference.rs` — an intended behavior change must
+//! update the oracle, and a pure refactor must at least state here (in
+//! the diff) why parity is preserved.  `tools/hetlint` guards the same
+//! invariant from the other side: total float order, no unordered
+//! iteration, no wall clock in the decision core.
 
 use hetsched::graph::{gen, paths, TaskGraph};
 use hetsched::platform::Platform;

@@ -13,7 +13,7 @@
 //! `sim::validate_service` for the service mode), the same checkers the
 //! service mode uses internally in its own tests.
 
-use hetsched::graph::gen;
+use hetsched::graph::{gen, Builder};
 use hetsched::graph::paths::ols_rank;
 use hetsched::platform::Platform;
 use hetsched::sched::est::est_schedule;
@@ -351,5 +351,74 @@ fn service_single_tenant_golden_parity_with_online() {
             let report = run_service(&plat, &subs);
             assert_eq!(report.tenants[0].schedule.placements, expect.placements);
         }
+    }
+}
+
+/// 6 fully-connected layers of 6 tasks whose costs straddle the f64
+/// range: upward-rank and finish-time sums overflow to +inf along every
+/// chain, and inf − inf / inf ÷ inf turn downstream aggregates (slack,
+/// stretch) into NaN.
+fn extreme_cost_dag() -> hetsched::graph::TaskGraph {
+    let mut b = Builder::new("extreme");
+    let mut prev: Vec<usize> = Vec::new();
+    for layer in 0..6 {
+        let mut cur = Vec::new();
+        for k in 0..6 {
+            let i = layer * 6 + k;
+            let times = match i % 3 {
+                0 => vec![1e308, 1e-300],
+                1 => vec![1e-300, 1e308],
+                _ => vec![1e308, 1e308],
+            };
+            let t = b.add_task(&format!("t{i}"), times);
+            for &p in &prev {
+                b.add_arc(p, t);
+            }
+            cur.push(t);
+        }
+        prev = cur;
+    }
+    b.build()
+}
+
+#[test]
+fn extreme_finite_costs_never_panic() {
+    // Regression pin for the NaN-panic class hetlint rule R1 exists
+    // for: `sort_by(partial_cmp().unwrap())` in substrate::stats /
+    // substrate::bench and the old NaN-rejecting OrdF64 all panicked
+    // the moment an intermediate went non-finite.  Costs here are
+    // extreme but finite; every scheduler and the full service path
+    // (including the Summary/percentile statistics over NaN stretches)
+    // must run to completion and place every task exactly once.
+    let g = extreme_cost_dag();
+    let n = g.n_tasks();
+    let plat = Platform::hybrid(3, 2);
+    let alloc: Vec<usize> = (0..n).map(|i| i % 2).collect();
+
+    let s = est_schedule(&g, &plat, &alloc);
+    assert_eq!(s.placements.len(), n, "EST dropped tasks");
+    let prio = ols_rank(&g, &alloc);
+    let s = list_schedule(&g, &plat, &alloc, &prio);
+    assert_eq!(s.placements.len(), n, "OLS dropped tasks");
+    let s = heft_schedule(&g, &plat);
+    assert_eq!(s.placements.len(), n, "HEFT dropped tasks");
+
+    let order: Vec<usize> = (0..n).collect();
+    for policy in all_online_policies(7) {
+        let s = online_schedule(&g, &plat, &order, &policy);
+        assert_eq!(s.placements.len(), n, "{} dropped tasks", policy.name());
+    }
+
+    // Full service run: stretch = inf/inf = NaN must flow through the
+    // percentile/Jain aggregates without panicking.
+    let subs = vec![
+        Submission::new(g.clone(), 0.0, OnlinePolicy::ErLs),
+        Submission::new(g, 1.0, OnlinePolicy::Eft),
+    ];
+    let report = run_service(&plat, &subs);
+    assert_eq!(report.decisions.len(), 2 * n);
+    for t in &report.tenants {
+        assert_eq!(t.schedule.placements.len(), n, "tenant {} dropped tasks", t.tenant);
+        assert_eq!(t.decision_latency.n, n);
     }
 }

@@ -260,6 +260,51 @@ fn weighted_stretch_strictly_reduces_max_stretch_on_contended_example() {
 }
 
 #[test]
+fn latency_metric_never_feeds_placement() {
+    // Pin for the one wall-clock read in the service core (`service.rs`,
+    // hetlint-suppressed): `Instant::now()` feeds only the
+    // `decision_latency` metric.  Two runs of the contended 12×150
+    // example measure different wall-clock latencies, so if that field —
+    // or anything derived from it — ever leaked into placement,
+    // admission or tie-breaking, the runs would drift.  Everything
+    // except the latency summaries must be bit-identical, i.e. zeroing
+    // the latency field changes no placement.
+    fn mixed(t: usize) -> TenantPolicy {
+        match t % 3 {
+            0 => TenantPolicy::Fifo,
+            1 => TenantPolicy::Quota { cpu_share: 0.5, gpu_share: 0.5 },
+            _ => TenantPolicy::WeightedStretch { weight: 1.0 + t as f64 },
+        }
+    }
+    let (plat, subs_a) = contended_subs(mixed);
+    let (_, subs_b) = contended_subs(mixed);
+    let a = run_service(&plat, &subs_a);
+    let b = run_service(&plat, &subs_b);
+
+    assert_eq!(a.decisions.len(), b.decisions.len(), "decision counts drifted");
+    for (da, db) in a.decisions.iter().zip(&b.decisions) {
+        assert_eq!((da.tenant, da.task), (db.tenant, db.task), "decision order drifted");
+        assert_eq!(da.time.to_bits(), db.time.to_bits(), "decision time drifted across runs");
+    }
+    assert_eq!(a.horizon.to_bits(), b.horizon.to_bits());
+    assert_eq!(a.total_tasks, b.total_tasks);
+    assert_eq!(a.max_stretch.to_bits(), b.max_stretch.to_bits());
+    assert_eq!(a.stretch_p99.to_bits(), b.stretch_p99.to_bits());
+    assert_eq!(a.jain_index.to_bits(), b.jain_index.to_bits());
+    for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(
+            ta.schedule.placements, tb.schedule.placements,
+            "tenant {}: placements depend on wall-clock time",
+            ta.tenant
+        );
+        assert_eq!(ta.stretch.to_bits(), tb.stretch.to_bits());
+        // the latency metric itself is still measured, once per decision
+        assert_eq!(ta.decision_latency.n, ta.n_placed);
+        assert_eq!(tb.decision_latency.n, tb.n_placed);
+    }
+}
+
+#[test]
 fn cancelling_a_quota_capped_tenant_frees_its_share() {
     // 1 CPU + 1 GPU; tenant 0 (cap: 1 CPU) stacks two chain tasks on the
     // CPU, [0,10) then [10,20), and is cancelled at t=10 before the

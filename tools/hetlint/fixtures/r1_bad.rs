@@ -1,0 +1,4 @@
+// fixture: float-total-order must fire exactly once (line 3).
+pub fn sort_floats(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,6 @@
+// fixture: partial_cmp in a comment or string must NOT fire.
+// partial_cmp would be wrong here; see total_cmp.
+pub fn sort_floats(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    let _doc = "prefer total_cmp over partial_cmp";
+}

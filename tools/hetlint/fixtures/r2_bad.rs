@@ -1,0 +1,4 @@
+// fixture: raw float ==/!= in the decision core must fire twice.
+pub fn degenerate(x: f64, y: f64) -> bool {
+    x == 0.0 || 1.5 != y
+}

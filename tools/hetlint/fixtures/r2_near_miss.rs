@@ -1,0 +1,6 @@
+// fixture: integer ==/!= and float-eq text in strings must NOT fire.
+pub fn counts(n: usize, m: usize) -> bool {
+    // x == 0.0 would be banned here
+    let s = "x == 0.0";
+    n == 0 && m != 1 && !s.is_empty()
+}

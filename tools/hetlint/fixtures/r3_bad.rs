@@ -1,0 +1,13 @@
+// fixture: HashMap/HashSet in a determinism-critical module must fire.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub fn tally(keys: &[u32]) -> usize {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    let mut s: HashSet<u32> = HashSet::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+        s.insert(k);
+    }
+    m.len() + s.len()
+}

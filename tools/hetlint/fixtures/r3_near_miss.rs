@@ -1,0 +1,12 @@
+// fixture: BTreeMap plus HashMap-in-comment/string must NOT fire.
+use std::collections::BTreeMap;
+
+// HashMap is banned here; BTreeMap iterates in key order.
+pub fn tally(keys: &[u32]) -> usize {
+    let msg = "no HashMap, no HashSet";
+    let mut m: BTreeMap<u32, u32> = BTreeMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m.len() + msg.len()
+}

@@ -1,0 +1,6 @@
+// fixture: wall-clock reads outside the allowlist must fire twice.
+pub fn stamp() -> (f64, bool) {
+    let t = std::time::Instant::now();
+    let epoch_ok = std::time::SystemTime::now().elapsed().is_ok();
+    (t.elapsed().as_secs_f64(), epoch_ok)
+}

@@ -1,0 +1,6 @@
+// fixture: an Instant passed in (no ::now) must NOT fire.
+// Instant::now() is banned here; callers pass an Instant in.
+pub fn elapsed_secs(t0: std::time::Instant) -> f64 {
+    let _doc = "Instant::now and SystemTime live in coordinator/";
+    t0.elapsed().as_secs_f64()
+}

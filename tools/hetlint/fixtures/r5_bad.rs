@@ -1,0 +1,6 @@
+// fixture: unwrap/expect in an engine decision loop must fire twice.
+pub fn pick(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap();
+    let last = xs.last().expect("non-empty");
+    *first + *last
+}

@@ -1,0 +1,16 @@
+// fixture: unwrap_or, comments/strings and #[cfg(test)] must NOT fire.
+// unwrap() here would abandon irrevocable decisions.
+pub fn pick(xs: &[f64]) -> f64 {
+    let doc = "never unwrap or expect in the hot path";
+    xs.first().copied().unwrap_or(0.0) + doc.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_pick() {
+        assert!(super::pick(&[1.0]).is_finite());
+        let v: Option<usize> = Some(1);
+        v.unwrap();
+    }
+}

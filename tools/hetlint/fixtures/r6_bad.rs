@@ -1,0 +1,4 @@
+// fixture: unsafe must fire exactly once.
+pub fn peek(xs: &[f64]) -> f64 {
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,6 @@
+// fixture: "unsafe" in comments/strings must NOT fire.
+// unsafe code is forbidden repo-wide; this module has none.
+pub fn peek(xs: &[f64]) -> f64 {
+    let _doc = "unsafe is banned";
+    xs.first().copied().unwrap_or(0.0)
+}

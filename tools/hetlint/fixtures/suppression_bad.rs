@@ -1,0 +1,9 @@
+// fixture: a directive without a justification and a directive naming
+// an unknown rule are both bad-suppression findings, and the wall-clock
+// findings they failed to cover stay unsuppressed.
+pub fn stamped() -> (f64, bool) {
+    let a = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core)
+    // hetlint: allow(not-a-rule) -- because
+    let b = std::time::SystemTime::now().elapsed().is_ok();
+    (a.elapsed().as_secs_f64(), b)
+}

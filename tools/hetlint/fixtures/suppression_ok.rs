@@ -1,0 +1,8 @@
+// fixture: trailing + standalone suppressions with justifications
+// must silence both findings and be recorded as suppressed.
+pub fn stamped() -> (f64, bool) {
+    let a = std::time::Instant::now(); // hetlint: allow(no-wallclock-in-core) -- latency metric only, never feeds placement
+    // hetlint: allow(no-wallclock-in-core) -- compares config stamps, not decisions
+    let b = std::time::SystemTime::now().elapsed().is_ok();
+    (a.elapsed().as_secs_f64(), b)
+}

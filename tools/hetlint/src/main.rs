@@ -1,0 +1,1234 @@
+//! hetlint — repo-specific static analysis for hetsched.
+//!
+//! The whole verification story of this repo rests on two conventions
+//! that no compiler checks: **determinism** (golden parity pins
+//! engine == reference placements bit-for-bit, FIFO service runs are
+//! bit-identical to the frozen pre-policy path, coordinator replay ==
+//! engine prediction) and **irrevocability** (online/service decisions
+//! are taken once, through one engine, and never silently depend on
+//! ambient state like wall-clock time).  hetlint turns those
+//! conventions into machine-checked rules over a hand-rolled Rust
+//! token stream (strings, char literals and comments handled
+//! correctly; `#[cfg(test)]` items skipped).
+//!
+//! # Rules and the invariants they protect
+//!
+//! | rule                     | protects                                           |
+//! |--------------------------|----------------------------------------------------|
+//! | `float-total-order`      | NaN-robust ordering everywhere: `partial_cmp` on   |
+//! |                          | floats panics or lies on NaN; `total_cmp` is the   |
+//! |                          | total order golden parity assumes.                 |
+//! | `no-raw-float-eq`        | Tie handling in the decision core: raw `==`/`!=`   |
+//! |                          | against float values bypasses the engine-wide      |
+//! |                          | ±`engine::TIE_BAND` band (`engine::band_eq`/       |
+//! |                          | `band_ne`); exact structural comparisons must say  |
+//! |                          | so in a justified suppression.                     |
+//! | `no-unordered-iteration` | Replay == rerun: `HashMap`/`HashSet` iteration     |
+//! |                          | order is randomized per process, so any iteration  |
+//! |                          | in `sched/`, `lp/`, `sim/` can leak               |
+//! |                          | nondeterminism into placements or reports; use     |
+//! |                          | `BTreeMap`/`BTreeSet` or sort first.               |
+//! | `no-wallclock-in-core`   | Irrevocable decisions are functions of virtual     |
+//! |                          | time only: `Instant::now`/`SystemTime` in `sched/` |
+//! |                          | or `lp/` could feed real time into a placement.    |
+//! |                          | Only `coordinator/`, `substrate/bench.rs`,         |
+//! |                          | `main.rs` and `rust/benches/` may read real time.  |
+//! | `no-panic-in-hot-path`   | A panic mid-schedule abandons irrevocable          |
+//! |                          | decisions already taken: `unwrap`/`expect` in the  |
+//! |                          | engine decision loops must carry a justified       |
+//! |                          | invariant, and the per-file indexing budget        |
+//! |                          | ratchets the `x[i]` panic surface.                 |
+//! | `forbid-unsafe`          | The determinism argument is memory-safety-deep:    |
+//! |                          | no `unsafe` anywhere in the tree.                  |
+//!
+//! # Suppressions
+//!
+//! A finding is suppressible only inline:
+//!
+//! ```text
+//! // hetlint: allow(<rule>) -- <mandatory justification>
+//! ```
+//!
+//! on the offending line (trailing) or alone on the line directly above
+//! it.  Empty justifications, unknown rule names and suppressions that
+//! match no finding are themselves findings (`bad-suppression`,
+//! `unused-suppression`) and cannot be suppressed.
+//!
+//! # Output
+//!
+//! Human-readable findings on stderr plus `ANALYSIS.json` (rule, file,
+//! line, snippet, suppressions) at the repo root.  Exit code 1 iff any
+//! unsuppressed finding exists.  Run via `cargo run -p hetlint
+//! --release` (the `== hetlint ==` stage of `ci.sh`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------------
+// Tokens
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Int,
+    Float,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+struct Token {
+    kind: Kind,
+    text: String,
+    line: usize,
+}
+
+struct Lexed {
+    tokens: Vec<Token>,
+    /// `//` line comments as (line, full text including the slashes).
+    comments: Vec<(usize, String)>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Longest-match multi-char operators; everything else is a single char.
+const PUNCTS3: &[&str] = &["<<=", ">>=", "..=", "..."];
+const PUNCTS2: &[&str] = &[
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "..", "<<", ">>", "+=", "-=", "*=",
+    "/=", "%=", "^=", "&=", "|=",
+];
+
+/// Hand-rolled Rust lexer: good enough to distinguish code from
+/// strings/chars/comments and to classify float literals; it does not
+/// try to be a full grammar.
+fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+
+    let push = |tokens: &mut Vec<Token>, kind: Kind, text: String, line: usize| {
+        tokens.push(Token { kind, text, line });
+    };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            comments.push((line, cs[start..i].iter().collect()));
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings r"..." / r#"..."#, byte strings b"...", raw idents r#x
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let mut has_r = c == 'r';
+            if c == 'b' && j < n && cs[j] == 'r' {
+                has_r = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while has_r && j < n && cs[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && cs[j] == '"' {
+                let start_line = line;
+                if has_r {
+                    // raw: ends at '"' followed by `hashes` '#'s
+                    i = j + 1;
+                    'raw: while i < n {
+                        if cs[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if cs[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && cs[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        i += 1;
+                    }
+                } else {
+                    i = scan_string(&cs, j, &mut line);
+                }
+                push(&mut tokens, Kind::Str, String::new(), start_line);
+                continue;
+            }
+            if has_r && hashes == 1 && j < n && is_ident_start(cs[j]) {
+                // raw identifier r#ident
+                let start = j;
+                i = j;
+                while i < n && is_ident_continue(cs[i]) {
+                    i += 1;
+                }
+                push(&mut tokens, Kind::Ident, cs[start..i].iter().collect(), line);
+                continue;
+            }
+            // otherwise: plain identifier starting with r/b — fall through
+        }
+        if c == '"' {
+            let start_line = line;
+            i = scan_string(&cs, i, &mut line);
+            push(&mut tokens, Kind::Str, String::new(), start_line);
+            continue;
+        }
+        if c == '\'' {
+            // lifetime ('a) vs char literal ('a', '\n', '\'')
+            let j = i + 1;
+            let is_lifetime = j < n
+                && is_ident_start(cs[j])
+                && !(j + 1 < n && cs[j + 1] == '\'');
+            if is_lifetime {
+                let start = j;
+                i = j;
+                while i < n && is_ident_continue(cs[i]) {
+                    i += 1;
+                }
+                push(&mut tokens, Kind::Lifetime, cs[start..i].iter().collect(), line);
+                continue;
+            }
+            i += 1; // opening quote
+            if i < n && cs[i] == '\\' {
+                i += 2; // backslash + escaped char (covers \', \\; \x.. tail below)
+            }
+            while i < n && cs[i] != '\'' {
+                if cs[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i += 1; // closing quote
+            push(&mut tokens, Kind::Char, String::new(), line);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut float = false;
+            if c == '0' && i + 1 < n && matches!(cs[i + 1], 'x' | 'X' | 'b' | 'B' | 'o' | 'O') {
+                i += 2;
+                while i < n && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                    i += 1;
+                }
+                if i < n && cs[i] == '.' {
+                    let nxt = cs.get(i + 1).copied();
+                    match nxt {
+                        Some(d) if d.is_ascii_digit() => {
+                            float = true;
+                            i += 1;
+                            while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                                i += 1;
+                            }
+                        }
+                        Some('.') => {}                            // range: 1..x
+                        Some(d) if is_ident_start(d) => {}         // method: 1.max(..)
+                        _ => {
+                            float = true; // trailing dot: `1.`
+                            i += 1;
+                        }
+                    }
+                }
+                if i < n && matches!(cs[i], 'e' | 'E') {
+                    let mut j = i + 1;
+                    if j < n && matches!(cs[j], '+' | '-') {
+                        j += 1;
+                    }
+                    if j < n && cs[j].is_ascii_digit() {
+                        float = true;
+                        i = j;
+                        while i < n && (cs[i].is_ascii_digit() || cs[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                }
+                // type suffix (f64 / u32 / ...)
+                let sfx_start = i;
+                while i < n && is_ident_continue(cs[i]) {
+                    i += 1;
+                }
+                let sfx: String = cs[sfx_start..i].iter().collect();
+                if sfx == "f32" || sfx == "f64" {
+                    float = true;
+                }
+            }
+            let kind = if float { Kind::Float } else { Kind::Int };
+            push(&mut tokens, kind, cs[start..i].iter().collect(), line);
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(cs[i]) {
+                i += 1;
+            }
+            push(&mut tokens, Kind::Ident, cs[start..i].iter().collect(), line);
+            continue;
+        }
+        // punctuation: longest match
+        let mut matched = false;
+        if i + 2 < n {
+            let three: String = cs[i..i + 3].iter().collect();
+            if PUNCTS3.contains(&three.as_str()) {
+                push(&mut tokens, Kind::Punct, three, line);
+                i += 3;
+                matched = true;
+            }
+        }
+        if !matched && i + 1 < n {
+            let two: String = cs[i..i + 2].iter().collect();
+            if PUNCTS2.contains(&two.as_str()) {
+                push(&mut tokens, Kind::Punct, two, line);
+                i += 2;
+                matched = true;
+            }
+        }
+        if !matched {
+            push(&mut tokens, Kind::Punct, c.to_string(), line);
+            i += 1;
+        }
+    }
+    Lexed { tokens, comments }
+}
+
+/// Scan a `"..."` string with escapes; `i` points at the opening quote.
+/// Returns the index one past the closing quote, updating `line`.
+fn scan_string(cs: &[char], mut i: usize, line: &mut usize) -> usize {
+    let n = cs.len();
+    i += 1;
+    while i < n {
+        match cs[i] {
+            '\\' => {
+                if i + 1 < n && cs[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => {
+                i += 1;
+                return i;
+            }
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+// ---------------------------------------------------------------------------
+// #[cfg(test)] masking
+// ---------------------------------------------------------------------------
+
+/// True if tokens at `i` start a `#[cfg(test)]`-style or `#[test]`
+/// attribute (any `cfg(...)` attribute mentioning `test`, e.g.
+/// `#[cfg(all(test, feature = "x"))]`).
+fn is_test_attr(ts: &[Token], i: usize) -> bool {
+    if ts[i].text != "#" || ts.get(i + 1).map(|t| t.text.as_str()) != Some("[") {
+        return false;
+    }
+    if ts.get(i + 2).map(|t| t.text.as_str()) == Some("test")
+        && ts.get(i + 3).map(|t| t.text.as_str()) == Some("]")
+    {
+        return true;
+    }
+    let mut j = i + 2;
+    let mut depth = 1usize;
+    let mut saw_cfg = false;
+    let mut saw_test = false;
+    while j < ts.len() && depth > 0 {
+        match ts[j].text.as_str() {
+            "[" => depth += 1,
+            "]" => depth -= 1,
+            "cfg" => saw_cfg = true,
+            "test" => saw_test = true,
+            _ => {}
+        }
+        j += 1;
+    }
+    saw_cfg && saw_test
+}
+
+/// Mask of tokens inside `#[cfg(test)]`/`#[test]`-annotated items
+/// (attribute through the end of the item's `{...}` body or `;`).
+/// Test-only code cannot break schedule determinism, so the rules skip
+/// it — except that `forbid-unsafe` is additionally enforced by the
+/// crate-level `#![forbid(unsafe_code)]`.
+fn test_mask(ts: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; ts.len()];
+    let mut i = 0usize;
+    while i < ts.len() {
+        if !is_test_attr(ts, i) {
+            i += 1;
+            continue;
+        }
+        // consume the attribute itself
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        while j < ts.len() && depth > 0 {
+            match ts[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        // consume the annotated item: up to a top-level `;` or the
+        // matching `}` of its first top-level `{`
+        let mut k = j;
+        let mut pd = 0i64;
+        while k < ts.len() {
+            let t = ts[k].text.as_str();
+            match t {
+                "(" | "[" => pd += 1,
+                ")" | "]" => pd -= 1,
+                ";" if pd == 0 => {
+                    k += 1;
+                    break;
+                }
+                "{" if pd == 0 => {
+                    let mut bd = 1usize;
+                    k += 1;
+                    while k < ts.len() && bd > 0 {
+                        match ts[k].text.as_str() {
+                            "{" => bd += 1,
+                            "}" => bd -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for m in mask.iter_mut().take(k).skip(i) {
+            *m = true;
+        }
+        i = k;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+const R1: &str = "float-total-order";
+const R2: &str = "no-raw-float-eq";
+const R3: &str = "no-unordered-iteration";
+const R4: &str = "no-wallclock-in-core";
+const R5: &str = "no-panic-in-hot-path";
+const R6: &str = "forbid-unsafe";
+const BAD_SUPPRESSION: &str = "bad-suppression";
+const UNUSED_SUPPRESSION: &str = "unused-suppression";
+
+/// The rules an inline suppression may name.
+const RULES: &[&str] = &[R1, R2, R3, R4, R5, R6];
+
+/// Files whose decision loops are the engine hot path: `unwrap`/
+/// `expect` there needs a justified invariant, and the indexing budget
+/// below ratchets the panic surface.
+const HOT_PATHS: &[&str] = &[
+    "rust/src/sched/engine.rs",
+    "rust/src/sched/est.rs",
+    "rust/src/sched/heft.rs",
+    "rust/src/sched/list.rs",
+    "rust/src/sched/online.rs",
+];
+
+/// Indexing-expression budget per hot-path file (count of `expr[idx]`
+/// sites outside `#[cfg(test)]`).  Exceeding the budget is a
+/// `no-panic-in-hot-path` finding: either remove index expressions or
+/// consciously raise the budget here (the diff makes the decision
+/// reviewable).  Lower opportunistically; never raise silently.
+const INDEX_BUDGET: &[(&str, usize)] = &[
+    ("rust/src/sched/engine.rs", 38),
+    ("rust/src/sched/est.rs", 15),
+    ("rust/src/sched/heft.rs", 7),
+    ("rust/src/sched/list.rs", 17),
+    ("rust/src/sched/online.rs", 16),
+];
+
+fn in_core(rel: &str) -> bool {
+    rel.starts_with("rust/src/sched/") || rel.starts_with("rust/src/lp/")
+}
+
+fn in_det_modules(rel: &str) -> bool {
+    in_core(rel) || rel.starts_with("rust/src/sim/")
+}
+
+fn wallclock_allowed(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/")
+        || rel == "rust/src/substrate/bench.rs"
+        || rel == "rust/src/main.rs"
+        || rel.starts_with("rust/benches/")
+}
+
+#[derive(Clone, Debug)]
+struct Finding {
+    rule: String,
+    file: String,
+    line: usize,
+    msg: String,
+    snippet: String,
+}
+
+#[derive(Clone, Debug)]
+struct Suppressed {
+    rule: String,
+    file: String,
+    line: usize,
+    justification: String,
+}
+
+struct Suppression {
+    /// Line of the comment itself.
+    line: usize,
+    /// Line the suppression applies to.
+    target: usize,
+    rules: Vec<String>,
+    justification: String,
+    used: bool,
+}
+
+/// Parse `// hetlint: allow(rule[, rule]) -- justification` comments.
+/// Malformed directives become `bad-suppression` findings.
+fn parse_suppressions(
+    rel: &str,
+    lexed: &Lexed,
+    lines: &[&str],
+    findings: &mut Vec<Finding>,
+) -> Vec<Suppression> {
+    let mut sups = Vec::new();
+    for (cline, text) in &lexed.comments {
+        let Some(pos) = text.find("hetlint:") else {
+            continue;
+        };
+        let line = *cline;
+        let snippet = snippet_at(lines, line);
+        let bad = |msg: String, findings: &mut Vec<Finding>| {
+            findings.push(Finding {
+                rule: BAD_SUPPRESSION.into(),
+                file: rel.into(),
+                line,
+                msg,
+                snippet: snippet.clone(),
+            });
+        };
+        let rest = text[pos + "hetlint:".len()..].trim();
+        let Some(inner_and_tail) = rest.strip_prefix("allow(") else {
+            bad("expected `hetlint: allow(<rule>) -- <justification>`".into(), findings);
+            continue;
+        };
+        let Some(close) = inner_and_tail.find(')') else {
+            bad("unclosed `allow(`".into(), findings);
+            continue;
+        };
+        let rules: Vec<String> = inner_and_tail[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        if rules.is_empty() {
+            bad("`allow()` names no rule".into(), findings);
+            continue;
+        }
+        let mut ok = true;
+        for r in &rules {
+            if !RULES.contains(&r.as_str()) {
+                bad(format!("unknown rule `{r}` (known: {})", RULES.join(", ")), findings);
+                ok = false;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let tail = inner_and_tail[close + 1..].trim();
+        let Some(just) = tail.strip_prefix("--") else {
+            bad("missing `-- <justification>` (the justification is mandatory)".into(), findings);
+            continue;
+        };
+        let just = just.trim();
+        if just.is_empty() {
+            bad("empty justification (the justification is mandatory)".into(), findings);
+            continue;
+        }
+        // A standalone comment line covers the next line that holds
+        // code; a trailing comment covers its own line.
+        let own_line_has_code = lexed.tokens.iter().any(|t| t.line == line);
+        let target = if own_line_has_code {
+            line
+        } else {
+            lexed
+                .tokens
+                .iter()
+                .map(|t| t.line)
+                .filter(|&l| l > line)
+                .min()
+                .unwrap_or(line)
+        };
+        sups.push(Suppression {
+            line,
+            target,
+            rules,
+            justification: just.to_string(),
+            used: false,
+        });
+    }
+    sups
+}
+
+fn snippet_at(lines: &[&str], line: usize) -> String {
+    let s = lines.get(line.saturating_sub(1)).copied().unwrap_or("").trim();
+    let mut s = s.to_string();
+    if s.len() > 160 {
+        s.truncate(160);
+        s.push_str("...");
+    }
+    s
+}
+
+/// Lint one file's source; returns (unsuppressed findings, applied
+/// suppressions).
+fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
+    let lexed = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let mask = test_mask(&lexed.tokens);
+    let ts = &lexed.tokens;
+    let hot = HOT_PATHS.contains(&rel);
+    let mut raw: Vec<Finding> = Vec::new();
+    let push = |raw: &mut Vec<Finding>, rule: &str, line: usize, msg: String| {
+        raw.push(Finding {
+            rule: rule.into(),
+            file: rel.into(),
+            line,
+            msg,
+            snippet: snippet_at(&lines, line),
+        });
+    };
+
+    let mut index_count = 0usize;
+    let mut index_excess_line: Option<usize> = None;
+    let budget = INDEX_BUDGET
+        .iter()
+        .find(|(p, _)| *p == rel)
+        .map(|&(_, b)| b)
+        .unwrap_or(usize::MAX);
+
+    for (i, t) in ts.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        match t.kind {
+            Kind::Ident => match t.text.as_str() {
+                "partial_cmp" => push(
+                    &mut raw,
+                    R1,
+                    t.line,
+                    "partial_cmp is not a total order on floats (NaN): use total_cmp".into(),
+                ),
+                "HashMap" | "HashSet" if in_det_modules(rel) => push(
+                    &mut raw,
+                    R3,
+                    t.line,
+                    format!(
+                        "{} in a determinism-critical module: iteration order is \
+                         per-process random; use BTreeMap/BTreeSet or sort first",
+                        t.text
+                    ),
+                ),
+                "SystemTime" if !wallclock_allowed(rel) => push(
+                    &mut raw,
+                    R4,
+                    t.line,
+                    "SystemTime outside the wall-clock allowlist (coordinator/, \
+                     substrate/bench.rs, main.rs, benches)"
+                        .into(),
+                ),
+                "Instant"
+                    if !wallclock_allowed(rel)
+                        && ts.get(i + 1).is_some_and(|t| t.text == "::")
+                        && ts.get(i + 2).is_some_and(|t| t.text == "now") =>
+                {
+                    push(
+                        &mut raw,
+                        R4,
+                        t.line,
+                        "Instant::now outside the wall-clock allowlist: core decisions \
+                         must be functions of virtual time only"
+                            .into(),
+                    )
+                }
+                "unwrap" | "expect"
+                    if hot && i > 0 && ts[i - 1].text == "." =>
+                {
+                    push(
+                        &mut raw,
+                        R5,
+                        t.line,
+                        format!(
+                            "{} in an engine decision loop: a panic here abandons \
+                             irrevocable decisions; justify the invariant or restructure",
+                            t.text
+                        ),
+                    )
+                }
+                "unsafe" => push(
+                    &mut raw,
+                    R6,
+                    t.line,
+                    "unsafe is forbidden repo-wide".into(),
+                ),
+                _ => {}
+            },
+            Kind::Punct => match t.text.as_str() {
+                "==" | "!=" if in_core(rel) => {
+                    let prev_float = i > 0 && ts[i - 1].kind == Kind::Float;
+                    let next_float = ts.get(i + 1).is_some_and(|t| t.kind == Kind::Float)
+                        || (ts.get(i + 1).is_some_and(|t| t.text == "-")
+                            && ts.get(i + 2).is_some_and(|t| t.kind == Kind::Float));
+                    if prev_float || next_float {
+                        push(
+                            &mut raw,
+                            R2,
+                            t.line,
+                            format!(
+                                "raw float {} in the decision core: go through \
+                                 engine::band_eq/band_ne (±TIE_BAND), or justify an \
+                                 exact structural comparison",
+                                t.text
+                            ),
+                        );
+                    }
+                }
+                "[" if hot
+                    && i > 0
+                    && (ts[i - 1].kind == Kind::Ident
+                        || ts[i - 1].text == "]"
+                        || ts[i - 1].text == ")") =>
+                {
+                    index_count += 1;
+                    if index_count == budget.saturating_add(1) {
+                        index_excess_line = Some(t.line);
+                    }
+                }
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+
+    if hot && index_count > budget {
+        let line = index_excess_line.unwrap_or(1);
+        push(
+            &mut raw,
+            R5,
+            line,
+            format!(
+                "indexing budget exceeded: {index_count} `expr[idx]` sites > budget \
+                 {budget} (first excess here); remove index expressions or raise the \
+                 budget in tools/hetlint/src/main.rs consciously"
+            ),
+        );
+    }
+
+    // apply suppressions
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut sups = parse_suppressions(rel, &lexed, &lines, &mut findings);
+    let mut suppressed: Vec<Suppressed> = Vec::new();
+    for f in raw {
+        let hit = sups
+            .iter_mut()
+            .find(|s| s.target == f.line && s.rules.iter().any(|r| r == &f.rule));
+        match hit {
+            Some(s) => {
+                s.used = true;
+                suppressed.push(Suppressed {
+                    rule: f.rule,
+                    file: f.file,
+                    line: f.line,
+                    justification: s.justification.clone(),
+                });
+            }
+            None => findings.push(f),
+        }
+    }
+    for s in &sups {
+        if !s.used {
+            findings.push(Finding {
+                rule: UNUSED_SUPPRESSION.into(),
+                file: rel.into(),
+                line: s.line,
+                msg: format!(
+                    "suppression for {} matches no finding on line {}: remove it",
+                    s.rules.join(", "),
+                    s.target
+                ),
+                snippet: snippet_at(&lines, s.line),
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    (findings, suppressed)
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk + report
+// ---------------------------------------------------------------------------
+
+/// The directories hetlint scans, relative to the repo root.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+struct Report {
+    files_scanned: usize,
+    findings: Vec<Finding>,
+    suppressed: Vec<Suppressed>,
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn run_lint(root: &Path) -> Report {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for r in SCAN_ROOTS {
+        collect_rs_files(&root.join(r), &mut files);
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+    let mut scanned = 0usize;
+    for f in &files {
+        let Ok(src) = fs::read_to_string(f) else {
+            continue;
+        };
+        scanned += 1;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let (fi, su) = lint_source(&rel, &src);
+        findings.extend(fi);
+        suppressed.extend(su);
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    suppressed.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    Report { files_scanned: scanned, findings, suppressed }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_json(report: &Report) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"tool\": \"hetlint\",\n  \"version\": 1,\n");
+    out.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    out.push_str("  \"findings\": [\n");
+    for (i, f) in report.findings.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"msg\": \"{}\", \"snippet\": \"{}\"}}{}\n",
+            json_escape(&f.rule),
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.msg),
+            json_escape(&f.snippet),
+            if i + 1 < report.findings.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"suppressed\": [\n");
+    for (i, s) in report.suppressed.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"justification\": \"{}\"}}{}\n",
+            json_escape(&s.rule),
+            json_escape(&s.file),
+            s.line,
+            json_escape(&s.justification),
+            if i + 1 < report.suppressed.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn repo_root() -> PathBuf {
+    if let Some(arg) = std::env::args().nth(1) {
+        return PathBuf::from(arg);
+    }
+    if let Ok(md) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = Path::new(&md).join("../..");
+        if p.join("Cargo.toml").exists() {
+            return p;
+        }
+    }
+    PathBuf::from(".")
+}
+
+fn main() -> ExitCode {
+    let root = repo_root();
+    let report = run_lint(&root);
+    let json = render_json(&report);
+    let json_path = root.join("ANALYSIS.json");
+    if let Err(e) = fs::write(&json_path, &json) {
+        eprintln!("hetlint: cannot write {}: {e}", json_path.display());
+        return ExitCode::FAILURE;
+    }
+    for f in &report.findings {
+        eprintln!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+        eprintln!("    {}", f.snippet);
+    }
+    if report.findings.is_empty() {
+        println!(
+            "hetlint OK: {} files scanned, 0 findings, {} justified suppressions ({})",
+            report.files_scanned,
+            report.suppressed.len(),
+            json_path.display()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "hetlint: {} finding(s) in {} files scanned ({} suppressed); fix them or \
+             add `// hetlint: allow(<rule>) -- <justification>`",
+            report.findings.len(),
+            report.files_scanned,
+            report.suppressed.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests: tokenizer, fixture corpus (one bad + one near-miss per rule),
+// suppressions, and the real-tree-lints-clean integration check.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        fs::read_to_string(&p).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    // -- tokenizer ---------------------------------------------------------
+
+    #[test]
+    fn lexer_skips_strings_comments_chars() {
+        let src = r###"
+// partial_cmp in a comment
+/* nested /* block partial_cmp */ still comment */
+let s = "partial_cmp == 1.5 HashMap";
+let r = r#"Instant::now() unsafe"#;
+let c = '"';
+let l: &'static str = s;
+"###;
+        let lexed = lex(src);
+        assert!(!lexed.tokens.iter().any(|t| t.text == "partial_cmp"));
+        assert!(!lexed.tokens.iter().any(|t| t.text == "HashMap"));
+        assert!(!lexed.tokens.iter().any(|t| t.text == "Instant"));
+        assert!(!lexed.tokens.iter().any(|t| t.text == "unsafe"));
+        assert!(lexed.tokens.iter().any(|t| t.kind == Kind::Lifetime && t.text == "static"));
+        assert_eq!(lexed.comments.len(), 1); // only the `//` line is collected
+    }
+
+    #[test]
+    fn lexer_classifies_numbers() {
+        let lexed = lex("let a = 1.5; let b = 15; let c = 1e-12; let d = 2.5f64; \
+                         let e = 1f64; let f = 0x1E; let g = 1..n; let h = 1.max(2);");
+        let nums: Vec<(&str, Kind)> = lexed
+            .tokens
+            .iter()
+            .filter(|t| matches!(t.kind, Kind::Int | Kind::Float))
+            .map(|t| (t.text.as_str(), t.kind))
+            .collect();
+        assert_eq!(
+            nums,
+            vec![
+                ("1.5", Kind::Float),
+                ("15", Kind::Int),
+                ("1e-12", Kind::Float),
+                ("2.5f64", Kind::Float),
+                ("1f64", Kind::Float),
+                ("0x1E", Kind::Int),
+                ("1", Kind::Int),
+                ("1", Kind::Int),
+                ("2", Kind::Int),
+            ]
+        );
+    }
+
+    #[test]
+    fn lexer_char_escapes_and_lines() {
+        let lexed = lex("let q = '\\''; let b = '\\\\';\nlet x = 1;");
+        assert!(lexed.tokens.iter().any(|t| t.text == "x" && t.line == 2));
+    }
+
+    #[test]
+    fn test_mask_skips_cfg_test_items() {
+        let src = "fn hot() { a.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { b.unwrap(); }\n}\nfn tail() {}";
+        let lexed = lex(src);
+        let mask = test_mask(&lexed.tokens);
+        let unmasked: Vec<&str> = lexed
+            .tokens
+            .iter()
+            .zip(&mask)
+            .filter(|(_, &m)| !m)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(unmasked.contains(&"hot"));
+        assert!(unmasked.contains(&"tail"));
+        assert!(!unmasked.contains(&"tests"));
+        assert!(!unmasked.contains(&"b"));
+    }
+
+    // -- rule fixtures -----------------------------------------------------
+
+    #[test]
+    fn r1_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/substrate/stats.rs", &fixture("r1_bad.rs"));
+        assert_eq!(rules_of(&bad), vec![R1], "{bad:?}");
+        let (ok, _) = lint_source("rust/src/substrate/stats.rs", &fixture("r1_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn r2_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/lp/model.rs", &fixture("r2_bad.rs"));
+        assert_eq!(rules_of(&bad), vec![R2, R2], "{bad:?}");
+        let (ok, _) = lint_source("rust/src/lp/model.rs", &fixture("r2_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn r3_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/sim/mod.rs", &fixture("r3_bad.rs"));
+        assert!(!bad.is_empty() && bad.iter().all(|f| f.rule == R3), "{bad:?}");
+        let (ok, _) = lint_source("rust/src/sim/mod.rs", &fixture("r3_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+        // same content outside the determinism-critical modules is fine
+        let (ok2, _) = lint_source("rust/src/experiments/driver.rs", &fixture("r3_bad.rs"));
+        assert!(ok2.is_empty(), "{ok2:?}");
+    }
+
+    #[test]
+    fn r4_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/sched/service.rs", &fixture("r4_bad.rs"));
+        assert_eq!(rules_of(&bad), vec![R4, R4], "{bad:?}");
+        let (ok, _) = lint_source("rust/src/sched/service.rs", &fixture("r4_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+        // the wall-clock allowlist really allows
+        let (ok2, _) = lint_source("rust/src/coordinator/mod.rs", &fixture("r4_bad.rs"));
+        assert!(ok2.is_empty(), "{ok2:?}");
+        let (ok3, _) = lint_source("rust/benches/perf_hot_paths.rs", &fixture("r4_bad.rs"));
+        assert!(ok3.is_empty(), "{ok3:?}");
+    }
+
+    #[test]
+    fn r5_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/sched/est.rs", &fixture("r5_bad.rs"));
+        assert_eq!(rules_of(&bad), vec![R5, R5], "{bad:?}");
+        let (ok, _) = lint_source("rust/src/sched/est.rs", &fixture("r5_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+        // unwrap outside the hot-path files is not this rule's business
+        let (ok2, _) = lint_source("rust/src/experiments/driver.rs", &fixture("r5_bad.rs"));
+        assert!(ok2.is_empty(), "{ok2:?}");
+    }
+
+    #[test]
+    fn r5_indexing_budget_ratchets() {
+        // est.rs budget is 15: 16 index expressions must fire, 15 must not
+        let mut src = String::from("fn f(v: &[f64]) -> f64 {\n");
+        for i in 0..16 {
+            src.push_str(&format!("    let x{i} = v[{i}];\n"));
+        }
+        src.push_str("    0.0\n}\n");
+        let (bad, _) = lint_source("rust/src/sched/est.rs", &src);
+        assert_eq!(rules_of(&bad), vec![R5], "{bad:?}");
+        assert!(bad[0].msg.contains("indexing budget"), "{bad:?}");
+        let smaller = src.replace("    let x15 = v[15];\n", "");
+        let (ok, _) = lint_source("rust/src/sched/est.rs", &smaller);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn r6_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/lp/pdhg.rs", &fixture("r6_bad.rs"));
+        assert_eq!(rules_of(&bad), vec![R6], "{bad:?}");
+        let (ok, _) = lint_source("rust/src/lp/pdhg.rs", &fixture("r6_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    // -- suppressions ------------------------------------------------------
+
+    #[test]
+    fn suppression_with_justification_silences_and_is_recorded() {
+        let (f, s) = lint_source("rust/src/sched/service.rs", &fixture("suppression_ok.rs"));
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s.len(), 2, "{s:?}");
+        assert!(s.iter().all(|x| !x.justification.is_empty()));
+    }
+
+    #[test]
+    fn bad_suppressions_are_findings() {
+        let (f, s) = lint_source("rust/src/sched/service.rs", &fixture("suppression_bad.rs"));
+        assert!(s.is_empty(), "{s:?}");
+        let rules = rules_of(&f);
+        // missing justification, unknown rule, and the two unsuppressed
+        // wall-clock findings those directives failed to cover
+        assert_eq!(
+            rules,
+            vec![BAD_SUPPRESSION, R4, BAD_SUPPRESSION, R4],
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn unused_suppression_is_a_finding() {
+        let src = "// hetlint: allow(forbid-unsafe) -- nothing unsafe here\nfn f() {}\n";
+        let (f, _) = lint_source("rust/src/lp/mod.rs", src);
+        assert_eq!(rules_of(&f), vec![UNUSED_SUPPRESSION], "{f:?}");
+    }
+
+    #[test]
+    fn standalone_suppression_covers_next_code_line() {
+        let src = "fn f(t: std::time::Instant) {\n    // hetlint: allow(no-wallclock-in-core) -- metric only, never feeds placement\n    let t2 = std::time::Instant::now();\n    let _ = (t, t2);\n}\n";
+        let (f, s) = lint_source("rust/src/sched/service.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s.len(), 1);
+    }
+
+    // -- the real tree -----------------------------------------------------
+
+    #[test]
+    fn real_tree_lints_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let report = run_lint(&root);
+        assert!(
+            report.files_scanned > 50,
+            "scan found only {} files — wrong root?",
+            report.files_scanned
+        );
+        let msgs: Vec<String> = report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+            .collect();
+        assert!(
+            report.findings.is_empty(),
+            "tree must lint clean; findings:\n{}",
+            msgs.join("\n")
+        );
+        for s in &report.suppressed {
+            assert!(
+                !s.justification.is_empty(),
+                "{}:{}: suppression without justification",
+                s.file,
+                s.line
+            );
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let report = Report {
+            files_scanned: 1,
+            findings: vec![Finding {
+                rule: R1.into(),
+                file: "a \"b\".rs".into(),
+                line: 3,
+                msg: "x\ny".into(),
+                snippet: "\\".into(),
+            }],
+            suppressed: vec![],
+        };
+        let j = render_json(&report);
+        assert!(j.contains("\"a \\\"b\\\".rs\""));
+        assert!(j.contains("x\\ny"));
+        assert!(j.contains("\"\\\\\""));
+    }
+}
