@@ -57,6 +57,47 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+echo "== daemon smoke: serve-service kill -9 + WAL restart =="
+if cargo --version >/dev/null 2>&1; then
+    # end-to-end replay == rerun over real TCP: start the daemon on an
+    # ephemeral port, submit two DAGs, snapshot the drained report,
+    # kill -9 the daemon, restart it from the same WAL, and require the
+    # restarted report byte-for-byte identical
+    smoke_dir="$(mktemp -d)"
+    hs=target/release/hetsched
+    "$hs" serve-service --addr 127.0.0.1:0 --m 4 --k 2 \
+        --wal "$smoke_dir/service.wal" --port-file "$smoke_dir/port" \
+        >"$smoke_dir/daemon1.log" 2>&1 &
+    daemon=$!
+    for _ in $(seq 1 100); do [[ -s "$smoke_dir/port" ]] && break; sleep 0.1; done
+    [[ -s "$smoke_dir/port" ]] || { cat "$smoke_dir/daemon1.log" >&2; exit 1; }
+    addr="$(cat "$smoke_dir/port")"
+    "$hs" submit --addr "$addr" --app potrf --nb 4 --bs 64 --arrival 0
+    "$hs" submit --addr "$addr" --app getrf --nb 3 --bs 64 --arrival 5 --policy eft
+    "$hs" report --addr "$addr" > "$smoke_dir/report_before"
+    kill -9 "$daemon"
+    wait "$daemon" 2>/dev/null || true
+    "$hs" serve-service --addr 127.0.0.1:0 --m 4 --k 2 \
+        --wal "$smoke_dir/service.wal" --port-file "$smoke_dir/port2" \
+        >"$smoke_dir/daemon2.log" 2>&1 &
+    daemon=$!
+    for _ in $(seq 1 100); do [[ -s "$smoke_dir/port2" ]] && break; sleep 0.1; done
+    [[ -s "$smoke_dir/port2" ]] || { cat "$smoke_dir/daemon2.log" >&2; exit 1; }
+    addr="$(cat "$smoke_dir/port2")"
+    "$hs" status --addr "$addr" --tenant 1 | grep -q '"n_placed"'
+    "$hs" report --addr "$addr" > "$smoke_dir/report_after"
+    "$hs" shutdown --addr "$addr"
+    wait "$daemon" 2>/dev/null || true
+    if ! diff -u "$smoke_dir/report_before" "$smoke_dir/report_after"; then
+        echo "daemon smoke FAILED: report diverged across kill -9 + WAL restart" >&2
+        exit 1
+    fi
+    echo "daemon smoke OK: report byte-identical across kill -9 + WAL restart"
+    rm -rf "$smoke_dir"
+else
+    echo "(cargo not installed; skipping daemon smoke)"
+fi
+
 if [[ "${1:-}" == "--perf" ]]; then
     echo "== perf gate: hetlint ANALYSIS.json clean =="
     if [[ ! -s ANALYSIS.json ]]; then

@@ -1,4 +1,6 @@
-// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist).
+// Wall-clock reads are legitimate here (hetlint no-wallclock-in-core allowlist:
+// coordinator/, service_net/, substrate/bench.rs, main.rs, benches/ — runtime
+// edges that measure time but never feed it into a scheduling decision).
 #![allow(clippy::disallowed_methods)]
 //! Live coordinator runtime: the online scheduler driving a real worker
 //! pool, StarPU-style (the system the paper targets for deployment, §7).

@@ -31,6 +31,7 @@ pub mod alloc;
 pub mod lp;
 pub mod runtime;
 pub mod sched;
+pub mod service_net;
 pub mod sim;
 pub mod coordinator;
 pub mod platform;

@@ -26,6 +26,7 @@ use hetsched::platform::Platform;
 use hetsched::runtime::LpBackendKind;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
 use hetsched::sched::service::{run_service, Submission, TenantPolicy};
+use hetsched::service_net::{serve, Client, DaemonConfig};
 use hetsched::sim::{validate, validate_realized, validate_service};
 use hetsched::substrate::cli::Args;
 use hetsched::workloads::{chameleon, forkjoin, Instance, Scale};
@@ -42,6 +43,12 @@ fn main() {
         Some("lower-bounds") => cmd_lower_bounds(&args),
         Some("serve") => cmd_serve(&args),
         Some("service") => cmd_service(&args),
+        Some("serve-service") => cmd_serve_service(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("status") => cmd_status(&args),
+        Some("cancel") => cmd_cancel(&args),
+        Some("report") => cmd_report(&args),
+        Some("shutdown") => cmd_shutdown(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => usage(),
     }
@@ -63,6 +70,13 @@ fn usage() {
          serve      (gen flags) --m M --k K --policy P [--time-scale S]\n  \
          service    --tenants N --tasks T --m M --k K [--gap G] [--seed S] \
          [--admission fifo|quota|stretch] [--cpu-share F --gpu-share F] [--weight W]\n  \
+         serve-service --addr HOST:PORT --wal FILE --m M --k K [--port-file FILE]\n  \
+         submit     --addr HOST:PORT (gen flags) [--arrival T] [--policy P] \
+         [--admission A ...]\n  \
+         status     --addr HOST:PORT --tenant I\n  \
+         cancel     --addr HOST:PORT --tenant I\n  \
+         report     --addr HOST:PORT\n  \
+         shutdown   --addr HOST:PORT\n  \
          artifacts"
     );
     std::process::exit(2);
@@ -222,12 +236,22 @@ fn cmd_schedule(args: &Args) {
     }
 }
 
+/// Exit with the flag-naming parse error (used by the strict `try_*`
+/// getters: a mistyped `--weight abc` or a value-eating `--weight
+/// --full` aborts instead of silently running with the default).
+fn or_die<T>(r: Result<T, String>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    })
+}
+
 fn policy_from_args(args: &Args) -> OnlinePolicy {
     match args.string("policy", "er-ls").as_str() {
         "er-ls" | "erls" => OnlinePolicy::ErLs,
         "eft" => OnlinePolicy::Eft,
         "greedy" => OnlinePolicy::Greedy,
-        "random" => OnlinePolicy::Random(args.u64("seed", 42)),
+        "random" => OnlinePolicy::Random(or_die(args.try_u64("seed", 42))),
         "r1" => OnlinePolicy::R1,
         "r2" => OnlinePolicy::R2,
         "r3" => OnlinePolicy::R3,
@@ -491,11 +515,11 @@ fn admission_from_args(args: &Args) -> TenantPolicy {
     match args.string("admission", "fifo").as_str() {
         "fifo" => TenantPolicy::Fifo,
         "quota" => TenantPolicy::Quota {
-            cpu_share: args.f64("cpu-share", 0.5),
-            gpu_share: args.f64("gpu-share", 0.5),
+            cpu_share: or_die(args.try_f64("cpu-share", 0.5)),
+            gpu_share: or_die(args.try_f64("gpu-share", 0.5)),
         },
         "stretch" | "weighted-stretch" => TenantPolicy::WeightedStretch {
-            weight: args.f64("weight", 1.0),
+            weight: or_die(args.try_f64("weight", 1.0)),
         },
         other => {
             eprintln!("unknown admission policy {other} (fifo|quota|stretch)");
@@ -505,12 +529,15 @@ fn admission_from_args(args: &Args) -> TenantPolicy {
 }
 
 fn cmd_service(args: &Args) {
-    let n_tenants = args.usize("tenants", 8);
-    let n_tasks = args.usize("tasks", 200);
-    let plat = Platform::hybrid(args.usize("m", 16), args.usize("k", 4));
-    let gap = args.f64("gap", 20.0);
+    let n_tenants = or_die(args.try_usize("tenants", 8));
+    let n_tasks = or_die(args.try_usize("tasks", 200));
+    let plat = Platform::hybrid(
+        or_die(args.try_usize("m", 16)),
+        or_die(args.try_usize("k", 4)),
+    );
+    let gap = or_die(args.try_f64("gap", 20.0));
     let admission = admission_from_args(args);
-    let mut rng = hetsched::substrate::rng::Rng::new(args.usize("seed", 7) as u64);
+    let mut rng = hetsched::substrate::rng::Rng::new(or_die(args.try_u64("seed", 7)));
     let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
     let subs: Vec<Submission> = (0..n_tenants)
         .map(|t| {
@@ -554,6 +581,61 @@ fn cmd_service(args: &Args) {
         report.decisions.len(),
         wall
     );
+}
+
+fn cmd_serve_service(args: &Args) {
+    let cfg = DaemonConfig {
+        addr: args.string("addr", "127.0.0.1:0"),
+        wal: std::path::PathBuf::from(args.string("wal", "service.wal")),
+        plat: Platform::hybrid(
+            or_die(args.try_usize("m", 16)),
+            or_die(args.try_usize("k", 4)),
+        ),
+        port_file: args.str_flag("port-file").map(std::path::PathBuf::from),
+    };
+    or_die(serve(&cfg));
+}
+
+fn client_from_args(args: &Args) -> Client {
+    or_die(Client::connect(&args.string("addr", "127.0.0.1:7477")))
+}
+
+fn tenant_from_args(args: &Args) -> usize {
+    or_die(args.try_usize("tenant", 0))
+}
+
+fn cmd_submit(args: &Args) {
+    let g = graph_from_args(args);
+    let arrival = or_die(args.try_f64("arrival", 0.0));
+    if !(arrival.is_finite() && arrival >= 0.0) {
+        or_die::<()>(Err(format!("--arrival must be finite and >= 0, got {arrival}")));
+    }
+    let sub = Submission::new(g, arrival, policy_from_args(args))
+        .with_admission(admission_from_args(args));
+    let tenant = or_die(client_from_args(args).submit(&sub));
+    println!("tenant {tenant}");
+}
+
+fn cmd_status(args: &Args) {
+    let status = or_die(client_from_args(args).status(tenant_from_args(args)));
+    println!("{status}");
+}
+
+fn cmd_cancel(args: &Args) {
+    let out = or_die(client_from_args(args).cancel(tenant_from_args(args)));
+    println!("{out}");
+}
+
+fn cmd_report(args: &Args) {
+    // canonical deterministic projection (no wall-clock fields): two
+    // drained daemons with the same WAL print byte-identical reports
+    let report = or_die(client_from_args(args).report());
+    println!("{report}");
+}
+
+fn cmd_shutdown(args: &Args) {
+    or_die(client_from_args(args).shutdown());
+    println!("daemon stopped");
 }
 
 fn cmd_artifacts() {

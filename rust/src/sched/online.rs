@@ -27,7 +27,7 @@ use crate::substrate::rng::Rng;
 
 use super::engine::{UnitPool, TIE_BAND};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum OnlinePolicy {
     ErLs,
     Eft,

@@ -296,9 +296,15 @@ pub struct CancelOutcome {
 /// schedule never contains a task whose predecessor did not run.
 /// Survivors' schedules remain feasible either way (pinned by the
 /// invariant tests).
-pub struct Service<'a> {
-    plat: &'a Platform,
-    subs: &'a [Submission],
+///
+/// The struct owns clones of the platform and submissions so a daemon
+/// ([`crate::service_net`]) can keep one `Service` alive across client
+/// connections and admit tenants incrementally ([`Self::admit`]): the
+/// batch constructors clone their slices, which keeps every existing
+/// `Service::new(&plat, &subs)` call site source-compatible.
+pub struct Service {
+    plat: Platform,
+    subs: Vec<Submission>,
     orders: Vec<Vec<TaskId>>,
     engine: PolicyEngine,
     rngs: Vec<Option<Rng>>,
@@ -328,8 +334,38 @@ pub struct Service<'a> {
     any_ws: bool,
 }
 
-impl<'a> Service<'a> {
-    pub fn new(plat: &'a Platform, subs: &'a [Submission]) -> Service<'a> {
+/// Non-panicking form of the submission checks [`Service::new`]
+/// enforces; the daemon surface turns these into error responses
+/// instead of crashing the accept loop.
+pub fn validate_submission(plat: &Platform, s: &Submission) -> Result<(), String> {
+    if s.graph.n_tasks() == 0 {
+        return Err("empty submission".into());
+    }
+    // re-checked here because the fields are public (Submission::new
+    // validates, but nothing stops callers mutating afterwards)
+    if !(s.arrival.is_finite() && s.arrival >= 0.0) {
+        return Err(format!("bad arrival {}", s.arrival));
+    }
+    if requires_two_types(&s.policy) && plat.n_types() != 2 {
+        return Err(format!("{} is defined for hybrid platforms", s.policy.name()));
+    }
+    if s.graph.n_types() != plat.n_types() {
+        return Err(format!(
+            "graph/platform type count mismatch ({} vs {})",
+            s.graph.n_types(),
+            plat.n_types()
+        ));
+    }
+    if let Some(ord) = &s.order {
+        if ord.len() != s.graph.n_tasks() {
+            return Err("order must cover all tasks".into());
+        }
+    }
+    s.admission.try_validate(plat)
+}
+
+impl Service {
+    pub fn new(plat: &Platform, subs: &[Submission]) -> Service {
         Service::new_with_ideals(plat, subs, None)
     }
 
@@ -338,103 +374,167 @@ impl<'a> Service<'a> {
     /// weighted-stretch tenants do not trigger a single-tenant rerun
     /// here.  `None` computes them for the tenants that need one.
     pub fn new_with_ideals(
-        plat: &'a Platform,
-        subs: &'a [Submission],
+        plat: &Platform,
+        subs: &[Submission],
         ideals: Option<&[f64]>,
-    ) -> Service<'a> {
-        for s in subs {
-            assert!(s.graph.n_tasks() > 0, "empty submission");
-            // re-checked here because the fields are public
-            // (Submission::new validates, but nothing stops callers
-            // mutating afterwards)
-            assert!(
-                s.arrival.is_finite() && s.arrival >= 0.0,
-                "bad arrival {}",
-                s.arrival
-            );
-            if requires_two_types(&s.policy) {
-                assert!(
-                    plat.n_types() == 2,
-                    "{} is defined for hybrid platforms",
-                    s.policy.name()
-                );
-            }
-            assert_eq!(
-                s.graph.n_types(),
-                plat.n_types(),
-                "graph/platform type count mismatch"
-            );
-            s.admission.validate(plat);
-        }
+    ) -> Service {
         if let Some(v) = ideals {
             assert_eq!(v.len(), subs.len(), "one ideal makespan per submission");
         }
-
-        let orders: Vec<Vec<TaskId>> = subs.iter().map(|s| s.order_vec()).collect();
-        let placements: Vec<Vec<Option<Placement>>> = subs
-            .iter()
-            .map(|s| vec![None; s.graph.n_tasks()])
-            .collect();
-        let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize, OrdF64)>> = BinaryHeap::new();
+        let mut svc = Service::empty(plat);
         for (i, s) in subs.iter().enumerate() {
-            let r0 = ready_time(&s.graph, s.arrival, &placements[i], i, orders[i][0]);
-            heap.push(Reverse((OrdF64(s.arrival.max(r0)), i, 0, OrdF64(r0))));
+            validate_submission(plat, s).unwrap_or_else(|e| panic!("{e}"));
+            svc.push_tenant(s.clone(), ideals.map(|v| v[i]));
         }
-        let weights: Vec<Option<f64>> = subs.iter().map(|s| s.admission.weight()).collect();
-        let any_ws = weights.iter().any(Option::is_some);
-        let ws_ideals: Vec<f64> = subs
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                if weights[i].is_none() {
-                    f64::NAN
-                } else if let Some(v) = ideals {
-                    v[i]
-                } else {
-                    online_schedule(&s.graph, plat, &orders[i], &s.policy).makespan
-                }
-            })
-            .collect();
-        let caps: Vec<Option<Vec<usize>>> = subs.iter().map(|s| s.admission.caps(plat)).collect();
-        let held: Vec<Vec<BTreeMap<usize, f64>>> = caps
-            .iter()
-            .map(|c| match c {
-                Some(_) => plat.counts.iter().map(|_| BTreeMap::new()).collect(),
-                None => Vec::new(),
-            })
-            .collect();
+        svc
+    }
+
+    /// A service with no tenants yet: the daemon form.  Tenants then
+    /// enter through [`Self::admit`]; batch construction
+    /// ([`Self::new`]) is exactly `empty` + one `push_tenant` per
+    /// submission with no stream advancement in between, so the two
+    /// paths share every invariant.
+    pub fn empty(plat: &Platform) -> Service {
         Service {
-            plat,
-            subs,
-            orders,
+            plat: plat.clone(),
+            subs: Vec::new(),
+            orders: Vec::new(),
             engine: PolicyEngine::new(plat),
-            rngs: subs
-                .iter()
-                .map(|s| match s.policy {
-                    OnlinePolicy::Random(seed) => Some(Rng::new(seed)),
-                    _ => None,
-                })
-                .collect(),
-            placements,
-            latencies: subs
-                .iter()
-                .map(|s| Vec::with_capacity(s.graph.n_tasks()))
-                .collect(),
-            decisions: Vec::with_capacity(subs.iter().map(|s| s.graph.n_tasks()).sum()),
-            heap,
+            rngs: Vec::new(),
+            placements: Vec::new(),
+            latencies: Vec::new(),
+            decisions: Vec::new(),
+            heap: BinaryHeap::new(),
             ledger: plat
                 .counts
                 .iter()
                 .map(|&c| (0..c).map(|_| Vec::new()).collect())
                 .collect(),
-            cancelled: vec![None; subs.len()],
+            cancelled: Vec::new(),
             now: 0.0,
-            caps,
-            held,
-            weights,
-            ws_ideals,
-            any_ws,
+            caps: Vec::new(),
+            held: Vec::new(),
+            weights: Vec::new(),
+            ws_ideals: Vec::new(),
+            any_ws: false,
         }
+    }
+
+    /// Append one (already-validated) tenant and push its first stream
+    /// head; no existing head is disturbed.  `ideal` as in
+    /// [`Self::new_with_ideals`] (only read for weighted-stretch
+    /// tenants).
+    fn push_tenant(&mut self, sub: Submission, ideal: Option<f64>) -> usize {
+        let i = self.subs.len();
+        let order = sub.order_vec();
+        let placed: Vec<Option<Placement>> = vec![None; sub.graph.n_tasks()];
+        let r0 = ready_time(&sub.graph, sub.arrival, &placed, i, order[0]);
+        self.heap
+            .push(Reverse((OrdF64(sub.arrival.max(r0)), i, 0, OrdF64(r0))));
+        let weight = sub.admission.weight();
+        self.any_ws |= weight.is_some();
+        self.ws_ideals.push(if weight.is_none() {
+            f64::NAN
+        } else if let Some(v) = ideal {
+            v
+        } else {
+            online_schedule(&sub.graph, &self.plat, &order, &sub.policy).makespan
+        });
+        let caps = sub.admission.caps(&self.plat);
+        self.held.push(match caps {
+            Some(_) => self.plat.counts.iter().map(|_| BTreeMap::new()).collect(),
+            None => Vec::new(),
+        });
+        self.caps.push(caps);
+        self.weights.push(weight);
+        self.rngs.push(match sub.policy {
+            OnlinePolicy::Random(seed) => Some(Rng::new(seed)),
+            _ => None,
+        });
+        self.latencies.push(Vec::with_capacity(sub.graph.n_tasks()));
+        self.placements.push(placed);
+        self.cancelled.push(None);
+        self.orders.push(order);
+        self.subs.push(sub);
+        i
+    }
+
+    /// Admit one tenant into a live stream (the daemon path) and return
+    /// its tenant id.  The effective arrival is
+    /// `max(sub.arrival, now)` — decisions already taken are
+    /// irrevocable, so an arrival cannot land in the scheduler's past —
+    /// and every pending head strictly earlier than it is decided first
+    /// ([`Self::advance_before`]): those arrivals precede the new one in
+    /// the merged stream and their decisions must not see the new
+    /// tenant.  For FIFO/quota submissions with non-decreasing arrivals
+    /// this makes the incremental stream bit-identical to the batch
+    /// [`run_service`] over the same submissions (pinned by tests).
+    /// Weighted-stretch tenants are the documented exception: the batch
+    /// path can let a *future* arrival leapfrog inside a busy window
+    /// ([`Self::next_head`]), while a live service cannot see arrivals
+    /// that have not been submitted yet — incremental admission is the
+    /// online-correct behavior, and replay == rerun (re-applying the
+    /// same admit sequence) holds for every policy mix either way.
+    ///
+    /// Returns `Err` (with the service untouched) on an invalid
+    /// submission.
+    pub fn admit(&mut self, sub: Submission) -> Result<usize, String> {
+        validate_submission(&self.plat, &sub)?;
+        let mut sub = sub;
+        sub.arrival = sub.arrival.max(self.now);
+        self.advance_before(sub.arrival);
+        Ok(self.push_tenant(sub, None))
+    }
+
+    /// Decide every pending stream head with arrival time strictly
+    /// before `t` (the merged-stream prefix that is already in the past
+    /// once an event at `t` is known).
+    pub fn advance_before(&mut self, t: f64) {
+        while let Some(&Reverse((OrdF64(head), _, _, _))) = self.heap.peek() {
+            if head >= t {
+                break;
+            }
+            self.step();
+        }
+    }
+
+    /// True once every admitted task has been decided (the stream is
+    /// drained and [`Self::report`] may be called).
+    pub fn is_drained(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Number of tenants admitted so far.
+    pub fn n_tenants(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Every decision so far, in global decision order.
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.decisions
+    }
+
+    /// The placement of tenant `i`'s task `j`, if decided (and not
+    /// rewound by a cancellation).
+    pub fn placement_of(&self, i: usize, j: TaskId) -> Option<Placement> {
+        self.placements[i][j]
+    }
+
+    /// Tasks of tenant `i` placed so far (post-cancellation rewinds).
+    pub fn n_placed(&self, i: usize) -> usize {
+        self.placements[i].iter().flatten().count()
+    }
+
+    /// Virtual time at which tenant `i` was cancelled, if it was.
+    pub fn cancelled_at(&self, i: usize) -> Option<f64> {
+        self.cancelled[i]
+    }
+
+    /// The admitted submissions (arrivals are the effective,
+    /// possibly-clamped ones for tenants that entered via
+    /// [`Self::admit`]).
+    pub fn submissions(&self) -> &[Submission] {
+        &self.subs
     }
 
     /// Pop the next head to admit.  Pure-FIFO/quota services take the
@@ -527,7 +627,7 @@ impl<'a> Service<'a> {
         let p = match &self.caps[i] {
             None => self
                 .engine
-                .decide(g, self.plat, j, ready, &self.subs[i].policy, self.rngs[i].as_mut()),
+                .decide(g, &self.plat, j, ready, &self.subs[i].policy, self.rngs[i].as_mut()),
             Some(caps) => {
                 // quota path: expire finished reservations from the
                 // held-units ledger at the admission time, then restrict
@@ -564,7 +664,7 @@ impl<'a> Service<'a> {
                     .collect();
                 let p = self.engine.decide_in(
                     g,
-                    self.plat,
+                    &self.plat,
                     j,
                     ready,
                     &self.subs[i].policy,
@@ -761,7 +861,7 @@ impl<'a> Service<'a> {
                 // a weighted-stretch tenant's ideal was already computed
                 // for the reordering key (same expression, same value)
                 None if self.ws_ideals[i].is_finite() => self.ws_ideals[i],
-                None => online_schedule(&s.graph, self.plat, &self.orders[i], &s.policy)
+                None => online_schedule(&s.graph, &self.plat, &self.orders[i], &s.policy)
                     .makespan,
             };
             let flow = completion - s.arrival;
@@ -1323,5 +1423,111 @@ mod tests {
             assert_eq!(t.decision_latency.n, 30);
             assert!(t.completion >= t.arrival);
         }
+    }
+
+    #[test]
+    fn incremental_admit_matches_batch_bitwise() {
+        // the daemon invariant's foundation: admitting submissions one
+        // at a time (monotone arrivals, advancing the stream between
+        // admissions) produces the same decision stream and report as
+        // the batch constructor — bit for bit, not approximately
+        let mut rng = Rng::new(91);
+        let policies = [
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(11),
+        ];
+        for round in 0..4u64 {
+            let subs: Vec<Submission> = (0..6)
+                .map(|t| {
+                    let g = gen::hybrid_dag(&mut rng, 25, 0.12);
+                    Submission::new(
+                        g,
+                        t as f64 * (2.0 + round as f64),
+                        policies[(t + round as usize) % policies.len()].clone(),
+                    )
+                })
+                .collect();
+            let mut batch = Service::new(&plat(), &subs);
+            batch.run();
+            let mut inc = Service::empty(&plat());
+            for s in &subs {
+                assert_eq!(inc.admit(s.clone()).unwrap(), inc.n_tenants() - 1);
+            }
+            inc.run();
+            assert_eq!(batch.decisions().len(), inc.decisions().len());
+            for (a, b) in batch.decisions().iter().zip(inc.decisions()) {
+                assert_eq!((a.tenant, a.task), (b.tenant, b.task));
+                assert_eq!(a.time.to_bits(), b.time.to_bits());
+            }
+            let (ra, rb) = (batch.report(None), inc.report(None));
+            assert_eq!(ra.horizon.to_bits(), rb.horizon.to_bits());
+            for (ta, tb) in ra.tenants.iter().zip(&rb.tenants) {
+                assert_eq!(ta.schedule.placements, tb.schedule.placements);
+                assert_eq!(ta.stretch.to_bits(), tb.stretch.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn admit_clamps_late_arrivals_to_now() {
+        // once the stream has advanced past t, a submission "arriving"
+        // earlier is admitted at now (no time travel, decisions stay
+        // monotone)
+        let chain = |len: usize| {
+            let mut b = Builder::new("chain");
+            let mut prev = None;
+            for _ in 0..len {
+                let t = b.add_task("t", vec![1.0, 1.0]);
+                if let Some(p) = prev {
+                    b.add_arc(p, t);
+                }
+                prev = Some(t);
+            }
+            b.build()
+        };
+        let mut svc = Service::empty(&plat());
+        svc.admit(Submission::new(chain(4), 0.0, OnlinePolicy::Greedy))
+            .unwrap();
+        svc.advance_before(3.0);
+        assert!(svc.now() >= 2.0);
+        let id = svc
+            .admit(Submission::new(chain(1), 0.5, OnlinePolicy::Greedy))
+            .unwrap();
+        svc.run();
+        assert!(svc.submissions()[id].arrival >= 2.0, "arrival clamped on admit");
+        let first_t1 = svc
+            .decisions()
+            .iter()
+            .find(|d| d.tenant == id)
+            .unwrap()
+            .time;
+        assert!(first_t1 >= 2.0, "late arrival clamped to now, got {first_t1}");
+        for w in svc.decisions().windows(2) {
+            assert!(w[0].time <= w[1].time, "decision times must stay sorted");
+        }
+    }
+
+    #[test]
+    fn admit_rejects_invalid_submissions() {
+        let mut svc = Service::empty(&plat());
+        let mut b = Builder::new("ok");
+        b.add_task("t", vec![1.0, 1.0]);
+        let g = b.build();
+        // arrival poisoned after construction (fields are public; the
+        // daemon cannot trust Submission::new ran its asserts)
+        let mut bad = Submission::new(g.clone(), 0.0, OnlinePolicy::Eft);
+        bad.arrival = f64::NAN;
+        assert!(svc.admit(bad).is_err());
+        // graph/platform type-count mismatch
+        let mut b3 = Builder::new("threetype");
+        b3.add_task("t", vec![1.0, 1.0, 1.0]);
+        assert!(svc
+            .admit(Submission::new(b3.build(), 0.0, OnlinePolicy::Eft))
+            .is_err());
+        assert_eq!(svc.n_tenants(), 0, "rejected submissions leave no trace");
+        assert!(svc.admit(Submission::new(g, 0.0, OnlinePolicy::Eft)).is_ok());
+        assert_eq!(svc.n_tenants(), 1);
     }
 }

@@ -75,31 +75,40 @@ impl TenantPolicy {
 
     /// Validate the policy against the platform it will run on (shares
     /// in [0, 1] with at least one unit reachable, positive finite
-    /// weight, quota restricted to hybrid platforms).
+    /// weight, quota restricted to hybrid platforms).  Panics on a bad
+    /// policy; [`Self::try_validate`] is the daemon-facing form.
     pub fn validate(&self, plat: &Platform) {
+        self.try_validate(plat).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    /// [`Self::validate`] returning the violation instead of panicking,
+    /// so a service daemon can refuse the submission and stay up.
+    pub fn try_validate(&self, plat: &Platform) -> Result<(), String> {
         match self {
-            TenantPolicy::Fifo => {}
+            TenantPolicy::Fifo => Ok(()),
             TenantPolicy::Quota { cpu_share, gpu_share } => {
-                assert!(
-                    plat.n_types() == 2,
-                    "Quota shares are defined for hybrid (CPU+GPU) platforms"
-                );
-                for share in [cpu_share, gpu_share] {
-                    assert!(
-                        share.is_finite() && (0.0..=1.0).contains(share),
-                        "quota share {share} outside [0, 1]"
+                if plat.n_types() != 2 {
+                    return Err(
+                        "Quota shares are defined for hybrid (CPU+GPU) platforms".into()
                     );
                 }
-                assert!(
-                    *cpu_share > 0.0 || *gpu_share > 0.0,
-                    "a quota must leave at least one type usable"
-                );
+                for share in [cpu_share, gpu_share] {
+                    if !(share.is_finite() && (0.0..=1.0).contains(share)) {
+                        return Err(format!("quota share {share} outside [0, 1]"));
+                    }
+                }
+                if !(*cpu_share > 0.0 || *gpu_share > 0.0) {
+                    return Err("a quota must leave at least one type usable".into());
+                }
+                Ok(())
             }
             TenantPolicy::WeightedStretch { weight } => {
-                assert!(
-                    weight.is_finite() && *weight > 0.0,
-                    "weighted-stretch weight {weight} must be positive"
-                );
+                if !(weight.is_finite() && *weight > 0.0) {
+                    return Err(format!(
+                        "weighted-stretch weight {weight} must be positive"
+                    ));
+                }
+                Ok(())
             }
         }
     }

@@ -1,0 +1,78 @@
+//! Thin blocking client for the daemon protocol — one request frame
+//! out, one response frame back, over a persistent TCP connection.
+//! Used by the `hetsched submit|status|cancel|report|shutdown`
+//! subcommands and by the integration tests.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use crate::sched::service::Submission;
+use crate::substrate::json::Json;
+
+use super::wire::{self, Request};
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let writer = stream.try_clone().map_err(|e| e.to_string())?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request, await its response.  `ok:false` responses
+    /// become `Err` with the daemon's error text; the `Ok` value is the
+    /// full response object (fields beyond `ok` depend on the op).
+    pub fn call(&mut self, req: &Request) -> Result<Json, String> {
+        wire::write_frame(&mut self.writer, &wire::request_to_json(req))
+            .map_err(|e| format!("send: {e}"))?;
+        let resp = wire::read_frame(&mut self.reader)?
+            .ok_or_else(|| "daemon closed the connection".to_string())?;
+        match resp.get("ok") {
+            Some(Json::Bool(true)) => Ok(resp),
+            Some(Json::Bool(false)) => Err(match resp.get("error") {
+                Some(Json::Str(m)) => m.clone(),
+                _ => "daemon error (no message)".to_string(),
+            }),
+            _ => Err("malformed response (missing ok field)".to_string()),
+        }
+    }
+
+    /// Submit a DAG; returns the tenant id the daemon assigned.
+    pub fn submit(&mut self, sub: &Submission) -> Result<usize, String> {
+        let resp = self.call(&Request::Submit(sub.clone()))?;
+        resp.get("tenant")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| "response missing tenant id".to_string())
+    }
+
+    /// Read-only snapshot of one tenant.
+    pub fn status(&mut self, tenant: usize) -> Result<Json, String> {
+        let resp = self.call(&Request::Status { tenant })?;
+        resp.get("status")
+            .cloned()
+            .ok_or_else(|| "response missing status".to_string())
+    }
+
+    /// Cancel a tenant; returns the daemon's cancel-outcome object
+    /// (`at`, `dropped_tasks`, `released_units`).
+    pub fn cancel(&mut self, tenant: usize) -> Result<Json, String> {
+        self.call(&Request::Cancel { tenant })
+    }
+
+    /// Drain the stream and fetch the canonical report JSON.
+    pub fn report(&mut self) -> Result<Json, String> {
+        let resp = self.call(&Request::Report)?;
+        resp.get("report")
+            .cloned()
+            .ok_or_else(|| "response missing report".to_string())
+    }
+
+    /// Ask the daemon to exit (acknowledged before it goes down).
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        self.call(&Request::Shutdown).map(|_| ())
+    }
+}

@@ -1,0 +1,414 @@
+//! The daemon: a WAL-coupled deterministic scheduler core plus a
+//! std-only TCP front end.
+//!
+//! [`Core`] is the part the crash-recovery proofs run against — no
+//! sockets, no threads: every mutating op follows the write-ahead
+//! discipline *log, fsync, apply, log decisions, fsync* so that after a
+//! crash the WAL prefix always covers every acknowledged op.
+//! [`Core::open`] replays the log through the same [`Service`] code
+//! path that produced it, verifying every recomputed decision against
+//! the logged one bit for bit (see the [module docs](super)).
+//!
+//! [`serve`] wraps a `Core` in the network: the accept loop hands each
+//! connection to a reader thread, and every parsed [`Request`] is
+//! funneled through one mpsc channel into the single scheduler thread
+//! that owns the `Core`.  That channel is the serialization point: the
+//! op order the scheduler applies (and the WAL records) is the only
+//! order there is — concurrent clients race to enqueue, never to
+//! mutate.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::platform::Platform;
+use crate::sched::service::{
+    validate_submission, CancelOutcome, DecisionRecord, Service, ServiceReport, Submission,
+};
+use crate::sim::Placement;
+use crate::substrate::json::Json;
+
+use super::wal::{self, Wal, WalRecord};
+use super::wire::{self, Request};
+
+/// Configuration for [`serve`].
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address, e.g. `127.0.0.1:7477`; port 0 picks an ephemeral
+    /// port (printed, and written to `port_file` if set).
+    pub addr: String,
+    pub wal: PathBuf,
+    pub plat: Platform,
+    /// If set, the actual listening address is written here — how the
+    /// ci.sh smoke stage finds an ephemerally-bound daemon.
+    pub port_file: Option<PathBuf>,
+}
+
+/// What replaying the WAL found (reported once at startup).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplaySummary {
+    pub ops: usize,
+    pub decisions_logged: usize,
+    /// Decisions the dead daemon took but never logged (lost tail),
+    /// regenerated deterministically and re-appended on open.
+    pub decisions_regenerated: usize,
+    pub torn_tail: bool,
+}
+
+/// The deterministic daemon state: a [`Service`] whose every mutation
+/// is mirrored in (and recoverable from) a [`Wal`].
+pub struct Core {
+    plat: Platform,
+    svc: Service,
+    wal: Wal,
+}
+
+impl Core {
+    /// Open (or create) the WAL at `path` and reconstruct the service
+    /// state by replaying it.  A fresh log records the platform; an
+    /// existing log must have been written for the same platform.
+    pub fn open(path: &Path, plat: &Platform) -> Result<(Core, ReplaySummary), String> {
+        let scan = wal::recover(path)?;
+        let mut wal = Wal::open_append(path, scan.good_len)?;
+        let mut svc = Service::empty(plat);
+        let mut summary = ReplaySummary {
+            ops: 0,
+            decisions_logged: 0,
+            decisions_regenerated: 0,
+            torn_tail: scan.torn,
+        };
+
+        if scan.records.is_empty() {
+            wal.append(&WalRecord::Platform { counts: plat.counts.clone() })?;
+            wal.sync()?;
+            return Ok((Core { plat: plat.clone(), svc, wal }, summary));
+        }
+
+        let WalRecord::Platform { counts } = &scan.records[0] else {
+            return Err("WAL does not start with a platform record".into());
+        };
+        if counts != &plat.counts {
+            return Err(format!(
+                "WAL platform {:?} does not match requested {:?}",
+                counts, plat.counts
+            ));
+        }
+
+        // Re-execute the ops; every logged decision must match the
+        // recomputed stream bit for bit (replay == rerun, checked).
+        let mut pending: VecDeque<(DecisionRecord, Placement)> = VecDeque::new();
+        for (n, rec) in scan.records.iter().enumerate().skip(1) {
+            match rec {
+                WalRecord::Platform { .. } => {
+                    return Err(format!("duplicate platform record at index {n}"))
+                }
+                WalRecord::Submit { sub } => {
+                    summary.ops += 1;
+                    let before = svc.decisions().len();
+                    svc.admit(sub.clone())
+                        .map_err(|e| format!("replay: submit at index {n} rejected: {e}"))?;
+                    queue_new_decisions(&svc, before, &mut pending);
+                }
+                WalRecord::Cancel { tenant } => {
+                    summary.ops += 1;
+                    check_cancel(&svc, *tenant)
+                        .map_err(|e| format!("replay: cancel at index {n} rejected: {e}"))?;
+                    svc.cancel(*tenant);
+                }
+                WalRecord::Drain => {
+                    summary.ops += 1;
+                    let before = svc.decisions().len();
+                    svc.run();
+                    queue_new_decisions(&svc, before, &mut pending);
+                }
+                WalRecord::Decision { rec, place } => {
+                    summary.decisions_logged += 1;
+                    let (exp_rec, exp_place) = pending.pop_front().ok_or_else(|| {
+                        format!("replay: decision record at index {n} has no recomputed match")
+                    })?;
+                    if !decision_eq(rec, place, &exp_rec, &exp_place) {
+                        return Err(format!(
+                            "replay: decision mismatch at index {n}: logged \
+                             (tenant {}, task {}, time {}) vs recomputed \
+                             (tenant {}, task {}, time {}) — WAL corrupt or \
+                             non-deterministic build",
+                            rec.tenant, rec.task, rec.time,
+                            exp_rec.tenant, exp_rec.task, exp_rec.time
+                        ));
+                    }
+                }
+            }
+        }
+        // Decisions taken before the crash but lost with the tail:
+        // regenerate their records (determinism makes them identical to
+        // what the dead daemon computed).
+        for (rec, place) in pending {
+            summary.decisions_regenerated += 1;
+            wal.append(&WalRecord::Decision { rec, place })?;
+        }
+        if summary.decisions_regenerated > 0 {
+            wal.sync()?;
+        }
+        Ok((Core { plat: plat.clone(), svc, wal }, summary))
+    }
+
+    /// Admit a submission: log + fsync the op, apply it, log + fsync
+    /// the decisions it triggered.  Returns the tenant id.
+    pub fn submit(&mut self, sub: Submission) -> Result<usize, String> {
+        // validate before logging — a rejected submission must leave no
+        // trace in the WAL (replay would reject it too and refuse to
+        // start)
+        validate_submission(&self.plat, &sub)?;
+        self.wal.append(&WalRecord::Submit { sub: sub.clone() })?;
+        self.wal.sync()?;
+        let before = self.svc.decisions().len();
+        let id = self.svc.admit(sub).map_err(|e| format!("admit after validate: {e}"))?;
+        self.log_new_decisions(before)?;
+        Ok(id)
+    }
+
+    /// Cancel a tenant at the current virtual time.
+    pub fn cancel(&mut self, tenant: usize) -> Result<CancelOutcome, String> {
+        check_cancel(&self.svc, tenant)?;
+        self.wal.append(&WalRecord::Cancel { tenant })?;
+        self.wal.sync()?;
+        Ok(self.svc.cancel(tenant))
+    }
+
+    /// Drain the stream (deciding every pending head) and build the
+    /// report.  The drain is an op like any other: logged before its
+    /// decisions so a crash mid-drain replays to the same stream.
+    pub fn report(&mut self) -> Result<ServiceReport, String> {
+        if self.svc.n_tenants() == 0 {
+            return Err("no tenants submitted".into());
+        }
+        if !self.svc.is_drained() {
+            self.wal.append(&WalRecord::Drain)?;
+            self.wal.sync()?;
+            let before = self.svc.decisions().len();
+            self.svc.run();
+            self.log_new_decisions(before)?;
+        }
+        Ok(self.svc.report(None))
+    }
+
+    /// Read-only view of one tenant (no state advance, nothing logged).
+    pub fn status(&self, tenant: usize) -> Result<Json, String> {
+        if tenant >= self.svc.n_tenants() {
+            return Err(format!("no tenant {tenant}"));
+        }
+        let sub = &self.svc.submissions()[tenant];
+        Ok(Json::obj(vec![
+            ("tenant", Json::Num(tenant as f64)),
+            ("app", Json::Str(sub.graph.app.clone())),
+            ("n_tasks", Json::Num(sub.graph.n_tasks() as f64)),
+            ("n_placed", Json::Num(self.svc.n_placed(tenant) as f64)),
+            ("arrival", Json::Num(sub.arrival)),
+            (
+                "cancelled_at",
+                self.svc.cancelled_at(tenant).map_or(Json::Null, Json::Num),
+            ),
+        ]))
+    }
+
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        self.svc.decisions()
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.svc.n_tenants()
+    }
+
+    fn log_new_decisions(&mut self, before: usize) -> Result<(), String> {
+        let mut queue = VecDeque::new();
+        queue_new_decisions(&self.svc, before, &mut queue);
+        let appended = !queue.is_empty();
+        for (rec, place) in queue {
+            self.wal.append(&WalRecord::Decision { rec, place })?;
+        }
+        if appended {
+            self.wal.sync()?;
+        }
+        Ok(())
+    }
+}
+
+fn queue_new_decisions(
+    svc: &Service,
+    before: usize,
+    out: &mut VecDeque<(DecisionRecord, Placement)>,
+) {
+    for d in &svc.decisions()[before..] {
+        let place = svc
+            .placement_of(d.tenant, d.task)
+            .expect("fresh decision has a placement");
+        out.push_back((*d, place));
+    }
+}
+
+fn check_cancel(svc: &Service, tenant: usize) -> Result<(), String> {
+    if tenant >= svc.n_tenants() {
+        return Err(format!("no tenant {tenant}"));
+    }
+    if svc.cancelled_at(tenant).is_some() {
+        return Err(format!("tenant {tenant} already cancelled"));
+    }
+    Ok(())
+}
+
+/// Bitwise decision/placement equality — the replay==rerun invariant
+/// is about bits, not epsilons (and `-0.0 == 0.0` must not paper over
+/// a sign flip).
+fn decision_eq(a: &DecisionRecord, ap: &Placement, b: &DecisionRecord, bp: &Placement) -> bool {
+    a.tenant == b.tenant
+        && a.task == b.task
+        && a.time.to_bits() == b.time.to_bits()
+        && ap.ptype == bp.ptype
+        && ap.unit == bp.unit
+        && ap.start.to_bits() == bp.start.to_bits()
+        && ap.finish.to_bits() == bp.finish.to_bits()
+}
+
+// ---------------------------------------------------------------------------
+// TCP front end
+// ---------------------------------------------------------------------------
+
+type Reply = mpsc::Sender<Json>;
+
+/// Run the daemon until a client sends `shutdown`.  Blocks the calling
+/// thread.
+pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    let (core, replay) = Core::open(&cfg.wal, &cfg.plat)?;
+    println!(
+        "hetsched serve-service: listening on {local}, wal {} ({} ops replayed, \
+         {} decisions verified{}{})",
+        cfg.wal.display(),
+        replay.ops,
+        replay.decisions_logged,
+        if replay.decisions_regenerated > 0 {
+            format!(", {} regenerated", replay.decisions_regenerated)
+        } else {
+            String::new()
+        },
+        if replay.torn_tail { ", torn tail truncated" } else { "" },
+    );
+    if let Some(pf) = &cfg.port_file {
+        std::fs::write(pf, local.to_string())
+            .map_err(|e| format!("port file {}: {e}", pf.display()))?;
+    }
+
+    let (tx, rx) = mpsc::channel::<(Request, Reply)>();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // wall clock at the daemon's edge only: uptime/ops accounting —
+    // nothing here flows into a scheduling decision
+    let started = Instant::now();
+    let sched = std::thread::spawn(move || scheduler_loop(core, rx));
+
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let tx = tx.clone();
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || handle_conn(stream, tx, shutdown, local));
+    }
+    drop(tx);
+    let ops = sched.join().map_err(|_| "scheduler thread panicked".to_string())?;
+    println!(
+        "hetsched serve-service: shut down after {ops} ops in {:.3}s",
+        started.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// The single mutation point: owns the [`Core`], applies requests in
+/// channel order, answers each through its reply channel.
+fn scheduler_loop(mut core: Core, rx: mpsc::Receiver<(Request, Reply)>) -> usize {
+    let mut ops = 0usize;
+    while let Ok((req, reply)) = rx.recv() {
+        ops += 1;
+        let resp = match req {
+            Request::Submit(sub) => match core.submit(sub) {
+                Ok(tenant) => wire::ok_response(vec![("tenant", Json::Num(tenant as f64))]),
+                Err(e) => wire::err_response(&e),
+            },
+            Request::Status { tenant } => match core.status(tenant) {
+                Ok(v) => wire::ok_response(vec![("status", v)]),
+                Err(e) => wire::err_response(&e),
+            },
+            Request::Cancel { tenant } => match core.cancel(tenant) {
+                Ok(out) => wire::ok_response(vec![
+                    ("at", Json::Num(out.at)),
+                    ("dropped_tasks", Json::Num(out.dropped_tasks as f64)),
+                    ("released_units", Json::Num(out.released_units as f64)),
+                ]),
+                Err(e) => wire::err_response(&e),
+            },
+            Request::Report => match core.report() {
+                Ok(r) => wire::ok_response(vec![("report", wire::report_to_json(&r))]),
+                Err(e) => wire::err_response(&e),
+            },
+            Request::Shutdown => {
+                let _ = reply.send(wire::ok_response(vec![]));
+                break;
+            }
+        };
+        let _ = reply.send(resp);
+    }
+    ops
+}
+
+/// Per-connection reader: parse frames, forward to the scheduler, relay
+/// responses.  A protocol error answers with `ok:false` and closes the
+/// connection; the daemon stays up.
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<(Request, Reply)>,
+    shutdown: Arc<AtomicBool>,
+    local: std::net::SocketAddr,
+) {
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(Some(v)) => v,
+            Ok(None) => return, // clean EOF
+            Err(e) => {
+                let _ = wire::write_frame(&mut writer, &wire::err_response(&e));
+                return;
+            }
+        };
+        let req = match wire::request_from_json(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = wire::write_frame(&mut writer, &wire::err_response(&e));
+                continue;
+            }
+        };
+        let is_shutdown = matches!(req, Request::Shutdown);
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send((req, rtx)).is_err() {
+            let _ = wire::write_frame(&mut writer, &wire::err_response("daemon shutting down"));
+            return;
+        }
+        let resp = rrx
+            .recv()
+            .unwrap_or_else(|_| wire::err_response("daemon shutting down"));
+        let _ = wire::write_frame(&mut writer, &resp);
+        if is_shutdown {
+            shutdown.store(true, Ordering::SeqCst);
+            // poke the accept loop so it observes the flag and exits
+            let _ = TcpStream::connect(local);
+            return;
+        }
+    }
+}

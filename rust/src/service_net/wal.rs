@@ -1,0 +1,346 @@
+//! Append-only write-ahead log for the service daemon.
+//!
+//! One [`wire`] frame per record, five record kinds:
+//!
+//! * `platform` — first record of every log: the unit pool the stream
+//!   was scheduled on (replay must rebuild the identical pool).
+//! * `submit` / `cancel` / `drain` — the ops, in the authoritative
+//!   order the scheduler thread applied them.  Each op is appended and
+//!   fsync'd *before* its effects are acknowledged.
+//! * `decision` — every [`DecisionRecord`] (plus its placement) the op
+//!   generated, appended after the op record that caused it.
+//!
+//! Because decisions are deterministic functions of the op sequence,
+//! the `decision` records are redundant — and that redundancy is the
+//! point: replay re-executes the ops and *checks* each recomputed
+//! decision against the log ([`super::server::Core::open`]), turning
+//! "replay == rerun" from an assumption into a startup invariant.
+//!
+//! Crash anatomy: appends are sequential, so a crash leaves the file as
+//! (complete records)* + (at most one torn tail).  [`recover`]
+//! truncates the torn tail — a half-written record belongs to an op
+//! that was never acknowledged — while a malformed record *before* the
+//! tail is real corruption and refuses to load.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::sched::service::{DecisionRecord, Submission};
+use crate::sim::Placement;
+use crate::substrate::json::Json;
+
+use super::wire;
+
+/// One WAL record (see module docs).
+#[derive(Clone, Debug)]
+pub enum WalRecord {
+    Platform { counts: Vec<usize> },
+    Submit { sub: Submission },
+    Cancel { tenant: usize },
+    Drain,
+    Decision { rec: DecisionRecord, place: Placement },
+}
+
+pub fn record_to_json(r: &WalRecord) -> Json {
+    match r {
+        WalRecord::Platform { counts } => Json::obj(vec![
+            ("k", Json::Str("platform".into())),
+            (
+                "counts",
+                Json::Arr(counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+        ]),
+        WalRecord::Submit { sub } => Json::obj(vec![
+            ("k", Json::Str("submit".into())),
+            ("sub", wire::submission_to_json(sub)),
+        ]),
+        WalRecord::Cancel { tenant } => Json::obj(vec![
+            ("k", Json::Str("cancel".into())),
+            ("tenant", Json::Num(*tenant as f64)),
+        ]),
+        WalRecord::Drain => Json::obj(vec![("k", Json::Str("drain".into()))]),
+        WalRecord::Decision { rec, place } => Json::obj(vec![
+            ("k", Json::Str("decision".into())),
+            ("tenant", Json::Num(rec.tenant as f64)),
+            ("task", Json::Num(rec.task as f64)),
+            ("time", Json::Num(rec.time)),
+            ("ptype", Json::Num(place.ptype as f64)),
+            ("unit", Json::Num(place.unit as f64)),
+            ("start", Json::Num(place.start)),
+            ("finish", Json::Num(place.finish)),
+        ]),
+    }
+}
+
+pub fn record_from_json(v: &Json) -> Result<WalRecord, String> {
+    let kind = v.get("k").and_then(Json::as_str).ok_or("record: missing k")?;
+    let idx = |k: &str| -> Result<usize, String> {
+        v.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("{kind} record: bad {k}"))
+    };
+    let num = |k: &str| -> Result<f64, String> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{kind} record: bad {k}"))
+    };
+    Ok(match kind {
+        "platform" => {
+            let counts: Option<Vec<usize>> = v
+                .get("counts")
+                .and_then(Json::as_arr)
+                .ok_or("platform record: missing counts")?
+                .iter()
+                .map(Json::as_usize)
+                .collect();
+            WalRecord::Platform {
+                counts: counts.ok_or("platform record: bad count")?,
+            }
+        }
+        "submit" => WalRecord::Submit {
+            sub: wire::submission_from_json(v.get("sub").ok_or("submit record: missing sub")?)?,
+        },
+        "cancel" => WalRecord::Cancel { tenant: idx("tenant")? },
+        "drain" => WalRecord::Drain,
+        "decision" => WalRecord::Decision {
+            rec: DecisionRecord {
+                tenant: idx("tenant")?,
+                task: idx("task")?,
+                time: num("time")?,
+            },
+            place: Placement {
+                ptype: idx("ptype")?,
+                unit: idx("unit")?,
+                start: num("start")?,
+                finish: num("finish")?,
+            },
+        },
+        other => return Err(format!("unknown record kind '{other}'")),
+    })
+}
+
+/// Outcome of scanning a WAL file.
+#[derive(Debug)]
+pub struct Recovery {
+    pub records: Vec<WalRecord>,
+    /// Byte length of the longest complete-record prefix; anything
+    /// beyond it is a torn tail to truncate.
+    pub good_len: u64,
+    /// Whether a torn tail was present (and dropped).
+    pub torn: bool,
+}
+
+/// Scan a WAL file, decoding every complete record and locating the
+/// truncation point.  A missing file recovers to the empty log.  A
+/// malformed record that is *not* the final one is corruption (`Err`);
+/// a malformed or newline-less final line is a torn tail.
+pub fn recover(path: &Path) -> Result<Recovery, String> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Recovery { records: Vec::new(), good_len: 0, torn: false })
+        }
+        Err(e) => return Err(format!("{}: {e}", path.display())),
+    };
+    // scan raw bytes: offsets must index the file itself, and a crash
+    // can tear a multibyte character (lossy str conversion would shift
+    // every offset after it)
+    let mut records = Vec::new();
+    let mut good_len = 0u64;
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let Some(rel) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+            // trailing bytes with no newline: torn tail
+            return Ok(Recovery { records, good_len, torn: true });
+        };
+        let decoded = std::str::from_utf8(&bytes[pos..pos + rel])
+            .map_err(|e| e.to_string())
+            .and_then(wire::decode_frame)
+            .and_then(|v| record_from_json(&v));
+        match decoded {
+            Ok(r) => {
+                records.push(r);
+                pos += rel + 1;
+                good_len = pos as u64;
+            }
+            // a malformed final line is a torn tail; earlier ones are
+            // corruption (sequential appends cannot produce them)
+            Err(_) if pos + rel + 1 >= bytes.len() => {
+                return Ok(Recovery { records, good_len, torn: true });
+            }
+            Err(e) => {
+                return Err(format!(
+                    "corrupt WAL record at byte {pos} (not the final record): {e}"
+                ))
+            }
+        }
+    }
+    Ok(Recovery { records, good_len, torn: false })
+}
+
+/// Append handle over a WAL file.  [`Self::append`] buffers through the
+/// OS write; [`Self::sync`] is the durability point (`fdatasync`) —
+/// the server syncs once per op, after the op record and all its
+/// decision records.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Wal {
+    /// Open for appending, truncating any torn tail found by a prior
+    /// [`recover`] scan.
+    pub fn open_append(path: &Path, good_len: u64) -> Result<Wal, String> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .append(false)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        file.set_len(good_len)
+            .map_err(|e| format!("{}: truncate: {e}", path.display()))?;
+        let mut file = file;
+        use std::io::Seek;
+        file.seek(std::io::SeekFrom::End(0))
+            .map_err(|e| format!("{}: seek: {e}", path.display()))?;
+        Ok(Wal { file, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn append(&mut self, rec: &WalRecord) -> Result<(), String> {
+        self.file
+            .write_all(wire::encode_frame(&record_to_json(rec)).as_bytes())
+            .map_err(|e| format!("{}: append: {e}", self.path.display()))
+    }
+
+    /// Make everything appended so far durable before acknowledging.
+    pub fn sync(&mut self) -> Result<(), String> {
+        self.file
+            .sync_data()
+            .map_err(|e| format!("{}: fsync: {e}", self.path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+    use crate::sched::online::OnlinePolicy;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hetsched_wal_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        let mut b = Builder::new("w");
+        b.add_task("t", vec![1.0, 2.0]);
+        vec![
+            WalRecord::Platform { counts: vec![2, 1] },
+            WalRecord::Submit {
+                sub: Submission::new(b.build(), 0.5, OnlinePolicy::Eft),
+            },
+            WalRecord::Decision {
+                rec: DecisionRecord { tenant: 0, task: 0, time: 0.5 },
+                place: Placement { ptype: 0, unit: 1, start: 0.5, finish: 1.5 },
+            },
+            WalRecord::Cancel { tenant: 0 },
+            WalRecord::Drain,
+        ]
+    }
+
+    fn encode_all(recs: &[WalRecord]) -> String {
+        recs.iter()
+            .map(|r| wire::encode_frame(&record_to_json(r)))
+            .collect()
+    }
+
+    #[test]
+    fn records_roundtrip_through_frames() {
+        for r in sample_records() {
+            let line = wire::encode_frame(&record_to_json(&r));
+            let v = wire::decode_frame(line.strip_suffix('\n').unwrap()).unwrap();
+            let back = record_from_json(&v).unwrap();
+            assert_eq!(
+                record_to_json(&back).to_string(),
+                record_to_json(&r).to_string()
+            );
+        }
+    }
+
+    #[test]
+    fn recover_scans_complete_logs() {
+        let path = tmp("complete.wal");
+        let text = encode_all(&sample_records());
+        std::fs::write(&path, &text).unwrap();
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.records.len(), 5);
+        assert!(!rec.torn);
+        assert_eq!(rec.good_len, text.len() as u64);
+    }
+
+    #[test]
+    fn recover_truncates_torn_tail_at_every_cut() {
+        let recs = sample_records();
+        let text = encode_all(&recs);
+        // boundaries of complete records, as byte offsets
+        let mut bounds = vec![0usize];
+        for (i, b) in text.bytes().enumerate() {
+            if b == b'\n' {
+                bounds.push(i + 1);
+            }
+        }
+        let path = tmp("torn.wal");
+        for cut in 0..=text.len() {
+            std::fs::write(&path, &text.as_bytes()[..cut]).unwrap();
+            let rec = recover(&path).unwrap_or_else(|e| panic!("cut {cut}: {e}"));
+            // the recovered prefix is the last record boundary <= cut
+            let n_complete = bounds.iter().filter(|&&b| b <= cut && b > 0).count();
+            assert_eq!(rec.records.len(), n_complete, "cut {cut}");
+            assert_eq!(rec.good_len, bounds[n_complete] as u64, "cut {cut}");
+            assert_eq!(rec.torn, cut != bounds[n_complete], "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn recover_rejects_mid_log_corruption() {
+        let path = tmp("corrupt.wal");
+        let recs = sample_records();
+        let mut text = encode_all(&recs[..2]);
+        text.push_str("garbage line\n");
+        text.push_str(&encode_all(&recs[2..3]));
+        std::fs::write(&path, &text).unwrap();
+        assert!(recover(&path).unwrap_err().contains("corrupt WAL record"));
+    }
+
+    #[test]
+    fn recover_missing_file_is_empty_log() {
+        let rec = recover(&tmp("never_written.wal")).unwrap();
+        assert!(rec.records.is_empty());
+        assert_eq!(rec.good_len, 0);
+    }
+
+    #[test]
+    fn open_append_truncates_and_extends() {
+        let path = tmp("append.wal");
+        let recs = sample_records();
+        let mut text = encode_all(&recs[..2]);
+        text.push_str("12 {\"k\":\"drai"); // torn tail
+        std::fs::write(&path, &text).unwrap();
+        let scan = recover(&path).unwrap();
+        assert!(scan.torn);
+        let mut wal = Wal::open_append(&path, scan.good_len).unwrap();
+        wal.append(&recs[3]).unwrap();
+        wal.sync().unwrap();
+        let again = recover(&path).unwrap();
+        assert_eq!(again.records.len(), 3);
+        assert!(!again.torn);
+        assert!(matches!(again.records[2], WalRecord::Cancel { tenant: 0 }));
+    }
+}

@@ -1,0 +1,437 @@
+//! Wire format: one frame = `<len> <json>\n` where `<len>` is the
+//! decimal byte length of the JSON payload.  The writer never emits a
+//! raw newline inside a payload (strings are escaped), so a frame is
+//! always exactly one line; the length prefix makes truncation
+//! detectable (a torn tail fails the length or parse check), which is
+//! why the WAL reuses this framing for its records.
+//!
+//! Also home to the JSON (de)serializers for the protocol's domain
+//! values — [`OnlinePolicy`], [`TenantPolicy`], [`Submission`], requests
+//! and the canonical [`ServiceReport`] projection — so the TCP layer
+//! and the WAL speak one dialect.
+
+use std::io::{BufRead, Write};
+
+use crate::graph::io as gio;
+use crate::sched::online::OnlinePolicy;
+use crate::sched::service::{ServiceReport, Submission, TenantPolicy};
+use crate::substrate::json::{self, Json};
+
+/// Encode one frame, trailing newline included.
+pub fn encode_frame(v: &Json) -> String {
+    let body = v.to_string();
+    format!("{} {body}\n", body.len())
+}
+
+/// Decode one frame line (without its trailing newline): check the
+/// length prefix against the payload, then parse the payload.
+pub fn decode_frame(line: &str) -> Result<Json, String> {
+    let (len, body) = line
+        .split_once(' ')
+        .ok_or_else(|| "frame missing length prefix".to_string())?;
+    let len: usize = len
+        .parse()
+        .map_err(|_| format!("bad frame length prefix '{len}'"))?;
+    if body.len() != len {
+        return Err(format!(
+            "frame length mismatch: prefix {len}, payload {}",
+            body.len()
+        ));
+    }
+    json::parse(body)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> std::io::Result<()> {
+    w.write_all(encode_frame(v).as_bytes())?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on clean EOF, `Err` on a torn or
+/// malformed frame.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Option<Json>, String> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).map_err(|e| e.to_string())?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let Some(stripped) = line.strip_suffix('\n') else {
+        return Err("torn frame (EOF before newline)".into());
+    };
+    decode_frame(stripped).map(Some)
+}
+
+// ---------------------------------------------------------------------------
+// Domain value codecs
+// ---------------------------------------------------------------------------
+
+pub fn policy_to_json(p: &OnlinePolicy) -> Json {
+    match p {
+        // the Random seed is a u64; it travels as a string because a
+        // JSON number is an f64 (lossy past 2^53)
+        OnlinePolicy::Random(seed) => Json::obj(vec![
+            ("kind", Json::Str("random".into())),
+            ("seed", Json::Str(seed.to_string())),
+        ]),
+        other => Json::obj(vec![("kind", Json::Str(policy_kind(other).into()))]),
+    }
+}
+
+fn policy_kind(p: &OnlinePolicy) -> &'static str {
+    match p {
+        OnlinePolicy::ErLs => "er-ls",
+        OnlinePolicy::Eft => "eft",
+        OnlinePolicy::Greedy => "greedy",
+        OnlinePolicy::Random(_) => "random",
+        OnlinePolicy::R1 => "r1",
+        OnlinePolicy::R2 => "r2",
+        OnlinePolicy::R3 => "r3",
+    }
+}
+
+pub fn policy_from_json(v: &Json) -> Result<OnlinePolicy, String> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("policy: missing kind")?;
+    Ok(match kind {
+        "er-ls" => OnlinePolicy::ErLs,
+        "eft" => OnlinePolicy::Eft,
+        "greedy" => OnlinePolicy::Greedy,
+        "random" => {
+            let seed = v
+                .get("seed")
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse::<u64>().ok())
+                .ok_or("policy: random needs a u64 seed")?;
+            OnlinePolicy::Random(seed)
+        }
+        "r1" => OnlinePolicy::R1,
+        "r2" => OnlinePolicy::R2,
+        "r3" => OnlinePolicy::R3,
+        other => return Err(format!("unknown policy '{other}'")),
+    })
+}
+
+pub fn admission_to_json(a: &TenantPolicy) -> Json {
+    match a {
+        TenantPolicy::Fifo => Json::obj(vec![("kind", Json::Str("fifo".into()))]),
+        TenantPolicy::Quota { cpu_share, gpu_share } => Json::obj(vec![
+            ("kind", Json::Str("quota".into())),
+            ("cpu_share", Json::Num(*cpu_share)),
+            ("gpu_share", Json::Num(*gpu_share)),
+        ]),
+        TenantPolicy::WeightedStretch { weight } => Json::obj(vec![
+            ("kind", Json::Str("stretch".into())),
+            ("weight", Json::Num(*weight)),
+        ]),
+    }
+}
+
+pub fn admission_from_json(v: &Json) -> Result<TenantPolicy, String> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("admission: missing kind")?;
+    let num = |k: &str| -> Result<f64, String> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("admission: missing {k}"))
+    };
+    Ok(match kind {
+        "fifo" => TenantPolicy::Fifo,
+        "quota" => TenantPolicy::Quota {
+            cpu_share: num("cpu_share")?,
+            gpu_share: num("gpu_share")?,
+        },
+        "stretch" => TenantPolicy::WeightedStretch { weight: num("weight")? },
+        other => return Err(format!("unknown admission '{other}'")),
+    })
+}
+
+/// Serialize a submission losslessly (the graph codec round-trips
+/// names/times/arcs exactly; floats use the shortest-round-trip
+/// writer).  The arrival order is written only when it differs from the
+/// default task-id order.
+pub fn submission_to_json(s: &Submission) -> Json {
+    let mut pairs = vec![
+        ("graph", gio::to_json(&s.graph)),
+        ("arrival", Json::Num(s.arrival)),
+        ("policy", policy_to_json(&s.policy)),
+        ("admission", admission_to_json(&s.admission)),
+    ];
+    let order = s.order_vec();
+    if order.iter().enumerate().any(|(i, &t)| i != t) {
+        pairs.push((
+            "order",
+            Json::Arr(order.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+pub fn submission_from_json(v: &Json) -> Result<Submission, String> {
+    let graph = gio::from_json(v.get("graph").ok_or("submission: missing graph")?)?;
+    let arrival = v
+        .get("arrival")
+        .and_then(Json::as_f64)
+        .ok_or("submission: missing arrival")?;
+    if !(arrival.is_finite() && arrival >= 0.0) {
+        return Err(format!("submission: bad arrival {arrival}"));
+    }
+    let policy = policy_from_json(v.get("policy").ok_or("submission: missing policy")?)?;
+    let admission =
+        admission_from_json(v.get("admission").ok_or("submission: missing admission")?)?;
+    let mut sub = Submission::new(graph, arrival, policy).with_admission(admission);
+    if let Some(ord) = v.get("order") {
+        let order: Option<Vec<usize>> = ord
+            .as_arr()
+            .ok_or("submission: order must be an array")?
+            .iter()
+            .map(Json::as_usize)
+            .collect();
+        let order = order.ok_or("submission: bad order entry")?;
+        if order.len() != sub.graph.n_tasks() {
+            return Err("submission: order must cover all tasks".into());
+        }
+        sub = sub.with_order(order);
+    }
+    Ok(sub)
+}
+
+// ---------------------------------------------------------------------------
+// Requests and responses
+// ---------------------------------------------------------------------------
+
+/// A client request, one frame each; the server answers each with one
+/// response frame (`{"ok":true,...}` or `{"ok":false,"error":...}`).
+#[derive(Clone, Debug)]
+pub enum Request {
+    Submit(Submission),
+    Status { tenant: usize },
+    Cancel { tenant: usize },
+    Report,
+    Shutdown,
+}
+
+pub fn request_to_json(r: &Request) -> Json {
+    match r {
+        Request::Submit(sub) => Json::obj(vec![
+            ("op", Json::Str("submit".into())),
+            ("sub", submission_to_json(sub)),
+        ]),
+        Request::Status { tenant } => Json::obj(vec![
+            ("op", Json::Str("status".into())),
+            ("tenant", Json::Num(*tenant as f64)),
+        ]),
+        Request::Cancel { tenant } => Json::obj(vec![
+            ("op", Json::Str("cancel".into())),
+            ("tenant", Json::Num(*tenant as f64)),
+        ]),
+        Request::Report => Json::obj(vec![("op", Json::Str("report".into()))]),
+        Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
+    }
+}
+
+pub fn request_from_json(v: &Json) -> Result<Request, String> {
+    let op = v.get("op").and_then(Json::as_str).ok_or("missing op")?;
+    let tenant = || -> Result<usize, String> {
+        v.get("tenant")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("{op}: missing tenant"))
+    };
+    Ok(match op {
+        "submit" => Request::Submit(submission_from_json(
+            v.get("sub").ok_or("submit: missing sub")?,
+        )?),
+        "status" => Request::Status { tenant: tenant()? },
+        "cancel" => Request::Cancel { tenant: tenant()? },
+        "report" => Request::Report,
+        "shutdown" => Request::Shutdown,
+        other => return Err(format!("unknown op '{other}'")),
+    })
+}
+
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields)
+}
+
+pub fn err_response(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+    ])
+}
+
+/// Canonical (deterministic) JSON projection of a [`ServiceReport`]:
+/// every virtual-time metric, placement and decision, but *not* the
+/// wall-clock decision-latency summaries — those are measurement noise
+/// and would break the byte-for-byte replay==rerun comparison the WAL
+/// recovery guarantee is pinned on.
+pub fn report_to_json(r: &ServiceReport) -> Json {
+    let tenants: Vec<Json> = r
+        .tenants
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("tenant", Json::Num(t.tenant as f64)),
+                ("app", Json::Str(t.app.clone())),
+                ("n_tasks", Json::Num(t.n_tasks as f64)),
+                ("n_placed", Json::Num(t.n_placed as f64)),
+                ("arrival", Json::Num(t.arrival)),
+                ("completion", Json::Num(t.completion)),
+                ("flow_time", Json::Num(t.flow_time)),
+                ("ideal_makespan", Json::Num(t.ideal_makespan)),
+                ("stretch", Json::Num(t.stretch)),
+                (
+                    "cancelled_at",
+                    t.cancelled_at.map_or(Json::Null, Json::Num),
+                ),
+                (
+                    "kept_tasks",
+                    Json::Arr(t.kept_tasks.iter().map(|&j| Json::Num(j as f64)).collect()),
+                ),
+                (
+                    "placements",
+                    Json::Arr(
+                        t.schedule
+                            .placements
+                            .iter()
+                            .map(|p| {
+                                Json::Arr(vec![
+                                    Json::Num(p.ptype as f64),
+                                    Json::Num(p.unit as f64),
+                                    Json::Num(p.start),
+                                    Json::Num(p.finish),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let decisions: Vec<Json> = r
+        .decisions
+        .iter()
+        .map(|d| {
+            Json::Arr(vec![
+                Json::Num(d.tenant as f64),
+                Json::Num(d.task as f64),
+                Json::Num(d.time),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("tenants", Json::Arr(tenants)),
+        ("decisions", Json::Arr(decisions)),
+        ("horizon", Json::Num(r.horizon)),
+        ("total_tasks", Json::Num(r.total_tasks as f64)),
+        ("mean_stretch", Json::Num(r.mean_stretch)),
+        ("max_stretch", Json::Num(r.max_stretch)),
+        ("stretch_p99", Json::Num(r.stretch_p99)),
+        ("jain_index", Json::Num(r.jain_index)),
+        (
+            "utilization",
+            Json::Arr(r.utilization.iter().map(|&u| Json::Num(u)).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Builder;
+
+    fn sample_sub() -> Submission {
+        let mut b = Builder::new("wire");
+        let a = b.add_task("A", vec![1.5, 0.5]);
+        let c = b.add_task("B", vec![2.0, 4.0]);
+        b.add_arc(a, c);
+        Submission::new(b.build(), 3.25, OnlinePolicy::Random(u64::MAX))
+            .with_admission(TenantPolicy::Quota { cpu_share: 0.25, gpu_share: 1.0 })
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let v = Json::obj(vec![("x", Json::Str("a\nb".into()))]);
+        let f = encode_frame(&v);
+        assert!(f.ends_with('\n'));
+        // escaped newline: the frame is still a single line
+        assert_eq!(f.matches('\n').count(), 1);
+        assert_eq!(decode_frame(f.strip_suffix('\n').unwrap()).unwrap(), v);
+    }
+
+    #[test]
+    fn frame_rejects_torn_and_tampered() {
+        let f = encode_frame(&Json::obj(vec![("k", Json::Num(1.0))]));
+        let line = f.strip_suffix('\n').unwrap();
+        // cut anywhere inside the payload: length check must fail
+        for cut in 0..line.len() {
+            assert!(decode_frame(&line[..cut]).is_err(), "cut at {cut}");
+        }
+        assert!(decode_frame("notalen {}").is_err());
+    }
+
+    #[test]
+    fn read_frame_reports_missing_newline_as_torn() {
+        let f = encode_frame(&Json::Null);
+        let torn = &f[..f.len() - 1];
+        let mut r = std::io::BufReader::new(torn.as_bytes());
+        assert!(read_frame(&mut r).is_err());
+        let mut r = std::io::BufReader::new(f.as_bytes());
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Json::Null));
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn submission_roundtrip_is_lossless() {
+        let sub = sample_sub();
+        let v = json::parse(&submission_to_json(&sub).to_string()).unwrap();
+        let back = submission_from_json(&v).unwrap();
+        assert_eq!(back.graph.proc_times, sub.graph.proc_times);
+        assert_eq!(back.graph.succs, sub.graph.succs);
+        assert_eq!(back.arrival.to_bits(), sub.arrival.to_bits());
+        assert_eq!(back.policy, OnlinePolicy::Random(u64::MAX));
+        assert_eq!(back.admission, sub.admission);
+        // a non-default order travels too (two independent tasks,
+        // reversed arrival order)
+        let mut b = Builder::new("pair");
+        b.add_task("A", vec![1.0, 1.0]);
+        b.add_task("B", vec![2.0, 2.0]);
+        let sub = Submission::new(b.build(), 0.0, OnlinePolicy::Eft).with_order(vec![1, 0]);
+        let back = submission_from_json(
+            &json::parse(&submission_to_json(&sub).to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.order_vec(), vec![1, 0]);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [
+            Request::Submit(sample_sub()),
+            Request::Status { tenant: 3 },
+            Request::Cancel { tenant: 0 },
+            Request::Report,
+            Request::Shutdown,
+        ] {
+            let v = json::parse(&request_to_json(&req).to_string()).unwrap();
+            let back = request_from_json(&v).unwrap();
+            // compare through the codec (Request has no PartialEq: the
+            // Submission graph does not derive it)
+            assert_eq!(
+                request_to_json(&back).to_string(),
+                request_to_json(&req).to_string()
+            );
+        }
+        assert!(request_from_json(&Json::obj(vec![("op", Json::Str("x".into()))])).is_err());
+        // a negative tenant index must not saturate into tenant 0
+        let v = Json::obj(vec![
+            ("op", Json::Str("cancel".into())),
+            ("tenant", Json::Num(-1.0)),
+        ]);
+        assert!(request_from_json(&v).is_err());
+    }
+}

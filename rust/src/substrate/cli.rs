@@ -73,6 +73,38 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Strict form of [`Self::usize`]: a present-but-unparseable value
+    /// (`--m abc`) or a value-less occurrence (`--m --full`, which the
+    /// parser demotes to a switch) is an `Err` naming the flag, instead
+    /// of silently running with the default.  Absent flag = default.
+    pub fn try_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.try_parse(name, default)
+    }
+
+    /// Strict form of [`Self::f64`]; see [`Self::try_usize`].
+    pub fn try_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        self.try_parse(name, default)
+    }
+
+    /// Strict form of [`Self::u64`]; see [`Self::try_usize`].
+    pub fn try_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        self.try_parse(name, default)
+    }
+
+    fn try_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        if let Some(s) = self.str_flag(name) {
+            s.parse()
+                .map_err(|_| format!("--{name}: cannot parse '{s}'"))
+        } else if self.has(name) {
+            // `--name` with no value was parsed as a switch; a typed
+            // getter asking for it means the value went missing (e.g.
+            // `--weight --full` ate the weight)
+            Err(format!("--{name} requires a value"))
+        } else {
+            Ok(default)
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -113,6 +145,30 @@ mod tests {
         assert_eq!(a.usize("m", 1), 64);
         assert_eq!(a.f64("tol", 1.0), 0.5);
         assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn try_getters_reject_unparseable_values() {
+        // regression: `--weight abc` used to silently run with the
+        // default weight
+        let a = parse(&["service", "--weight", "abc", "--m", "16"]);
+        let err = a.try_f64("weight", 1.0).unwrap_err();
+        assert!(err.contains("--weight") && err.contains("abc"), "{err}");
+        assert_eq!(a.try_usize("m", 1), Ok(16));
+        assert!(a.try_usize("m-bad", 1).is_ok(), "absent flag keeps default");
+        assert!(parse(&["x", "--seed", "-1"]).try_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn try_getters_reject_switch_demoted_flags() {
+        // regression: `--weight --full` used to demote --weight to a
+        // switch and silently drop the admission weight
+        let a = parse(&["service", "--weight", "--full"]);
+        let err = a.try_f64("weight", 1.0).unwrap_err();
+        assert!(err.contains("--weight requires a value"), "{err}");
+        assert!(a.has("full"));
+        // a genuine switch queried as a switch is untouched
+        assert!(a.has("weight"));
     }
 
     #[test]

@@ -37,8 +37,21 @@ impl Json {
         }
     }
 
+    /// The value as an index: `Some` only for a non-negative integer
+    /// representable in `usize`.  A saturating `as usize` cast here
+    /// would turn a corrupt field (`-3`, `1e300`, `NaN`) into a
+    /// plausible index like `0` — every caller (manifest, LP* cache,
+    /// graph wire decode, WAL replay) wants a hard `None` instead.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        match self.as_f64() {
+            // fract() == 0.0 is false for NaN and ±inf (their fract is
+            // NaN); 2^64 = usize::MAX as f64 exactly, and every float
+            // strictly below it casts losslessly into range
+            Some(x) if x.fract() == 0.0 && x >= 0.0 && x < usize::MAX as f64 => {
+                Some(x as usize)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -60,9 +73,21 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // JSON has no NaN/Infinity tokens; writing Rust's
+                // Display forms would poison the file for any parser
+                // (including ours).  Policy: non-finite numbers
+                // serialize as `null` — lossy by design, and the only
+                // choice that keeps every written document valid JSON.
+                let neg_zero = *x == 0.0 && x.is_sign_negative();
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 && !neg_zero {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
+                    // covers fractional values and -0.0 (whose `as i64`
+                    // cast would drop the sign: it prints as "-0");
+                    // Rust's shortest-round-trip Display re-parses to
+                    // the same bits
                     let _ = write!(out, "{x}");
                 }
             }
@@ -332,6 +357,71 @@ mod tests {
         assert_eq!(parse("42").unwrap().as_f64().unwrap(), 42.0);
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_write_as_null() {
+        // invalid-JSON regression: the old writer emitted Display forms
+        // ("NaN", "inf", "-inf") that no parser accepts
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(x).to_string();
+            assert_eq!(s, "null", "{x} must serialize as null");
+            assert_eq!(parse(&s).unwrap(), Json::Null);
+        }
+        // and embedded in a document the whole write stays parseable
+        let doc = Json::obj(vec![
+            ("stretch", Json::Num(f64::NAN)),
+            ("ideal", Json::Num(f64::INFINITY)),
+            ("ok", Json::Num(2.5)),
+        ]);
+        let back = parse(&doc.to_string()).unwrap();
+        assert_eq!(back.get("stretch").unwrap(), &Json::Null);
+        assert_eq!(back.get("ideal").unwrap(), &Json::Null);
+        assert_eq!(back.get("ok").unwrap(), &Json::Num(2.5));
+    }
+
+    #[test]
+    fn finite_numbers_roundtrip_bitwise() {
+        // -0.0 used to take the `as i64` branch and come back as +0.0
+        for x in [
+            -0.0,
+            0.0,
+            1.0,
+            -17.0,
+            0.1,
+            -1e-300,
+            3.141592653589793,
+            1e15,
+            -1e15,
+            9.007199254740991e15,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+        ] {
+            let s = Json::Num(x).to_string();
+            let back = parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                x.to_bits(),
+                "{x} wrote as {s} but re-parsed as {back}"
+            );
+        }
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+    }
+
+    #[test]
+    fn as_usize_rejects_non_indices() {
+        // saturating-cast regression: -3.0 used to come back as Some(0)
+        for bad in [-3.0, -0.5, 0.5, 1e300, f64::NAN, f64::INFINITY, -1e300] {
+            assert_eq!(Json::Num(bad).as_usize(), None, "{bad} is not an index");
+        }
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(4096.0).as_usize(), Some(4096));
+        assert_eq!(
+            Json::Num(9.007199254740991e15).as_usize(),
+            Some(9007199254740991)
+        );
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Crash-recovery property suite for the service daemon WAL
+//! (`service_net`): the replay == rerun invariant, pinned mechanically.
+//!
+//! For ~20 seeded contended multi-tenant draws (mixed policies, small
+//! hybrid pool so tenants genuinely fight over units, a mid-stream
+//! cancel), drive a reference [`Core`] through the full op sequence and
+//! drain its report.  Then sever the WAL **at every record boundary**
+//! (including byte 0 and the full file) plus one torn, half-written
+//! final record, reopen a `Core` from the severed prefix, re-apply the
+//! ops the prefix had not yet logged, and require:
+//!
+//!   (a) the resumed decision stream is bit-identical (`to_bits` on
+//!       times) to the uninterrupted run's, and
+//!   (b) the canonical report JSON (`wire::report_to_json`, which
+//!       excludes wall-clock fields) is byte-identical,
+//!
+//! for every cut point.  Corruption that is *not* a torn tail must
+//! refuse to start: a flipped byte mid-log and a logged decision that
+//! disagrees with the recomputed one are both hard errors.
+
+use std::path::{Path, PathBuf};
+
+use hetsched::graph::gen;
+use hetsched::platform::Platform;
+use hetsched::sched::online::OnlinePolicy;
+use hetsched::sched::service::{DecisionRecord, Submission};
+use hetsched::service_net::server::Core;
+use hetsched::service_net::{wal, wire};
+use hetsched::substrate::rng::Rng;
+
+#[derive(Clone)]
+enum Op {
+    Submit(Submission),
+    Cancel(usize),
+}
+
+fn apply(core: &mut Core, op: &Op) {
+    match op {
+        Op::Submit(sub) => {
+            core.submit(sub.clone()).expect("valid submission admitted");
+        }
+        Op::Cancel(t) => {
+            core.cancel(*t).expect("live tenant cancelled");
+        }
+    }
+}
+
+/// Ops already durable in a WAL prefix (each op record is written
+/// before it is applied, so this is exactly how many ops to skip when
+/// resuming).
+fn ops_logged(records: &[wal::WalRecord]) -> usize {
+    records
+        .iter()
+        .filter(|r| {
+            matches!(
+                r,
+                wal::WalRecord::Submit { .. }
+                    | wal::WalRecord::Cancel { .. }
+                    | wal::WalRecord::Drain
+            )
+        })
+        .count()
+}
+
+/// Byte offsets one past each `\n` — the record boundaries, including 0
+/// and the full length.
+fn boundaries(bytes: &[u8]) -> Vec<usize> {
+    let mut out = vec![0];
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            out.push(i + 1);
+        }
+    }
+    out
+}
+
+fn contended_draw(seed: u64) -> (Platform, Vec<Op>) {
+    let mut rng = Rng::new(0x5747_1000 + seed);
+    let plat = Platform::hybrid(3, 1);
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed),
+    ];
+    let mut ops = Vec::new();
+    for t in 0..5usize {
+        let g = gen::hybrid_dag(&mut rng, 12, 0.15);
+        // tight arrival gaps: tenant t+1 lands while t is mid-stream
+        let sub = Submission::new(g, t as f64 * 1.5, policies[t % 4].clone());
+        ops.push(Op::Submit(sub));
+        if t == 2 {
+            ops.push(Op::Cancel(1));
+        }
+    }
+    (plat, ops)
+}
+
+fn run_reference(dir: &Path, plat: &Platform, ops: &[Op]) -> (Vec<DecisionRecord>, String) {
+    let path = dir.join("reference.wal");
+    let (mut core, summary) = Core::open(&path, plat).expect("fresh wal opens");
+    assert_eq!(summary.ops, 0);
+    assert!(!summary.torn_tail);
+    for op in ops {
+        apply(&mut core, op);
+    }
+    let report = wire::report_to_json(&core.report().expect("drains")).to_string();
+    (core.decisions().to_vec(), report)
+}
+
+fn resume_and_finish(
+    path: &Path,
+    plat: &Platform,
+    ops: &[Op],
+    expect_torn: bool,
+) -> (Vec<DecisionRecord>, String) {
+    let scan = wal::recover(path).expect("severed prefix recovers");
+    let skip = ops_logged(&scan.records);
+    let (mut core, summary) = Core::open(path, plat).expect("severed prefix opens");
+    assert_eq!(summary.torn_tail, expect_torn, "torn flag at {path:?}");
+    for op in ops.iter().skip(skip) {
+        apply(&mut core, op);
+    }
+    let report = wire::report_to_json(&core.report().expect("drains")).to_string();
+    (core.decisions().to_vec(), report)
+}
+
+fn assert_streams_identical(a: &[DecisionRecord], b: &[DecisionRecord], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: decision counts differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!((x.tenant, x.task), (y.tenant, y.task), "{ctx}");
+        assert_eq!(x.time.to_bits(), y.time.to_bits(), "{ctx}");
+    }
+}
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hetsched_wal_recovery").join(name);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+#[test]
+fn replay_equals_rerun_at_every_record_boundary() {
+    for seed in 0..20u64 {
+        let dir = scratch_dir(&format!("draw{seed}"));
+        let (plat, ops) = contended_draw(seed);
+        let (ref_decisions, ref_report) = run_reference(&dir, &plat, &ops);
+        let bytes = std::fs::read(dir.join("reference.wal")).expect("read reference wal");
+        assert_eq!(*bytes.last().unwrap(), b'\n', "wal ends on a record boundary");
+
+        let cut_path = dir.join("cut.wal");
+        for b in boundaries(&bytes) {
+            std::fs::write(&cut_path, &bytes[..b]).expect("write severed prefix");
+            let (dec, rep) = resume_and_finish(&cut_path, &plat, &ops, false);
+            let ctx = format!("seed {seed}, cut at byte {b}/{}", bytes.len());
+            assert_streams_identical(&ref_decisions, &dec, &ctx);
+            assert_eq!(ref_report, rep, "{ctx}: report JSON differs");
+        }
+
+        // one torn, half-written final record: sever mid-line
+        let torn_at = bytes.len() - 2;
+        std::fs::write(&cut_path, &bytes[..torn_at]).expect("write torn prefix");
+        let (dec, rep) = resume_and_finish(&cut_path, &plat, &ops, true);
+        let ctx = format!("seed {seed}, torn final record");
+        assert_streams_identical(&ref_decisions, &dec, &ctx);
+        assert_eq!(ref_report, rep, "{ctx}: report JSON differs");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn resumed_wal_is_byte_identical_to_uninterrupted_log() {
+    // stronger than state equality: after resume + finish, the WAL
+    // *file* converges to the uninterrupted one (same records in the
+    // same order), because regenerated decisions are bit-identical
+    let dir = scratch_dir("wal_bytes");
+    let (plat, ops) = contended_draw(99);
+    run_reference(&dir, &plat, &ops);
+    let bytes = std::fs::read(dir.join("reference.wal")).expect("read reference wal");
+
+    let cut_path = dir.join("cut.wal");
+    for b in boundaries(&bytes) {
+        std::fs::write(&cut_path, &bytes[..b]).expect("write severed prefix");
+        resume_and_finish(&cut_path, &plat, &ops, false);
+        let resumed = std::fs::read(&cut_path).expect("read resumed wal");
+        assert_eq!(
+            bytes, resumed,
+            "wal after resume from byte {b} diverges from uninterrupted log"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_log_corruption_refuses_to_start() {
+    let dir = scratch_dir("corrupt");
+    let (plat, ops) = contended_draw(7);
+    run_reference(&dir, &plat, &ops);
+    let mut bytes = std::fs::read(dir.join("reference.wal")).expect("read reference wal");
+    // flip a byte well inside the log (first record's payload)
+    bytes[10] ^= 0x01;
+    let bad = dir.join("flipped.wal");
+    std::fs::write(&bad, &bytes).expect("write corrupted wal");
+    assert!(
+        Core::open(&bad, &plat).is_err(),
+        "mid-log corruption must refuse to start"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn logged_decision_disagreeing_with_replay_refuses_to_start() {
+    let dir = scratch_dir("mismatch");
+    let (plat, ops) = contended_draw(8);
+    run_reference(&dir, &plat, &ops);
+    let scan = wal::recover(&dir.join("reference.wal")).expect("scan");
+    let mut records = scan.records;
+    let di = records
+        .iter()
+        .position(|r| matches!(r, wal::WalRecord::Decision { .. }))
+        .expect("log has decisions");
+    if let wal::WalRecord::Decision { rec, .. } = &mut records[di] {
+        rec.task += 1;
+    }
+    let mut text = String::new();
+    for r in &records {
+        text.push_str(&wire::encode_frame(&wal::record_to_json(r)));
+    }
+    let bad = dir.join("tampered.wal");
+    std::fs::write(&bad, text).expect("write tampered wal");
+    let err = Core::open(&bad, &plat).unwrap_err();
+    assert!(err.contains("mismatch"), "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn platform_mismatch_refuses_to_start() {
+    let dir = scratch_dir("platform");
+    let (plat, ops) = contended_draw(9);
+    run_reference(&dir, &plat, &ops);
+    let other = Platform::hybrid(4, 2);
+    let err = Core::open(&dir.join("reference.wal"), &other).unwrap_err();
+    assert!(err.contains("platform"), "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -515,6 +515,8 @@ fn in_det_modules(rel: &str) -> bool {
 
 fn wallclock_allowed(rel: &str) -> bool {
     rel.starts_with("rust/src/coordinator/")
+        // daemon edge: uptime/ops accounting only, never scheduling input
+        || rel.starts_with("rust/src/service_net/")
         || rel == "rust/src/substrate/bench.rs"
         || rel == "rust/src/main.rs"
         || rel.starts_with("rust/benches/")
@@ -698,7 +700,7 @@ fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
                     R4,
                     t.line,
                     "SystemTime outside the wall-clock allowlist (coordinator/, \
-                     substrate/bench.rs, main.rs, benches)"
+                     service_net/, substrate/bench.rs, main.rs, benches)"
                         .into(),
                 ),
                 "Instant"
@@ -1106,6 +1108,9 @@ let l: &'static str = s;
         assert!(ok2.is_empty(), "{ok2:?}");
         let (ok3, _) = lint_source("rust/benches/perf_hot_paths.rs", &fixture("r4_bad.rs"));
         assert!(ok3.is_empty(), "{ok3:?}");
+        // the daemon edge (uptime accounting) is allowlisted too
+        let (ok4, _) = lint_source("rust/src/service_net/server.rs", &fixture("r4_bad.rs"));
+        assert!(ok4.is_empty(), "{ok4:?}");
     }
 
     #[test]
