@@ -98,6 +98,43 @@ else
     echo "(cargo not installed; skipping daemon smoke)"
 fi
 
+echo "== trace determinism: two fresh daemon runs write byte-identical JSONL =="
+if cargo --version >/dev/null 2>&1; then
+    # the obs contract, end to end over real TCP: the --trace-out stream
+    # carries virtual time only, so the same workload against two fresh
+    # daemons must produce byte-identical trace files; while we're here,
+    # the metrics and explain surfaces must serve
+    tdir="$(mktemp -d)"
+    hs=target/release/hetsched
+    for i in 1 2; do
+        "$hs" serve-service --addr 127.0.0.1:0 --m 4 --k 2 \
+            --wal "$tdir/run$i.wal" --port-file "$tdir/port$i" \
+            --trace-out "$tdir/trace$i.jsonl" >"$tdir/daemon$i.log" 2>&1 &
+        tdaemon=$!
+        for _ in $(seq 1 100); do [[ -s "$tdir/port$i" ]] && break; sleep 0.1; done
+        [[ -s "$tdir/port$i" ]] || { cat "$tdir/daemon$i.log" >&2; exit 1; }
+        taddr="$(cat "$tdir/port$i")"
+        "$hs" submit --addr "$taddr" --app potrf --nb 4 --bs 64 --arrival 0 >/dev/null
+        "$hs" submit --addr "$taddr" --app getrf --nb 3 --bs 64 --arrival 5 --policy eft >/dev/null
+        "$hs" report --addr "$taddr" >/dev/null
+        "$hs" metrics --addr "$taddr" | grep -q 'svc_decisions' \
+            || { echo "metrics surface missing svc_decisions" >&2; exit 1; }
+        "$hs" shutdown --addr "$taddr" >/dev/null
+        wait "$tdaemon" 2>/dev/null || true
+    done
+    [[ -s "$tdir/trace1.jsonl" ]] || { echo "trace file missing or empty" >&2; exit 1; }
+    if ! diff -u "$tdir/trace1.jsonl" "$tdir/trace2.jsonl"; then
+        echo "trace determinism FAILED: two fresh runs wrote different traces" >&2
+        exit 1
+    fi
+    "$hs" explain --wal "$tdir/run1.wal" --task 0:0 | grep -q 'rule:' \
+        || { echo "explain output missing its rule line" >&2; exit 1; }
+    echo "trace determinism OK: byte-identical JSONL across two runs; metrics + explain serve"
+    rm -rf "$tdir"
+else
+    echo "(cargo not installed; skipping trace determinism)"
+fi
+
 if [[ "${1:-}" == "--perf" ]]; then
     echo "== perf gate: hetlint ANALYSIS.json clean =="
     if [[ ! -s ANALYSIS.json ]]; then
@@ -211,6 +248,31 @@ print(f"lp gate OK: warm {warm:.3f} s <= cold {cold:.3f} s ({r['speedup_warm_vs_
 PY
     fi
     cat BENCH_lp.json
+
+    echo "== perf gate: obs no-op overhead on the contended service bench (writes BENCH_obs.json) =="
+    cargo bench --bench obs_overhead
+    if [[ ! -s BENCH_obs.json ]]; then
+        echo "BENCH_obs.json missing or empty" >&2
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - <<'PY' || exit 1
+import json, sys
+with open("BENCH_obs.json") as f:
+    r = json.load(f)
+noop = r["noop"]["tasks_per_sec"]
+if noop < 10_000.0:
+    sys.exit(f"no-op-sink service throughput {noop:.0f} tasks/s below the 10k floor")
+pct = r["recording_overhead_pct"]
+if not (-50.0 <= pct <= 100.0):
+    sys.exit(f"recording-sink overhead {pct:.1f}% outside the sane [-50, 100]% band")
+print(
+    f"obs gate OK: noop {noop:.0f} tasks/s, recording {r['recording']['tasks_per_sec']:.0f} "
+    f"({pct:+.1f}%, {r['recording']['events_per_decision']:.2f} events/decision)"
+)
+PY
+    fi
+    cat BENCH_obs.json
 fi
 
 echo "CI OK"

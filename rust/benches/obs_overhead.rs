@@ -1,0 +1,133 @@
+//! Bench: observability overhead on the contended service workload.
+//!
+//! Runs the same 50 DAGs × 1000 tasks × 32-CPU + 8-GPU stream (the
+//! `service_throughput` instance, FIFO admission) twice: once with the
+//! production no-op sink path (tracing off — the default for every
+//! caller) and once with a recording sink draining after the run, and
+//! writes BENCH_obs.json so the overhead trajectory is tracked PR over
+//! PR.  Two acceptances:
+//!
+//! * the no-op path must hold the service-mode throughput floor
+//!   (10k scheduled tasks/s) — the enforceable form of "instrumentation
+//!   with tracing off costs nothing a gate can see";
+//! * full recording must stay within 2x of the no-op path (events are
+//!   heap-allocated payloads; the contract is cheap-when-off, bounded
+//!   -when-on).
+//!
+//! The `ci.sh --perf` gate re-checks both rows from the JSON.
+
+use std::time::Duration;
+
+use hetsched::graph::gen;
+use hetsched::platform::Platform;
+use hetsched::sched::online::{online_by_id, OnlinePolicy};
+use hetsched::sched::service::{run_service_with_ideals, Service, Submission};
+use hetsched::substrate::bench::{bench_with, black_box, BenchOpts};
+use hetsched::substrate::json::Json;
+use hetsched::substrate::rng::Rng;
+
+fn main() {
+    let plat = Platform::hybrid(32, 8);
+    let policies = [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy];
+    let mut rng = Rng::new(2027);
+    let subs: Vec<Submission> = (0..50)
+        .map(|t| {
+            let g = gen::hybrid_dag(&mut rng, 1000, 0.004);
+            Submission::new(g, t as f64 * 40.0, policies[t % policies.len()].clone())
+        })
+        .collect();
+    let total_tasks: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+    println!(
+        "== obs overhead: {} tenants x 1000 tasks on {} ==",
+        subs.len(),
+        plat.label()
+    );
+
+    // time the streaming engine only (ideals precomputed, as in the
+    // throughput bench)
+    let ideals: Vec<f64> = subs
+        .iter()
+        .map(|s| online_by_id(&s.graph, &plat, &s.policy).makespan)
+        .collect();
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(300),
+        measure: Duration::from_millis(2000),
+        min_iters: 3,
+        max_iters: 100_000,
+    };
+
+    // non-perturbation sanity before timing: tracing on and off place
+    // identically (the obs_parity suite pins this bitwise; here it
+    // guards the bench itself against comparing different schedules)
+    let plain = run_service_with_ideals(&plat, &subs, Some(&ideals));
+    let mut traced_svc = Service::new_with_ideals(&plat, &subs, Some(&ideals));
+    traced_svc.enable_trace();
+    traced_svc.run();
+    let n_events = traced_svc.take_trace().len();
+    let traced = traced_svc.report(None);
+    assert_eq!(plain.decisions.len(), traced.decisions.len());
+    assert_eq!(plain.horizon.to_bits(), traced.horizon.to_bits());
+
+    let noop = bench_with("service 50x1000 (noop sink)", &opts, || {
+        black_box(run_service_with_ideals(&plat, &subs, Some(&ideals)).horizon);
+    });
+    println!("{}", noop.report());
+    let rec = bench_with("service 50x1000 (recording sink)", &opts, || {
+        let mut svc = Service::new_with_ideals(&plat, &subs, Some(&ideals));
+        svc.enable_trace();
+        svc.run();
+        black_box(svc.take_trace().len());
+        black_box(svc.report(None).horizon);
+    });
+    println!("{}", rec.report());
+
+    let noop_tps = noop.throughput(total_tasks as f64);
+    let rec_tps = rec.throughput(total_tasks as f64);
+    let overhead_pct =
+        (rec.mean.as_secs_f64() / noop.mean.as_secs_f64() - 1.0) * 100.0;
+    println!(
+        "    -> noop {noop_tps:.0} tasks/s | recording {rec_tps:.0} tasks/s \
+         ({overhead_pct:+.1}% , {n_events} events, {:.2} events/decision)",
+        n_events as f64 / plain.decisions.len() as f64
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("obs_overhead".into())),
+        ("tenants", Json::Num(subs.len() as f64)),
+        ("tasks_total", Json::Num(total_tasks as f64)),
+        ("platform", Json::Str(plat.label())),
+        (
+            "noop",
+            Json::obj(vec![
+                ("mean_ms", Json::Num(noop.mean.as_secs_f64() * 1e3)),
+                ("p95_ms", Json::Num(noop.p95.as_secs_f64() * 1e3)),
+                ("tasks_per_sec", Json::Num(noop_tps)),
+            ]),
+        ),
+        (
+            "recording",
+            Json::obj(vec![
+                ("mean_ms", Json::Num(rec.mean.as_secs_f64() * 1e3)),
+                ("p95_ms", Json::Num(rec.p95.as_secs_f64() * 1e3)),
+                ("tasks_per_sec", Json::Num(rec_tps)),
+                ("events", Json::Num(n_events as f64)),
+                (
+                    "events_per_decision",
+                    Json::Num(n_events as f64 / plain.decisions.len() as f64),
+                ),
+            ]),
+        ),
+        ("recording_overhead_pct", Json::Num(overhead_pct)),
+    ]);
+    std::fs::write("BENCH_obs.json", out.to_string()).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json");
+
+    assert!(
+        noop_tps >= 10_000.0,
+        "no-op-sink service throughput regressed: {noop_tps:.0} tasks/s"
+    );
+    assert!(
+        rec.mean.as_secs_f64() <= noop.mean.as_secs_f64() * 2.0,
+        "recording-sink overhead {overhead_pct:.1}% exceeds the 2x bound"
+    );
+}

@@ -29,6 +29,7 @@ pub mod graph;
 pub mod algos;
 pub mod alloc;
 pub mod lp;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod service_net;

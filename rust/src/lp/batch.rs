@@ -41,6 +41,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::{EventKind, Sink};
 use crate::substrate::pool::WorkQueue;
 
 use super::pdhg::{DriveOpts, PdhgState, RustChunk, StopReason};
@@ -95,6 +96,8 @@ struct Slot {
     /// dependents that still need `iterates`
     seed_consumers: usize,
     done: Option<LpSolution>,
+    /// why the solve stopped (for post-join trace emission)
+    stopped_for: Option<StopReason>,
 }
 
 /// Closes the queue if a worker panics, so its siblings blocked in
@@ -127,6 +130,45 @@ pub fn solve_batch_full(
     jobs: Vec<BatchJob>,
     workers: usize,
 ) -> Vec<(LpSolution, Option<(Vec<f64>, Vec<f64>)>)> {
+    solve_batch_inner(jobs, workers)
+        .into_iter()
+        .map(|(sol, kept, _)| (sol, kept))
+        .collect()
+}
+
+/// [`solve_batch`] with an event sink.  Worker interleaving is
+/// nondeterministic, so no per-chunk events cross the pool; instead one
+/// `lp-done` span per job (iteration count, stop reason) is emitted
+/// *after* the join, in job-index order — the same events on every run
+/// because per-LP trajectories are scheduling-independent.  Virtual
+/// time is the job's own iteration count; no wall clock is read.
+pub fn solve_batch_traced(
+    jobs: Vec<BatchJob>,
+    workers: usize,
+    sink: &mut dyn Sink,
+) -> Vec<LpSolution> {
+    let full = solve_batch_inner(jobs, workers);
+    let mut sols = Vec::with_capacity(full.len());
+    for (i, (sol, _, stop)) in full.into_iter().enumerate() {
+        if sink.enabled() {
+            sink.emit(
+                sol.iters as f64,
+                EventKind::LpDone {
+                    lp: i,
+                    iters: sol.iters as u64,
+                    stop: stop.label(),
+                },
+            );
+        }
+        sols.push(sol);
+    }
+    sols
+}
+
+fn solve_batch_inner(
+    jobs: Vec<BatchJob>,
+    workers: usize,
+) -> Vec<(LpSolution, Option<(Vec<f64>, Vec<f64>)>, StopReason)> {
     let n = jobs.len();
     if n == 0 {
         return Vec::new();
@@ -159,6 +201,7 @@ pub fn solve_batch_full(
                 iterates: None,
                 seed_consumers: dependents[i].len(),
                 done: None,
+                stopped_for: None,
             })
         })
         .collect();
@@ -237,6 +280,7 @@ pub fn solve_batch_full(
                     }
                     if stopped {
                         let state = slot.state.take().unwrap();
+                        slot.stopped_for = state.stop_reason();
                         // materialize final iterates only for consumers:
                         // dependents still to seed, or a caller keep flag
                         if slot.seed_consumers > 0 || slot.job.keep_iterates {
@@ -265,12 +309,13 @@ pub fn solve_batch_full(
         .map(|s| {
             let slot = s.into_inner().unwrap();
             let sol = slot.done.expect("batch drained with unfinished job");
+            let stop = slot.stopped_for.expect("finished job has a stop reason");
             let kept = if slot.job.keep_iterates {
                 slot.iterates
             } else {
                 None
             };
-            (sol, kept)
+            (sol, kept, stop)
         })
         .collect()
 }
@@ -407,6 +452,40 @@ mod tests {
         );
         assert!((warm.obj + 1.5).abs() < 2e-3);
         assert!(warm.iters <= full[0].0.iters + 250);
+    }
+
+    #[test]
+    fn traced_batch_matches_untraced_and_orders_done_spans() {
+        use crate::obs::{EventKind, RecordingSink};
+        let bs = [0.5, 0.9, 1.3, 1.7];
+        let mk_jobs = || -> Vec<BatchJob> {
+            bs.iter()
+                .map(|&b| BatchJob::cold(knapsack(b), DriveOpts::default()))
+                .collect()
+        };
+        let plain = solve_batch(mk_jobs(), 3);
+        let mut sink = RecordingSink::new();
+        let traced = solve_batch_traced(mk_jobs(), 3, &mut sink);
+        assert_eq!(plain.len(), traced.len());
+        for (a, b) in plain.iter().zip(&traced) {
+            assert_eq!(a.obj, b.obj);
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.z, b.z);
+        }
+        // one lp-done span per job, in job-index order, despite the
+        // nondeterministic worker interleaving inside the pool
+        let events = sink.take();
+        assert_eq!(events.len(), bs.len());
+        for (i, (e, sol)) in events.iter().zip(&traced).enumerate() {
+            match &e.kind {
+                EventKind::LpDone { lp, iters, stop } => {
+                    assert_eq!(*lp, i, "done spans must keep job order");
+                    assert_eq!(*iters as usize, sol.iters);
+                    assert_eq!(*stop, "converged");
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
     }
 
     #[test]

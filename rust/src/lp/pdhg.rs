@@ -13,6 +13,8 @@
 //!   the primal/dual step ratio (PDLP's primal-weight update), stop on a
 //!   certified relative duality gap.
 
+use crate::obs::{EventKind, NoopSink, Sink};
+
 use super::scale::ruiz;
 use super::{LpSolution, SparseLp};
 
@@ -565,6 +567,17 @@ pub enum StopReason {
     Budget,
 }
 
+impl StopReason {
+    /// Stable tag used in `lp-done` trace events.
+    pub fn label(self) -> &'static str {
+        match self {
+            StopReason::Converged => "converged",
+            StopReason::Stalled => "stalled",
+            StopReason::Budget => "budget",
+        }
+    }
+}
+
 /// The reified outer PDHG loop: everything [`drive`] used to keep on its
 /// stack, packaged so a solve can be advanced one chunk at a time.  This
 /// is what lets the batched driver ([`super::batch`]) interleave many
@@ -656,11 +669,23 @@ impl<B: ChunkBackend> PdhgState<B> {
     /// Advance one chunk; returns `true` once the solve has stopped
     /// (see [`Self::stop_reason`]).  Stepping a stopped state is a no-op.
     pub fn step(&mut self) -> bool {
+        self.step_traced(0, &mut NoopSink)
+    }
+
+    /// [`Self::step`] with an event sink: per chunk, an `lp-chunk`
+    /// residual sample (iteration count as the virtual clock — the LP
+    /// loop, like the scheduler core, never reads the wall clock) and,
+    /// when the solve stops, one `lp-done` span naming the stop reason.
+    /// `lp_id` labels this solve in a batched stream.  With a
+    /// [`NoopSink`] this *is* `step` — pinned bitwise by
+    /// `state_stepping_matches_drive_exactly` and the obs parity suite.
+    pub fn step_traced(&mut self, lp_id: usize, sink: &mut dyn Sink) -> bool {
         if self.stop.is_some() {
             return true;
         }
         if self.iters >= self.max_iters {
             self.stop = Some(StopReason::Budget);
+            self.emit_done(lp_id, sink);
             return true;
         }
         let tau = self.eta / self.omega;
@@ -675,6 +700,18 @@ impl<B: ChunkBackend> PdhgState<B> {
         } else {
             res.last
         };
+        if sink.enabled() {
+            sink.emit(
+                self.iters as f64,
+                EventKind::LpChunk {
+                    lp: lp_id,
+                    iters: self.iters as u64,
+                    pres: diag.pres,
+                    dres: diag.dres,
+                    gap: diag.gap(),
+                },
+            );
+        }
         self.best_dobj = self.best_dobj.max(res.last.dobj.max(res.avg.dobj));
         if diag.score() < self.best_score {
             self.best_score = diag.score();
@@ -683,6 +720,7 @@ impl<B: ChunkBackend> PdhgState<B> {
         }
         if self.best.converged(self.tol) {
             self.stop = Some(StopReason::Converged);
+            self.emit_done(lp_id, sink);
             return true;
         }
         if self.best_score < self.score_at_last_check * 0.98 {
@@ -693,6 +731,7 @@ impl<B: ChunkBackend> PdhgState<B> {
             if self.chunks_since_improvement >= 40 {
                 // practical floor for this backend/precision
                 self.stop = Some(StopReason::Stalled);
+                self.emit_done(lp_id, sink);
                 return true;
             }
         }
@@ -707,9 +746,22 @@ impl<B: ChunkBackend> PdhgState<B> {
         self.omega = (target.clamp(self.omega / 1.3, self.omega * 1.3)).clamp(1e-3, 1e3);
         if self.iters >= self.max_iters {
             self.stop = Some(StopReason::Budget);
+            self.emit_done(lp_id, sink);
             return true;
         }
         false
+    }
+
+    /// One `lp-done` span for the just-set stop reason (no-op when the
+    /// sink is disabled).
+    fn emit_done(&self, lp_id: usize, sink: &mut dyn Sink) {
+        if sink.enabled() {
+            let stop = self.stop.map_or("budget", StopReason::label);
+            sink.emit(
+                self.iters as f64,
+                EventKind::LpDone { lp: lp_id, iters: self.iters as u64, stop },
+            );
+        }
     }
 
     pub fn stop_reason(&self) -> Option<StopReason> {
@@ -932,6 +984,37 @@ mod tests {
         assert_eq!(a.iters, b.iters);
         assert_eq!(a.gap, b.gap);
         assert_eq!(a.z, b.z);
+    }
+
+    #[test]
+    fn traced_stepping_matches_untraced_and_emits_residuals() {
+        use crate::obs::{EventKind, RecordingSink};
+        let lp = knapsack();
+        let opts = DriveOpts::default();
+        let a = solve_rust(&lp, &opts);
+        let mut st = PdhgState::new(&lp, &opts, |scaled| RustChunk::new(scaled, 250));
+        let mut sink = RecordingSink::new();
+        while !st.step_traced(7, &mut sink) {}
+        let b = st.into_solution(&lp);
+        assert_eq!(a.obj, b.obj);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.z, b.z);
+        let events = sink.take();
+        let chunks = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::LpChunk { lp: 7, .. }))
+            .count();
+        assert!(chunks >= 1, "at least one residual sample per solve");
+        let dones: Vec<_> = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::LpDone { .. }))
+            .collect();
+        assert_eq!(dones.len(), 1, "exactly one lp-done span");
+        if let EventKind::LpDone { lp, stop, iters } = &dones[0].kind {
+            assert_eq!(*lp, 7);
+            assert_eq!(*stop, "converged");
+            assert_eq!(*iters as usize, b.iters);
+        }
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //!   lower-bounds  run the Theorem 1/2/4 adversarial instances
 //!   serve         live coordinator run (worker threads)
 //!   service       multi-tenant streaming service simulation
+//!   metrics       fetch a running daemon's metrics snapshot
+//!   explain       replay a WAL and explain one task's placement
 //!   artifacts     show the AOT artifact manifest
 
 use hetsched::algos::{run_offline, solve_hlp, solve_qhlp, Offline};
@@ -26,7 +28,8 @@ use hetsched::platform::Platform;
 use hetsched::runtime::LpBackendKind;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
 use hetsched::sched::service::{run_service, Submission, TenantPolicy};
-use hetsched::service_net::{serve, Client, DaemonConfig};
+use hetsched::obs::MetricsReport;
+use hetsched::service_net::{explain_from_wal, serve, Client, DaemonConfig};
 use hetsched::sim::{validate, validate_realized, validate_service};
 use hetsched::substrate::cli::Args;
 use hetsched::workloads::{chameleon, forkjoin, Instance, Scale};
@@ -48,6 +51,8 @@ fn main() {
         Some("status") => cmd_status(&args),
         Some("cancel") => cmd_cancel(&args),
         Some("report") => cmd_report(&args),
+        Some("metrics") => cmd_metrics(&args),
+        Some("explain") => cmd_explain(&args),
         Some("shutdown") => cmd_shutdown(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => usage(),
@@ -70,12 +75,15 @@ fn usage() {
          serve      (gen flags) --m M --k K --policy P [--time-scale S]\n  \
          service    --tenants N --tasks T --m M --k K [--gap G] [--seed S] \
          [--admission fifo|quota|stretch] [--cpu-share F --gpu-share F] [--weight W]\n  \
-         serve-service --addr HOST:PORT --wal FILE --m M --k K [--port-file FILE]\n  \
+         serve-service --addr HOST:PORT --wal FILE --m M --k K [--port-file FILE] \
+         [--trace-out FILE]\n  \
          submit     --addr HOST:PORT (gen flags) [--arrival T] [--policy P] \
          [--admission A ...]\n  \
          status     --addr HOST:PORT --tenant I\n  \
          cancel     --addr HOST:PORT --tenant I\n  \
          report     --addr HOST:PORT\n  \
+         metrics    --addr HOST:PORT [--json]\n  \
+         explain    --wal FILE --task TENANT:TASK\n  \
          shutdown   --addr HOST:PORT\n  \
          artifacts"
     );
@@ -505,7 +513,7 @@ fn cmd_serve(args: &Args) {
         report.wall
     );
     println!(
-        "decision latency: p50 {:.1} us, p95 {:.1} us",
+        "dispatch latency (edge-measured): p50 {:.1} us, p95 {:.1} us",
         report.decision_latency.p50 * 1e6,
         report.decision_latency.p95 * 1e6
     );
@@ -592,6 +600,7 @@ fn cmd_serve_service(args: &Args) {
             or_die(args.try_usize("k", 4)),
         ),
         port_file: args.str_flag("port-file").map(std::path::PathBuf::from),
+        trace_out: args.str_flag("trace-out").map(std::path::PathBuf::from),
     };
     or_die(serve(&cfg));
 }
@@ -631,6 +640,34 @@ fn cmd_report(args: &Args) {
     // drained daemons with the same WAL print byte-identical reports
     let report = or_die(client_from_args(args).report());
     println!("{report}");
+}
+
+fn cmd_metrics(args: &Args) {
+    // merged snapshot: replay-stable core counters + daemon-edge
+    // registry (op counts, WAL bytes, edge latency histogram)
+    let json = or_die(client_from_args(args).metrics());
+    if args.has("json") {
+        println!("{json}");
+    } else {
+        print!("{}", or_die(MetricsReport::from_json(&json)).render());
+    }
+}
+
+fn parse_task_spec(spec: &str) -> Result<(usize, usize), String> {
+    let (t, j) = spec
+        .split_once(':')
+        .ok_or_else(|| format!("--task must be TENANT:TASK, got {spec:?}"))?;
+    let tenant = t.parse().map_err(|_| format!("bad tenant in --task {spec:?}"))?;
+    let task = j.parse().map_err(|_| format!("bad task in --task {spec:?}"))?;
+    Ok((tenant, task))
+}
+
+fn cmd_explain(args: &Args) {
+    // offline: replays the WAL through a tracing Service (replay ==
+    // rerun, so the explanation describes the original run exactly)
+    let wal = std::path::PathBuf::from(args.string("wal", "service.wal"));
+    let (tenant, task) = or_die(parse_task_spec(&args.string("task", "0:0")));
+    println!("{}", or_die(explain_from_wal(&wal, tenant, task)));
 }
 
 fn cmd_shutdown(args: &Args) {

@@ -1,0 +1,240 @@
+//! The event grammar and its deterministic JSONL form.
+//!
+//! Every event is `{seq, t, ev, ...}`: `seq` the sink-assigned monotone
+//! sequence number, `t` the *virtual* time of the decision it describes
+//! (never a wall-clock reading), `ev` the kind tag.  Serialization goes
+//! through `substrate::json` — object keys live in a `BTreeMap`, the
+//! float writer is shortest-round-trip — so the same event stream
+//! always yields the same bytes, which is what lets ci.sh assert two
+//! `--trace-out` runs `diff` clean.
+
+use crate::substrate::json::Json;
+
+/// One trace event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// Monotone sequence number assigned by the sink.
+    pub seq: u64,
+    /// Virtual time of the described decision/sample.
+    pub vtime: f64,
+    pub kind: EventKind,
+}
+
+/// A rejected candidate inside the tie band of a winning decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alt {
+    pub ptype: usize,
+    pub unit: usize,
+    pub finish: f64,
+}
+
+/// Per-type admission constraint in force at decision time (the
+/// service's quota path; `All` everywhere on unconstrained decisions).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Restrict {
+    All,
+    Only(Vec<usize>),
+    Banned,
+}
+
+impl Restrict {
+    /// Compact display form: `all`, `only[2,5]`, `banned`.
+    pub fn label(&self) -> String {
+        match self {
+            Restrict::All => "all".to_string(),
+            Restrict::Only(units) => {
+                let ids: Vec<String> = units.iter().map(|u| u.to_string()).collect();
+                format!("only[{}]", ids.join(","))
+            }
+            Restrict::Banned => "banned".to_string(),
+        }
+    }
+}
+
+/// The span of one irrevocable placement decision: which rule fired,
+/// what was considered, what was rejected inside the tie band, and
+/// what admission constraints applied.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionEvent {
+    /// Owning tenant (0 for single-stream schedulers).
+    pub tenant: usize,
+    pub task: usize,
+    /// Policy name (`ER-LS`, `EFT`, ... or `HEFT`/`EST`/`List`).
+    pub policy: &'static str,
+    /// The rule path taken — e.g. `erls-step1`, `r2-flip`, `eft`.
+    pub rule: &'static str,
+    /// Candidates examined by the selection scan.
+    pub candidates: usize,
+    /// Candidates that tied the incumbent within ±`TIE_BAND` during the
+    /// scan (1 = the winner was never challenged).
+    pub tie_cluster: usize,
+    /// Band-tied candidates the winner displaced (populated only when
+    /// the sink records).
+    pub alternatives: Vec<Alt>,
+    /// Per-type restriction state (empty = unconstrained decision path).
+    pub restricted: Vec<Restrict>,
+    pub ptype: usize,
+    pub unit: usize,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// Event payloads.  `&'static str` labels keep the disabled path
+/// allocation-free.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// One placement decision (online engine, EST, HEFT, list, service).
+    Decision(DecisionEvent),
+    /// Depth of a ready queue / stream heap at a decision point.
+    Queue { scope: &'static str, depth: usize },
+    /// Gap-index state probed for one HEFT decision.
+    GapProbe { task: usize, ptype: usize, gaps: usize },
+    /// One PDHG chunk: cumulative iterations + residual sample.
+    LpChunk { lp: usize, iters: u64, pres: f64, dres: f64, gap: f64 },
+    /// One LP finished (emitted in job-index order by the batch driver).
+    LpDone { lp: usize, iters: u64, stop: &'static str },
+    /// One WAL write at the daemon edge (virtual payload: byte counts
+    /// are deterministic functions of the op stream, not of the clock).
+    Wal { op: &'static str, bytes: u64 },
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("t", Json::Num(self.vtime)),
+        ];
+        match &self.kind {
+            EventKind::Decision(d) => {
+                fields.push(("ev", Json::Str("decision".to_string())));
+                fields.push(("tenant", Json::Num(d.tenant as f64)));
+                fields.push(("task", Json::Num(d.task as f64)));
+                fields.push(("policy", Json::Str(d.policy.to_string())));
+                fields.push(("rule", Json::Str(d.rule.to_string())));
+                fields.push(("cands", Json::Num(d.candidates as f64)));
+                fields.push(("tie", Json::Num(d.tie_cluster as f64)));
+                let alts: Vec<Json> = d
+                    .alternatives
+                    .iter()
+                    .map(|a| {
+                        Json::Arr(vec![
+                            Json::Num(a.ptype as f64),
+                            Json::Num(a.unit as f64),
+                            Json::Num(a.finish),
+                        ])
+                    })
+                    .collect();
+                fields.push(("alts", Json::Arr(alts)));
+                let restrict: Vec<Json> =
+                    d.restricted.iter().map(|r| Json::Str(r.label())).collect();
+                fields.push(("restrict", Json::Arr(restrict)));
+                fields.push(("ptype", Json::Num(d.ptype as f64)));
+                fields.push(("unit", Json::Num(d.unit as f64)));
+                fields.push(("start", Json::Num(d.start)));
+                fields.push(("finish", Json::Num(d.finish)));
+            }
+            EventKind::Queue { scope, depth } => {
+                fields.push(("ev", Json::Str("queue".to_string())));
+                fields.push(("scope", Json::Str(scope.to_string())));
+                fields.push(("depth", Json::Num(*depth as f64)));
+            }
+            EventKind::GapProbe { task, ptype, gaps } => {
+                fields.push(("ev", Json::Str("gap-probe".to_string())));
+                fields.push(("task", Json::Num(*task as f64)));
+                fields.push(("ptype", Json::Num(*ptype as f64)));
+                fields.push(("gaps", Json::Num(*gaps as f64)));
+            }
+            EventKind::LpChunk { lp, iters, pres, dres, gap } => {
+                fields.push(("ev", Json::Str("lp-chunk".to_string())));
+                fields.push(("lp", Json::Num(*lp as f64)));
+                fields.push(("iters", Json::Num(*iters as f64)));
+                fields.push(("pres", Json::Num(*pres)));
+                fields.push(("dres", Json::Num(*dres)));
+                fields.push(("gap", Json::Num(*gap)));
+            }
+            EventKind::LpDone { lp, iters, stop } => {
+                fields.push(("ev", Json::Str("lp-done".to_string())));
+                fields.push(("lp", Json::Num(*lp as f64)));
+                fields.push(("iters", Json::Num(*iters as f64)));
+                fields.push(("stop", Json::Str(stop.to_string())));
+            }
+            EventKind::Wal { op, bytes } => {
+                fields.push(("ev", Json::Str("wal".to_string())));
+                fields.push(("op", Json::Str(op.to_string())));
+                fields.push(("bytes", Json::Num(*bytes as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn jsonl(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Render a drained event batch as JSONL (one line per event, each
+/// `\n`-terminated) — the `--trace-out` file format.
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.jsonl());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_serializes_deterministically() {
+        let ev = Event {
+            seq: 7,
+            vtime: 1.5,
+            kind: EventKind::Decision(DecisionEvent {
+                tenant: 2,
+                task: 11,
+                policy: "EFT",
+                rule: "eft",
+                candidates: 2,
+                tie_cluster: 2,
+                alternatives: vec![Alt { ptype: 0, unit: 1, finish: 3.0 }],
+                restricted: vec![Restrict::All, Restrict::Only(vec![2, 5])],
+                ptype: 1,
+                unit: 0,
+                start: 1.5,
+                finish: 3.0,
+            }),
+        };
+        let line = ev.jsonl();
+        assert_eq!(line, ev.jsonl(), "rendering is a pure function");
+        assert!(line.contains("\"ev\":\"decision\""));
+        assert!(line.contains("\"rule\":\"eft\""));
+        assert!(line.contains("\"restrict\":[\"all\",\"only[2,5]\"]"));
+        // keys are BTreeMap-ordered: alts before cands before ev
+        let a = line.find("\"alts\"").unwrap();
+        let c = line.find("\"cands\"").unwrap();
+        assert!(a < c);
+    }
+
+    #[test]
+    fn jsonl_batch_is_line_per_event() {
+        let evs = vec![
+            Event { seq: 0, vtime: 0.0, kind: EventKind::Queue { scope: "s", depth: 1 } },
+            Event { seq: 1, vtime: 0.5, kind: EventKind::Wal { op: "append", bytes: 64 } },
+        ];
+        let text = to_jsonl(&evs);
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.ends_with('\n'));
+        assert!(text.lines().nth(1).unwrap().contains("\"bytes\":64"));
+    }
+
+    #[test]
+    fn restrict_labels() {
+        assert_eq!(Restrict::All.label(), "all");
+        assert_eq!(Restrict::Only(vec![0, 3]).label(), "only[0,3]");
+        assert_eq!(Restrict::Banned.label(), "banned");
+    }
+}

@@ -1,0 +1,158 @@
+//! Decision explanation: render *why a task landed where it did* from a
+//! recorded event stream.
+//!
+//! `hetsched explain --wal <log> --task <tenant:task>` replays the WAL
+//! through a recording sink (replay re-emits the exact event stream of
+//! the original run — the daemon's decisions are deterministic
+//! functions of the op sequence) and hands the events here.  The
+//! renderer is a pure function of the events, so its output is pinned
+//! byte-for-byte by the `obs_parity` suite.
+
+use super::event::{DecisionEvent, Event, EventKind};
+
+/// Prose for a rule tag (see `PolicyEngine::decide_in_traced` for the
+/// emit sites).
+fn rule_prose(rule: &str) -> &'static str {
+    match rule {
+        "erls-step1" => "ER-LS Step 1: p_cpu >= R_gpu + p_gpu, so the GPU finishes it within its own CPU time",
+        "erls-step2-cpu" => "ER-LS Step 2: rule R2 (p_cpu/sqrt(m) <= p_gpu/sqrt(k)) chose the CPU side",
+        "erls-step2-gpu" => "ER-LS Step 2: rule R2 (p_cpu/sqrt(m) > p_gpu/sqrt(k)) chose the GPU side",
+        "erls-cpu-forced" => "ER-LS: the GPU type is quota-banned, CPU is the only open side",
+        "erls-gpu-forced" => "ER-LS: the CPU type is quota-banned, GPU is the only open side",
+        "r1" => "rule R1 chose this side by the per-type acceleration threshold",
+        "r2" => "rule R2 chose this side by sqrt(m)/sqrt(k)-scaled processing times",
+        "r3" => "rule R3 chose the side with the smaller processing time",
+        "r1-flip" | "r2-flip" | "r3-flip" => {
+            "the rule's preferred side is quota-banned; fell through to the other side"
+        }
+        "greedy" => "Greedy: fastest open type, then its earliest-idle unit",
+        "random" => "Random: uniformly drawn type, then its earliest-idle unit",
+        "random-walk" => {
+            "Random: the drawn type is quota-banned; walked to the next open type"
+        }
+        "eft" => "EFT: minimized finish time across every allowed unit (band ties go to the later type)",
+        "est" => "EST: earliest-startable ready task on this type's earliest-idle unit",
+        "heft" => "HEFT: rank order, then minimum earliest-finish with gap backfilling",
+        "list" => "list scheduling: highest-priority ready task on an idle unit of its allocated type",
+        _ => "unknown rule",
+    }
+}
+
+/// Render the explanation for `tenant:task`.  `Err` when the stream
+/// holds no decision for that task (never admitted, cancelled before
+/// placement, or the wrong tenant id).
+pub fn render(events: &[Event], tenant: usize, task: usize) -> Result<String, String> {
+    let hit: Option<(&Event, &DecisionEvent)> = events.iter().find_map(|ev| match &ev.kind {
+        EventKind::Decision(d) if d.tenant == tenant && d.task == task => Some((ev, d)),
+        _ => None,
+    });
+    let Some((ev, d)) = hit else {
+        return Err(format!("no decision recorded for task {tenant}:{task}"));
+    };
+    // the queue-depth sample emitted just before this decision, if any
+    let queue: Option<(&'static str, usize)> = events[..events
+        .iter()
+        .position(|e| e.seq == ev.seq)
+        .unwrap_or(0)]
+        .iter()
+        .rev()
+        .find_map(|e| match e.kind {
+            EventKind::Queue { scope, depth } => Some((scope, depth)),
+            _ => None,
+        });
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "task {}:{} — policy {} (event seq {}, virtual time {})\n",
+        d.tenant, d.task, d.policy, ev.seq, ev.vtime
+    ));
+    out.push_str(&format!(
+        "  placed: type {} unit {} start {} finish {}\n",
+        d.ptype, d.unit, d.start, d.finish
+    ));
+    out.push_str(&format!("  rule: {} — {}\n", d.rule, rule_prose(d.rule)));
+    out.push_str(&format!(
+        "  candidates considered: {}; tie-band cluster size: {}\n",
+        d.candidates, d.tie_cluster
+    ));
+    if d.alternatives.is_empty() {
+        out.push_str("  rejected within the tie band: none\n");
+    } else {
+        out.push_str("  rejected within the tie band:\n");
+        for a in &d.alternatives {
+            out.push_str(&format!(
+                "    type {} unit {} (finish {})\n",
+                a.ptype, a.unit, a.finish
+            ));
+        }
+    }
+    if d.restricted.is_empty() {
+        out.push_str("  restricted sets: none (unconstrained decision path)\n");
+    } else {
+        let labels: Vec<String> = d
+            .restricted
+            .iter()
+            .enumerate()
+            .map(|(q, r)| format!("q{}={}", q, r.label()))
+            .collect();
+        out.push_str(&format!("  restricted sets: {}\n", labels.join(" ")));
+    }
+    if let Some((scope, depth)) = queue {
+        out.push_str(&format!("  {scope} depth at decision: {depth}\n"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::{Alt, Restrict};
+
+    fn decision(tenant: usize, task: usize) -> Event {
+        Event {
+            seq: 1,
+            vtime: 2.0,
+            kind: EventKind::Decision(DecisionEvent {
+                tenant,
+                task,
+                policy: "EFT",
+                rule: "eft",
+                candidates: 2,
+                tie_cluster: 2,
+                alternatives: vec![Alt { ptype: 0, unit: 1, finish: 4.0 }],
+                restricted: vec![Restrict::All, Restrict::Banned],
+                ptype: 1,
+                unit: 0,
+                start: 2.0,
+                finish: 4.0,
+            }),
+        }
+    }
+
+    #[test]
+    fn renders_rule_and_alternatives() {
+        let events = vec![
+            Event { seq: 0, vtime: 2.0, kind: EventKind::Queue { scope: "stream-heap", depth: 3 } },
+            decision(5, 9),
+        ];
+        let text = render(&events, 5, 9).unwrap();
+        assert!(text.contains("task 5:9 — policy EFT"));
+        assert!(text.contains("rule: eft —"));
+        assert!(text.contains("type 0 unit 1 (finish 4)"));
+        assert!(text.contains("q0=all q1=banned"));
+        assert!(text.contains("stream-heap depth at decision: 3"));
+    }
+
+    #[test]
+    fn missing_task_is_an_error() {
+        let events = vec![decision(5, 9)];
+        let err = render(&events, 5, 10).unwrap_err();
+        assert!(err.contains("no decision recorded for task 5:10"));
+    }
+
+    #[test]
+    fn rendering_is_stable() {
+        let events = vec![decision(0, 0)];
+        assert_eq!(render(&events, 0, 0).unwrap(), render(&events, 0, 0).unwrap());
+    }
+}

@@ -1,0 +1,335 @@
+//! Metrics registry: monotone counters + fixed-bucket histograms,
+//! snapshotted into a [`MetricsReport`] and serialized through
+//! `substrate::json`.
+//!
+//! The registry is deliberately dumb: `u64` counters that only go up
+//! and histograms with bounds fixed at registration.  Keys live in a
+//! `BTreeMap`, so a report's JSON is deterministic; values observed at
+//! the daemon edge (wall-clock latencies, WAL bytes) stay *out of* the
+//! wire `report` payload — the `metrics` request is a separate surface
+//! precisely so the replay-stable report never mixes with edge timing.
+
+use std::collections::BTreeMap;
+
+use crate::substrate::json::Json;
+
+/// Fixed-bucket histogram: `counts[i]` is the number of observations
+/// `<= bounds[i]` (and above `bounds[i-1]`); the last slot is the
+/// overflow bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// `bounds` must be finite and strictly ascending.
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must ascend"
+        );
+        assert!(bounds.iter().all(|b| b.is_finite()), "bounds must be finite");
+        let n = bounds.len() + 1;
+        Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let i = self.bounds.partition_point(|&b| b < x);
+        self.counts[i] += 1;
+        self.total += 1;
+        self.sum += x;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "bounds",
+                Json::Arr(self.bounds.iter().map(|&b| Json::Num(b)).collect()),
+            ),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("sum", Json::Num(self.sum)),
+            ("total", Json::Num(self.total as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Histogram, String> {
+        let bounds: Vec<f64> = j
+            .get("bounds")
+            .and_then(Json::as_arr)
+            .ok_or("histogram missing bounds")?
+            .iter()
+            .map(|b| b.as_f64().ok_or("bad bound".to_string()))
+            .collect::<Result<_, _>>()?;
+        let counts: Vec<u64> = j
+            .get("counts")
+            .and_then(Json::as_arr)
+            .ok_or("histogram missing counts")?
+            .iter()
+            .map(|c| c.as_f64().map(|x| x as u64).ok_or("bad count".to_string()))
+            .collect::<Result<_, _>>()?;
+        if counts.len() != bounds.len() + 1 {
+            return Err("histogram counts/bounds length mismatch".to_string());
+        }
+        let sum = j.get("sum").and_then(Json::as_f64).ok_or("histogram missing sum")?;
+        let total = j
+            .get("total")
+            .and_then(Json::as_f64)
+            .ok_or("histogram missing total")? as u64;
+        Ok(Histogram { bounds, counts, total, sum })
+    }
+}
+
+/// The mutable registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `delta` to a counter (created at 0 on first touch).
+    pub fn add(&mut self, key: &str, delta: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += delta;
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&mut self, key: &str) {
+        self.add(key, 1);
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Register a histogram with the given bucket bounds (no-op if the
+    /// key already exists — bounds are fixed at first registration).
+    pub fn register_hist(&mut self, key: &str, bounds: &[f64]) {
+        self.hists
+            .entry(key.to_string())
+            .or_insert_with(|| Histogram::new(bounds.to_vec()));
+    }
+
+    /// Observe a value into a previously registered histogram.
+    pub fn observe(&mut self, key: &str, x: f64) {
+        self.hists
+            .get_mut(key)
+            .unwrap_or_else(|| panic!("histogram {key} not registered"))
+            .observe(x);
+    }
+
+    pub fn hist(&self, key: &str) -> Option<&Histogram> {
+        self.hists.get(key)
+    }
+
+    /// Fold another registry into this one (same-key counters add;
+    /// same-key histograms require identical bounds and add bucketwise).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+                Some(mine) => {
+                    assert_eq!(mine.bounds, h.bounds, "merging {k} with different bounds");
+                    for (a, b) in mine.counts.iter_mut().zip(&h.counts) {
+                        *a += b;
+                    }
+                    mine.total += h.total;
+                    mine.sum += h.sum;
+                }
+            }
+        }
+    }
+
+    /// Freeze into a report.
+    pub fn report(&self) -> MetricsReport {
+        MetricsReport {
+            counters: self.counters.clone(),
+            hists: self.hists.clone(),
+        }
+    }
+}
+
+/// Immutable snapshot of a [`Metrics`] registry — the payload of the
+/// daemon `metrics` request and of `hetsched metrics`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsReport {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsReport {
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(&str, Json)> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.as_str(), Json::Num(v as f64)))
+            .collect();
+        let hists: Vec<(&str, Json)> = self
+            .hists
+            .iter()
+            .map(|(k, h)| (k.as_str(), h.to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("hists", Json::obj(hists)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsReport, String> {
+        let mut counters = BTreeMap::new();
+        match j.get("counters") {
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    let n = v.as_f64().ok_or_else(|| format!("bad counter {k}"))?;
+                    counters.insert(k.clone(), n as u64);
+                }
+            }
+            _ => return Err("metrics missing counters".to_string()),
+        }
+        let mut hists = BTreeMap::new();
+        match j.get("hists") {
+            Some(Json::Obj(m)) => {
+                for (k, v) in m {
+                    hists.insert(k.clone(), Histogram::from_json(v)?);
+                }
+            }
+            _ => return Err("metrics missing hists".to_string()),
+        }
+        Ok(MetricsReport { counters, hists })
+    }
+
+    /// Human-readable rendering for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("counters:\n");
+        for (k, v) in &self.counters {
+            out.push_str(&format!("  {k} = {v}\n"));
+        }
+        if !self.hists.is_empty() {
+            out.push_str("histograms:\n");
+            for (k, h) in &self.hists {
+                out.push_str(&format!("  {k}: total {} sum {}\n", h.total(), h.sum()));
+                let mut lo = f64::NEG_INFINITY;
+                for (i, &c) in h.counts().iter().enumerate() {
+                    let hi = h.bounds().get(i).copied().unwrap_or(f64::INFINITY);
+                    if c > 0 {
+                        out.push_str(&format!("    ({lo}, {hi}] = {c}\n"));
+                    }
+                    lo = hi;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotone_and_defaulted() {
+        let mut m = Metrics::new();
+        assert_eq!(m.counter("x"), 0);
+        m.inc("x");
+        m.add("x", 4);
+        assert_eq!(m.counter("x"), 5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(vec![1.0, 10.0]);
+        h.observe(0.5); // (-inf, 1]
+        h.observe(1.0); // boundary goes to the <= bucket
+        h.observe(5.0); // (1, 10]
+        h.observe(50.0); // overflow
+        assert_eq!(h.counts(), &[2, 1, 1]);
+        assert_eq!(h.total(), 4);
+        assert!((h.sum() - 56.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascend")]
+    fn histogram_rejects_unsorted_bounds() {
+        Histogram::new(vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn report_round_trips_exactly() {
+        let mut m = Metrics::new();
+        m.add("decisions", 42);
+        m.inc("wal_appends");
+        m.register_hist("lat", &[0.001, 0.01, 0.1]);
+        m.observe("lat", 0.004);
+        m.observe("lat", 3.0);
+        let rep = m.report();
+        let j = rep.to_json();
+        let back = MetricsReport::from_json(&j).unwrap();
+        assert_eq!(back, rep);
+        // and the serialized form itself is stable
+        assert_eq!(back.to_json().to_string(), j.to_string());
+    }
+
+    #[test]
+    fn merge_adds_counters_and_buckets() {
+        let mut a = Metrics::new();
+        a.add("ops", 2);
+        a.register_hist("h", &[1.0]);
+        a.observe("h", 0.5);
+        let mut b = Metrics::new();
+        b.add("ops", 3);
+        b.add("only_b", 1);
+        b.register_hist("h", &[1.0]);
+        b.observe("h", 2.0);
+        a.merge(&b);
+        assert_eq!(a.counter("ops"), 5);
+        assert_eq!(a.counter("only_b"), 1);
+        assert_eq!(a.hist("h").unwrap().counts(), &[1, 1]);
+    }
+
+    #[test]
+    fn render_lists_sorted_keys() {
+        let mut m = Metrics::new();
+        m.inc("b");
+        m.inc("a");
+        let text = m.report().render();
+        let ia = text.find("  a = ").unwrap();
+        let ib = text.find("  b = ").unwrap();
+        assert!(ia < ib);
+    }
+}

@@ -1,0 +1,45 @@
+//! Deterministic observability: structured tracing, a metrics registry,
+//! and the decision-explanation renderer.
+//!
+//! The layer exists to open the scheduler's black box — *which* rule
+//! fired for a task, how contended the ready queues were, what a PDHG
+//! chunk converged to — without ever perturbing a decision.  Two design
+//! rules make that contract checkable:
+//!
+//! * **Virtual time only.**  Every event carries the virtual time of the
+//!   decision it describes and a monotone sequence number assigned by
+//!   the sink.  Nothing in this module (or in any core emit site) reads
+//!   the wall clock; hetlint R4 scans `rust/src/obs/` like the rest of
+//!   the core, and wall-clock timing stays at the coordinator/daemon
+//!   edge where it is allowlisted.  Consequence: a `--trace-out` JSONL
+//!   log is byte-identical across two runs of the same workload, and
+//!   replaying a WAL re-emits the exact event stream of the original
+//!   run.
+//! * **Emit sites are passive.**  The [`Sink`] trait has a no-op
+//!   implementation used by every untraced entry point; emit sites
+//!   check [`Sink::enabled`] before building event payloads, so the
+//!   disabled path costs one virtual call per decision.  The
+//!   `obs_parity` suite pins recording-sink placements bitwise equal to
+//!   no-op-sink placements across the golden-parity and
+//!   service-fairness seed matrices.
+//!
+//! Pieces:
+//! * [`sink`] — the [`Sink`] trait, [`NoopSink`], [`RecordingSink`].
+//! * [`event`] — the event grammar ([`Event`], [`EventKind`]) and its
+//!   deterministic JSONL serialization via `substrate::json`.
+//! * [`metrics`] — monotone counters + fixed-bucket histograms
+//!   ([`Metrics`]) snapshotted into a [`MetricsReport`], the payload of
+//!   the daemon `metrics` request.
+//! * [`explain`] — renders *why a task landed where it did* from a
+//!   recorded event stream (rule fired, tie-band alternatives,
+//!   restricted-set state); `hetsched explain` drives it over a WAL
+//!   replay.
+
+pub mod event;
+pub mod explain;
+pub mod metrics;
+pub mod sink;
+
+pub use event::{Alt, DecisionEvent, Event, EventKind, Restrict};
+pub use metrics::{Histogram, Metrics, MetricsReport};
+pub use sink::{NoopSink, RecordingSink, Sink};

@@ -1,0 +1,130 @@
+//! Event sinks: the trait every traced entry point takes, the no-op
+//! default, and the recording implementation.
+//!
+//! The contract emit sites must follow (and the `obs_parity` suite
+//! pins): *nothing observable about a decision may depend on the sink*.
+//! Sites may branch on [`Sink::enabled`] only to skip building event
+//! payloads — never to skip or reorder scheduling work — so the
+//! recording and no-op paths execute the same arithmetic in the same
+//! order.
+
+use super::event::{Event, EventKind};
+
+/// Receiver for deterministic trace events.
+///
+/// `emit` takes the event's virtual time plus its payload; the sink is
+/// responsible for sequence numbering (a monotone counter, *not* a
+/// clock — hetlint R4 holds in this module).
+pub trait Sink {
+    /// Whether emitted events are observed.  Emit sites use this to
+    /// skip payload construction (candidate vectors, restricted-set
+    /// snapshots) on the untraced path.
+    fn enabled(&self) -> bool;
+    /// Record one event at virtual time `vtime`.
+    fn emit(&mut self, vtime: f64, kind: EventKind);
+}
+
+/// The default sink: drops everything, reports disabled.
+pub struct NoopSink;
+
+impl Sink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn emit(&mut self, _vtime: f64, _kind: EventKind) {}
+}
+
+/// In-memory recorder assigning a monotone sequence number per event.
+///
+/// [`RecordingSink::take`] drains the buffer without resetting the
+/// sequence counter, so a streaming consumer (the daemon's
+/// `--trace-out` writer) sees globally monotone `seq` across drains.
+#[derive(Default)]
+pub struct RecordingSink {
+    events: Vec<Event>,
+    next_seq: u64,
+}
+
+impl RecordingSink {
+    pub fn new() -> RecordingSink {
+        RecordingSink::default()
+    }
+
+    /// Events recorded since construction (or the last [`Self::take`]).
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Drain the buffered events, keeping the sequence counter.
+    pub fn take(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Total events emitted over the sink's lifetime (drained or not).
+    pub fn emitted(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+impl Sink for RecordingSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn emit(&mut self, vtime: f64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(Event { seq, vtime, kind });
+    }
+}
+
+/// `Option<RecordingSink>` is the natural shape for a struct field
+/// (tracing off by default, switched on once): `None` behaves as
+/// [`NoopSink`], `Some` records.
+impl Sink for Option<RecordingSink> {
+    fn enabled(&self) -> bool {
+        self.is_some()
+    }
+    fn emit(&mut self, vtime: f64, kind: EventKind) {
+        if let Some(rec) = self {
+            rec.emit(vtime, kind);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_reports_disabled_and_drops() {
+        let mut s = NoopSink;
+        assert!(!s.enabled());
+        s.emit(1.0, EventKind::Queue { scope: "x", depth: 3 });
+    }
+
+    #[test]
+    fn recording_assigns_monotone_seq_across_takes() {
+        let mut s = RecordingSink::new();
+        assert!(s.enabled());
+        s.emit(0.0, EventKind::Queue { scope: "a", depth: 1 });
+        s.emit(2.5, EventKind::Queue { scope: "a", depth: 2 });
+        let first = s.take();
+        assert_eq!(first.len(), 2);
+        assert_eq!((first[0].seq, first[1].seq), (0, 1));
+        s.emit(3.0, EventKind::Queue { scope: "a", depth: 0 });
+        let second = s.take();
+        assert_eq!(second[0].seq, 2, "seq survives take()");
+        assert_eq!(s.emitted(), 3);
+    }
+
+    #[test]
+    fn option_sink_forwards_only_when_some() {
+        let mut off: Option<RecordingSink> = None;
+        assert!(!off.enabled());
+        off.emit(0.0, EventKind::Queue { scope: "q", depth: 9 });
+        let mut on = Some(RecordingSink::new());
+        assert!(on.enabled());
+        on.emit(1.0, EventKind::Queue { scope: "q", depth: 9 });
+        assert_eq!(on.as_ref().map(|r| r.events().len()), Some(1));
+    }
+}

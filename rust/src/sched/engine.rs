@@ -302,6 +302,15 @@ impl EstReady {
         self.pending_best(q).map(|(OrdF64(r), j)| (r, j))
     }
 
+    /// Total queued tasks across every type — the ready-queue depth
+    /// sample the traced EST emits per decision.  Observability read
+    /// only: selection never consults it.  (Iterator form rather than
+    /// indexing: this file's no-panic indexing budget stays flat.)
+    pub fn depth_total(&self) -> usize {
+        self.arrived.iter().map(BinaryHeap::len).sum::<usize>()
+            + self.pending.iter().map(std::collections::BTreeSet::len).sum::<usize>()
+    }
+
     /// Remove the candidate [`Self::peek`] reported for type `q`.
     pub fn pop(&mut self, q: usize) -> Option<TaskId> {
         if let Some(Reverse(j)) = self.arrived[q].pop() {

@@ -19,6 +19,7 @@
 //! repeated-cost-constant tie farms).
 
 use crate::graph::{TaskGraph, TaskId};
+use crate::obs::{DecisionEvent, EventKind, NoopSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
@@ -26,6 +27,20 @@ use super::engine::{EstReady, UnitPool, TIE_BAND};
 
 /// Schedule with a fixed allocation under the EST policy.
 pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
+    est_schedule_traced(g, plat, alloc, &mut NoopSink)
+}
+
+/// [`est_schedule`] with an event sink: per decision, a ready-queue
+/// depth sample plus the decision span (rule tag `est`, candidate
+/// count, band-tie cluster size).  With a [`NoopSink`] this *is*
+/// `est_schedule` — the attribution bookkeeping never feeds the
+/// comparator, and the parity suites pin the placements bitwise.
+pub fn est_schedule_traced(
+    g: &TaskGraph,
+    plat: &Platform,
+    alloc: &[usize],
+    sink: &mut dyn Sink,
+) -> Schedule {
     let n = g.n_tasks();
     assert_eq!(alloc.len(), n);
     let n_types = plat.n_types();
@@ -50,14 +65,24 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
         // candidates within the band tie towards the smaller task id —
         // exactly `reference::est_schedule`'s comparator.
         let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, type)
+        let mut candidates = 0usize;
+        let mut tie_cluster = 1usize;
         for q in 0..n_types {
             if let Some((est, j)) = ready.peek(q, units.earliest_idle(q)) {
                 // band-promoted tasks report the horizon; their true EST
                 // is their own ready time (≤ TIE_BAND later)
                 let est = est.max(ready_time[j]);
+                candidates += 1;
                 let better = match best {
                     None => true,
                     Some((b_est, b_j, _)) => {
+                        // attribution bookkeeping only; the comparator
+                        // below is the reference's, unchanged
+                        if est < b_est - TIE_BAND {
+                            tie_cluster = 1;
+                        } else if est <= b_est + TIE_BAND {
+                            tie_cluster += 1;
+                        }
                         est < b_est - TIE_BAND || (est <= b_est + TIE_BAND && j < b_j)
                     }
                 };
@@ -84,6 +109,29 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
             start,
             finish,
         });
+        if sink.enabled() {
+            sink.emit(
+                start,
+                EventKind::Queue { scope: "est-ready", depth: ready.depth_total() },
+            );
+            sink.emit(
+                start,
+                EventKind::Decision(DecisionEvent {
+                    tenant: 0,
+                    task: j,
+                    policy: "EST",
+                    rule: "est",
+                    candidates,
+                    tie_cluster,
+                    alternatives: Vec::new(),
+                    restricted: Vec::new(),
+                    ptype: q,
+                    unit,
+                    start,
+                    finish,
+                }),
+            );
+        }
         // the horizon of type q may have advanced: promote pending tasks
         ready.promote(q, units.earliest_idle(q));
 
@@ -166,6 +214,29 @@ mod tests {
         let alloc = vec![0, 0, 1, 1, 2, 2];
         let s = est_schedule(&g, &plat, &alloc);
         validate(&g, &plat, &s).unwrap();
+    }
+
+    #[test]
+    fn traced_est_matches_untraced() {
+        use crate::obs::{EventKind, RecordingSink};
+        let mut rng = Rng::new(17);
+        let g = gen::hybrid_dag(&mut rng, 50, 0.1);
+        let plat = Platform::hybrid(4, 2);
+        let alloc: Vec<usize> = (0..50).map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j))).collect();
+        let plain = est_schedule(&g, &plat, &alloc);
+        let mut sink = RecordingSink::new();
+        let traced = est_schedule_traced(&g, &plat, &alloc, &mut sink);
+        assert_eq!(plain.placements, traced.placements);
+        let events = sink.take();
+        let decisions = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Decision(_)))
+            .count();
+        let depths = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Queue { .. }))
+            .count();
+        assert_eq!((decisions, depths), (50, 50), "one span + one sample per task");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! ([`super::reference::heft_schedule`]) by the golden-parity suite.
 
 use crate::graph::{paths, TaskGraph};
+use crate::obs::{DecisionEvent, EventKind, NoopSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
@@ -29,6 +30,15 @@ use super::engine::{GapIndex, TIE_BAND};
 
 /// HEFT / QHEFT schedule.
 pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
+    heft_schedule_traced(g, plat, &mut NoopSink)
+}
+
+/// [`heft_schedule`] with an event sink: per decision, a gap-index
+/// probe sample (how many idle gaps the chosen type's index holds) plus
+/// the decision span (rule tag `heft`, per-type candidate count,
+/// band-tie cluster size).  With a [`NoopSink`] this *is*
+/// `heft_schedule`; the parity suites pin the placements bitwise.
+pub fn heft_schedule_traced(g: &TaskGraph, plat: &Platform, sink: &mut dyn Sink) -> Schedule {
     let n = g.n_tasks();
     let rank = paths::heft_rank(g, &plat.counts);
     let mut order: Vec<usize> = (0..n).collect();
@@ -49,12 +59,22 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
         // Types ascend, so the reference comparator's `q > b_q` arm is
         // always true for a later type: band-tied means replace.
         let mut best: Option<(f64, usize, usize, f64)> = None; // (eft, q, unit, start)
+        let mut tie_cluster = 1usize;
         for q in 0..plat.n_types() {
             let dur = g.time_on(j, q);
             let (eft, unit, start) = index[q].best_eft(ready, dur);
             let better = match best {
                 None => true,
-                Some((b_eft, _, _, _)) => eft <= b_eft + TIE_BAND,
+                Some((b_eft, _, _, _)) => {
+                    // attribution bookkeeping only; the comparator is
+                    // the reference's, unchanged
+                    if (eft - b_eft).abs() <= TIE_BAND {
+                        tie_cluster += 1;
+                    } else if eft < b_eft {
+                        tie_cluster = 1;
+                    }
+                    eft <= b_eft + TIE_BAND
+                }
             };
             if better {
                 best = Some((eft, q, unit, start));
@@ -62,7 +82,32 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
         }
         // hetlint: allow(no-panic-in-hot-path) -- n_types >= 1, so the loop above always sets best
         let (eft, q, unit, start) = best.unwrap();
+        if sink.enabled() {
+            // .get() rather than indexing: this file's no-panic
+            // indexing budget stays flat
+            let gaps = index.get(q).map_or(0, GapIndex::n_gaps);
+            sink.emit(start, EventKind::GapProbe { task: j, ptype: q, gaps });
+        }
         index[q].insert(unit, start, eft);
+        if sink.enabled() {
+            sink.emit(
+                start,
+                EventKind::Decision(DecisionEvent {
+                    tenant: 0,
+                    task: j,
+                    policy: "HEFT",
+                    rule: "heft",
+                    candidates: plat.n_types(),
+                    tie_cluster,
+                    alternatives: Vec::new(),
+                    restricted: Vec::new(),
+                    ptype: q,
+                    unit,
+                    start,
+                    finish: eft,
+                }),
+            );
+        }
         placements[j] = Some(Placement {
             ptype: q,
             unit,
@@ -164,6 +209,28 @@ mod tests {
             validate(&g, &plat, &s).unwrap();
             assert_eq!(s.placements, reference::heft_schedule(&g, &plat).placements);
         }
+    }
+
+    #[test]
+    fn traced_heft_matches_untraced() {
+        use crate::obs::{EventKind, RecordingSink};
+        let mut rng = Rng::new(43);
+        let g = gen::hybrid_dag(&mut rng, 60, 0.08);
+        let plat = Platform::hybrid(4, 2);
+        let plain = heft_schedule(&g, &plat);
+        let mut sink = RecordingSink::new();
+        let traced = heft_schedule_traced(&g, &plat, &mut sink);
+        assert_eq!(plain.placements, traced.placements);
+        let events = sink.take();
+        let decisions = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Decision(_)))
+            .count();
+        let probes = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::GapProbe { .. }))
+            .count();
+        assert_eq!((decisions, probes), (60, 60), "one span + one probe per task");
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::graph::{TaskGraph, TaskId};
+use crate::obs::{DecisionEvent, EventKind, NoopSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
@@ -25,6 +26,20 @@ pub fn list_schedule(
     plat: &Platform,
     alloc: &[usize],
     priority: &[f64],
+) -> Schedule {
+    list_schedule_traced(g, plat, alloc, priority, &mut NoopSink)
+}
+
+/// [`list_schedule`] with an event sink: per task start, a ready-queue
+/// depth sample (total queued across the per-type heaps) plus the
+/// decision span (rule tag `list`).  With a [`NoopSink`] this *is*
+/// `list_schedule`; the parity suites pin the placements bitwise.
+pub fn list_schedule_traced(
+    g: &TaskGraph,
+    plat: &Platform,
+    alloc: &[usize],
+    priority: &[f64],
+    sink: &mut dyn Sink,
 ) -> Schedule {
     let n = g.n_tasks();
     assert_eq!(alloc.len(), n);
@@ -66,6 +81,27 @@ pub fn list_schedule(
                     start: t,
                     finish,
                 });
+                if sink.enabled() {
+                    let depth: usize = ready.iter().map(BinaryHeap::len).sum();
+                    sink.emit(t, EventKind::Queue { scope: "list-ready", depth });
+                    sink.emit(
+                        t,
+                        EventKind::Decision(DecisionEvent {
+                            tenant: 0,
+                            task: j,
+                            policy: "List",
+                            rule: "list",
+                            candidates: 1,
+                            tie_cluster: 1,
+                            alternatives: Vec::new(),
+                            restricted: Vec::new(),
+                            ptype: q,
+                            unit,
+                            start: t,
+                            finish,
+                        }),
+                    );
+                }
                 events.push(finish, j);
                 scheduled += 1;
             }
@@ -170,6 +206,26 @@ mod tests {
         let s = ols_schedule(&g, &plat, &alloc);
         validate(&g, &plat, &s).unwrap();
         assert_eq!(s.allocation(), alloc);
+    }
+
+    #[test]
+    fn traced_list_matches_untraced() {
+        use crate::obs::{EventKind, RecordingSink};
+        let mut rng = Rng::new(61);
+        let g = gen::hybrid_dag(&mut rng, 40, 0.15);
+        let plat = Platform::hybrid(3, 2);
+        let alloc: Vec<usize> = (0..40).map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j))).collect();
+        let prio = crate::graph::paths::ols_rank(&g, &alloc);
+        let plain = list_schedule(&g, &plat, &alloc, &prio);
+        let mut sink = RecordingSink::new();
+        let traced = list_schedule_traced(&g, &plat, &alloc, &prio, &mut sink);
+        assert_eq!(plain.placements, traced.placements);
+        let decisions = sink
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Decision(_)))
+            .count();
+        assert_eq!(decisions, 40);
     }
 
     #[test]

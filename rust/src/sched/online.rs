@@ -21,6 +21,7 @@
 
 use crate::alloc;
 use crate::graph::{TaskGraph, TaskId};
+use crate::obs::{Alt, DecisionEvent, EventKind, NoopSink, Restrict, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 use crate::substrate::rng::Rng;
@@ -82,6 +83,24 @@ impl UnitSet<'_> {
 /// short) slice means unconstrained — the common no-admission path.
 fn set_for<'a>(allowed: &[UnitSet<'a>], q: usize) -> UnitSet<'a> {
     allowed.get(q).copied().unwrap_or(UnitSet::All)
+}
+
+/// Always-cheap attribution of one decision — which rule path fired and
+/// how contested the selection scan was.  Returned by
+/// [`PolicyEngine::decide_in_traced`] alongside the placement so the
+/// service can keep always-on rule counters (replay-stable: the fields
+/// are pure functions of the decision inputs) without paying for an
+/// event sink.
+#[derive(Clone, Copy, Debug)]
+pub struct DecisionTrace {
+    /// Rule path tag — e.g. `erls-step1`, `r2-flip`, `eft` (the prose
+    /// for each tag lives in [`crate::obs::explain`]).
+    pub rule: &'static str,
+    /// Candidates examined by the selection scan.
+    pub candidates: usize,
+    /// Candidates that tied the incumbent within ±[`TIE_BAND`] during
+    /// the scan (1 = the winner was never challenged).
+    pub tie_cluster: usize,
 }
 
 /// Shared decision engine for the online policies: one [`UnitPool`] of
@@ -234,6 +253,32 @@ impl PolicyEngine {
         rng: Option<&mut Rng>,
         allowed: &[UnitSet],
     ) -> Placement {
+        self.decide_in_traced(g, plat, j, ready, policy, rng, allowed, 0, &mut NoopSink)
+            .0
+    }
+
+    /// [`Self::decide_in`] with decision attribution: returns the
+    /// placement plus a [`DecisionTrace`] (always computed — cheap tags
+    /// and counts), and emits a full [`EventKind::Decision`] span when
+    /// `sink` records.  The sink never influences the decision: event
+    /// payloads (tie-band alternatives, restricted-set snapshots) are
+    /// built only behind [`Sink::enabled`], and the selection
+    /// arithmetic is identical expression for expression to the
+    /// untraced path — `obs_parity` pins recording vs. no-op bitwise.
+    /// `tenant` only labels the emitted event (0 for single streams).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decide_in_traced(
+        &mut self,
+        g: &TaskGraph,
+        plat: &Platform,
+        j: TaskId,
+        ready: f64,
+        policy: &OnlinePolicy,
+        rng: Option<&mut Rng>,
+        allowed: &[UnitSet],
+        tenant: usize,
+        sink: &mut dyn Sink,
+    ) -> (Placement, DecisionTrace) {
         // a two-sided rule's side, quota-adjusted: banned sides fall
         // through to the other side (validation guarantees one is open)
         let flip = |q: usize| -> usize {
@@ -243,43 +288,65 @@ impl PolicyEngine {
                 q
             }
         };
-        // choose (type, unit)
-        let (q, unit) = match policy {
+        let record = sink.enabled();
+        let mut candidates = 1usize;
+        let mut tie_cluster = 1usize;
+        let mut alts: Vec<Alt> = Vec::new();
+        // choose (type, unit) and name the rule path taken
+        let (q, unit, rule) = match policy {
             OnlinePolicy::ErLs => {
-                let q = if set_for(allowed, 1).banned() {
-                    0
+                let (q, rule) = if set_for(allowed, 1).banned() {
+                    (0, "erls-cpu-forced")
                 } else if set_for(allowed, 0).banned() {
-                    1
+                    (1, "erls-gpu-forced")
                 } else {
+                    candidates = 2; // both sides weighed
                     let tau_gpu = self.earliest_idle_in(1, set_for(allowed, 1));
                     let r_gpu = tau_gpu.max(ready);
                     if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
-                        1 // Step 1: GPU side
+                        (1, "erls-step1") // Step 1: GPU side
                     } else {
-                        alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
+                        let side = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                        (side, if side == 1 { "erls-step2-gpu" } else { "erls-step2-cpu" })
                     }
                 };
-                (q, self.best_unit_in(q, set_for(allowed, q)))
+                (q, self.best_unit_in(q, set_for(allowed, q)), rule)
             }
             OnlinePolicy::R1 => {
-                let q = flip(alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k()));
-                (q, self.best_unit_in(q, set_for(allowed, q)))
+                let side = alloc::r1_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                let q = flip(side);
+                (
+                    q,
+                    self.best_unit_in(q, set_for(allowed, q)),
+                    if q == side { "r1" } else { "r1-flip" },
+                )
             }
             OnlinePolicy::R2 => {
-                let q = flip(alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k()));
-                (q, self.best_unit_in(q, set_for(allowed, q)))
+                let side = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
+                let q = flip(side);
+                (
+                    q,
+                    self.best_unit_in(q, set_for(allowed, q)),
+                    if q == side { "r2" } else { "r2-flip" },
+                )
             }
             OnlinePolicy::R3 => {
-                let q = flip(alloc::r3_side(g.p_cpu(j), g.p_gpu(j)));
-                (q, self.best_unit_in(q, set_for(allowed, q)))
+                let side = alloc::r3_side(g.p_cpu(j), g.p_gpu(j));
+                let q = flip(side);
+                (
+                    q,
+                    self.best_unit_in(q, set_for(allowed, q)),
+                    if q == side { "r3" } else { "r3-flip" },
+                )
             }
             OnlinePolicy::Greedy => {
-                let q = (0..plat.n_types())
-                    .filter(|&q| !set_for(allowed, q).banned())
+                let open = (0..plat.n_types()).filter(|&q| !set_for(allowed, q).banned());
+                candidates = open.clone().count();
+                let q = open
                     .min_by(|&a, &b| g.time_on(j, a).total_cmp(&g.time_on(j, b)))
                     // hetlint: allow(no-panic-in-hot-path) -- admission control guarantees every admitted task at least one open type
                     .expect("quota leaves no usable type");
-                (q, self.best_unit_in(q, set_for(allowed, q)))
+                (q, self.best_unit_in(q, set_for(allowed, q)), "greedy")
             }
             OnlinePolicy::Random(_) => {
                 // draw first (identical rng consumption with or without
@@ -291,42 +358,100 @@ impl PolicyEngine {
                     .find(|&q| !set_for(allowed, q).banned())
                     // hetlint: allow(no-panic-in-hot-path) -- admission control guarantees every admitted task at least one open type
                     .expect("quota leaves no usable type");
-                (q, self.best_unit_in(q, set_for(allowed, q)))
+                (
+                    q,
+                    self.best_unit_in(q, set_for(allowed, q)),
+                    if q == drawn { "random" } else { "random-walk" },
+                )
             }
             OnlinePolicy::Eft => {
                 // minimize finish across every allowed unit; tie -> the
                 // later (higher) type wins within the band, matching the
                 // reference scan's `q > bq` rule
                 let mut best: Option<(f64, usize, usize)> = None;
+                let mut cands = 0usize;
                 for q in 0..plat.n_types() {
                     let dur = g.time_on(j, q);
                     let Some((finish, u)) = self.eft_candidate_in(q, ready, dur, set_for(allowed, q))
                     else {
                         continue;
                     };
+                    cands += 1;
                     let better = match best {
                         None => true,
-                        Some((bf, _, _)) => finish <= bf + TIE_BAND,
+                        Some((bf, bq, bu)) => {
+                            // the comparator is unchanged (`finish <=
+                            // bf + TIE_BAND`); the tie/strict split
+                            // below only books attribution
+                            if (finish - bf).abs() <= TIE_BAND {
+                                tie_cluster += 1;
+                                if record {
+                                    alts.push(Alt { ptype: bq, unit: bu, finish: bf });
+                                }
+                            } else if finish < bf {
+                                tie_cluster = 1;
+                                if record {
+                                    alts.clear();
+                                }
+                            }
+                            finish <= bf + TIE_BAND
+                        }
                     };
                     if better {
                         best = Some((finish, q, u));
                     }
                 }
+                candidates = cands;
                 // hetlint: allow(no-panic-in-hot-path) -- admission control guarantees every admitted task at least one open type
                 let (_, q, u) = best.expect("quota leaves no usable type");
-                (q, u)
+                (q, u, "eft")
             }
         };
 
         let start = ready.max(self.avail.free_at(q, unit));
         let finish = start + g.time_on(j, q);
         self.avail.reserve(q, unit, finish);
-        Placement {
+        let placement = Placement {
             ptype: q,
             unit,
             start,
             finish,
+        };
+        if record {
+            let restricted: Vec<Restrict> = allowed
+                .iter()
+                .map(|s| match s {
+                    UnitSet::All => Restrict::All,
+                    UnitSet::Only(units) => Restrict::Only(units.to_vec()),
+                    UnitSet::Banned => Restrict::Banned,
+                })
+                .collect();
+            sink.emit(
+                ready,
+                EventKind::Decision(DecisionEvent {
+                    tenant,
+                    task: j,
+                    policy: policy.name(),
+                    rule,
+                    candidates,
+                    tie_cluster,
+                    alternatives: alts,
+                    restricted,
+                    ptype: q,
+                    unit,
+                    start,
+                    finish,
+                }),
+            );
         }
+        (
+            placement,
+            DecisionTrace {
+                rule,
+                candidates,
+                tie_cluster,
+            },
+        )
     }
 }
 
@@ -345,6 +470,19 @@ pub fn online_schedule(
     plat: &Platform,
     order: &[TaskId],
     policy: &OnlinePolicy,
+) -> Schedule {
+    online_schedule_traced(g, plat, order, policy, &mut NoopSink)
+}
+
+/// [`online_schedule`] with an event sink: every irrevocable decision
+/// emits its [`EventKind::Decision`] span.  With a [`NoopSink`] this
+/// *is* `online_schedule` (the parity suites pin it).
+pub fn online_schedule_traced(
+    g: &TaskGraph,
+    plat: &Platform,
+    order: &[TaskId],
+    policy: &OnlinePolicy,
+    sink: &mut dyn Sink,
 ) -> Schedule {
     let n = g.n_tasks();
     assert_eq!(order.len(), n, "arrival order must cover all tasks");
@@ -376,7 +514,11 @@ pub fn online_schedule(
             .fold(0.0f64, f64::max);
         debug_assert!(!seen[j]);
         seen[j] = true;
-        placements[j] = Some(engine.decide(g, plat, j, ready, policy, rng.as_mut()));
+        placements[j] = Some(
+            engine
+                .decide_in_traced(g, plat, j, ready, policy, rng.as_mut(), &[], 0, sink)
+                .0,
+        );
     }
 
     Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
@@ -615,6 +757,31 @@ mod tests {
                 let pa = a.decide(&g, &plat(), j, ready, &policy, ra.as_mut());
                 let pb = b.decide_in(&g, &plat(), j, ready, &policy, rb.as_mut(), &all);
                 assert_eq!(pa, pb, "{}", policy.name());
+            }
+        }
+    }
+
+    #[test]
+    fn traced_decisions_match_untraced_and_name_rules() {
+        use crate::obs::{EventKind, RecordingSink};
+        let mut rng = Rng::new(123);
+        let g = gen::hybrid_dag(&mut rng, 40, 0.1);
+        let order: Vec<usize> = (0..40).collect();
+        for policy in all_policies(4) {
+            let plain = online_schedule(&g, &plat(), &order, &policy);
+            let mut sink = RecordingSink::new();
+            let traced = online_schedule_traced(&g, &plat(), &order, &policy, &mut sink);
+            assert_eq!(plain.placements, traced.placements, "{}", policy.name());
+            let events = sink.take();
+            assert_eq!(events.len(), 40, "one decision span per task");
+            for ev in &events {
+                let EventKind::Decision(d) = &ev.kind else {
+                    panic!("online stream only emits decisions")
+                };
+                assert_eq!(d.policy, policy.name());
+                assert!(d.candidates >= 1);
+                assert!(d.tie_cluster >= 1);
+                assert!(d.restricted.is_empty(), "unconstrained path");
             }
         }
     }

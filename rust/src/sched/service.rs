@@ -67,9 +67,9 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, BTreeMap};
-use std::time::Instant;
 
 use crate::graph::{TaskGraph, TaskId};
+use crate::obs::{Event, EventKind, Metrics, RecordingSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule, TenantRun};
 use crate::substrate::rng::Rng;
@@ -160,7 +160,10 @@ pub struct TenantReport {
     /// flow_time / ideal_makespan (1.0 = no slowdown from contention).
     /// Partial (an underestimate) for cancelled tenants.
     pub stretch: f64,
-    /// Wall-clock seconds per irrevocable decision.
+    /// Wall-clock seconds per irrevocable decision, measured *only* at
+    /// a runtime edge ([`Service::note_decision_latency`] — the daemon
+    /// or live coordinator).  Batch/replay runs leave it empty; the
+    /// core never reads the clock.
     pub decision_latency: Summary,
     /// The tenant's placements (absolute virtual times on the shared
     /// pool).  For a cancelled tenant this holds only the kept tasks in
@@ -194,6 +197,13 @@ pub struct ServiceReport {
     pub jain_index: f64,
     /// Busy fraction per type over [0, horizon).
     pub utilization: Vec<f64>,
+    /// Decision-rule attribution (tag → count), sorted by tag.  A pure
+    /// function of the op stream — replay-stable, safe for the wire
+    /// report's byte-for-byte replay==rerun comparison.
+    pub rule_counts: Vec<(String, u64)>,
+    /// Decisions taken under a non-trivial quota restriction
+    /// (replay-stable, like `rule_counts`).
+    pub restricted_decisions: u64,
 }
 
 impl ServiceReport {
@@ -332,6 +342,20 @@ pub struct Service {
     /// is weighted-stretch; the reordering key needs it up front)
     ws_ideals: Vec<f64>,
     any_ws: bool,
+    /// event sink — `None` (tracing off, the default) behaves as a
+    /// [`NoopSink`](crate::obs::NoopSink); the daemon's `--trace-out`
+    /// switches it on via [`Self::enable_trace`].  Never read by any
+    /// decision (pinned bitwise by the `obs_parity` suite).
+    trace: Option<RecordingSink>,
+    /// always-on decision attribution: rule tag → count.  Replay-stable
+    /// (a pure function of the op stream — no clock anywhere near it),
+    /// so it may surface in the wire report.
+    rule_counts: BTreeMap<&'static str, u64>,
+    /// decisions taken under a quota-restricted (`Only`/`Banned`) set
+    restricted_decisions: u64,
+    /// weighted-stretch leapfrogs: busy-window admissions that bypassed
+    /// the FIFO head
+    leapfrogs: u64,
 }
 
 /// Non-panicking form of the submission checks [`Service::new`]
@@ -417,6 +441,10 @@ impl Service {
             weights: Vec::new(),
             ws_ideals: Vec::new(),
             any_ws: false,
+            trace: None,
+            rule_counts: BTreeMap::new(),
+            restricted_decisions: 0,
+            leapfrogs: 0,
         }
     }
 
@@ -596,6 +624,9 @@ impl Service {
                 best_key = key;
             }
         }
+        if best != 0 {
+            self.leapfrogs += 1;
+        }
         let chosen = cands.swap_remove(best);
         for c in cands {
             self.heap.push(c);
@@ -621,13 +652,24 @@ impl Service {
         let at = at.max(self.now);
         self.now = at;
 
-        #[allow(clippy::disallowed_methods)]
-        // hetlint: allow(no-wallclock-in-core) -- decision-latency metric only: td feeds self.latencies, which no placement, admission or tie-break ever reads (pinned by service_fairness::latency_metric_never_feeds_placement)
-        let td = Instant::now();
-        let p = match &self.caps[i] {
-            None => self
-                .engine
-                .decide(g, &self.plat, j, ready, &self.subs[i].policy, self.rngs[i].as_mut()),
+        if self.trace.enabled() {
+            // depth of the merged stream heap at this decision (the
+            // popped head counts itself back in)
+            let depth = self.heap.len() + 1;
+            self.trace.emit(at, EventKind::Queue { scope: "stream-heap", depth });
+        }
+        let (p, dtrace) = match &self.caps[i] {
+            None => self.engine.decide_in_traced(
+                g,
+                &self.plat,
+                j,
+                ready,
+                &self.subs[i].policy,
+                self.rngs[i].as_mut(),
+                &[],
+                i,
+                &mut self.trace,
+            ),
             Some(caps) => {
                 // quota path: expire finished reservations from the
                 // held-units ledger at the admission time, then restrict
@@ -662,7 +704,10 @@ impl Service {
                         }
                     })
                     .collect();
-                let p = self.engine.decide_in(
+                if sets.iter().any(|s| !matches!(s, UnitSet::All)) {
+                    self.restricted_decisions += 1;
+                }
+                let (p, dtrace) = self.engine.decide_in_traced(
                     g,
                     &self.plat,
                     j,
@@ -670,6 +715,8 @@ impl Service {
                     &self.subs[i].policy,
                     self.rngs[i].as_mut(),
                     &sets,
+                    i,
+                    &mut self.trace,
                 );
                 let entry = self.held[i][p.ptype].entry(p.unit).or_insert(p.finish);
                 if p.finish > *entry {
@@ -680,10 +727,10 @@ impl Service {
                     "tenant {i}: quota exceeded on type {}",
                     p.ptype
                 );
-                p
+                (p, dtrace)
             }
         };
-        self.latencies[i].push(td.elapsed().as_secs_f64() + 1e-9);
+        *self.rule_counts.entry(dtrace.rule).or_insert(0) += 1;
         // the unit's free time before this reservation: the ledger
         // mirrors every reserve/release on the pool, so it is the last
         // entry's finish (or 0) — recorded for exact rewinds on cancel
@@ -731,6 +778,85 @@ impl Service {
     /// Virtual time of the last processed arrival.
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Switch on event recording (the daemon's `--trace-out` path).
+    /// Idempotent; recording never influences a decision (pinned
+    /// bitwise by the `obs_parity` suite).
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(RecordingSink::new());
+        }
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Drain the recorded events (empty when tracing is off).  Sequence
+    /// numbers stay globally monotone across drains, so a streaming
+    /// JSONL writer can call this after every op.
+    pub fn take_trace(&mut self) -> Vec<Event> {
+        self.trace.as_mut().map(RecordingSink::take).unwrap_or_default()
+    }
+
+    /// Emit a daemon-edge event (e.g. WAL append/fsync byte counts)
+    /// into the trace stream at the current virtual time.  A no-op when
+    /// tracing is off.  Edge events share the core's globally monotone
+    /// sequence, so one JSONL stream interleaves both deterministically
+    /// — and because byte counts are a pure function of the op stream,
+    /// the interleaved trace is still byte-identical across runs.
+    pub fn trace_edge(&mut self, kind: EventKind) {
+        let now = self.now;
+        self.trace.emit(now, kind);
+    }
+
+    /// Record one decision's wall-clock latency, measured at the daemon
+    /// edge (`service_net`, where the clock is allowlisted) and
+    /// attributed to `tenant`.  The core itself never reads the clock —
+    /// hetlint R4 holds with zero suppressions in this file — and the
+    /// recorded values feed only [`TenantReport::decision_latency`],
+    /// never a placement (pinned by
+    /// `service_fairness::latency_metric_never_feeds_placement`).
+    /// Out-of-range tenants are ignored (the edge may race a
+    /// cancellation).
+    pub fn note_decision_latency(&mut self, tenant: usize, secs: f64) {
+        if let Some(v) = self.latencies.get_mut(tenant) {
+            v.push(secs);
+        }
+    }
+
+    /// Always-on observability counters as a [`Metrics`] snapshot.
+    /// Every value is a pure function of the op stream (no clock), so
+    /// the registry is identical after a WAL replay.
+    pub fn metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        m.add("svc_decisions", self.decisions.len() as u64);
+        m.add("svc_tenants", self.subs.len() as u64);
+        m.add(
+            "svc_cancelled_tenants",
+            self.cancelled.iter().filter(|c| c.is_some()).count() as u64,
+        );
+        m.add("svc_restricted_decisions", self.restricted_decisions);
+        m.add("svc_leapfrogs", self.leapfrogs);
+        for (rule, n) in &self.rule_counts {
+            m.add(&format!("svc_rule_{rule}"), *n);
+        }
+        if let Some(t) = &self.trace {
+            m.add("svc_trace_events", t.emitted());
+        }
+        m
+    }
+
+    /// Always-on rule attribution (tag → decisions taken through that
+    /// rule path) — the replay-stable summary the wire report carries.
+    pub fn rule_counts(&self) -> &BTreeMap<&'static str, u64> {
+        &self.rule_counts
+    }
+
+    /// Decisions taken under a quota-restricted set (replay-stable).
+    pub fn restricted_decisions(&self) -> u64 {
+        self.restricted_decisions
     }
 
     /// Cancel `tenant` at the current virtual time (see the struct docs
@@ -900,6 +1026,12 @@ impl Service {
             stretch_p99: 0.0,
             jain_index: 1.0,
             utilization,
+            rule_counts: self
+                .rule_counts
+                .iter()
+                .map(|(&rule, &n)| (rule.to_string(), n))
+                .collect(),
+            restricted_decisions: self.restricted_decisions,
         };
         // every stretch aggregate flows through the one
         // completed-tenants helper: a cancelled tenant's partial stretch
@@ -1418,9 +1550,10 @@ mod tests {
             assert!(*u >= 0.0 && *u <= 1.0 + 1e-9);
         }
         validate_service(&plat(), &report.tenant_runs(&subs)).unwrap();
-        // per-tenant decision latency was measured for every task
+        // batch runs never read the wall clock: decision latency is
+        // daemon-edge-only (`note_decision_latency`), so it is empty here
         for t in &report.tenants {
-            assert_eq!(t.decision_latency.n, 30);
+            assert_eq!(t.decision_latency.n, 0);
             assert!(t.completion >= t.arrival);
         }
     }

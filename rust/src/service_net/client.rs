@@ -71,6 +71,16 @@ impl Client {
             .ok_or_else(|| "response missing report".to_string())
     }
 
+    /// Fetch the merged metrics snapshot (core + daemon-edge registry)
+    /// as the serialized [`MetricsReport`](crate::obs::MetricsReport)
+    /// object.  Read-only: nothing is logged, no state advances.
+    pub fn metrics(&mut self) -> Result<Json, String> {
+        let resp = self.call(&Request::Metrics)?;
+        resp.get("metrics")
+            .cloned()
+            .ok_or_else(|| "response missing metrics".to_string())
+    }
+
     /// Ask the daemon to exit (acknowledged before it goes down).
     pub fn shutdown(&mut self) -> Result<(), String> {
         self.call(&Request::Shutdown).map(|_| ())

@@ -18,7 +18,7 @@
 //! mutate.
 
 use std::collections::VecDeque;
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -26,6 +26,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::obs::event::to_jsonl;
+use crate::obs::{Event, EventKind, Metrics, MetricsReport};
 use crate::platform::Platform;
 use crate::sched::service::{
     validate_submission, CancelOutcome, DecisionRecord, Service, ServiceReport, Submission,
@@ -47,6 +49,11 @@ pub struct DaemonConfig {
     /// If set, the actual listening address is written here — how the
     /// ci.sh smoke stage finds an ephemerally-bound daemon.
     pub port_file: Option<PathBuf>,
+    /// If set, structured events (decision spans, queue depths, WAL
+    /// byte counts) are appended here as JSONL after every op.  The
+    /// stream carries virtual time only, so two runs of the same
+    /// workload write byte-identical files (ci.sh pins this).
+    pub trace_out: Option<PathBuf>,
 }
 
 /// What replaying the WAL found (reported once at startup).
@@ -60,12 +67,22 @@ pub struct ReplaySummary {
     pub torn_tail: bool,
 }
 
+/// Bucket bounds (seconds) for the edge decision-latency histogram.
+const EDGE_LATENCY_BOUNDS: [f64; 7] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+const EDGE_LATENCY_HIST: &str = "edge_decision_latency_s";
+
 /// The deterministic daemon state: a [`Service`] whose every mutation
-/// is mirrored in (and recoverable from) a [`Wal`].
+/// is mirrored in (and recoverable from) a [`Wal`], plus the
+/// daemon-edge metrics registry.  Edge metrics (op counts, WAL bytes,
+/// wall-clock latency) live here — outside the replay-stable core —
+/// so they can read the clock without touching a placement.
 pub struct Core {
     plat: Platform,
     svc: Service,
     wal: Wal,
+    edge: Metrics,
+    /// Bytes appended since the last fsync (feeds the fsync trace event).
+    unsynced: u64,
 }
 
 impl Core {
@@ -84,9 +101,10 @@ impl Core {
         };
 
         if scan.records.is_empty() {
-            wal.append(&WalRecord::Platform { counts: plat.counts.clone() })?;
-            wal.sync()?;
-            return Ok((Core { plat: plat.clone(), svc, wal }, summary));
+            let mut core = Core::with_edge(plat.clone(), svc, wal);
+            core.wal_append(&WalRecord::Platform { counts: plat.counts.clone() })?;
+            core.wal_sync()?;
+            return Ok((core, summary));
         }
 
         let WalRecord::Platform { counts } = &scan.records[0] else {
@@ -147,14 +165,40 @@ impl Core {
         // Decisions taken before the crash but lost with the tail:
         // regenerate their records (determinism makes them identical to
         // what the dead daemon computed).
+        let mut core = Core::with_edge(plat.clone(), svc, wal);
         for (rec, place) in pending {
             summary.decisions_regenerated += 1;
-            wal.append(&WalRecord::Decision { rec, place })?;
+            core.wal_append(&WalRecord::Decision { rec, place })?;
         }
         if summary.decisions_regenerated > 0 {
-            wal.sync()?;
+            core.wal_sync()?;
         }
-        Ok((Core { plat: plat.clone(), svc, wal }, summary))
+        Ok((core, summary))
+    }
+
+    fn with_edge(plat: Platform, svc: Service, wal: Wal) -> Core {
+        let mut edge = Metrics::new();
+        edge.register_hist(EDGE_LATENCY_HIST, &EDGE_LATENCY_BOUNDS);
+        Core { plat, svc, wal, edge, unsynced: 0 }
+    }
+
+    /// Append a record, keeping the edge counters and (when tracing)
+    /// the event stream in step with the WAL.
+    fn wal_append(&mut self, rec: &WalRecord) -> Result<(), String> {
+        let bytes = self.wal.append(rec)? as u64;
+        self.edge.inc("wal_appends");
+        self.edge.add("wal_bytes", bytes);
+        self.unsynced += bytes;
+        self.svc.trace_edge(EventKind::Wal { op: "append", bytes });
+        Ok(())
+    }
+
+    fn wal_sync(&mut self) -> Result<(), String> {
+        self.wal.sync()?;
+        self.edge.inc("wal_syncs");
+        let bytes = std::mem::take(&mut self.unsynced);
+        self.svc.trace_edge(EventKind::Wal { op: "fsync", bytes });
+        Ok(())
     }
 
     /// Admit a submission: log + fsync the op, apply it, log + fsync
@@ -163,20 +207,22 @@ impl Core {
         // validate before logging — a rejected submission must leave no
         // trace in the WAL (replay would reject it too and refuse to
         // start)
+        let t0 = Instant::now();
         validate_submission(&self.plat, &sub)?;
-        self.wal.append(&WalRecord::Submit { sub: sub.clone() })?;
-        self.wal.sync()?;
+        self.wal_append(&WalRecord::Submit { sub: sub.clone() })?;
+        self.wal_sync()?;
         let before = self.svc.decisions().len();
         let id = self.svc.admit(sub).map_err(|e| format!("admit after validate: {e}"))?;
         self.log_new_decisions(before)?;
+        self.note_edge_latency(before, t0);
         Ok(id)
     }
 
     /// Cancel a tenant at the current virtual time.
     pub fn cancel(&mut self, tenant: usize) -> Result<CancelOutcome, String> {
         check_cancel(&self.svc, tenant)?;
-        self.wal.append(&WalRecord::Cancel { tenant })?;
-        self.wal.sync()?;
+        self.wal_append(&WalRecord::Cancel { tenant })?;
+        self.wal_sync()?;
         Ok(self.svc.cancel(tenant))
     }
 
@@ -188,11 +234,13 @@ impl Core {
             return Err("no tenants submitted".into());
         }
         if !self.svc.is_drained() {
-            self.wal.append(&WalRecord::Drain)?;
-            self.wal.sync()?;
+            let t0 = Instant::now();
+            self.wal_append(&WalRecord::Drain)?;
+            self.wal_sync()?;
             let before = self.svc.decisions().len();
             self.svc.run();
             self.log_new_decisions(before)?;
+            self.note_edge_latency(before, t0);
         }
         Ok(self.svc.report(None))
     }
@@ -229,12 +277,57 @@ impl Core {
         queue_new_decisions(&self.svc, before, &mut queue);
         let appended = !queue.is_empty();
         for (rec, place) in queue {
-            self.wal.append(&WalRecord::Decision { rec, place })?;
+            self.wal_append(&WalRecord::Decision { rec, place })?;
         }
         if appended {
-            self.wal.sync()?;
+            self.wal_sync()?;
         }
         Ok(())
+    }
+
+    /// Split this op's edge wall-time evenly across the decisions it
+    /// produced and attribute each share to the decision's tenant.
+    /// This is the *only* place daemon timing enters a report, and it
+    /// flows into [`crate::sched::service::TenantReport::decision_latency`]
+    /// alone — never a placement (pinned by
+    /// `service_fairness::latency_metric_never_feeds_placement`).
+    fn note_edge_latency(&mut self, before: usize, t0: Instant) {
+        let owners: Vec<usize> =
+            self.svc.decisions()[before..].iter().map(|d| d.tenant).collect();
+        if owners.is_empty() {
+            return;
+        }
+        let per = (t0.elapsed().as_secs_f64() / owners.len() as f64).max(f64::MIN_POSITIVE);
+        for tenant in owners {
+            self.edge.observe(EDGE_LATENCY_HIST, per);
+            self.svc.note_decision_latency(tenant, per);
+        }
+    }
+
+    /// Count one front-end op in the edge registry (`ops_submit`,
+    /// `ops_status`, …).
+    pub fn note_op(&mut self, op: &str) {
+        self.edge.add(&format!("ops_{op}"), 1);
+    }
+
+    /// Merged metrics snapshot: the replay-stable core registry
+    /// ([`Service::metrics`]) plus the daemon-edge registry (op counts,
+    /// WAL bytes/syncs, edge decision-latency histogram).
+    pub fn metrics(&self) -> MetricsReport {
+        let mut m = self.svc.metrics();
+        m.merge(&self.edge);
+        m.report()
+    }
+
+    /// Switch on event recording (the `--trace-out` path).
+    pub fn enable_trace(&mut self) {
+        self.svc.enable_trace();
+    }
+
+    /// Drain recorded events (empty when tracing is off); sequence
+    /// numbers stay monotone across drains.
+    pub fn take_trace(&mut self) -> Vec<Event> {
+        self.svc.take_trace()
     }
 }
 
@@ -274,6 +367,47 @@ fn decision_eq(a: &DecisionRecord, ap: &Placement, b: &DecisionRecord, bp: &Plac
         && ap.finish.to_bits() == bp.finish.to_bits()
 }
 
+/// Replay a WAL through a tracing [`Service`] and render why
+/// `tenant:task` landed where it did (`hetsched explain`).  Replay ==
+/// rerun, so the recorded event stream is exactly what a traced
+/// original run would have emitted; logged decision records are
+/// verification-only and skipped here.
+pub fn explain_from_wal(path: &Path, tenant: usize, task: usize) -> Result<String, String> {
+    let scan = wal::recover(path)?;
+    if scan.records.is_empty() {
+        return Err(format!("{}: empty WAL", path.display()));
+    }
+    let WalRecord::Platform { counts } = &scan.records[0] else {
+        return Err("WAL does not start with a platform record".into());
+    };
+    let plat = Platform::new(counts.clone());
+    let mut svc = Service::empty(&plat);
+    svc.enable_trace();
+    for (n, rec) in scan.records.iter().enumerate().skip(1) {
+        match rec {
+            WalRecord::Platform { .. } => {
+                return Err(format!("duplicate platform record at index {n}"))
+            }
+            WalRecord::Submit { sub } => {
+                svc.admit(sub.clone())
+                    .map_err(|e| format!("replay: submit at index {n} rejected: {e}"))?;
+            }
+            WalRecord::Cancel { tenant } => {
+                check_cancel(&svc, *tenant)
+                    .map_err(|e| format!("replay: cancel at index {n} rejected: {e}"))?;
+                svc.cancel(*tenant);
+            }
+            WalRecord::Drain => svc.run(),
+            WalRecord::Decision { .. } => {}
+        }
+    }
+    if tenant >= svc.n_tenants() {
+        return Err(format!("no tenant {tenant} in this WAL ({} tenants)", svc.n_tenants()));
+    }
+    let events = svc.take_trace();
+    crate::obs::explain::render(&events, tenant, task)
+}
+
 // ---------------------------------------------------------------------------
 // TCP front end
 // ---------------------------------------------------------------------------
@@ -286,7 +420,19 @@ pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
     let local = listener.local_addr().map_err(|e| e.to_string())?;
-    let (core, replay) = Core::open(&cfg.wal, &cfg.plat)?;
+    let (mut core, replay) = Core::open(&cfg.wal, &cfg.plat)?;
+    let trace_file = match &cfg.trace_out {
+        None => None,
+        Some(p) => {
+            // enable *after* replay: the trace covers this process's
+            // ops, so two fresh-WAL runs of one workload match bytewise
+            core.enable_trace();
+            Some(
+                std::fs::File::create(p)
+                    .map_err(|e| format!("trace out {}: {e}", p.display()))?,
+            )
+        }
+    };
     println!(
         "hetsched serve-service: listening on {local}, wal {} ({} ops replayed, \
          {} decisions verified{}{})",
@@ -310,7 +456,7 @@ pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
     // wall clock at the daemon's edge only: uptime/ops accounting —
     // nothing here flows into a scheduling decision
     let started = Instant::now();
-    let sched = std::thread::spawn(move || scheduler_loop(core, rx));
+    let sched = std::thread::spawn(move || scheduler_loop(core, rx, trace_file));
 
     for conn in listener.incoming() {
         if shutdown.load(Ordering::SeqCst) {
@@ -331,11 +477,26 @@ pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
 }
 
 /// The single mutation point: owns the [`Core`], applies requests in
-/// channel order, answers each through its reply channel.
-fn scheduler_loop(mut core: Core, rx: mpsc::Receiver<(Request, Reply)>) -> usize {
+/// channel order, answers each through its reply channel.  When a
+/// trace file is attached, recorded events are drained to it after
+/// every op so a crash loses at most one op's worth of events.
+fn scheduler_loop(
+    mut core: Core,
+    rx: mpsc::Receiver<(Request, Reply)>,
+    mut trace_out: Option<std::fs::File>,
+) -> usize {
     let mut ops = 0usize;
     while let Ok((req, reply)) = rx.recv() {
         ops += 1;
+        core.note_op(match &req {
+            Request::Submit(_) => "submit",
+            Request::Status { .. } => "status",
+            Request::Cancel { .. } => "cancel",
+            Request::Report => "report",
+            Request::Metrics => "metrics",
+            Request::Shutdown => "shutdown",
+        });
+        let shutting_down = matches!(req, Request::Shutdown);
         let resp = match req {
             Request::Submit(sub) => match core.submit(sub) {
                 Ok(tenant) => wire::ok_response(vec![("tenant", Json::Num(tenant as f64))]),
@@ -357,12 +518,22 @@ fn scheduler_loop(mut core: Core, rx: mpsc::Receiver<(Request, Reply)>) -> usize
                 Ok(r) => wire::ok_response(vec![("report", wire::report_to_json(&r))]),
                 Err(e) => wire::err_response(&e),
             },
-            Request::Shutdown => {
-                let _ = reply.send(wire::ok_response(vec![]));
-                break;
+            Request::Metrics => {
+                wire::ok_response(vec![("metrics", core.metrics().to_json())])
             }
+            Request::Shutdown => wire::ok_response(vec![]),
         };
+        if let Some(f) = &mut trace_out {
+            let events = core.take_trace();
+            if !events.is_empty() {
+                let _ = f.write_all(to_jsonl(&events).as_bytes());
+                let _ = f.flush();
+            }
+        }
         let _ = reply.send(resp);
+        if shutting_down {
+            break;
+        }
     }
     ops
 }

@@ -212,10 +212,15 @@ impl Wal {
         &self.path
     }
 
-    pub fn append(&mut self, rec: &WalRecord) -> Result<(), String> {
+    /// Append one record; returns the number of bytes written (frame
+    /// length), which feeds the daemon's `wal_bytes` counter and `wal`
+    /// trace events.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<usize, String> {
+        let frame = wire::encode_frame(&record_to_json(rec));
         self.file
-            .write_all(wire::encode_frame(&record_to_json(rec)).as_bytes())
-            .map_err(|e| format!("{}: append: {e}", self.path.display()))
+            .write_all(frame.as_bytes())
+            .map_err(|e| format!("{}: append: {e}", self.path.display()))?;
+        Ok(frame.len())
     }
 
     /// Make everything appended so far durable before acknowledging.

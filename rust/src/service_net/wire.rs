@@ -211,6 +211,9 @@ pub enum Request {
     Status { tenant: usize },
     Cancel { tenant: usize },
     Report,
+    /// Snapshot of the daemon's metrics registry (scheduler counters
+    /// merged with the daemon-edge counters/histograms).
+    Metrics,
     Shutdown,
 }
 
@@ -229,6 +232,7 @@ pub fn request_to_json(r: &Request) -> Json {
             ("tenant", Json::Num(*tenant as f64)),
         ]),
         Request::Report => Json::obj(vec![("op", Json::Str("report".into()))]),
+        Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
         Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
     }
 }
@@ -247,6 +251,7 @@ pub fn request_from_json(v: &Json) -> Result<Request, String> {
         "status" => Request::Status { tenant: tenant()? },
         "cancel" => Request::Cancel { tenant: tenant()? },
         "report" => Request::Report,
+        "metrics" => Request::Metrics,
         "shutdown" => Request::Shutdown,
         other => return Err(format!("unknown op '{other}'")),
     })
@@ -265,10 +270,12 @@ pub fn err_response(msg: &str) -> Json {
 }
 
 /// Canonical (deterministic) JSON projection of a [`ServiceReport`]:
-/// every virtual-time metric, placement and decision, but *not* the
-/// wall-clock decision-latency summaries — those are measurement noise
-/// and would break the byte-for-byte replay==rerun comparison the WAL
-/// recovery guarantee is pinned on.
+/// every virtual-time metric, placement and decision, plus the
+/// replay-stable observability summary (`rule_counts`,
+/// `restricted_decisions` — pure functions of the op stream), but *not*
+/// the wall-clock decision-latency summaries — those are measurement
+/// noise and would break the byte-for-byte replay==rerun comparison the
+/// WAL recovery guarantee is pinned on.
 pub fn report_to_json(r: &ServiceReport) -> Json {
     let tenants: Vec<Json> = r
         .tenants
@@ -336,7 +343,46 @@ pub fn report_to_json(r: &ServiceReport) -> Json {
             "utilization",
             Json::Arr(r.utilization.iter().map(|&u| Json::Num(u)).collect()),
         ),
+        (
+            "rule_counts",
+            Json::Arr(
+                r.rule_counts
+                    .iter()
+                    .map(|(rule, n)| {
+                        Json::Arr(vec![Json::Str(rule.clone()), Json::Num(*n as f64)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("restricted_decisions", Json::Num(r.restricted_decisions as f64)),
     ])
+}
+
+/// Exact inverse of [`report_to_json`]'s observability summary: the
+/// `(rule, count)` pairs in serialized (tag-sorted) order plus the
+/// restricted-decision count.  Used by clients and the round-trip pins.
+pub fn report_obs_from_json(v: &Json) -> Result<(Vec<(String, u64)>, u64), String> {
+    let rules = v
+        .get("rule_counts")
+        .and_then(Json::as_arr)
+        .ok_or("report: missing rule_counts")?
+        .iter()
+        .map(|pair| {
+            let arr = pair.as_arr().ok_or("report: rule_counts entry not a pair")?;
+            match arr {
+                [Json::Str(rule), n] => Ok((
+                    rule.clone(),
+                    n.as_usize().ok_or("report: bad rule count")? as u64,
+                )),
+                _ => Err("report: rule_counts entry not [tag, count]".to_string()),
+            }
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let restricted = v
+        .get("restricted_decisions")
+        .and_then(Json::as_usize)
+        .ok_or("report: missing restricted_decisions")? as u64;
+    Ok((rules, restricted))
 }
 
 #[cfg(test)]
@@ -415,6 +461,7 @@ mod tests {
             Request::Status { tenant: 3 },
             Request::Cancel { tenant: 0 },
             Request::Report,
+            Request::Metrics,
             Request::Shutdown,
         ] {
             let v = json::parse(&request_to_json(&req).to_string()).unwrap();
@@ -433,5 +480,58 @@ mod tests {
             ("tenant", Json::Num(-1.0)),
         ]);
         assert!(request_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn error_envelope_roundtrips_through_frames() {
+        // the structured error envelope must survive the wire exactly:
+        // ok flag false, message byte-identical (including escapes)
+        for msg in ["no tenant 7", "weird \"quoted\" message\nwith newline"] {
+            let env = err_response(msg);
+            let line = encode_frame(&env);
+            assert_eq!(line.matches('\n').count(), 1, "envelope stays one frame");
+            let back = decode_frame(line.strip_suffix('\n').unwrap()).unwrap();
+            assert_eq!(back.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(back.get("error").and_then(Json::as_str), Some(msg));
+            assert_eq!(back, env);
+        }
+        // and the ok envelope keeps its leading flag plus payload fields
+        let okv = ok_response(vec![("tenant", Json::Num(2.0))]);
+        let back = decode_frame(encode_frame(&okv).strip_suffix('\n').unwrap()).unwrap();
+        assert_eq!(back.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(back.get("tenant").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn report_obs_fields_roundtrip_exactly() {
+        use crate::platform::Platform;
+        use crate::sched::service::run_service;
+        let mut b = Builder::new("obs");
+        let a = b.add_task("A", vec![1.0, 2.0]);
+        let c = b.add_task("B", vec![2.0, 1.0]);
+        b.add_arc(a, c);
+        let g = b.build();
+        let plat = Platform::hybrid(2, 1);
+        let subs = vec![
+            Submission::new(g.clone(), 0.0, OnlinePolicy::Eft),
+            Submission::new(g, 0.5, OnlinePolicy::Greedy)
+                .with_admission(TenantPolicy::Quota { cpu_share: 0.5, gpu_share: 1.0 }),
+        ];
+        let report = run_service(&plat, &subs);
+        assert!(!report.rule_counts.is_empty(), "every decision is attributed");
+        let total: u64 = report.rule_counts.iter().map(|(_, n)| n).sum();
+        assert_eq!(total as usize, report.decisions.len());
+
+        let v = report_to_json(&report);
+        // serialize -> parse -> re-serialize must be byte-identical
+        let text = v.to_string();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.to_string(), text);
+        // and the obs summary decodes back exactly
+        let (rules, restricted) = report_obs_from_json(&parsed).unwrap();
+        assert_eq!(rules, report.rule_counts);
+        assert_eq!(restricted, report.restricted_decisions);
+        // latency summaries never enter the wire projection
+        assert!(v.get("decision_latency").is_none());
     }
 }

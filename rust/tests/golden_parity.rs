@@ -337,6 +337,48 @@ fn parity_on_chameleon_instances() {
 }
 
 #[test]
+fn traced_entry_points_preserve_seed_parity() {
+    // The obs layer threaded `*_traced(..., sink)` variants through the
+    // engine decision files; the public untraced functions delegate
+    // with a NoopSink, and emit sites only ever *read* decision state
+    // behind `sink.enabled()` — they never feed the comparators.
+    // Parity with the retained seed bodies is therefore preserved by
+    // construction; this sweep pins it against the oracle directly,
+    // with a recording sink attached (the strictest configuration).
+    use hetsched::obs::RecordingSink;
+    use hetsched::sched::online::online_schedule_traced;
+    let mut rng = Rng::new(0x0B5_000A);
+    for case in 0..20 {
+        let g = random_instance(&mut rng);
+        let plat = random_platform(&mut rng);
+        let alloc = speed_alloc(&g);
+
+        let mut sink = RecordingSink::new();
+        let a = est::est_schedule_traced(&g, &plat, &alloc, &mut sink);
+        let b = reference::est_schedule(&g, &plat, &alloc);
+        assert_eq!(a.placements, b.placements, "EST traced case {case}");
+
+        let mut sink = RecordingSink::new();
+        let a = heft::heft_schedule_traced(&g, &plat, &mut sink);
+        let b = reference::heft_schedule(&g, &plat);
+        assert_eq!(a.placements, b.placements, "HEFT traced case {case}");
+
+        let order = random_topo_order(&g, &mut rng);
+        for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+            let mut sink = RecordingSink::new();
+            let a = online_schedule_traced(&g, &plat, &order, &policy, &mut sink);
+            let b = reference::online_schedule(&g, &plat, &order, &policy);
+            assert_eq!(
+                a.placements,
+                b.placements,
+                "{} traced case {case}",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn engine_ranks_unchanged_by_refactor() {
     // ols_rank feeds both engine and reference OLS; pin that the rank
     // computation itself is untouched by asserting monotonicity along

@@ -1,0 +1,431 @@
+//! Observability non-perturbation suite: the tentpole invariant of the
+//! obs layer is that *tracing is free of behavioral consequence* —
+//! running any scheduler with a [`RecordingSink`] attached produces
+//! placements bitwise identical to the untraced run, and the recorded
+//! stream itself is a deterministic function of the workload (two runs
+//! emit byte-identical JSONL).
+//!
+//! Coverage mirrors the two seed matrices the repo already pins:
+//!
+//! * the golden-parity sweep (random `hybrid_dag` draws × random
+//!   platforms through EST / OLS / list / HEFT / every online policy),
+//!   re-run here traced-vs-untraced with `to_bits` placement equality;
+//! * the service-fairness draw generator (multi-tenant streams ×
+//!   {FIFO, Quota, WeightedStretch}), re-run traced-vs-untraced through
+//!   the full report aggregates;
+//!
+//! plus the daemon-side contracts: WAL replay re-emits the original
+//! run's core event stream exactly, edge metrics accumulate without
+//! entering the replay-stable report, and `explain` renders a stable,
+//! correct decision story from a seeded WAL.
+
+use std::path::PathBuf;
+
+use hetsched::graph::gen;
+use hetsched::obs::event::to_jsonl;
+use hetsched::obs::{EventKind, RecordingSink};
+use hetsched::platform::Platform;
+use hetsched::sched::online::{
+    online_schedule, online_schedule_traced, random_topo_order, OnlinePolicy,
+};
+use hetsched::sched::service::{run_service, Service, Submission, TenantPolicy};
+use hetsched::sched::{est, heft, list};
+use hetsched::service_net::{explain_from_wal, Core};
+use hetsched::sim::{Placement, Schedule};
+use hetsched::substrate::rng::Rng;
+
+const CASES: usize = 25;
+
+fn random_platform(rng: &mut Rng) -> Platform {
+    let k = 1 + rng.below(6);
+    let m = 1 + rng.below(16);
+    Platform::hybrid(m.max(k), k)
+}
+
+fn speed_alloc(g: &hetsched::graph::TaskGraph) -> Vec<usize> {
+    (0..g.n_tasks())
+        .map(|j| usize::from(g.p_gpu(j) < g.p_cpu(j)))
+        .collect()
+}
+
+/// Bitwise schedule equality — the non-perturbation pin is about bits,
+/// not `==` (a `-0.0` drift must not hide behind IEEE equality).
+fn assert_bitwise_eq(a: &Schedule, b: &Schedule, label: &str) {
+    assert_eq!(a.placements.len(), b.placements.len(), "{label}: lengths");
+    for (j, (pa, pb)) in a.placements.iter().zip(&b.placements).enumerate() {
+        let eq = pa.ptype == pb.ptype
+            && pa.unit == pb.unit
+            && pa.start.to_bits() == pb.start.to_bits()
+            && pa.finish.to_bits() == pb.finish.to_bits();
+        assert!(eq, "{label}: task {j} diverged: {pa:?} vs {pb:?}");
+    }
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{label}: makespan bits"
+    );
+}
+
+fn n_decisions(events: &[hetsched::obs::Event]) -> usize {
+    events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Decision(_)))
+        .count()
+}
+
+#[test]
+fn offline_engines_traced_match_untraced_bitwise() {
+    let mut rng = Rng::new(0x0B5_0001);
+    for case in 0..CASES {
+        let n = 30 + rng.below(100);
+        let g = gen::hybrid_dag(&mut rng, n, 0.02 + 0.13 * rng.f64());
+        let plat = random_platform(&mut rng);
+        let alloc = speed_alloc(&g);
+        let prio: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+
+        let mut sink = RecordingSink::new();
+        let traced = est::est_schedule_traced(&g, &plat, &alloc, &mut sink);
+        let plain = est::est_schedule(&g, &plat, &alloc);
+        assert_bitwise_eq(&traced, &plain, &format!("EST case {case}"));
+        assert_eq!(n_decisions(sink.events()), n, "EST decision span per task");
+
+        let mut sink = RecordingSink::new();
+        let traced = list::list_schedule_traced(&g, &plat, &alloc, &prio, &mut sink);
+        let plain = list::list_schedule(&g, &plat, &alloc, &prio);
+        assert_bitwise_eq(&traced, &plain, &format!("list case {case}"));
+        assert_eq!(n_decisions(sink.events()), n, "list decision span per task");
+
+        let mut sink = RecordingSink::new();
+        let traced = heft::heft_schedule_traced(&g, &plat, &mut sink);
+        let plain = heft::heft_schedule(&g, &plat);
+        assert_bitwise_eq(&traced, &plain, &format!("HEFT case {case}"));
+        assert_eq!(n_decisions(sink.events()), n, "HEFT decision span per task");
+        assert!(
+            sink.events()
+                .iter()
+                .any(|e| matches!(e.kind, EventKind::GapProbe { .. })),
+            "HEFT trace carries gap-index probes (case {case})"
+        );
+    }
+}
+
+#[test]
+fn online_policies_traced_match_untraced_bitwise() {
+    let mut rng = Rng::new(0x0B5_0002);
+    for case in 0..CASES {
+        let n = 30 + rng.below(100);
+        let g = gen::hybrid_dag(&mut rng, n, 0.02 + 0.13 * rng.f64());
+        let plat = random_platform(&mut rng);
+        let order = random_topo_order(&g, &mut rng);
+        for policy in [
+            OnlinePolicy::ErLs,
+            OnlinePolicy::Eft,
+            OnlinePolicy::Greedy,
+            OnlinePolicy::Random(case as u64),
+            OnlinePolicy::R1,
+            OnlinePolicy::R2,
+            OnlinePolicy::R3,
+        ] {
+            let mut sink = RecordingSink::new();
+            let traced = online_schedule_traced(&g, &plat, &order, &policy, &mut sink);
+            let plain = online_schedule(&g, &plat, &order, &policy);
+            assert_bitwise_eq(
+                &traced,
+                &plain,
+                &format!("{} case {case}", policy.name()),
+            );
+            assert_eq!(
+                n_decisions(sink.events()),
+                n,
+                "{} emits one decision span per task",
+                policy.name()
+            );
+        }
+    }
+}
+
+/// The service-fairness draw generator, reproduced (same shapes, its
+/// own seeds) so tracing is exercised across FIFO/Quota/WeightedStretch
+/// admission, quota bans, and cancellation-free multi-tenant streams.
+fn service_draw(rng: &mut Rng, draw: u64, kind: usize) -> (Platform, Vec<Submission>) {
+    let plat = Platform::hybrid(1 + rng.below(6), 1 + rng.below(3));
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(draw),
+        OnlinePolicy::R2,
+    ];
+    let n_tenants = 2 + rng.below(4);
+    let subs: Vec<Submission> = (0..n_tenants)
+        .map(|t| {
+            let n = 10 + rng.below(25);
+            let g = gen::hybrid_dag(rng, n, 0.03 + 0.15 * rng.f64());
+            let arrival = rng.f64() * 15.0;
+            let admission = match kind {
+                0 => TenantPolicy::Fifo,
+                1 => TenantPolicy::Quota {
+                    cpu_share: 0.2 + 0.8 * rng.f64(),
+                    gpu_share: 0.2 + 0.8 * rng.f64(),
+                },
+                _ => TenantPolicy::WeightedStretch { weight: 0.25 + 3.75 * rng.f64() },
+            };
+            Submission::new(g, arrival, policies[(draw as usize + t) % policies.len()].clone())
+                .with_admission(admission)
+        })
+        .collect();
+    (plat, subs)
+}
+
+#[test]
+fn service_tracing_never_perturbs_placements_or_report() {
+    let mut rng = Rng::new(0x0B5_0003);
+    for kind in 0..3usize {
+        for draw in 0..12u64 {
+            let (plat, subs) = service_draw(&mut rng, draw, kind);
+
+            let mut traced_svc = Service::new(&plat, &subs);
+            traced_svc.enable_trace();
+            traced_svc.run();
+            let events = traced_svc.take_trace();
+            let traced = traced_svc.report(None);
+            let plain = run_service(&plat, &subs);
+
+            let label = format!("kind {kind} draw {draw}");
+            assert_eq!(
+                traced.decisions.len(),
+                plain.decisions.len(),
+                "{label}: decision count"
+            );
+            for (a, b) in traced.decisions.iter().zip(&plain.decisions) {
+                assert_eq!((a.tenant, a.task), (b.tenant, b.task), "{label}");
+                assert_eq!(a.time.to_bits(), b.time.to_bits(), "{label}");
+            }
+            for (i, (ta, tb)) in traced.tenants.iter().zip(&plain.tenants).enumerate() {
+                assert_bitwise_eq(
+                    &ta.schedule,
+                    &tb.schedule,
+                    &format!("{label} tenant {i}"),
+                );
+                assert_eq!(ta.stretch.to_bits(), tb.stretch.to_bits(), "{label}");
+                assert_eq!(ta.flow_time.to_bits(), tb.flow_time.to_bits(), "{label}");
+            }
+            assert_eq!(traced.horizon.to_bits(), plain.horizon.to_bits(), "{label}");
+            assert_eq!(
+                traced.mean_stretch.to_bits(),
+                plain.mean_stretch.to_bits(),
+                "{label}"
+            );
+            assert_eq!(
+                traced.jain_index.to_bits(),
+                plain.jain_index.to_bits(),
+                "{label}"
+            );
+            // the always-on summaries are sink-independent too
+            assert_eq!(traced.rule_counts, plain.rule_counts, "{label}");
+            assert_eq!(
+                traced.restricted_decisions, plain.restricted_decisions,
+                "{label}"
+            );
+            assert_eq!(
+                n_decisions(&events),
+                traced.decisions.len(),
+                "{label}: one decision span per placement"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_jsonl_is_byte_identical_across_runs() {
+    let mut seeds = Rng::new(0x0B5_0004);
+    for kind in 0..3usize {
+        let mut rng_a = Rng::new(0xD15C_0000 + kind as u64);
+        let mut rng_b = Rng::new(0xD15C_0000 + kind as u64);
+        let (plat_a, subs_a) = service_draw(&mut rng_a, 7, kind);
+        let (plat_b, subs_b) = service_draw(&mut rng_b, 7, kind);
+
+        let run = |plat: &Platform, subs: &[Submission]| {
+            let mut svc = Service::new(plat, subs);
+            svc.enable_trace();
+            svc.run();
+            to_jsonl(&svc.take_trace())
+        };
+        let a = run(&plat_a, &subs_a);
+        let b = run(&plat_b, &subs_b);
+        assert!(!a.is_empty(), "kind {kind}: trace is non-empty");
+        assert_eq!(a, b, "kind {kind}: two runs write byte-identical JSONL");
+    }
+
+    // and the offline entry points: same draw, two traced runs
+    let n = 40 + seeds.below(40);
+    let g = gen::hybrid_dag(&mut seeds, n, 0.08);
+    let plat = random_platform(&mut seeds);
+    let order: Vec<usize> = (0..n).collect();
+    let mut s1 = RecordingSink::new();
+    let mut s2 = RecordingSink::new();
+    online_schedule_traced(&g, &plat, &order, &OnlinePolicy::ErLs, &mut s1);
+    online_schedule_traced(&g, &plat, &order, &OnlinePolicy::ErLs, &mut s2);
+    assert_eq!(to_jsonl(s1.events()), to_jsonl(s2.events()));
+}
+
+fn scratch_wal(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hetsched_obs_parity");
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let path = dir.join(name);
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+/// One small contended workload driven through the daemon [`Core`]
+/// (tracing on), leaving a WAL behind for the replay-side tests.
+fn seeded_core(name: &str) -> (PathBuf, Platform, Core, Vec<hetsched::obs::Event>) {
+    let path = scratch_wal(name);
+    let plat = Platform::hybrid(3, 1);
+    let (mut core, replay) = Core::open(&path, &plat).expect("fresh wal opens");
+    assert_eq!(replay.ops, 0);
+    core.enable_trace();
+    let mut rng = Rng::new(0x5EED_0001);
+    let mut events = Vec::new();
+    for t in 0..3usize {
+        let g = gen::hybrid_dag(&mut rng, 12 + 4 * t, 0.1);
+        let sub = Submission::new(g, t as f64 * 2.0, OnlinePolicy::Eft)
+            .with_admission(TenantPolicy::Fifo);
+        core.submit(sub).expect("submit");
+        events.extend(core.take_trace());
+    }
+    core.report().expect("drain + report");
+    events.extend(core.take_trace());
+    (path, plat, core, events)
+}
+
+#[test]
+fn wal_replay_reemits_the_original_core_event_stream() {
+    let (path, plat, core, original) = seeded_core("replay_trace.wal");
+    assert!(n_decisions(&original) > 0, "seed run decided something");
+    assert!(
+        original
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Wal { op: "append", .. })),
+        "daemon trace interleaves WAL append events"
+    );
+    assert!(
+        original
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Wal { op: "fsync", .. })),
+        "daemon trace interleaves WAL fsync events"
+    );
+    drop(core);
+
+    // offline replay re-runs the logged ops through a fresh tracing
+    // Service; its core events (everything but the daemon-edge Wal
+    // records) must reproduce the original stream exactly
+    let mut svc = Service::empty(&plat);
+    svc.enable_trace();
+    let scan = hetsched::service_net::wal::recover(&path).expect("recover");
+    for rec in &scan.records[1..] {
+        match rec {
+            hetsched::service_net::wal::WalRecord::Submit { sub } => {
+                svc.admit(sub.clone()).expect("replay admit");
+            }
+            hetsched::service_net::wal::WalRecord::Drain => svc.run(),
+            hetsched::service_net::wal::WalRecord::Decision { .. } => {}
+            other => panic!("unexpected record {other:?}"),
+        }
+    }
+    let replayed = svc.take_trace();
+    let core_only: Vec<(u64, &hetsched::obs::EventKind)> = original
+        .iter()
+        .filter(|e| !matches!(e.kind, EventKind::Wal { .. }))
+        .map(|e| (e.vtime.to_bits(), &e.kind))
+        .collect();
+    let replay_view: Vec<(u64, &hetsched::obs::EventKind)> =
+        replayed.iter().map(|e| (e.vtime.to_bits(), &e.kind)).collect();
+    assert_eq!(
+        core_only, replay_view,
+        "replay re-emits the original core event stream"
+    );
+}
+
+#[test]
+fn explain_is_stable_and_matches_the_decided_placement() {
+    let (path, _plat, mut core, _events) = seeded_core("explain.wal");
+    let d = core.decisions()[0];
+    // the placement the daemon actually took for that decision
+    let svc_report = core.report().expect("report");
+    let place: Placement = svc_report.tenants[d.tenant]
+        .kept_tasks
+        .iter()
+        .zip(&svc_report.tenants[d.tenant].schedule.placements)
+        .find(|(&j, _)| j == d.task)
+        .map(|(_, p)| *p)
+        .expect("decided task has a placement");
+
+    let once = explain_from_wal(&path, d.tenant, d.task).expect("explain");
+    let twice = explain_from_wal(&path, d.tenant, d.task).expect("explain again");
+    assert_eq!(once, twice, "explain output is byte-stable across replays");
+
+    assert!(once.starts_with(&format!("task {}:{} — policy EFT", d.tenant, d.task)));
+    assert!(
+        once.contains(&format!(
+            "placed: type {} unit {} start {} finish {}",
+            place.ptype, place.unit, place.start, place.finish
+        )),
+        "explain reports the placement the daemon actually took:\n{once}"
+    );
+    assert!(once.contains("rule: eft — EFT: minimized finish time"));
+    assert!(once.contains("candidates considered:"));
+    assert!(once.contains("stream-heap depth at decision:"));
+
+    let missing = explain_from_wal(&path, 0, 10_000).unwrap_err();
+    assert!(missing.contains("no decision recorded"), "{missing}");
+    let bad_tenant = explain_from_wal(&path, 99, 0).unwrap_err();
+    assert!(bad_tenant.contains("no tenant 99"), "{bad_tenant}");
+}
+
+#[test]
+fn daemon_edge_metrics_accumulate_outside_the_replay_stable_report() {
+    let (_path, _plat, core, _events) = seeded_core("metrics.wal");
+    let n_decided = core.decisions().len() as u64;
+    let mut core = core;
+    let report = core.report().expect("report");
+    let snap = core.metrics();
+
+    // core registry: pure functions of the op stream
+    assert_eq!(snap.counters["svc_tenants"], 3);
+    assert!(snap.counters["svc_decisions"] >= n_decided);
+    let rule_total: u64 = snap
+        .counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("svc_rule_"))
+        .map(|(_, &v)| v)
+        .sum();
+    assert_eq!(
+        rule_total, snap.counters["svc_decisions"],
+        "every decision is attributed to exactly one rule"
+    );
+
+    // edge registry: WAL accounting + the edge latency histogram
+    assert!(snap.counters["wal_appends"] > 0);
+    assert!(snap.counters["wal_bytes"] > 0);
+    assert!(snap.counters["wal_syncs"] > 0);
+    let lat = snap.hists.get("edge_decision_latency_s").expect("edge histogram");
+    assert_eq!(
+        lat.total(),
+        snap.counters["svc_decisions"],
+        "one edge latency sample per decision"
+    );
+
+    // ... and none of it leaks into the replay-stable wire report: the
+    // report's only latency surface is the per-tenant Summary fed by
+    // note_edge_latency, never a placement input (the fairness suite
+    // pins that), and report_to_json drops it entirely.
+    let j = hetsched::service_net::wire::report_to_json(&report);
+    assert!(j.get("decision_latency").is_none());
+    for t in &report.tenants {
+        assert_eq!(
+            t.decision_latency.n as u64, t.n_placed as u64,
+            "daemon edge attributes one latency sample per placed task"
+        );
+    }
+}

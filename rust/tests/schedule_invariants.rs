@@ -419,6 +419,7 @@ fn extreme_finite_costs_never_panic() {
     assert_eq!(report.decisions.len(), 2 * n);
     for t in &report.tenants {
         assert_eq!(t.schedule.placements.len(), n, "tenant {} dropped tasks", t.tenant);
-        assert_eq!(t.decision_latency.n, n);
+        // batch runs record no edge latencies: the core never reads the clock
+        assert_eq!(t.decision_latency.n, 0);
     }
 }

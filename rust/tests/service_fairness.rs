@@ -261,14 +261,14 @@ fn weighted_stretch_strictly_reduces_max_stretch_on_contended_example() {
 
 #[test]
 fn latency_metric_never_feeds_placement() {
-    // Pin for the one wall-clock read in the service core (`service.rs`,
-    // hetlint-suppressed): `Instant::now()` feeds only the
-    // `decision_latency` metric.  Two runs of the contended 12×150
-    // example measure different wall-clock latencies, so if that field —
-    // or anything derived from it — ever leaked into placement,
-    // admission or tie-breaking, the runs would drift.  Everything
-    // except the latency summaries must be bit-identical, i.e. zeroing
-    // the latency field changes no placement.
+    // Pin for the decision-latency contract: the service core contains
+    // *zero* wall-clock reads (hetlint R4, no suppressions); latency is
+    // injected only at a runtime edge via `Service::note_decision_latency`.
+    // Run A of the contended 12×150 example injects a wildly varying
+    // synthetic latency after every decision; run B injects none.  If
+    // the metric — or anything derived from it — ever leaked into
+    // placement, admission or tie-breaking, the runs would drift.
+    // Everything except the latency summaries must be bit-identical.
     fn mixed(t: usize) -> TenantPolicy {
         match t % 3 {
             0 => TenantPolicy::Fifo,
@@ -278,10 +278,19 @@ fn latency_metric_never_feeds_placement() {
     }
     let (plat, subs_a) = contended_subs(mixed);
     let (_, subs_b) = contended_subs(mixed);
-    let a = run_service(&plat, &subs_a);
+
+    let mut svc = Service::new(&plat, &subs_a);
+    let mut injected = 0u64;
+    while let Some(d) = svc.step() {
+        // adversarial edge measurements: vary by decision index
+        svc.note_decision_latency(d.tenant, 1e-6 * (1.0 + (injected % 17) as f64));
+        injected += 1;
+    }
+    let a = svc.report(None);
     let b = run_service(&plat, &subs_b);
 
     assert_eq!(a.decisions.len(), b.decisions.len(), "decision counts drifted");
+    assert_eq!(injected, a.decisions.len() as u64);
     for (da, db) in a.decisions.iter().zip(&b.decisions) {
         assert_eq!((da.tenant, da.task), (db.tenant, db.task), "decision order drifted");
         assert_eq!(da.time.to_bits(), db.time.to_bits(), "decision time drifted across runs");
@@ -294,13 +303,14 @@ fn latency_metric_never_feeds_placement() {
     for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
         assert_eq!(
             ta.schedule.placements, tb.schedule.placements,
-            "tenant {}: placements depend on wall-clock time",
+            "tenant {}: placements depend on the injected latencies",
             ta.tenant
         );
         assert_eq!(ta.stretch.to_bits(), tb.stretch.to_bits());
-        // the latency metric itself is still measured, once per decision
+        // run A's metric carries the edge injections, once per decision;
+        // run B (batch, no edge) records none
         assert_eq!(ta.decision_latency.n, ta.n_placed);
-        assert_eq!(tb.decision_latency.n, tb.n_placed);
+        assert_eq!(tb.decision_latency.n, 0);
     }
 }
 

@@ -1,0 +1,16 @@
+// fixture: the obs layer is NOT on the wall-clock allowlist.  A sink
+// that stamps events with real time would make traces differ run to
+// run (and tempt someone to feed that timestamp back into a decision),
+// so both reads here must fire.
+pub struct WallClockSink {
+    events: Vec<(f64, u64)>,
+}
+
+impl WallClockSink {
+    pub fn emit(&mut self, payload: u64) {
+        let t = std::time::Instant::now();
+        let epoch = std::time::SystemTime::now();
+        let _ = epoch;
+        self.events.push((t.elapsed().as_secs_f64(), payload));
+    }
+}

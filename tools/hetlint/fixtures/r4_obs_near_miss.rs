@@ -1,0 +1,17 @@
+// fixture: the real obs contract — events carry the *virtual* time the
+// caller passes in, plus a monotone sequence number.  No wall-clock
+// read anywhere, so nothing may fire, even though the code is all
+// about "time".
+pub struct VirtualTimeSink {
+    events: Vec<(u64, f64)>,
+    next_seq: u64,
+}
+
+impl VirtualTimeSink {
+    pub fn emit(&mut self, vtime: f64) {
+        let _doc = "Instant::now() and SystemTime stay at the daemon edge";
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push((seq, vtime));
+    }
+}

@@ -1114,6 +1114,25 @@ let l: &'static str = s;
     }
 
     #[test]
+    fn r4_covers_the_obs_layer() {
+        // rust/src/obs/ is deliberately NOT on the wall-clock allowlist:
+        // trace events must carry virtual time only, or two runs of the
+        // same schedule would write different traces.  Pin that a
+        // wall-clock-stamping sink fires under every obs path and that
+        // the real contract (vtime passed in, monotone seq) stays clean.
+        for p in ["rust/src/obs/sink.rs", "rust/src/obs/event.rs", "rust/src/obs/metrics.rs"] {
+            let (bad, _) = lint_source(p, &fixture("r4_obs_bad.rs"));
+            assert_eq!(rules_of(&bad), vec![R4, R4], "{p}: {bad:?}");
+            let (ok, _) = lint_source(p, &fixture("r4_obs_near_miss.rs"));
+            assert!(ok.is_empty(), "{p}: {ok:?}");
+        }
+        // sanity: the same bad source IS allowed at the daemon edge,
+        // where the metrics registry's wall-clock half legitimately lives
+        let (ok2, _) = lint_source("rust/src/service_net/server.rs", &fixture("r4_obs_bad.rs"));
+        assert!(ok2.is_empty(), "{ok2:?}");
+    }
+
+    #[test]
     fn r5_fires_on_bad_and_not_on_near_miss() {
         let (bad, _) = lint_source("rust/src/sched/est.rs", &fixture("r5_bad.rs"));
         assert_eq!(rules_of(&bad), vec![R5, R5], "{bad:?}");
