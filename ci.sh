@@ -163,7 +163,7 @@ print(
 PY
     fi
 
-    echo "== perf gate: engine >= 5x seed EST, gap-index HEFT >= 1x scan (writes BENCH_sched.json) =="
+    echo "== perf gate: engine >= 5x seed EST, gap-index HEFT >= 1x scan, Tick clock >= banded f64 (writes BENCH_sched.json) =="
     HETSCHED_BENCH_QUICK=1 cargo bench --bench perf_hot_paths
     if command -v python3 >/dev/null 2>&1; then
         python3 - <<'PY' || exit 1
@@ -176,7 +176,16 @@ if est < 5.0:
 heft = r["heft"]["speedup"]
 if heft < 1.0:
     sys.exit(f"gap-index HEFT ({heft:.2f}x) must beat the 256-unit linear scan")
-print(f"sched gate OK: EST {est:.1f}x, gap-index HEFT {heft:.2f}x on {r['heft_instance']['platform']}")
+# integer-clock gate: the Tick comparator must not lose to the banded
+# f64 compare it replaced (5% noise slack, same as the kernel gate)
+clk = r["clock"]
+if clk["tick_ms"] > clk["f64_ms"] * 1.05:
+    sys.exit(
+        f"Tick decision comparator ({clk['tick_ms']:.3f} ms) lost to the "
+        f"banded f64 baseline ({clk['f64_ms']:.3f} ms)"
+    )
+print(f"sched gate OK: EST {est:.1f}x, gap-index HEFT {heft:.2f}x on {r['heft_instance']['platform']}, "
+      f"Tick clock {clk['speedup']:.2f}x the banded-f64 comparator")
 PY
     fi
     cat BENCH_sched.json
@@ -237,14 +246,15 @@ if warm > cold:
 wi, ci = r["warm"]["iters"], r["cold_contracted"]["iters"]
 if wi > ci * 1.05:
     sys.exit(f"warm-started grid needed >5% more iterations ({wi:.0f}) than per-item contracted solves ({ci:.0f})")
-# blocked-kernel gate: the fused RustChunk must not lose to the scalar
-# oracle (5% noise slack)
+# SIMD-kernel gate: the fused, laned, autotuned RustChunk must not lose
+# to the scalar oracle (5% noise slack)
 kb, ks = r["kernel"]["blocked_s"], r["kernel"]["scalar_s"]
 if kb > ks * 1.05:
-    sys.exit(f"blocked PDHG kernel ({kb:.4f} s) lost to the scalar oracle ({ks:.4f} s)")
+    sys.exit(f"SIMD PDHG kernel ({kb:.4f} s) lost to the scalar oracle ({ks:.4f} s)")
 print(f"lp gate OK: warm {warm:.3f} s <= cold {cold:.3f} s ({r['speedup_warm_vs_cold']:.2f}x; "
       f"fair parallel baseline {r['speedup_warm_vs_cold_parallel']:.2f}x; iters {wi:.0f} <= {ci:.0f}; "
-      f"kernel blocked/scalar {r['kernel']['speedup']:.2f}x)")
+      f"kernel simd/scalar {r['kernel']['speedup']:.2f}x at block widths "
+      f"{r['kernel']['block']:.0f}/{r['kernel']['block_t']:.0f})")
 PY
     fi
     cat BENCH_lp.json

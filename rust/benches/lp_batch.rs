@@ -24,9 +24,11 @@
 //! unlike wall clock cannot be bought with thread count; chain heads
 //! are identical solves, warm seeding only removes iterations).
 //!
-//! Also timed and gated: the blocked (fused) `RustChunk` kernel vs the
-//! retained `ScalarChunk` oracle on a ~1000-task HLP — blocked must not
-//! lose (the `kernel` row of BENCH_lp.json).
+//! Also timed and gated: the SIMD (blocked + 4-lane fused, autotuned
+//! block width, range-threaded above 4096 rows) `RustChunk` kernel vs
+//! the retained `ScalarChunk` oracle on a ~1000-task HLP — SIMD must
+//! not lose (the `kernel` row of BENCH_lp.json, which also records the
+//! block widths the autotune picked for A and Aᵀ).
 //!
 //! Set HETSCHED_BENCH_QUICK=1 for a reduced grid (4 configs, 1 app);
 //! set HETSCHED_BENCH_FULL=1 to add the Scale::Full rows: the 10k-task
@@ -38,7 +40,9 @@ use hetsched::alloc::greedy_min_time;
 use hetsched::graph::TaskGraph;
 use hetsched::lp::batch::{solve_batch, BatchJob};
 use hetsched::lp::chain::{plan_chains, ChainPlan};
-use hetsched::lp::pdhg::{solve_rust, ChunkBackend, DriveOpts, RustChunk, ScalarChunk};
+use hetsched::lp::pdhg::{
+    solve_rust, BlockedCsr, ChunkBackend, Csr, DriveOpts, RustChunk, ScalarChunk,
+};
 use hetsched::platform::{self, Platform};
 use hetsched::substrate::json::Json;
 use hetsched::substrate::pool::parallel_map;
@@ -231,11 +235,12 @@ fn main() {
         }
     }
 
-    // ---- blocked vs scalar PDHG kernel -------------------------------
-    // same LP, same iterate stream, pure chunk wall clock: the blocked
-    // (fused matvec+prox) RustChunk must not lose to the retained
-    // scalar oracle.  A ~1000-task fork-join HLP keeps the matrix big
-    // enough to measure and small enough to run in the quick gate.
+    // ---- SIMD vs scalar PDHG kernel ----------------------------------
+    // same LP, same iterate stream, pure chunk wall clock: the SIMD
+    // (fused matvec+prox, explicit 4-lane, autotuned block width)
+    // RustChunk must not lose to the retained scalar oracle.  A
+    // ~1000-task fork-join HLP keeps the matrix big enough to measure
+    // and small enough to run in the quick gate.
     let kernel_g = forkjoin::forkjoin(499, 2, 1, 9);
     let kernel_plat = Platform::hybrid(64, 16);
     let (kernel_lp, _, _) = build_hlp_job(
@@ -255,6 +260,17 @@ fn main() {
         }
         (t.elapsed().as_secs_f64(), z[0] + y[0]) // sink defeats DCE
     };
+    // record which widths the shape autotune picks for A and Aᵀ (the
+    // fused passes use the same BlockedCsr layouts RustChunk builds)
+    let kernel_a = Csr::from_coo(
+        kernel_lp.m,
+        kernel_lp.n,
+        &kernel_lp.rows,
+        &kernel_lp.cols,
+        &kernel_lp.vals,
+    );
+    let kernel_block = BlockedCsr::from_csr(&kernel_a).block_rows();
+    let kernel_block_t = BlockedCsr::from_csr(&kernel_a.transpose()).block_rows();
     let (blocked_s, sink_b) = time_kernel(&mut RustChunk::new(&kernel_lp, 250));
     let (scalar_s, sink_s) = time_kernel(&mut ScalarChunk::new(&kernel_lp, 250));
     // sanity, not the equivalence test (that lives in tier-1): the two
@@ -265,8 +281,9 @@ fn main() {
     );
     let kernel_speedup = scalar_s / blocked_s;
     println!(
-        "kernel ({} vars x {} rows, {} chunks): blocked {:.4} s, scalar {:.4} s -> {:.2}x",
-        kernel_lp.n, kernel_lp.m, KERNEL_CHUNKS, blocked_s, scalar_s, kernel_speedup
+        "kernel ({} vars x {} rows, {} chunks, blocks {}x/{}x): simd {:.4} s, scalar {:.4} s -> {:.2}x",
+        kernel_lp.n, kernel_lp.m, KERNEL_CHUNKS, kernel_block, kernel_block_t,
+        blocked_s, scalar_s, kernel_speedup
     );
 
     let speedup = cold.wall_s / warm.wall_s;
@@ -312,6 +329,9 @@ fn main() {
                 ("blocked_s", Json::Num(blocked_s)),
                 ("scalar_s", Json::Num(scalar_s)),
                 ("speedup", Json::Num(kernel_speedup)),
+                ("block", Json::Num(kernel_block as f64)),
+                ("block_t", Json::Num(kernel_block_t as f64)),
+                ("lanes", Json::Num(4.0)),
             ]),
         ),
     ]);
@@ -337,11 +357,11 @@ fn main() {
         warm.total_iters,
         cold_c.total_iters
     );
-    // the blocked kernel must not lose to the scalar oracle (5% noise
+    // the SIMD kernel must not lose to the scalar oracle (5% noise
     // slack; the same gate runs off BENCH_lp.json in ci.sh --perf)
     assert!(
         blocked_s <= scalar_s * 1.05,
-        "acceptance: blocked kernel ({blocked_s:.4} s) must not lose to scalar ({scalar_s:.4} s)"
+        "acceptance: SIMD kernel ({blocked_s:.4} s) must not lose to scalar ({scalar_s:.4} s)"
     );
 
     if std::env::var("HETSCHED_BENCH_FULL").is_ok() {

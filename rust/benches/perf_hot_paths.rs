@@ -6,9 +6,12 @@
 //!   0. engine vs seed schedulers on a 5000-task, 32+8-unit instance —
 //!      the event-driven-core acceptance gate — plus gap-indexed HEFT vs
 //!      the reference timeline scan on a 10k-task, 256-unit (192+64)
-//!      instance.  Results (and speedups) are written to
+//!      instance, plus the Tick-vs-f64 decision-comparator row (the
+//!      integer clock must not lose to the banded float compare it
+//!      replaced).  Results (and speedups) are written to
 //!      BENCH_sched.json so the perf trajectory is tracked PR over PR;
-//!      gates: EST >= 5x seed, HEFT >= 1x the linear scan.
+//!      gates: EST >= 5x seed, HEFT >= 1x the linear scan, clock
+//!      tick_ms <= 1.05x f64_ms.
 //!   L3: LP build, Ruiz scaling, list/EST/HEFT schedulers, ranks,
 //!       validator, and the end-to-end offline pipeline.
 //!   L1+L2: PDHG chunk execution through PJRT (skipped without
@@ -23,6 +26,7 @@ use hetsched::lp::pdhg::{solve_rust, ChunkBackend, DriveOpts, RustChunk};
 use hetsched::lp::scale::ruiz;
 use hetsched::platform::Platform;
 use hetsched::runtime::{with_runtime, LpBackendKind};
+use hetsched::sched::engine::Tick;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
 use hetsched::sched::{est::est_schedule, heft::heft_schedule, list::ols_schedule, reference};
 use hetsched::sim::validate;
@@ -113,6 +117,33 @@ fn main() {
         || reference::heft_schedule(&huge, &hugeplat).makespan,
     );
 
+    // ---- tick vs f64 clock: decision-comparator throughput ---------
+    // Every heap pop, gap probe and tie-break in the engine compares
+    // event times.  Before the Tick migration each comparison was a
+    // banded float compare (subtract, abs, branch against the 1e-9
+    // band, then order); now it is one integer compare.  Time both
+    // over the same decision stream of quantized event times.
+    println!("\n== event-clock comparator: Tick(u64) vs banded f64 ==");
+    let mut trng = Rng::new(777);
+    let times: Vec<f64> = (0..(1 << 20) + 1).map(|_| trng.uniform(0.0, 1e6)).collect();
+    let ticks: Vec<Tick> = times.iter().map(|&t| Tick::quantize(t)).collect();
+    let seed_band = 1e-9; // the comparator band the seed schedulers used
+    let band_before = |a: f64, b: f64| (a - b).abs() > seed_band && a < b;
+    let clock_f64 = bench_with("decision stream (banded f64)", &opts, || {
+        let ts = black_box(&times);
+        let n = ts.windows(2).filter(|w| band_before(w[0], w[1])).count();
+        black_box(n);
+    });
+    println!("{}", clock_f64.report());
+    let clock_tick = bench_with("decision stream (Tick)", &opts, || {
+        let ts = black_box(&ticks);
+        let n = ts.windows(2).filter(|w| w[0] < w[1]).count();
+        black_box(n);
+    });
+    println!("{}", clock_tick.report());
+    let clock_speedup = clock_f64.mean.as_secs_f64() / clock_tick.mean.as_secs_f64();
+    println!("    -> tick comparator {clock_speedup:.2}x the banded-float baseline");
+
     let ms = |r: &BenchResult| Json::Num(r.mean.as_secs_f64() * 1e3);
     let section = |e: &BenchResult, s: &BenchResult, speedup: f64| {
         Json::obj(vec![
@@ -143,6 +174,14 @@ fn main() {
             ]),
         ),
         ("heft", section(&heft_e, &heft_s, heft_speedup)),
+        (
+            "clock",
+            Json::obj(vec![
+                ("tick_ms", ms(&clock_tick)),
+                ("f64_ms", ms(&clock_f64)),
+                ("speedup", Json::Num(clock_speedup)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_sched.json", report.to_string()).expect("write BENCH_sched.json");
     println!("wrote BENCH_sched.json\n");
@@ -153,6 +192,13 @@ fn main() {
     assert!(
         heft_speedup >= 1.0,
         "acceptance: gap-index HEFT must beat the 256-unit linear scan (got {heft_speedup:.2}x)"
+    );
+    // 5% noise slack, same as the kernel gate in lp_batch: both loops
+    // stream 8 bytes/decision, so the win is compute-side and small
+    // enough for scheduler jitter to matter on a loaded box
+    assert!(
+        clock_tick.mean.as_secs_f64() <= clock_f64.mean.as_secs_f64() * 1.05,
+        "acceptance: Tick comparator must not lose to the banded f64 baseline (got {clock_speedup:.2}x)"
     );
 
     if std::env::var("HETSCHED_BENCH_QUICK").is_ok() {

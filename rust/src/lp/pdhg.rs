@@ -5,15 +5,18 @@
 //! * [`ChunkBackend`] — "advance N iterations from (z, y) with steps
 //!   (τ, σ), return the KKT diagnostics".  Implemented here in pure Rust
 //!   ([`RustChunk`]: f64, cache-blocked [`BlockedCsr`] with fused
-//!   matvec+prox passes; [`ScalarChunk`]: the retained row-by-row CSR
-//!   oracle) and by `runtime::PjrtChunk` (the compiled HLO artifact,
-//!   f32).  All see the *scaled* LP.
+//!   matvec+prox passes, an autotuned block width, explicit 4-lane
+//!   elementwise kernels and range-threaded passes on large LPs;
+//!   [`ScalarChunk`]: the retained row-by-row CSR oracle) and by
+//!   `runtime::PjrtChunk` (the compiled HLO artifact, f32).  All see
+//!   the *scaled* LP.
 //! * [`drive`] — the backend-agnostic outer loop: Ruiz-scale, pick
 //!   initial steps from the operator-norm bound, run chunks, rebalance
 //!   the primal/dual step ratio (PDLP's primal-weight update), stop on a
 //!   certified relative duality gap.
 
 use crate::obs::{EventKind, NoopSink, Sink};
+use crate::substrate::pool;
 
 use super::scale::ruiz;
 use super::{LpSolution, SparseLp};
@@ -143,17 +146,51 @@ impl Csr {
     }
 }
 
-/// Rows per cache block of a [`BlockedCsr`] (power of two: the
-/// row-within-block index is masked, which lets the compiler drop the
-/// bounds check on the accumulator array in the hot loops).
+/// Narrow block width of a [`BlockedCsr`] — rows per cache block for
+/// long-row matrices, and the SIMD lane count of the fused elementwise
+/// kernels (power of two: the row-within-block index is masked, which
+/// lets the compiler drop the bounds check on the accumulator array in
+/// the hot loops).
 pub const BLOCK: usize = 4;
 
+/// Wide block width, picked by the [`BlockedCsr::from_csr`] autotune
+/// for short-row matrices: merging eight rows per column sweep
+/// amortizes the `x` gathers that short rows can't amortize alone.
+pub const BLOCK_WIDE: usize = 8;
+
+/// Elementwise lane width of the fused kernels: the prox, reflection
+/// and running-average updates run in explicit 4-lane `[f64; 4]`
+/// groups over exact-width chunks, which the autovectorizer maps onto
+/// 256-bit SIMD on stable Rust — no intrinsics, no feature gates.
+const LANES: usize = 4;
+
+/// Fused passes fan out across [`pool::parallel_map`] workers only at
+/// or above this many rows; below it thread-spawn latency beats the
+/// bandwidth win.  Threading never changes results: ranges are whole
+/// blocks, each row's (column-ordered) sum is computed entirely inside
+/// one range, and every write is to a disjoint sub-slice — bitwise
+/// identical output for any worker count, which is what lets the
+/// `state_stepping_matches_drive_exactly` bitwise pins hold on any
+/// machine.
+const PAR_MIN_ROWS: usize = 4096;
+
+/// Worker count for one fused pass (1 = stay on the caller's thread).
+fn par_workers(n_rows: usize) -> usize {
+    if n_rows < PAR_MIN_ROWS {
+        1
+    } else {
+        std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
+    }
+}
+
 /// Cache-blocked sparse layout for the PDHG hot loop: rows are grouped
-/// into fixed-width blocks of [`BLOCK`], and within a block every entry
-/// is stored column-sorted as `(col, row-within-block, val)` triples.
+/// into fixed-width blocks of [`BLOCK`] or [`BLOCK_WIDE`] rows (width
+/// chosen once per matrix by the `from_csr` shape autotune), and within
+/// a block every entry is stored column-sorted as
+/// `(col, row-within-block, val)` triples.
 ///
 /// Why this beats row-by-row CSR inside the iteration:
-/// * the [`BLOCK`] accumulators live in registers across a whole block's
+/// * the block accumulators live in registers across a whole block's
 ///   entries, so each output value is written once instead of the
 ///   load/add/store churn of short scalar rows;
 /// * column-sorting makes the gathers from `x` sweep forward through
@@ -163,25 +200,48 @@ pub const BLOCK: usize = 4;
 ///   masked accumulator index — no per-entry bounds checks, friendly to
 ///   auto-vectorization.
 ///
-/// Per-row sums are re-associated by the column sort, so results agree
-/// with [`Csr::matvec`] to rounding (ε), not bitwise; the scalar kernel
-/// ([`ScalarChunk`]) is retained as the oracle and the equivalence is
-/// pinned by tests at certificate tolerance.
+/// The block width never changes numbers: entries sort by
+/// `(col, row)`, so the entries of any single row stay in column order
+/// whatever the width, and each row's sum is accumulated in exactly
+/// that order — width 4 and width 8 agree bitwise (pinned by tests).
+/// Against [`Csr::matvec`] the per-row sums ARE re-associated by the
+/// column sort, so agreement there is to rounding (ε), not bitwise;
+/// the scalar kernel ([`ScalarChunk`]) is retained as the oracle and
+/// the equivalence is pinned by tests at certificate tolerance.
 #[derive(Clone, Debug)]
 pub struct BlockedCsr {
     pub n_rows: usize,
     pub n_cols: usize,
-    /// entry offsets per block; `block_ptr.len() == ceil(n_rows/BLOCK)+1`
+    /// rows per block: [`BLOCK`] or [`BLOCK_WIDE`]
+    block: usize,
+    /// entry offsets per block; `block_ptr.len() == ceil(n_rows/block)+1`
     block_ptr: Vec<u32>,
     cols: Vec<u32>,
-    /// row within the block, `< BLOCK`
+    /// row within the block, `< block`
     rowi: Vec<u8>,
     vals: Vec<f64>,
 }
 
 impl BlockedCsr {
+    /// Build with the block width chosen by a deterministic *shape*
+    /// heuristic — never a wall-clock probe, so the same matrix always
+    /// gets the same layout on every machine: short rows
+    /// (avg nnz/row <= [`BLOCK_WIDE`]) on a non-trivial matrix take the
+    /// wide width, long rows keep the narrow one (wider blocks stop
+    /// paying for the extra accumulators once single rows already
+    /// amortize their column sweep).
     pub fn from_csr(a: &Csr) -> BlockedCsr {
-        let nb = (a.n_rows + BLOCK - 1) / BLOCK;
+        let nnz = a.data.len();
+        let wide = a.n_rows >= 64 && nnz <= a.n_rows * BLOCK_WIDE;
+        Self::from_csr_with_block(a, if wide { BLOCK_WIDE } else { BLOCK })
+    }
+
+    /// Build with an explicit block width (`BLOCK` or `BLOCK_WIDE`).
+    /// Tests use this to pin that both widths agree bitwise; production
+    /// code goes through the autotuned [`Self::from_csr`].
+    pub fn from_csr_with_block(a: &Csr, w: usize) -> BlockedCsr {
+        assert!(w == BLOCK || w == BLOCK_WIDE, "unsupported block width {w}");
+        let nb = (a.n_rows + w - 1) / w;
         let nnz = a.data.len();
         let mut block_ptr = Vec::with_capacity(nb + 1);
         block_ptr.push(0u32);
@@ -191,8 +251,8 @@ impl BlockedCsr {
         let mut entries: Vec<(u32, u8, f64)> = Vec::new();
         for b in 0..nb {
             entries.clear();
-            for t in 0..BLOCK.min(a.n_rows - b * BLOCK) {
-                let r = b * BLOCK + t;
+            for t in 0..w.min(a.n_rows - b * w) {
+                let r = b * w + t;
                 for i in a.indptr[r] as usize..a.indptr[r + 1] as usize {
                     entries.push((a.indices[i], t as u8, a.data[i]));
                 }
@@ -208,6 +268,7 @@ impl BlockedCsr {
         BlockedCsr {
             n_rows: a.n_rows,
             n_cols: a.n_cols,
+            block: w,
             block_ptr,
             cols,
             rowi,
@@ -219,19 +280,26 @@ impl BlockedCsr {
         self.vals.len()
     }
 
+    /// Rows per block the autotune picked ([`BLOCK`] or [`BLOCK_WIDE`]).
+    pub fn block_rows(&self) -> usize {
+        self.block
+    }
+
     /// Gather one block's accumulators: `acc[r] += val * x[col]` over
-    /// the block's column-sorted entries.
+    /// the block's column-sorted entries.  `W` must equal the built
+    /// block width; the mask keeps the accumulator index in-bounds
+    /// without a branch.
     #[inline(always)]
-    fn block_acc(&self, b: usize, x: &[f64]) -> [f64; BLOCK] {
+    fn block_acc<const W: usize>(&self, b: usize, x: &[f64]) -> [f64; W] {
         let lo = self.block_ptr[b] as usize;
         let hi = self.block_ptr[b + 1] as usize;
-        let mut acc = [0.0f64; BLOCK];
+        let mut acc = [0.0f64; W];
         for ((&c, &r), &v) in self.cols[lo..hi]
             .iter()
             .zip(&self.rowi[lo..hi])
             .zip(&self.vals[lo..hi])
         {
-            acc[r as usize & (BLOCK - 1)] += v * x[c as usize];
+            acc[r as usize & (W - 1)] += v * x[c as usize];
         }
         acc
     }
@@ -239,8 +307,15 @@ impl BlockedCsr {
     /// out = A x (blocked; per-row sums are column-ordered).
     pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.n_rows);
-        for (b, out_b) in out.chunks_mut(BLOCK).enumerate() {
-            let acc = self.block_acc(b, x);
+        match self.block {
+            BLOCK_WIDE => self.matvec_w::<BLOCK_WIDE>(x, out),
+            _ => self.matvec_w::<BLOCK>(x, out),
+        }
+    }
+
+    fn matvec_w<const W: usize>(&self, x: &[f64], out: &mut [f64]) {
+        for (b, out_b) in out.chunks_mut(W).enumerate() {
+            let acc = self.block_acc::<W>(b, x);
             out_b.copy_from_slice(&acc[..out_b.len()]);
         }
     }
@@ -250,7 +325,9 @@ impl BlockedCsr {
     /// then immediately apply the box prox, the reflection and the
     /// running-average accumulation for those variables.  `z`, `zbar`,
     /// `c`, the box and `z_avg` are each traversed exactly once and the
-    /// `g` vector never materializes.
+    /// `g` vector never materializes.  Above [`PAR_MIN_ROWS`] rows the
+    /// pass fans out over disjoint block ranges (bitwise identical to
+    /// the serial pass for any worker count).
     #[allow(clippy::too_many_arguments)]
     pub fn fused_primal(
         &self,
@@ -264,20 +341,116 @@ impl BlockedCsr {
         z_avg: &mut [f64],
     ) {
         debug_assert_eq!(z.len(), self.n_rows);
+        match self.block {
+            BLOCK_WIDE => self.fused_primal_par::<BLOCK_WIDE>(y, z, zbar, c, lo, hi, tau, z_avg),
+            _ => self.fused_primal_par::<BLOCK>(y, z, zbar, c, lo, hi, tau, z_avg),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fused_primal_par<const W: usize>(
+        &self,
+        y: &[f64],
+        z: &mut [f64],
+        zbar: &mut [f64],
+        c: &[f64],
+        lo: &[f64],
+        hi: &[f64],
+        tau: f64,
+        z_avg: &mut [f64],
+    ) {
+        let workers = par_workers(self.n_rows);
+        if workers <= 1 {
+            self.fused_primal_rows::<W>(0, y, z, zbar, c, lo, hi, tau, z_avg);
+            return;
+        }
+        let nb = self.block_ptr.len() - 1;
+        let per = (nb + workers - 1) / workers;
+        let mut items: Vec<(usize, &mut [f64], &mut [f64], &[f64], &[f64], &[f64], &mut [f64])> =
+            Vec::with_capacity(workers);
+        let (mut z_r, mut zb_r, mut av_r) = (z, zbar, z_avg);
+        let (mut c_r, mut lo_r, mut hi_r) = (c, lo, hi);
+        let mut fb = 0usize;
+        while fb < nb {
+            let blocks = per.min(nb - fb);
+            let rows = (blocks * W).min(z_r.len());
+            let (z_s, z_t) = z_r.split_at_mut(rows);
+            let (zb_s, zb_t) = zb_r.split_at_mut(rows);
+            let (av_s, av_t) = av_r.split_at_mut(rows);
+            let (c_s, c_t) = c_r.split_at(rows);
+            let (lo_s, lo_t) = lo_r.split_at(rows);
+            let (hi_s, hi_t) = hi_r.split_at(rows);
+            z_r = z_t;
+            zb_r = zb_t;
+            av_r = av_t;
+            c_r = c_t;
+            lo_r = lo_t;
+            hi_r = hi_t;
+            items.push((fb, z_s, zb_s, c_s, lo_s, hi_s, av_s));
+            fb += blocks;
+        }
+        pool::parallel_map(items, workers, |(first, z_s, zb_s, c_s, lo_s, hi_s, av_s)| {
+            self.fused_primal_rows::<W>(first, y, z_s, zb_s, c_s, lo_s, hi_s, tau, av_s)
+        });
+    }
+
+    /// Serial fused primal pass over one contiguous range of blocks:
+    /// `first_block` is the global index of the range's first block and
+    /// the slices hold exactly the range's rows.  Full blocks run the
+    /// explicit 4-lane kernel; the matrix's ragged tail block (rows not
+    /// a multiple of `W`, always globally last) finishes row-by-row.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_primal_rows<const W: usize>(
+        &self,
+        first_block: usize,
+        y: &[f64],
+        z: &mut [f64],
+        zbar: &mut [f64],
+        c: &[f64],
+        lo: &[f64],
+        hi: &[f64],
+        tau: f64,
+        z_avg: &mut [f64],
+    ) {
+        let n = z.len();
+        let nfull = n / W;
         let blocks = z
-            .chunks_mut(BLOCK)
-            .zip(zbar.chunks_mut(BLOCK))
-            .zip(c.chunks(BLOCK))
-            .zip(lo.chunks(BLOCK))
-            .zip(hi.chunks(BLOCK))
-            .zip(z_avg.chunks_mut(BLOCK));
-        for (b, (((((z_b, zb_b), c_b), lo_b), hi_b), av_b)) in blocks.enumerate() {
-            let acc = self.block_acc(b, y);
-            for t in 0..z_b.len() {
-                let znew = (z_b[t] - tau * (c_b[t] + acc[t])).clamp(lo_b[t], hi_b[t]);
-                zb_b[t] = 2.0 * znew - z_b[t];
-                z_b[t] = znew;
-                av_b[t] += znew;
+            .chunks_exact_mut(W)
+            .zip(zbar.chunks_exact_mut(W))
+            .zip(c.chunks_exact(W))
+            .zip(lo.chunks_exact(W))
+            .zip(hi.chunks_exact(W))
+            .zip(z_avg.chunks_exact_mut(W));
+        for (k, (((((z_b, zb_b), c_b), lo_b), hi_b), av_b)) in blocks.enumerate() {
+            let acc = self.block_acc::<W>(first_block + k, y);
+            for g in 0..W / LANES {
+                let o = g * LANES;
+                let mut znew = [0.0f64; LANES];
+                for l in 0..LANES {
+                    znew[l] =
+                        (z_b[o + l] - tau * (c_b[o + l] + acc[o + l])).clamp(lo_b[o + l], hi_b[o + l]);
+                }
+                for l in 0..LANES {
+                    zb_b[o + l] = 2.0 * znew[l] - z_b[o + l];
+                }
+                for l in 0..LANES {
+                    av_b[o + l] += znew[l];
+                }
+                for l in 0..LANES {
+                    z_b[o + l] = znew[l];
+                }
+            }
+        }
+        let tail = n % W;
+        if tail > 0 {
+            let base = nfull * W;
+            let acc = self.block_acc::<W>(first_block + nfull, y);
+            for t in 0..tail {
+                let j = base + t;
+                let znew = (z[j] - tau * (c[j] + acc[t])).clamp(lo[j], hi[j]);
+                zbar[j] = 2.0 * znew - z[j];
+                z[j] = znew;
+                z_avg[j] += znew;
             }
         }
     }
@@ -286,6 +459,7 @@ impl BlockedCsr {
     /// block, compute `A z̄`, then immediately apply the projected dual
     /// ascent and the running-average accumulation — the `az` vector
     /// never materializes and `y`/`b`/`y_avg` are traversed once.
+    /// Threads and lanes exactly as [`Self::fused_primal`].
     pub fn fused_dual(
         &self,
         zbar: &[f64],
@@ -295,16 +469,90 @@ impl BlockedCsr {
         y_avg: &mut [f64],
     ) {
         debug_assert_eq!(y.len(), self.n_rows);
+        match self.block {
+            BLOCK_WIDE => self.fused_dual_par::<BLOCK_WIDE>(zbar, y, b_vec, sigma, y_avg),
+            _ => self.fused_dual_par::<BLOCK>(zbar, y, b_vec, sigma, y_avg),
+        }
+    }
+
+    fn fused_dual_par<const W: usize>(
+        &self,
+        zbar: &[f64],
+        y: &mut [f64],
+        b_vec: &[f64],
+        sigma: f64,
+        y_avg: &mut [f64],
+    ) {
+        let workers = par_workers(self.n_rows);
+        if workers <= 1 {
+            self.fused_dual_rows::<W>(0, zbar, y, b_vec, sigma, y_avg);
+            return;
+        }
+        let nb = self.block_ptr.len() - 1;
+        let per = (nb + workers - 1) / workers;
+        let mut items: Vec<(usize, &mut [f64], &[f64], &mut [f64])> = Vec::with_capacity(workers);
+        let (mut y_r, mut av_r) = (y, y_avg);
+        let mut b_r = b_vec;
+        let mut fb = 0usize;
+        while fb < nb {
+            let blocks = per.min(nb - fb);
+            let rows = (blocks * W).min(y_r.len());
+            let (y_s, y_t) = y_r.split_at_mut(rows);
+            let (av_s, av_t) = av_r.split_at_mut(rows);
+            let (b_s, b_t) = b_r.split_at(rows);
+            y_r = y_t;
+            av_r = av_t;
+            b_r = b_t;
+            items.push((fb, y_s, b_s, av_s));
+            fb += blocks;
+        }
+        pool::parallel_map(items, workers, |(first, y_s, b_s, av_s)| {
+            self.fused_dual_rows::<W>(first, zbar, y_s, b_s, sigma, av_s)
+        });
+    }
+
+    /// Serial fused dual pass over one contiguous range of blocks (see
+    /// [`Self::fused_primal_rows`] for the range/tail contract).
+    fn fused_dual_rows<const W: usize>(
+        &self,
+        first_block: usize,
+        zbar: &[f64],
+        y: &mut [f64],
+        b_vec: &[f64],
+        sigma: f64,
+        y_avg: &mut [f64],
+    ) {
+        let n = y.len();
+        let nfull = n / W;
         let blocks = y
-            .chunks_mut(BLOCK)
-            .zip(b_vec.chunks(BLOCK))
-            .zip(y_avg.chunks_mut(BLOCK));
-        for (b, ((y_b, b_b), av_b)) in blocks.enumerate() {
-            let acc = self.block_acc(b, zbar);
-            for t in 0..y_b.len() {
-                let ynew = (y_b[t] + sigma * (acc[t] - b_b[t])).max(0.0);
-                y_b[t] = ynew;
-                av_b[t] += ynew;
+            .chunks_exact_mut(W)
+            .zip(b_vec.chunks_exact(W))
+            .zip(y_avg.chunks_exact_mut(W));
+        for (k, ((y_b, b_b), av_b)) in blocks.enumerate() {
+            let acc = self.block_acc::<W>(first_block + k, zbar);
+            for g in 0..W / LANES {
+                let o = g * LANES;
+                let mut ynew = [0.0f64; LANES];
+                for l in 0..LANES {
+                    ynew[l] = (y_b[o + l] + sigma * (acc[o + l] - b_b[o + l])).max(0.0);
+                }
+                for l in 0..LANES {
+                    av_b[o + l] += ynew[l];
+                }
+                for l in 0..LANES {
+                    y_b[o + l] = ynew[l];
+                }
+            }
+        }
+        let tail = n % W;
+        if tail > 0 {
+            let base = nfull * W;
+            let acc = self.block_acc::<W>(first_block + nfull, zbar);
+            for t in 0..tail {
+                let i = base + t;
+                let ynew = (y[i] + sigma * (acc[t] - b_vec[i])).max(0.0);
+                y[i] = ynew;
+                y_avg[i] += ynew;
             }
         }
     }
@@ -901,6 +1149,120 @@ mod tests {
             blocked.matvec(&x, &mut got);
             for (w, g) in want.iter().zip(&got) {
                 assert!((w - g).abs() < 1e-12 * (1.0 + w.abs()), "{w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn autotune_picks_block_width_by_shape() {
+        let mut rng = crate::substrate::rng::Rng::new(7);
+        // short rows (1 nnz/row) on a non-trivial matrix -> wide blocks
+        let rows: Vec<u32> = (0..256u32).collect();
+        let cols: Vec<u32> = (0..256u32).map(|c| c % 16).collect();
+        let vals: Vec<f64> = (0..256).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let short = Csr::from_coo(256, 16, &rows, &cols, &vals);
+        assert_eq!(BlockedCsr::from_csr(&short).block_rows(), BLOCK_WIDE);
+        // long rows (16 nnz/row) -> narrow blocks
+        let mut r2 = Vec::new();
+        let mut c2 = Vec::new();
+        let mut v2 = Vec::new();
+        for r in 0..256u32 {
+            for k in 0..16u32 {
+                r2.push(r);
+                c2.push(k);
+                v2.push(rng.uniform(-1.0, 1.0));
+            }
+        }
+        let long = Csr::from_coo(256, 16, &r2, &c2, &v2);
+        assert_eq!(BlockedCsr::from_csr(&long).block_rows(), BLOCK);
+        // tiny matrices never take the wide path
+        let tiny = Csr::from_coo(3, 3, &[0, 1, 2], &[0, 1, 2], &[1.0, 1.0, 1.0]);
+        assert_eq!(BlockedCsr::from_csr(&tiny).block_rows(), BLOCK);
+    }
+
+    #[test]
+    fn block_widths_agree_bitwise() {
+        // entries sort by (col, row) inside a block, so any single
+        // row's sum is accumulated in column order at EITHER width:
+        // 4 vs 8 must agree bit-for-bit, which is what makes the
+        // autotune decision numerically free
+        let mut rng = crate::substrate::rng::Rng::new(43);
+        for (m, n) in [(5usize, 4usize), (13, 9), (64, 64), (131, 17)] {
+            let a = random_csr(&mut rng, m, n);
+            let b4 = BlockedCsr::from_csr_with_block(&a, BLOCK);
+            let b8 = BlockedCsr::from_csr_with_block(&a, BLOCK_WIDE);
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut o4 = vec![0.0; m];
+            let mut o8 = vec![0.0; m];
+            b4.matvec(&x, &mut o4);
+            b8.matvec(&x, &mut o8);
+            for (p, q) in o4.iter().zip(&o8) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_fused_passes_match_serial_bitwise() {
+        // above PAR_MIN_ROWS the fused passes fan out; ranges are whole
+        // blocks with disjoint writes, so any worker count must
+        // reproduce the serial single-range pass bit-for-bit (ragged
+        // tail included: 5003 % 4 == 5003 % 8 == 3)
+        let m = PAR_MIN_ROWS + 907;
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut rng = crate::substrate::rng::Rng::new(11);
+        for r in 0..m {
+            for d in [0usize, 1, 2] {
+                rows.push(r as u32);
+                cols.push(((r + d * 17) % m) as u32);
+                vals.push(rng.uniform(-1.0, 1.0));
+            }
+        }
+        let a = Csr::from_coo(m, m, &rows, &cols, &vals);
+        let x: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let cvec: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let lo = vec![-1.0; m];
+        let hi = vec![1.0; m];
+        for w in [BLOCK, BLOCK_WIDE] {
+            let blocked = BlockedCsr::from_csr_with_block(&a, w);
+            let mut z_t = x.clone();
+            let mut zb_t = vec![0.0; m];
+            let mut av_t = vec![0.0; m];
+            blocked.fused_primal(&x, &mut z_t, &mut zb_t, &cvec, &lo, &hi, 0.2, &mut av_t);
+            let mut z_s = x.clone();
+            let mut zb_s = vec![0.0; m];
+            let mut av_s = vec![0.0; m];
+            if w == BLOCK {
+                blocked.fused_primal_rows::<BLOCK>(
+                    0, &x, &mut z_s, &mut zb_s, &cvec, &lo, &hi, 0.2, &mut av_s,
+                );
+            } else {
+                blocked.fused_primal_rows::<BLOCK_WIDE>(
+                    0, &x, &mut z_s, &mut zb_s, &cvec, &lo, &hi, 0.2, &mut av_s,
+                );
+            }
+            let pairs = z_t
+                .iter()
+                .zip(&z_s)
+                .chain(zb_t.iter().zip(&zb_s))
+                .chain(av_t.iter().zip(&av_s));
+            for (p, q) in pairs {
+                assert_eq!(p.to_bits(), q.to_bits(), "primal w={w}: {p} vs {q}");
+            }
+            let mut y_t = x.clone();
+            let mut ya_t = vec![0.0; m];
+            blocked.fused_dual(&x, &mut y_t, &cvec, 0.3, &mut ya_t);
+            let mut y_s = x.clone();
+            let mut ya_s = vec![0.0; m];
+            if w == BLOCK {
+                blocked.fused_dual_rows::<BLOCK>(0, &x, &mut y_s, &cvec, 0.3, &mut ya_s);
+            } else {
+                blocked.fused_dual_rows::<BLOCK_WIDE>(0, &x, &mut y_s, &cvec, 0.3, &mut ya_s);
+            }
+            for (p, q) in y_t.iter().zip(&y_s).chain(ya_t.iter().zip(&ya_s)) {
+                assert_eq!(p.to_bits(), q.to_bits(), "dual w={w}: {p} vs {q}");
             }
         }
     }

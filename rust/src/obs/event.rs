@@ -20,7 +20,7 @@ pub struct Event {
     pub kind: EventKind,
 }
 
-/// A rejected candidate inside the tie band of a winning decision.
+/// A rejected candidate that exactly tied a winning decision's finish.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Alt {
     pub ptype: usize,
@@ -52,8 +52,8 @@ impl Restrict {
 }
 
 /// The span of one irrevocable placement decision: which rule fired,
-/// what was considered, what was rejected inside the tie band, and
-/// what admission constraints applied.
+/// what was considered, what tied the winner exactly, and what
+/// admission constraints applied.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DecisionEvent {
     /// Owning tenant (0 for single-stream schedulers).
@@ -65,11 +65,11 @@ pub struct DecisionEvent {
     pub rule: &'static str,
     /// Candidates examined by the selection scan.
     pub candidates: usize,
-    /// Candidates that tied the incumbent within ±`TIE_BAND` during the
-    /// scan (1 = the winner was never challenged).
+    /// Candidates whose finish tick exactly equalled the incumbent's
+    /// during the scan (1 = the winner was never challenged).
     pub tie_cluster: usize,
-    /// Band-tied candidates the winner displaced (populated only when
-    /// the sink records).
+    /// Exactly-tied candidates the winner displaced (populated only
+    /// when the sink records).
     pub alternatives: Vec<Alt>,
     /// Per-type restriction state (empty = unconstrained decision path).
     pub restricted: Vec<Restrict>,

@@ -30,7 +30,7 @@ fn rule_prose(rule: &str) -> &'static str {
         "random-walk" => {
             "Random: the drawn type is quota-banned; walked to the next open type"
         }
-        "eft" => "EFT: minimized finish time across every allowed unit (band ties go to the later type)",
+        "eft" => "EFT: minimized finish time across every allowed unit (exact ties go to the later type)",
         "est" => "EST: earliest-startable ready task on this type's earliest-idle unit",
         "heft" => "HEFT: rank order, then minimum earliest-finish with gap backfilling",
         "list" => "list scheduling: highest-priority ready task on an idle unit of its allocated type",
@@ -72,13 +72,13 @@ pub fn render(events: &[Event], tenant: usize, task: usize) -> Result<String, St
     ));
     out.push_str(&format!("  rule: {} — {}\n", d.rule, rule_prose(d.rule)));
     out.push_str(&format!(
-        "  candidates considered: {}; tie-band cluster size: {}\n",
+        "  candidates considered: {}; exact-tie cluster size: {}\n",
         d.candidates, d.tie_cluster
     ));
     if d.alternatives.is_empty() {
-        out.push_str("  rejected within the tie band: none\n");
+        out.push_str("  rejected exact ties: none\n");
     } else {
-        out.push_str("  rejected within the tie band:\n");
+        out.push_str("  rejected exact ties:\n");
         for a in &d.alternatives {
             out.push_str(&format!(
                 "    type {} unit {} (finish {})\n",

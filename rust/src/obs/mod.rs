@@ -31,7 +31,7 @@
 //!   ([`Metrics`]) snapshotted into a [`MetricsReport`], the payload of
 //!   the daemon `metrics` request.
 //! * [`explain`] — renders *why a task landed where it did* from a
-//!   recorded event stream (rule fired, tie-band alternatives,
+//!   recorded event stream (rule fired, exact-tie alternatives,
 //!   restricted-set state); `hetsched explain` drives it over a WAL
 //!   replay.
 

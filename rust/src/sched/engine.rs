@@ -2,87 +2,151 @@
 //! scheduler in this crate selects over, with logarithmic updates where
 //! the seed implementations re-scanned linearly.
 //!
+//! * [`Tick`] — the engine's scaled-integer event clock.  All event and
+//!   finish times in the decision core are `u64` tick counts at a fixed
+//!   2⁻³³ resolution; see the type docs for the scale choice and the
+//!   overflow headroom.
 //! * [`UnitTree`] — an indexed min segment tree over the units of one
 //!   processor type, keyed by free time.  Supports the exact queries the
 //!   schedulers need in O(log c): earliest idle time, the `min_by`
-//!   tie-break ("first index achieving the minimum"), and threshold
-//!   queries ("first/last unit idle by time t") that reproduce the EFT
-//!   ready-clamp tie-break bit-for-bit.
+//!   tie-break ("first index achieving the minimum"), threshold queries
+//!   ("first/last unit idle by time t"), and restricted-set variants of
+//!   both that descend the tree instead of scanning the subset.
 //! * [`UnitPool`] — one `UnitTree` per processor type.
 //! * [`EstReady`] — per-type ready queues for the EST policy: tasks whose
-//!   ready time is at or below the type's idle horizon collapse into one
+//!   ready tick is at or below the type's idle horizon collapse into one
 //!   id-ordered bucket (their starting times are all the horizon), while
-//!   later-ready tasks wait in a (ready_time, id) heap and are promoted
+//!   later-ready tasks wait in a (ready_tick, id) heap and are promoted
 //!   as the horizon advances.  Selection over the whole ready set is
 //!   O(Q log n) per step instead of O(|ready| · units).
 //! * [`EventQueue`] — completion-event min-heap for list scheduling.
 //! * [`GapIndex`] — per-type gap index for insertion-based EFT (HEFT
-//!   backfilling): a tail min-tree over unit finish times plus per-unit
+//!   backfilling): a tail min-tree over unit finish ticks plus per-unit
 //!   sorted gap lists, near-O(log c) per decision on mostly-gapless
 //!   workloads.
 //! * [`Timeline`] — one unit's busy intervals with a linear first-fit
 //!   scan; retained as the reference oracle structure the gap index is
 //!   pinned against.
 //!
-//! Tie-break contract: the engine reproduces the seed semantics — both
-//! exact floating-point ties (`Iterator::min_by` resolves equal keys
-//! towards the *first* index, EST ties towards the smaller task id, the
-//! EFT ready-clamp towards the smallest unit index) *and* the
-//! reference's ±[`TIE_BAND`] float comparison band: candidates whose
-//! keys differ by at most 1e-12 count as tied, exactly as the seed
-//! scans' `< b - 1e-12 || (<= b + 1e-12 && id <)` comparators treat
-//! them.  Values that land strictly inside the open band (distinct but
-//! within 1e-12) only arise from repeated non-representable cost
-//! constants summed along different paths; those ulp clusters are many
-//! orders of magnitude narrower than the band, so band membership is
-//! unambiguous in practice and the heap-based selection below matches
-//! the seed scans candidate-for-candidate.  The golden-parity suite
-//! (`rust/tests/golden_parity.rs`, including the repeated-constant
-//! tie farms) pins this against the retained reference implementations
-//! in [`super::reference`].
+//! Tie-break contract: the engine reproduces the seed semantics — ties
+//! resolve towards the *first* index (`Iterator::min_by` on equal keys,
+//! EST ties towards the smaller task id, the EFT ready-clamp towards the
+//! smallest unit index) — but equality itself is now **exact**: two
+//! event times tie iff they quantize to the same tick.  The pre-Tick
+//! engine carried a ±1e-12 float comparison band (`band_eq`/`TIE_BAND`)
+//! through every comparator to absorb ulp drift between differently
+//! associated path sums; quantization subsumes it.  Costs are quantized
+//! once at decision entry, integer addition is associative, so any two
+//! decision keys built from the same cost multiset are *bitwise equal* —
+//! the ulp clusters the band existed for collapse to exact ties, and
+//! cross-shard determinism holds by construction (no two platforms can
+//! round the same sum differently).  The golden-parity suite
+//! (`rust/tests/golden_parity.rs`, including the repeated-constant tie
+//! farms) pins this against the retained reference implementations in
+//! [`super::reference`], which apply the same quantization through
+//! [`canon`]/[`canon_cost`] and compare exactly.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::graph::TaskId;
 
-use super::OrdF64;
+/// Fixed-point event time: an unsigned count of 2⁻³³-second ticks.
+///
+/// Scale choice: `2⁻³³ ≈ 1.16e-10` sits three decades *below* the old
+/// ±1e-12 tie band's practical discrimination window (distinct costs in
+/// every workload generator differ by ≥ 1e-6) and three decades *above*
+/// the ulp clusters the band used to absorb (repeated 0.1-style
+/// constants summed along different paths drift by ≤ ~1e-13 at
+/// campaign magnitudes), so quantization preserves every decision the
+/// banded comparators made: genuinely distinct keys stay distinct,
+/// ulp-smeared ties become exactly equal.
+///
+/// Overflow headroom: `2⁶⁴ / 2³³ = 2³¹ ≈ 2.1e9` time units.  The
+/// largest virtual horizon in the repo (the 100k-task `Scale::Full`
+/// campaign) stays below 1e6, five decades clear.  Tick addition is
+/// plain `u64` addition — associative, so path sums are independent of
+/// evaluation order (the property the float band could only
+/// approximate).
+///
+/// Conversion is exact both ways for any horizon this repo can reach:
+/// every tick count below 2⁵² is exactly representable as f64, so
+/// `Tick::quantize(t.to_f64()) == t` round-trips bitwise and the f64
+/// placements handed to sim/service/obs are exact dequantizations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tick(pub u64);
 
-/// The reference schedulers' float-comparison tie band: keys within
-/// ±1e-12 of each other are ties (broken by task/unit/type index rules).
-pub const TIE_BAND: f64 = 1e-12;
+/// log2 of the tick rate: 33 fractional bits.
+pub const TICK_SHIFT: u32 = 33;
+const TICK_SCALE: f64 = (1u64 << TICK_SHIFT) as f64;
 
-/// Banded float equality: `a` ties `b` iff they lie within ±[`TIE_BAND`]
-/// of each other.  The `no-raw-float-eq` hetlint rule requires float
-/// `==`/`!=` in `sched/` and `lp/` to go through these helpers (or to
-/// carry a justified suppression when a comparison is intentionally
-/// exact, e.g. structural zero filters in the LP kernels).
-pub fn band_eq(a: f64, b: f64) -> bool {
-    (a - b).abs() <= TIE_BAND
+impl Tick {
+    pub const ZERO: Tick = Tick(0);
+    pub const MAX: Tick = Tick(u64::MAX);
+
+    /// Quantize a non-negative event time to the nearest tick.
+    #[inline]
+    pub fn quantize(t: f64) -> Tick {
+        debug_assert!(!t.is_sign_negative(), "event times are non-negative");
+        Tick((t * TICK_SCALE).round() as u64)
+    }
+
+    /// Quantize a task cost, clamped to at least one tick so a busy
+    /// interval never degenerates to zero width (costs in every
+    /// workload generator are ≥ 1e-3, so the clamp is purely
+    /// defensive and never fires in practice).
+    #[inline]
+    pub fn quantize_cost(t: f64) -> Tick {
+        Tick(Tick::quantize(t).0.max(1))
+    }
+
+    /// Exact f64 value of this tick count (see type docs).
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / TICK_SCALE
+    }
 }
 
-/// Banded float inequality; see [`band_eq`].
-pub fn band_ne(a: f64, b: f64) -> bool {
-    !band_eq(a, b)
+impl std::ops::Add for Tick {
+    type Output = Tick;
+    #[inline]
+    fn add(self, rhs: Tick) -> Tick {
+        Tick(self.0 + rhs.0)
+    }
+}
+
+/// The canonical (quantized) form of an event time: what any f64 time
+/// becomes after a round trip through the tick clock.  The reference
+/// schedulers run on canonical values with *exact* comparators and
+/// match the tick engine bit-for-bit, because sums of canonical values
+/// below the 2⁵²-tick horizon are themselves exact in f64.
+pub fn canon(t: f64) -> f64 {
+    Tick::quantize(t).to_f64()
+}
+
+/// Canonical form of a task cost (the ≥-one-tick clamp of
+/// [`Tick::quantize_cost`], dequantized).
+pub fn canon_cost(t: f64) -> f64 {
+    Tick::quantize_cost(t).to_f64()
 }
 
 /// Indexed min segment tree over one processor type's units, keyed by
-/// the time each unit becomes free.  All queries take finite thresholds.
+/// the tick each unit becomes free.  All queries take finite thresholds.
 #[derive(Clone, Debug)]
 pub struct UnitTree {
     len: usize,
     size: usize,
-    /// 1-based heap layout; leaves at `size..size + len`, padding +inf.
-    tree: Vec<f64>,
+    /// 1-based heap layout; leaves at `size..size + len`, padding MAX.
+    tree: Vec<Tick>,
 }
 
 impl UnitTree {
     pub fn new(len: usize) -> UnitTree {
         assert!(len > 0, "a processor type needs at least one unit");
         let size = len.next_power_of_two();
-        let mut tree = vec![f64::INFINITY; 2 * size];
+        let mut tree = vec![Tick::MAX; 2 * size];
         for leaf in tree.iter_mut().skip(size).take(len) {
-            *leaf = 0.0;
+            *leaf = Tick::ZERO;
         }
         for i in (1..size).rev() {
             tree[i] = tree[2 * i].min(tree[2 * i + 1]);
@@ -98,19 +162,19 @@ impl UnitTree {
         self.len == 0
     }
 
-    /// Earliest time any unit is free (the type's idle horizon τ_q).
-    pub fn min(&self) -> f64 {
+    /// Earliest tick any unit is free (the type's idle horizon τ_q).
+    pub fn min(&self) -> Tick {
         self.tree[1]
     }
 
-    /// Free time of one unit.
-    pub fn get(&self, unit: usize) -> f64 {
+    /// Free tick of one unit.
+    pub fn get(&self, unit: usize) -> Tick {
         debug_assert!(unit < self.len);
         self.tree[self.size + unit]
     }
 
-    /// Update one unit's free time.
-    pub fn set(&mut self, unit: usize, free: f64) {
+    /// Update one unit's free tick.
+    pub fn set(&mut self, unit: usize, free: Tick) {
         debug_assert!(unit < self.len);
         let mut i = self.size + unit;
         self.tree[i] = free;
@@ -120,8 +184,8 @@ impl UnitTree {
         }
     }
 
-    /// Lowest unit index free by time `t`, if any.
-    pub fn first_at_most(&self, t: f64) -> Option<usize> {
+    /// Lowest unit index free by tick `t`, if any.
+    pub fn first_at_most(&self, t: Tick) -> Option<usize> {
         if self.tree[1] > t {
             return None;
         }
@@ -132,8 +196,8 @@ impl UnitTree {
         Some(i - self.size)
     }
 
-    /// Highest unit index free by time `t`, if any.
-    pub fn last_at_most(&self, t: f64) -> Option<usize> {
+    /// Highest unit index free by tick `t`, if any.
+    pub fn last_at_most(&self, t: Tick) -> Option<usize> {
         if self.tree[1] > t {
             return None;
         }
@@ -144,7 +208,7 @@ impl UnitTree {
         Some(i - self.size)
     }
 
-    /// First (lowest) unit index achieving the minimum free time — the
+    /// First (lowest) unit index achieving the minimum free tick — the
     /// element `Iterator::min_by` returns on ties, which is what the
     /// seed schedulers' linear scans picked.
     pub fn argmin_first(&self) -> usize {
@@ -152,7 +216,7 @@ impl UnitTree {
         self.first_at_most(self.min()).expect("tree is non-empty")
     }
 
-    /// Last (highest) unit index achieving the minimum free time (the
+    /// Last (highest) unit index achieving the minimum free tick (the
     /// `max_by`-style tie-break; kept for policies that want to spread
     /// load away from low-index units).
     pub fn argmin_last(&self) -> usize {
@@ -160,25 +224,74 @@ impl UnitTree {
         self.last_at_most(self.min()).expect("tree is non-empty")
     }
 
-    /// Earliest free time among `units` (+∞ for an empty slice) — the
-    /// restricted-set form of [`Self::min`], used by the service's
-    /// quota admission layer when a tenant at its held-units cap may
-    /// only select among the units it already holds.  Exact min over
-    /// the same leaf values the tree holds, so on the full unit set it
-    /// equals [`Self::min`] bit-for-bit.
-    pub fn min_over(&self, units: &[usize]) -> f64 {
-        units
-            .iter()
-            .map(|&u| self.get(u))
-            .fold(f64::INFINITY, f64::min)
+    /// Earliest free tick among `units` (ascending; [`Tick::MAX`] for an
+    /// empty slice) — the restricted-set form of [`Self::min`], used by
+    /// the service's quota admission layer when a tenant at its
+    /// held-units cap may only select among the units it already holds.
+    ///
+    /// Descends the segment tree, pruning subtrees whose minimum cannot
+    /// improve the incumbent and collapsing subtrees fully covered by
+    /// the restricted set to one node read, instead of the seed's
+    /// O(|units|) leaf fold — quota tenants holding a dense block of
+    /// units pay O(log c) per probe.  Exact min over the same leaf
+    /// values the tree holds, so on the full unit set it equals
+    /// [`Self::min`] bit-for-bit.
+    pub fn min_over(&self, units: &[usize]) -> Tick {
+        debug_assert!(units.windows(2).all(|w| w[0] < w[1]), "units must ascend");
+        self.min_over_node(1, 0, self.size, units, Tick::MAX)
     }
 
-    /// Lowest unit in `units` (which must be ascending) free by time
-    /// `t` — the restricted-set form of [`Self::first_at_most`]; on the
-    /// full ascending unit set the two agree by construction.
-    pub fn first_at_most_over(&self, units: &[usize], t: f64) -> Option<usize> {
+    fn min_over_node(&self, node: usize, lo: usize, hi: usize, units: &[usize], best: Tick) -> Tick {
+        if units.is_empty() || self.tree[node] >= best {
+            return best;
+        }
+        // fully covered range: the node's min IS the restricted min here
+        if units.len() == hi - lo {
+            return best.min(self.tree[node]);
+        }
+        if hi - lo == 1 {
+            // units is non-empty and within [lo, hi), so lo is a member
+            return best.min(self.tree[node]);
+        }
+        let mid = lo + (hi - lo) / 2;
+        let split = units.partition_point(|&u| u < mid);
+        let best = self.min_over_node(2 * node, lo, mid, &units[..split], best);
+        self.min_over_node(2 * node + 1, mid, hi, &units[split..], best)
+    }
+
+    /// Lowest unit in `units` (ascending) free by tick `t` — the
+    /// restricted-set form of [`Self::first_at_most`]; on the full
+    /// ascending unit set the two agree by construction.
+    ///
+    /// Left-to-right tree descent with subtree-minimum pruning: the
+    /// first member leaf at most `t` is found without touching members
+    /// in pruned subtrees, so a hit early in the unit order is O(log c)
+    /// regardless of how many units the tenant holds.
+    pub fn first_at_most_over(&self, units: &[usize], t: Tick) -> Option<usize> {
         debug_assert!(units.windows(2).all(|w| w[0] < w[1]), "units must ascend");
-        units.iter().copied().find(|&u| self.get(u) <= t)
+        self.first_at_most_over_node(1, 0, self.size, units, t)
+    }
+
+    fn first_at_most_over_node(
+        &self,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        units: &[usize],
+        t: Tick,
+    ) -> Option<usize> {
+        if units.is_empty() || self.tree[node] > t {
+            return None;
+        }
+        if hi - lo == 1 {
+            // units non-empty within a width-1 range: lo is a member,
+            // and tree[node] <= t just passed
+            return Some(lo);
+        }
+        let mid = lo + (hi - lo) / 2;
+        let split = units.partition_point(|&u| u < mid);
+        self.first_at_most_over_node(2 * node, lo, mid, &units[..split], t)
+            .or_else(|| self.first_at_most_over_node(2 * node + 1, mid, hi, &units[split..], t))
     }
 }
 
@@ -199,107 +312,86 @@ impl UnitPool {
         self.types.len()
     }
 
-    /// τ_q: earliest time a unit of type `q` is idle.
-    pub fn earliest_idle(&self, q: usize) -> f64 {
+    /// τ_q: earliest tick a unit of type `q` is idle.
+    pub fn earliest_idle(&self, q: usize) -> Tick {
         self.types[q].min()
     }
 
-    /// Time `unit` of type `q` becomes free.
-    pub fn free_at(&self, q: usize, unit: usize) -> f64 {
+    /// Tick `unit` of type `q` becomes free.
+    pub fn free_at(&self, q: usize, unit: usize) -> Tick {
         self.types[q].get(unit)
     }
 
     /// Reserve `unit` of type `q` until `finish`: the unit is busy (its
-    /// free time advances) until then.  This is the single mutation the
+    /// free tick advances) until then.  This is the single mutation the
     /// shared-pool service mode and every online policy go through, so a
     /// pool can be threaded across many tenants' decisions.
-    pub fn reserve(&mut self, q: usize, unit: usize, finish: f64) {
+    pub fn reserve(&mut self, q: usize, unit: usize, finish: Tick) {
         debug_assert!(finish >= self.types[q].get(unit), "reservations never rewind");
         self.types[q].set(unit, finish);
     }
 
     /// Release `unit` of type `q` back to `free`: used when a tenant is
-    /// cancelled after a reservation (rewinds the free time).
-    pub fn release(&mut self, q: usize, unit: usize, free: f64) {
+    /// cancelled after a reservation (rewinds the free tick).
+    pub fn release(&mut self, q: usize, unit: usize, free: Tick) {
         self.types[q].set(unit, free);
     }
 }
 
 /// Per-type ready queues for the EST policy (see module docs).
 pub struct EstReady {
-    /// tasks whose ready time is at (or within [`TIE_BAND`] of) the
-    /// type's idle horizon: their starting times all tie with the
-    /// horizon under the reference's band comparison, so only the id
+    /// tasks whose ready tick is at or below the type's idle horizon:
+    /// their starting times all equal the horizon, so only the id
     /// orders them
     arrived: Vec<BinaryHeap<Reverse<TaskId>>>,
-    /// tasks still waiting on a predecessor finish beyond the horizon's
-    /// band, ordered by (ready_time, id); a BTreeSet (not a heap) so the
-    /// head's ±[`TIE_BAND`] cluster can be range-scanned for the
-    /// smallest id, matching the reference's banded comparator when two
-    /// pending ready times differ only by summation ulps
-    pending: Vec<std::collections::BTreeSet<(OrdF64, TaskId)>>,
+    /// tasks still waiting on a predecessor finish beyond the horizon,
+    /// ordered by (ready_tick, id); equal ticks are *exact* ties (see
+    /// module docs), so the heap head is already the seed comparator's
+    /// winner — no band-cluster scan
+    pending: Vec<BinaryHeap<Reverse<(Tick, TaskId)>>>,
 }
 
 impl EstReady {
     pub fn new(n_types: usize) -> EstReady {
         EstReady {
             arrived: (0..n_types).map(|_| BinaryHeap::new()).collect(),
-            pending: (0..n_types).map(|_| Default::default()).collect(),
+            pending: (0..n_types).map(|_| BinaryHeap::new()).collect(),
         }
     }
 
     /// Insert a task that just became ready; `tau` is the current idle
-    /// horizon of its allocated type `q`.  A ready time within
-    /// [`TIE_BAND`] of the horizon already *ties* with it in the
-    /// reference comparator, so such tasks go straight to the id-ordered
-    /// bucket (their true EST — `max(ready, tau)` — is restored by the
-    /// caller when it starts them).
-    pub fn push(&mut self, q: usize, ready: f64, tau: f64, j: TaskId) {
-        if ready <= tau + TIE_BAND {
+    /// horizon of its allocated type `q`.  A ready tick at or below the
+    /// horizon already starts *at* the horizon, so such tasks go
+    /// straight to the id-ordered bucket.
+    pub fn push(&mut self, q: usize, ready: Tick, tau: Tick, j: TaskId) {
+        if ready <= tau {
             self.arrived[q].push(Reverse(j));
         } else {
-            self.pending[q].insert((OrdF64(ready), j));
+            self.pending[q].push(Reverse((ready, j)));
         }
     }
 
-    /// Move tasks whose ready time the advancing horizon has passed (to
-    /// within the band) into the id-ordered bucket.  Call after every
-    /// assignment on type `q`.
-    pub fn promote(&mut self, q: usize, tau: f64) {
-        while let Some(&(OrdF64(r), j)) = self.pending[q].first() {
-            if r > tau + TIE_BAND {
+    /// Move tasks whose ready tick the advancing horizon has passed into
+    /// the id-ordered bucket.  Call after every assignment on type `q`.
+    pub fn promote(&mut self, q: usize, tau: Tick) {
+        while let Some(&Reverse((r, j))) = self.pending[q].peek() {
+            if r > tau {
                 break;
             }
-            self.pending[q].remove(&(OrdF64(r), j));
+            self.pending[q].pop();
             self.arrived[q].push(Reverse(j));
         }
     }
 
-    /// The reference comparator's winner within the pending queue of
-    /// type `q`: the smallest id among the head's ±[`TIE_BAND`] cluster
-    /// (ready times within the band tie, smaller id wins; everything
-    /// past the band loses outright to the head).
-    fn pending_best(&self, q: usize) -> Option<(OrdF64, TaskId)> {
-        let &(OrdF64(r0), j0) = self.pending[q].first()?;
-        let mut best = (OrdF64(r0), j0);
-        for &(r, j) in self.pending[q].range(..=(OrdF64(r0 + TIE_BAND), TaskId::MAX)) {
-            if j < best.1 {
-                best = (r, j);
-            }
-        }
-        Some(best)
-    }
-
-    /// Best (starting time, id) candidate on type `q` under horizon
-    /// `tau`, without removing it.  Arrived tasks all start at (within
-    /// the band of) `tau`; pending tasks start at their own ready time
-    /// (> `tau` + band), so an arrived task always dominates when
-    /// present.
-    pub fn peek(&self, q: usize, tau: f64) -> Option<(f64, TaskId)> {
+    /// Best (starting tick, id) candidate on type `q` under horizon
+    /// `tau`, without removing it.  Arrived tasks all start at `tau`;
+    /// pending tasks start at their own ready tick (> `tau`), so an
+    /// arrived task always dominates when present.
+    pub fn peek(&self, q: usize, tau: Tick) -> Option<(Tick, TaskId)> {
         if let Some(Reverse(j)) = self.arrived[q].peek().copied() {
             return Some((tau, j));
         }
-        self.pending_best(q).map(|(OrdF64(r), j)| (r, j))
+        self.pending[q].peek().map(|&Reverse((r, j))| (r, j))
     }
 
     /// Total queued tasks across every type — the ready-queue depth
@@ -308,7 +400,7 @@ impl EstReady {
     /// indexing: this file's no-panic indexing budget stays flat.)
     pub fn depth_total(&self) -> usize {
         self.arrived.iter().map(BinaryHeap::len).sum::<usize>()
-            + self.pending.iter().map(std::collections::BTreeSet::len).sum::<usize>()
+            + self.pending.iter().map(BinaryHeap::len).sum::<usize>()
     }
 
     /// Remove the candidate [`Self::peek`] reported for type `q`.
@@ -316,9 +408,7 @@ impl EstReady {
         if let Some(Reverse(j)) = self.arrived[q].pop() {
             return Some(j);
         }
-        let best = self.pending_best(q)?;
-        self.pending[q].remove(&best);
-        Some(best.1)
+        self.pending[q].pop().map(|Reverse((_, j))| j)
     }
 }
 
@@ -326,7 +416,7 @@ impl EstReady {
 /// the structure that takes HEFT's unit pick from O(units · intervals)
 /// per task to near-O(log units) on mostly-gapless workloads.
 ///
-/// State per unit: the *tail* (the time the unit is free after its last
+/// State per unit: the *tail* (the tick the unit is free after its last
 /// busy interval, kept in a [`UnitTree`] over all units of the type) and
 /// a sorted list of idle *gaps* `(start, end)` between busy intervals,
 /// where `start` is the running max of earlier finishes (exactly the `t`
@@ -337,23 +427,21 @@ impl EstReady {
 /// per *gapped* unit instead of a scan over every unit's timeline.
 ///
 /// Tie-break contract: [`Self::best_eft`] reproduces the reference
-/// timeline scan ([`super::reference::heft_schedule`]) under the same
-/// ±[`TIE_BAND`] comparator and ulp-cluster assumption the other engine
-/// selections rely on (see module docs): the tail-side candidate is the
-/// lowest-index unit within the band of the tail clamp, gap candidates
+/// timeline scan ([`super::reference::heft_schedule`]) under exact tick
+/// equality (see module docs): the tail-side candidate is the
+/// lowest-index unit whose tail equals the tail clamp, gap candidates
 /// are folded in with the scan's own comparator, and a unit's gap
 /// candidate always beats its own tail (a gap ends strictly before the
-/// tail begins).  Gap *fits* use the same `1e-12` insertion slack as
-/// [`Timeline::earliest_start`]; exactness requires task durations
-/// larger than that slack (every workload generator draws strictly
-/// positive, far larger costs).  The golden-parity suite pins gap-index
-/// HEFT against the reference scan placement-for-placement.
+/// tail begins).  Gap *fits* are exact interval containment — the float
+/// engine's 1e-12 insertion slack is gone with the rest of the band
+/// machinery.  The golden-parity suite pins gap-index HEFT against the
+/// reference scan placement-for-placement.
 #[derive(Clone, Debug)]
 pub struct GapIndex {
-    /// per-unit free time after the last busy interval
+    /// per-unit free tick after the last busy interval
     tails: UnitTree,
     /// per-unit idle gaps (start, end), time-ordered, positive length
-    gaps: Vec<Vec<(f64, f64)>>,
+    gaps: Vec<Vec<(Tick, Tick)>>,
     /// units currently owning at least one gap, ascending
     gapped: std::collections::BTreeSet<usize>,
 }
@@ -381,15 +469,15 @@ impl GapIndex {
     }
 
     /// First gap of `unit` that can host a task ready at `ready` of
-    /// length `dur`; returns the start time.  Gap ends are increasing,
+    /// length `dur`; returns the start tick.  Gap ends are increasing,
     /// so gaps that end before the task could finish are skipped by
     /// binary search and only genuinely plausible gaps are probed.
-    fn first_fit(&self, unit: usize, ready: f64, dur: f64) -> Option<f64> {
+    fn first_fit(&self, unit: usize, ready: Tick, dur: Tick) -> Option<Tick> {
         let gaps = &self.gaps[unit];
-        let lo = gaps.partition_point(|&(_, e)| e + TIE_BAND < ready + dur);
+        let lo = gaps.partition_point(|&(_, e)| e < ready + dur);
         for &(g, e) in &gaps[lo..] {
             let start = ready.max(g);
-            if start + dur <= e + TIE_BAND {
+            if start + dur <= e {
                 return Some(start);
             }
         }
@@ -399,17 +487,17 @@ impl GapIndex {
     /// Best `(eft, unit, start)` for a task ready at `ready` with
     /// duration `dur` — the candidate the reference timeline scan picks,
     /// without visiting gapless units (see type docs for the contract).
-    pub fn best_eft(&self, ready: f64, dur: f64) -> (f64, usize, f64) {
+    pub fn best_eft(&self, ready: Tick, dur: Tick) -> (Tick, usize, Tick) {
         // tail candidate: the unit the scan would pick if no gap fit
-        // anywhere — lowest index whose tail ties (within the band) the
+        // anywhere — lowest index whose tail is at most the
         // ready/horizon clamp, exactly the online EFT clamp rule
         let tau = self.tails.min();
-        let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
+        let clamp = if tau <= ready { ready } else { tau };
         let ut = self
             .tails
-            .first_at_most(clamp + TIE_BAND)
-            // hetlint: allow(no-panic-in-hot-path) -- clamp >= tails.min() by construction, so some unit is always at most clamp + band
-            .expect("idle horizon lies within its own band");
+            .first_at_most(clamp)
+            // hetlint: allow(no-panic-in-hot-path) -- clamp >= tails.min() by construction, so some unit is always at most clamp
+            .expect("idle horizon is itself at most the clamp");
         let start_t = ready.max(self.tails.get(ut));
         let mut best = (start_t + dur, ut, start_t);
         // gap candidates, folded in with the reference scan's own
@@ -419,7 +507,7 @@ impl GapIndex {
         for &u in &self.gapped {
             if let Some(start) = self.first_fit(u, ready, dur) {
                 let eft = start + dur;
-                if eft < best.0 - TIE_BAND || (eft <= best.0 + TIE_BAND && u < best.1) {
+                if eft < best.0 || (eft == best.0 && u < best.1) {
                     best = (eft, u, start);
                 }
             }
@@ -428,13 +516,13 @@ impl GapIndex {
     }
 
     /// Record a placement `[start, finish)` on `unit`.  `start` must be
-    /// a value [`Self::best_eft`] (or the reference scan) produced for
+    /// a tick [`Self::best_eft`] (or the reference scan) produced for
     /// the current state: either inside an indexed gap or at/after the
     /// unit's tail.
-    pub fn insert(&mut self, unit: usize, start: f64, finish: f64) {
+    pub fn insert(&mut self, unit: usize, start: Tick, finish: Tick) {
         let tail = self.tails.get(unit);
         if start >= tail {
-            // tail placement; a late ready time opens a new gap, which
+            // tail placement; a late ready tick opens a new gap, which
             // lands after every existing gap (gap ends are busy starts,
             // all below the old tail)
             if start > tail {
@@ -451,13 +539,13 @@ impl GapIndex {
             let at = gaps.partition_point(|&(g, _)| g <= start);
             assert!(
                 at > 0,
-                "start {start} is below unit {unit}'s tail {tail} but inside no indexed gap"
+                "start {start:?} is below unit {unit}'s tail {tail:?} but inside no indexed gap"
             );
             let i = at - 1;
             let (g, e) = gaps[i];
             debug_assert!(
-                start >= g && finish <= e + TIE_BAND,
-                "placement [{start}, {finish}) outside gap [{g}, {e})"
+                start >= g && finish <= e,
+                "placement [{start:?}, {finish:?}) outside gap [{g:?}, {e:?})"
             );
             match (start > g, e > finish) {
                 (true, true) => {
@@ -477,11 +565,11 @@ impl GapIndex {
     }
 }
 
-/// Completion-event min-heap: (finish time, task), earliest first, ties
+/// Completion-event min-heap: (finish tick, task), earliest first, ties
 /// towards the smaller task id.
 #[derive(Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<(OrdF64, TaskId)>>,
+    heap: BinaryHeap<Reverse<(Tick, TaskId)>>,
 }
 
 impl EventQueue {
@@ -489,16 +577,16 @@ impl EventQueue {
         EventQueue::default()
     }
 
-    pub fn push(&mut self, finish: f64, j: TaskId) {
-        self.heap.push(Reverse((OrdF64(finish), j)));
+    pub fn push(&mut self, finish: Tick, j: TaskId) {
+        self.heap.push(Reverse((finish, j)));
     }
 
-    pub fn peek(&self) -> Option<(f64, TaskId)> {
-        self.heap.peek().copied().map(|Reverse((OrdF64(t), j))| (t, j))
+    pub fn peek(&self) -> Option<(Tick, TaskId)> {
+        self.heap.peek().copied().map(|Reverse((t, j))| (t, j))
     }
 
-    pub fn pop(&mut self) -> Option<(f64, TaskId)> {
-        self.heap.pop().map(|Reverse((OrdF64(t), j))| (t, j))
+    pub fn pop(&mut self) -> Option<(Tick, TaskId)> {
+        self.heap.pop().map(|Reverse((t, j))| (t, j))
     }
 
     pub fn is_empty(&self) -> bool {
@@ -510,24 +598,25 @@ impl EventQueue {
     }
 }
 
-/// One unit's busy intervals, kept sorted by start time, with a linear
+/// One unit's busy intervals, kept sorted by start tick, with a linear
 /// first-fit scan — the seed structure behind insertion-based
 /// (backfilling) policies.  The engine HEFT now selects through the
 /// [`GapIndex`] instead; `Timeline` is retained as the reference
 /// oracle's structure ([`super::reference::heft_schedule`]) and for
-/// tests, and its `earliest_start` defines the gap-fit semantics
-/// (including the 1e-12 insertion slack) the gap index reproduces.
+/// tests, and its `earliest_start` defines the gap-fit semantics the
+/// gap index reproduces (exact containment — the float version's 1e-12
+/// insertion slack died with the tie band).
 #[derive(Clone, Debug, Default)]
 pub struct Timeline {
-    busy: Vec<(f64, f64)>,
+    busy: Vec<(Tick, Tick)>,
 }
 
 impl Timeline {
     /// Earliest start ≥ `ready` for a task of length `dur` (insertion).
-    pub fn earliest_start(&self, ready: f64, dur: f64) -> f64 {
+    pub fn earliest_start(&self, ready: Tick, dur: Tick) -> Tick {
         let mut t = ready;
         for &(s, f) in &self.busy {
-            if t + dur <= s + 1e-12 {
+            if t + dur <= s {
                 return t;
             }
             if f > t {
@@ -537,7 +626,7 @@ impl Timeline {
         t
     }
 
-    pub fn insert(&mut self, start: f64, finish: f64) {
+    pub fn insert(&mut self, start: Tick, finish: Tick) {
         let pos = self.busy.partition_point(|&(s, _)| s < start);
         self.busy.insert(pos, (start, finish));
     }
@@ -551,18 +640,38 @@ impl Timeline {
 mod tests {
     use super::*;
 
+    fn tk(t: f64) -> Tick {
+        Tick::quantize(t)
+    }
+
+    #[test]
+    fn tick_quantize_roundtrip_and_order() {
+        for t in [0.0, 1.0, 0.1, 2.5, 1e4, 123.456] {
+            let q = Tick::quantize(t);
+            assert_eq!(Tick::quantize(q.to_f64()), q, "roundtrip at {t}");
+            assert!((q.to_f64() - t).abs() <= 0.5 / (1u64 << TICK_SHIFT) as f64);
+        }
+        assert!(tk(1.0) < tk(1.0 + 1e-9));
+        assert_eq!(tk(1.0), tk(1.0 + 1e-13), "ulp noise collapses to a tie");
+        assert_eq!(tk(0.0), Tick::ZERO);
+        assert_eq!(tk(1.5) + tk(2.5), tk(4.0), "integer addition is exact");
+        assert!(Tick::quantize_cost(0.0) >= Tick(1), "cost clamp");
+        assert_eq!(canon(2.0), 2.0);
+        assert_eq!(canon_cost(3.5), 3.5);
+    }
+
     #[test]
     fn unit_tree_min_and_updates() {
         let mut t = UnitTree::new(5);
         assert_eq!(t.len(), 5);
-        assert_eq!(t.min(), 0.0);
+        assert_eq!(t.min(), Tick::ZERO);
         for u in 0..5 {
-            t.set(u, (u + 1) as f64);
+            t.set(u, tk((u + 1) as f64));
         }
-        assert_eq!(t.min(), 1.0);
-        assert_eq!(t.get(3), 4.0);
-        t.set(3, 0.5);
-        assert_eq!(t.min(), 0.5);
+        assert_eq!(t.min(), tk(1.0));
+        assert_eq!(t.get(3), tk(4.0));
+        t.set(3, tk(0.5));
+        assert_eq!(t.min(), tk(0.5));
         assert_eq!(t.argmin_first(), 3);
         assert_eq!(t.argmin_last(), 3);
     }
@@ -573,15 +682,15 @@ mod tests {
         // minimum (index 1) on ties
         let mut t = UnitTree::new(4);
         for (u, f) in [2.0, 1.0, 1.0, 7.0].iter().enumerate() {
-            t.set(u, *f);
+            t.set(u, tk(*f));
         }
         assert_eq!(t.argmin_first(), 1);
         assert_eq!(t.argmin_last(), 2);
-        let avail = [2.0, 1.0, 1.0, 7.0];
+        let avail = [tk(2.0), tk(1.0), tk(1.0), tk(7.0)];
         let by_scan = avail
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.total_cmp(b.1))
+            .min_by(|a, b| a.1.cmp(b.1))
             .map(|(u, _)| u)
             .unwrap();
         assert_eq!(t.argmin_first(), by_scan);
@@ -591,105 +700,135 @@ mod tests {
     fn unit_tree_threshold_queries() {
         let mut t = UnitTree::new(3);
         for (u, f) in [5.0, 3.0, 9.0].iter().enumerate() {
-            t.set(u, *f);
+            t.set(u, tk(*f));
         }
-        assert_eq!(t.first_at_most(4.0), Some(1));
-        assert_eq!(t.first_at_most(6.0), Some(0));
-        assert_eq!(t.last_at_most(6.0), Some(1));
-        assert_eq!(t.first_at_most(2.0), None);
-        assert_eq!(t.last_at_most(9.0), Some(2));
+        assert_eq!(t.first_at_most(tk(4.0)), Some(1));
+        assert_eq!(t.first_at_most(tk(6.0)), Some(0));
+        assert_eq!(t.last_at_most(tk(6.0)), Some(1));
+        assert_eq!(t.first_at_most(tk(2.0)), None);
+        assert_eq!(t.last_at_most(tk(9.0)), Some(2));
     }
 
     #[test]
     fn unit_tree_restricted_set_queries_match_full_scans() {
         let mut t = UnitTree::new(5);
         for (u, f) in [4.0, 2.0, 2.0, 9.0, 1.0].iter().enumerate() {
-            t.set(u, *f);
+            t.set(u, tk(*f));
         }
         // restricted min + first-at-most over a subset
-        assert_eq!(t.min_over(&[0, 3]), 4.0);
-        assert_eq!(t.min_over(&[1, 2, 3]), 2.0);
-        assert_eq!(t.min_over(&[]), f64::INFINITY);
-        assert_eq!(t.first_at_most_over(&[1, 2, 3], 2.0), Some(1));
-        assert_eq!(t.first_at_most_over(&[0, 3], 3.0), None);
+        assert_eq!(t.min_over(&[0, 3]), tk(4.0));
+        assert_eq!(t.min_over(&[1, 2, 3]), tk(2.0));
+        assert_eq!(t.min_over(&[]), Tick::MAX);
+        assert_eq!(t.first_at_most_over(&[1, 2, 3], tk(2.0)), Some(1));
+        assert_eq!(t.first_at_most_over(&[0, 3], tk(3.0)), None);
         // full ascending set degenerates to the tree queries
         let all = [0, 1, 2, 3, 4];
         assert_eq!(t.min_over(&all), t.min());
-        assert_eq!(t.first_at_most_over(&all, 2.0), t.first_at_most(2.0));
-        assert_eq!(t.first_at_most_over(&all, 0.5), t.first_at_most(0.5));
+        assert_eq!(t.first_at_most_over(&all, tk(2.0)), t.first_at_most(tk(2.0)));
+        assert_eq!(t.first_at_most_over(&all, tk(0.5)), t.first_at_most(tk(0.5)));
+    }
+
+    #[test]
+    fn unit_tree_restricted_descent_matches_linear_fold() {
+        // the tree-descent restricted queries against the seed linear
+        // fold, over every subset of a 6-unit tree (pinning the
+        // quota-path rewrite result-for-result)
+        let mut t = UnitTree::new(6);
+        let frees = [5.0, 2.0, 8.0, 2.0, 1.0, 7.0];
+        for (u, f) in frees.iter().enumerate() {
+            t.set(u, tk(*f));
+        }
+        for mask in 0u32..64 {
+            let units: Vec<usize> = (0..6).filter(|u| mask & (1 << u) != 0).collect();
+            let fold = units
+                .iter()
+                .map(|&u| t.get(u))
+                .fold(Tick::MAX, Tick::min);
+            assert_eq!(t.min_over(&units), fold, "min mask {mask:b}");
+            for thr in [0.5, 1.0, 2.0, 5.0, 9.0] {
+                let scan = units.iter().copied().find(|&u| t.get(u) <= tk(thr));
+                assert_eq!(
+                    t.first_at_most_over(&units, tk(thr)),
+                    scan,
+                    "first-at-most mask {mask:b} thr {thr}"
+                );
+            }
+        }
     }
 
     #[test]
     fn unit_tree_non_power_of_two_padding_ignored() {
         let mut t = UnitTree::new(3);
-        t.set(0, 10.0);
-        t.set(1, 10.0);
-        t.set(2, 10.0);
-        // padding leaves are +inf and must never win a threshold query
-        assert_eq!(t.min(), 10.0);
-        assert_eq!(t.last_at_most(10.0), Some(2));
+        t.set(0, tk(10.0));
+        t.set(1, tk(10.0));
+        t.set(2, tk(10.0));
+        // padding leaves are MAX and must never win a threshold query
+        assert_eq!(t.min(), tk(10.0));
+        assert_eq!(t.last_at_most(tk(10.0)), Some(2));
         assert_eq!(t.argmin_first(), 0);
     }
 
     #[test]
     fn unit_pool_reserve_and_release() {
         let mut pool = UnitPool::new(&[2, 1]);
-        assert_eq!(pool.earliest_idle(0), 0.0);
-        pool.reserve(0, 0, 5.0);
-        assert_eq!(pool.free_at(0, 0), 5.0);
-        assert_eq!(pool.earliest_idle(0), 0.0); // unit 1 still idle
-        pool.reserve(0, 1, 3.0);
-        assert_eq!(pool.earliest_idle(0), 3.0);
-        pool.release(0, 0, 1.0);
-        assert_eq!(pool.earliest_idle(0), 1.0);
-        assert_eq!(pool.earliest_idle(1), 0.0);
+        assert_eq!(pool.earliest_idle(0), Tick::ZERO);
+        pool.reserve(0, 0, tk(5.0));
+        assert_eq!(pool.free_at(0, 0), tk(5.0));
+        assert_eq!(pool.earliest_idle(0), Tick::ZERO); // unit 1 still idle
+        pool.reserve(0, 1, tk(3.0));
+        assert_eq!(pool.earliest_idle(0), tk(3.0));
+        pool.release(0, 0, tk(1.0));
+        assert_eq!(pool.earliest_idle(0), tk(1.0));
+        assert_eq!(pool.earliest_idle(1), Tick::ZERO);
     }
 
     #[test]
     fn est_ready_promotes_on_horizon_advance() {
         let mut r = EstReady::new(1);
-        r.push(0, 0.0, 0.0, 5); // arrived
-        r.push(0, 4.0, 0.0, 2); // pending (ready 4 > tau 0)
-        r.push(0, 9.0, 0.0, 1); // pending
-        assert_eq!(r.peek(0, 0.0), Some((0.0, 5)));
+        r.push(0, tk(0.0), tk(0.0), 5); // arrived
+        r.push(0, tk(4.0), tk(0.0), 2); // pending (ready 4 > tau 0)
+        r.push(0, tk(9.0), tk(0.0), 1); // pending
+        assert_eq!(r.peek(0, tk(0.0)), Some((tk(0.0), 5)));
         assert_eq!(r.pop(0), Some(5));
         // horizon still 0: earliest candidate is the pending (4, 2)
-        assert_eq!(r.peek(0, 0.0), Some((4.0, 2)));
+        assert_eq!(r.peek(0, tk(0.0)), Some((tk(4.0), 2)));
         // horizon advances past 4: task 2 arrives, starts at the horizon
-        r.promote(0, 6.0);
-        assert_eq!(r.peek(0, 6.0), Some((6.0, 2)));
+        r.promote(0, tk(6.0));
+        assert_eq!(r.peek(0, tk(6.0)), Some((tk(6.0), 2)));
         assert_eq!(r.pop(0), Some(2));
-        assert_eq!(r.peek(0, 6.0), Some((9.0, 1)));
+        assert_eq!(r.peek(0, tk(6.0)), Some((tk(9.0), 1)));
         assert_eq!(r.pop(0), Some(1));
-        assert_eq!(r.peek(0, 6.0), None);
+        assert_eq!(r.peek(0, tk(6.0)), None);
         assert_eq!(r.pop(0), None);
     }
 
     #[test]
-    fn est_ready_band_ties_resolve_by_id() {
-        // two pending tasks mathematically tied but ulps apart: the
-        // reference's ±1e-12 band makes the smaller id win even though
-        // its ready time is the (negligibly) later one
+    fn est_ready_sub_resolution_ties_resolve_by_id() {
+        // two pending tasks mathematically tied but ulps apart: both
+        // quantize to the same tick, so they tie *exactly* and the
+        // smaller id wins — the outcome the old ±1e-12 band produced
+        // with a cluster scan now falls out of the heap order
         let mut r = EstReady::new(1);
-        r.push(0, 10.0 + 5e-13, 0.0, 7);
-        r.push(0, 10.0, 0.0, 9);
-        assert_eq!(r.peek(0, 0.0), Some((10.0 + 5e-13, 7)));
+        r.push(0, tk(10.0 + 5e-13), tk(0.0), 7);
+        r.push(0, tk(10.0), tk(0.0), 9);
+        assert_eq!(r.peek(0, tk(0.0)), Some((tk(10.0), 7)));
         assert_eq!(r.pop(0), Some(7));
         assert_eq!(r.pop(0), Some(9));
         assert_eq!(r.pop(0), None);
 
-        // a ready time within the band of the horizon counts as arrived
+        // a ready time quantizing onto the horizon counts as arrived
         // (id-ordered bucket), not pending
         let mut r = EstReady::new(1);
-        r.push(0, 5.0 + 5e-13, 5.0, 3);
-        r.push(0, 5.0, 5.0, 8);
+        r.push(0, tk(5.0 + 5e-13), tk(5.0), 3);
+        r.push(0, tk(5.0), tk(5.0), 8);
         assert_eq!(r.pop(0), Some(3));
         assert_eq!(r.pop(0), Some(8));
 
-        // past the band: strictly earlier ready time wins regardless of id
+        // beyond tick resolution: strictly earlier ready wins regardless
+        // of id
         let mut r = EstReady::new(1);
-        r.push(0, 10.0, 0.0, 9);
-        r.push(0, 10.1, 0.0, 1);
+        r.push(0, tk(10.0), tk(0.0), 9);
+        r.push(0, tk(10.1), tk(0.0), 1);
         assert_eq!(r.pop(0), Some(9));
         assert_eq!(r.pop(0), Some(1));
     }
@@ -697,9 +836,9 @@ mod tests {
     #[test]
     fn est_ready_arrived_orders_by_id() {
         let mut r = EstReady::new(1);
-        r.push(0, 0.0, 0.0, 9);
-        r.push(0, 0.0, 0.0, 3);
-        r.push(0, 0.0, 0.0, 7);
+        r.push(0, tk(0.0), tk(0.0), 9);
+        r.push(0, tk(0.0), tk(0.0), 3);
+        r.push(0, tk(0.0), tk(0.0), 7);
         assert_eq!(r.pop(0), Some(3));
         assert_eq!(r.pop(0), Some(7));
         assert_eq!(r.pop(0), Some(9));
@@ -708,14 +847,14 @@ mod tests {
     #[test]
     fn event_queue_orders_by_finish_then_id() {
         let mut e = EventQueue::new();
-        e.push(3.0, 1);
-        e.push(1.0, 2);
-        e.push(1.0, 0);
+        e.push(tk(3.0), 1);
+        e.push(tk(1.0), 2);
+        e.push(tk(1.0), 0);
         assert_eq!(e.len(), 3);
-        assert_eq!(e.pop(), Some((1.0, 0)));
-        assert_eq!(e.pop(), Some((1.0, 2)));
-        assert_eq!(e.peek(), Some((3.0, 1)));
-        assert_eq!(e.pop(), Some((3.0, 1)));
+        assert_eq!(e.pop(), Some((tk(1.0), 0)));
+        assert_eq!(e.pop(), Some((tk(1.0), 2)));
+        assert_eq!(e.peek(), Some((tk(3.0), 1)));
+        assert_eq!(e.pop(), Some((tk(3.0), 1)));
         assert!(e.is_empty());
     }
 
@@ -723,23 +862,23 @@ mod tests {
     fn gap_index_tail_placements_and_new_gaps() {
         let mut gi = GapIndex::new(2);
         // empty units: best EFT is ready + dur on unit 0
-        assert_eq!(gi.best_eft(0.0, 3.0), (3.0, 0, 0.0));
-        gi.insert(0, 0.0, 3.0);
+        assert_eq!(gi.best_eft(tk(0.0), tk(3.0)), (tk(3.0), 0, tk(0.0)));
+        gi.insert(0, tk(0.0), tk(3.0));
         // unit 1 still idle at 0
-        assert_eq!(gi.best_eft(0.0, 2.0), (2.0, 1, 0.0));
-        gi.insert(1, 0.0, 2.0);
+        assert_eq!(gi.best_eft(tk(0.0), tk(2.0)), (tk(2.0), 1, tk(0.0)));
+        gi.insert(1, tk(0.0), tk(2.0));
         // a late-ready task ties both units at the ready clamp: the
         // lowest unit index wins, and placing it opens a gap [3, 5)
-        assert_eq!(gi.best_eft(5.0, 1.0), (6.0, 0, 5.0));
-        gi.insert(0, 5.0, 6.0);
+        assert_eq!(gi.best_eft(tk(5.0), tk(1.0)), (tk(6.0), 0, tk(5.0)));
+        gi.insert(0, tk(5.0), tk(6.0));
         assert_eq!(gi.n_gaps(), 1);
         // a 2-long task ready at 0: unit 1's tail (finish 4) beats the
         // gap candidate on unit 0 (start 3, finish 5)
-        assert_eq!(gi.best_eft(0.0, 2.0), (4.0, 1, 2.0));
-        gi.insert(1, 2.0, 4.0);
+        assert_eq!(gi.best_eft(tk(0.0), tk(2.0)), (tk(4.0), 1, tk(2.0)));
+        gi.insert(1, tk(2.0), tk(4.0));
         assert_eq!(gi.n_gaps(), 1);
         // a 1-long task backfills into unit 0's gap [3, 5)
-        assert_eq!(gi.best_eft(0.0, 1.0), (4.0, 0, 3.0));
+        assert_eq!(gi.best_eft(tk(0.0), tk(1.0)), (tk(4.0), 0, tk(3.0)));
     }
 
     #[test]
@@ -750,8 +889,8 @@ mod tests {
         let mut gi = GapIndex::new(1);
         for &(s, f) in &[(0.0, 2.0), (5.0, 7.0), (9.0, 12.0)] {
             // replay via tail/gap inserts: place at exactly (s, f)
-            gi.insert(0, s, f);
-            tl.insert(s, f);
+            gi.insert(0, tk(s), tk(f));
+            tl.insert(tk(s), tk(f));
         }
         assert_eq!(gi.n_gaps(), 2); // [2,5) and [7,9)
         for (ready, dur) in [
@@ -763,74 +902,74 @@ mod tests {
             (11.0, 1.0), // past all gaps -> tail at 12
             (0.0, 0.5),  // first gap, at its start
         ] {
-            let want = tl.earliest_start(ready, dur);
-            let (eft, unit, start) = gi.best_eft(ready, dur);
+            let want = tl.earliest_start(tk(ready), tk(dur));
+            let (eft, unit, start) = gi.best_eft(tk(ready), tk(dur));
             assert_eq!(unit, 0);
             assert_eq!(start, want, "ready {ready} dur {dur}");
-            assert_eq!(eft, want + dur);
+            assert_eq!(eft, want + tk(dur));
         }
     }
 
     #[test]
     fn gap_index_consumed_gap_is_removed() {
         let mut gi = GapIndex::new(1);
-        gi.insert(0, 0.0, 1.0);
-        gi.insert(0, 4.0, 5.0); // opens [1, 4)
+        gi.insert(0, tk(0.0), tk(1.0));
+        gi.insert(0, tk(4.0), tk(5.0)); // opens [1, 4)
         assert_eq!(gi.n_gaps(), 1);
         // exact-fit consumption
-        let (eft, _, start) = gi.best_eft(1.0, 3.0);
-        assert_eq!((start, eft), (1.0, 4.0));
-        gi.insert(0, 1.0, 4.0);
+        let (eft, _, start) = gi.best_eft(tk(1.0), tk(3.0));
+        assert_eq!((start, eft), (tk(1.0), tk(4.0)));
+        gi.insert(0, tk(1.0), tk(4.0));
         assert_eq!(gi.n_gaps(), 0);
         // unit is gapless again: tail placement
-        assert_eq!(gi.best_eft(0.0, 1.0), (6.0, 0, 5.0));
+        assert_eq!(gi.best_eft(tk(0.0), tk(1.0)), (tk(6.0), 0, tk(5.0)));
     }
 
     #[test]
     fn gap_index_gap_split_keeps_both_pieces() {
         let mut gi = GapIndex::new(1);
-        gi.insert(0, 0.0, 1.0);
-        gi.insert(0, 9.0, 10.0); // gap [1, 9)
+        gi.insert(0, tk(0.0), tk(1.0));
+        gi.insert(0, tk(9.0), tk(10.0)); // gap [1, 9)
         // placing [3, 5) splits it into [1, 3) and [5, 9)
-        gi.insert(0, 3.0, 5.0);
+        gi.insert(0, tk(3.0), tk(5.0));
         assert_eq!(gi.n_gaps(), 2);
-        assert_eq!(gi.best_eft(0.0, 2.0), (3.0, 0, 1.0));
-        assert_eq!(gi.best_eft(0.0, 3.0), (8.0, 0, 5.0));
+        assert_eq!(gi.best_eft(tk(0.0), tk(2.0)), (tk(3.0), 0, tk(1.0)));
+        assert_eq!(gi.best_eft(tk(0.0), tk(3.0)), (tk(8.0), 0, tk(5.0)));
     }
 
     #[test]
-    fn gap_index_band_ties_go_to_lowest_unit() {
+    fn gap_index_exact_ties_go_to_lowest_unit() {
         // both units idle by the clamp: lowest index wins, like the
         // reference scan's first-minimum rule
         let mut gi = GapIndex::new(3);
-        gi.insert(0, 0.0, 2.0);
-        gi.insert(1, 0.0, 1.0);
-        gi.insert(2, 0.0, 1.0);
+        gi.insert(0, tk(0.0), tk(2.0));
+        gi.insert(1, tk(0.0), tk(1.0));
+        gi.insert(2, tk(0.0), tk(1.0));
         // ready 3.0 > all tails: every unit starts at 3, unit 0 wins
-        assert_eq!(gi.best_eft(3.0, 1.0), (4.0, 0, 3.0));
+        assert_eq!(gi.best_eft(tk(3.0), tk(1.0)), (tk(4.0), 0, tk(3.0)));
         // ready 0: unit 1 is the first earliest-tail unit
-        assert_eq!(gi.best_eft(0.0, 1.0), (2.0, 1, 1.0));
+        assert_eq!(gi.best_eft(tk(0.0), tk(1.0)), (tk(2.0), 1, tk(1.0)));
         // a gap candidate tying a tail candidate resolves by unit index
         let mut gi = GapIndex::new(2);
-        gi.insert(0, 0.0, 1.0);
-        gi.insert(0, 2.0, 3.0); // gap [1, 2) on unit 0
-        gi.insert(1, 0.0, 1.0);
+        gi.insert(0, tk(0.0), tk(1.0));
+        gi.insert(0, tk(2.0), tk(3.0)); // gap [1, 2) on unit 0
+        gi.insert(1, tk(0.0), tk(1.0));
         // dur 1 ready 1: unit 0's gap start 1 ties unit 1's tail start 1
         // -> unit 0 (lower index), inside the gap
-        assert_eq!(gi.best_eft(1.0, 1.0), (2.0, 0, 1.0));
+        assert_eq!(gi.best_eft(tk(1.0), tk(1.0)), (tk(2.0), 0, tk(1.0)));
     }
 
     #[test]
     fn timeline_insertion_finds_gaps() {
         let mut tl = Timeline::default();
-        tl.insert(0.0, 2.0);
-        tl.insert(5.0, 7.0);
+        tl.insert(tk(0.0), tk(2.0));
+        tl.insert(tk(5.0), tk(7.0));
         // a 3-long task fits in [2,5)
-        assert_eq!(tl.earliest_start(0.0, 3.0), 2.0);
+        assert_eq!(tl.earliest_start(tk(0.0), tk(3.0)), tk(2.0));
         // a 4-long task must go after 7
-        assert_eq!(tl.earliest_start(0.0, 4.0), 7.0);
+        assert_eq!(tl.earliest_start(tk(0.0), tk(4.0)), tk(7.0));
         // respects ready time
-        assert_eq!(tl.earliest_start(2.5, 2.0), 2.5);
+        assert_eq!(tl.earliest_start(tk(2.5), tk(2.0)), tk(2.5));
         assert_eq!(tl.n_intervals(), 2);
     }
 }

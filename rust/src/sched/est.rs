@@ -12,18 +12,19 @@
 //! ([`engine::EstReady`]) make the global earliest-start selection
 //! O(Q log n) per step — O((n + |E|) log n) per instance overall, versus
 //! the O(n · (|ready| + units)) rescan of the retained reference
-//! implementation ([`super::reference::est_schedule`]).  Selection uses
-//! the reference's ±1e-12 comparison band ([`engine::TIE_BAND`]):
-//! starting times within the band tie towards the smaller task id.  Both
-//! produce identical schedules (golden-parity suite, including the
-//! repeated-cost-constant tie farms).
+//! implementation ([`super::reference::est_schedule`]).  All event times
+//! are [`engine::Tick`] counts, so starting-time comparisons are exact
+//! integer compares — ties (equal ticks) resolve towards the smaller
+//! task id, with no float band anywhere in the loop.  Both
+//! implementations produce identical schedules (golden-parity suite,
+//! including the repeated-cost-constant tie farms).
 
 use crate::graph::{TaskGraph, TaskId};
 use crate::obs::{DecisionEvent, EventKind, NoopSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
-use super::engine::{EstReady, UnitPool, TIE_BAND};
+use super::engine::{EstReady, Tick, UnitPool};
 
 /// Schedule with a fixed allocation under the EST policy.
 pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
@@ -32,7 +33,7 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
 
 /// [`est_schedule`] with an event sink: per decision, a ready-queue
 /// depth sample plus the decision span (rule tag `est`, candidate
-/// count, band-tie cluster size).  With a [`NoopSink`] this *is*
+/// count, exact-tie cluster size).  With a [`NoopSink`] this *is*
 /// `est_schedule` — the attribution bookkeeping never feeds the
 /// comparator, and the parity suites pin the placements bitwise.
 pub fn est_schedule_traced(
@@ -49,28 +50,29 @@ pub fn est_schedule_traced(
     let mut units = UnitPool::new(&plat.counts);
     let mut ready = EstReady::new(n_types);
     let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
-    let mut ready_time = vec![0.0f64; n];
+    let mut ready_time = vec![Tick::ZERO; n];
     let mut placements: Vec<Option<Placement>> = vec![None; n];
 
     for j in 0..n {
         if remaining[j] == 0 {
-            ready.push(alloc[j], 0.0, units.earliest_idle(alloc[j]), j);
+            ready.push(alloc[j], Tick::ZERO, units.earliest_idle(alloc[j]), j);
         }
     }
 
     for _ in 0..n {
-        // earliest (starting time, id) over the per-type candidates,
-        // compared with the reference scan's ±1e-12 band: a candidate
-        // wins outright only when it is more than TIE_BAND earlier, and
-        // candidates within the band tie towards the smaller task id —
-        // exactly `reference::est_schedule`'s comparator.
-        let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, type)
+        // earliest (starting tick, id) over the per-type candidates:
+        // exact integer comparison — a candidate wins outright when it
+        // is strictly earlier, and equal ticks tie towards the smaller
+        // task id, exactly `reference::est_schedule`'s comparator on
+        // canonical times.
+        let mut best: Option<(Tick, TaskId, usize)> = None; // (est, task, type)
         let mut candidates = 0usize;
         let mut tie_cluster = 1usize;
         for q in 0..n_types {
             if let Some((est, j)) = ready.peek(q, units.earliest_idle(q)) {
-                // band-promoted tasks report the horizon; their true EST
-                // is their own ready time (≤ TIE_BAND later)
+                // arrived tasks report the horizon; a task whose own
+                // ready tick equals the horizon starts there too, so the
+                // max is a no-op kept for clarity
                 let est = est.max(ready_time[j]);
                 candidates += 1;
                 let better = match best {
@@ -78,12 +80,12 @@ pub fn est_schedule_traced(
                     Some((b_est, b_j, _)) => {
                         // attribution bookkeeping only; the comparator
                         // below is the reference's, unchanged
-                        if est < b_est - TIE_BAND {
+                        if est < b_est {
                             tie_cluster = 1;
-                        } else if est <= b_est + TIE_BAND {
+                        } else if est == b_est {
                             tie_cluster += 1;
                         }
-                        est < b_est - TIE_BAND || (est <= b_est + TIE_BAND && j < b_j)
+                        est < b_est || (est == b_est && j < b_j)
                     }
                 };
                 if better {
@@ -97,25 +99,25 @@ pub fn est_schedule_traced(
         debug_assert_eq!(popped, Some(j));
         debug_assert_eq!(q, alloc[j]);
 
-        // unit achieving the earliest start (min free time, `min_by`
+        // unit achieving the earliest start (min free tick, `min_by`
         // first-index tie-break)
         let unit = units.types[q].argmin_first();
         let start = est;
-        let finish = start + g.time_on(j, q);
+        let finish = start + Tick::quantize_cost(g.time_on(j, q));
         units.types[q].set(unit, finish);
         placements[j] = Some(Placement {
             ptype: q,
             unit,
-            start,
-            finish,
+            start: start.to_f64(),
+            finish: finish.to_f64(),
         });
         if sink.enabled() {
             sink.emit(
-                start,
+                start.to_f64(),
                 EventKind::Queue { scope: "est-ready", depth: ready.depth_total() },
             );
             sink.emit(
-                start,
+                start.to_f64(),
                 EventKind::Decision(DecisionEvent {
                     tenant: 0,
                     task: j,
@@ -127,8 +129,8 @@ pub fn est_schedule_traced(
                     restricted: Vec::new(),
                     ptype: q,
                     unit,
-                    start,
-                    finish,
+                    start: start.to_f64(),
+                    finish: finish.to_f64(),
                 }),
             );
         }

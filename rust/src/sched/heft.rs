@@ -7,14 +7,15 @@
 //! one by one on the unit minimizing the *earliest finish time*, with
 //! insertion-based backfilling (a task may slot into an idle gap).
 //! Ties between a CPU and a GPU go to the GPU (the paper's Theorem 1
-//! convention); ties within a type go to the lowest unit index.  The tie
-//! comparison uses the engine-wide ±[`engine::TIE_BAND`] float band,
-//! like every other selection path (the seed's ad-hoc 1e-9 band was
-//! retired with the gap index — a 1e-10 EFT difference now *separates*
-//! two candidates instead of tying them).
+//! convention); ties within a type go to the lowest unit index.  Finish
+//! times are [`engine::Tick`] counts, so a tie is *exact* tick equality
+//! — the seed's ad-hoc 1e-9 band and the interim engine-wide ±1e-12
+//! band are both gone; two EFTs tie iff their quantized values are
+//! equal (sub-resolution differences of ≲ 5.8e-11 collapse onto one
+//! tick, anything larger separates).
 //!
 //! Selection rides the [`engine::GapIndex`]: a tail min-tree over unit
-//! finish times plus per-unit sorted gap lists, so each decision costs
+//! finish ticks plus per-unit sorted gap lists, so each decision costs
 //! O(Q (log c + |gapped units|)) instead of scanning every unit's
 //! timeline — near-O(log c) on mostly-gapless workloads, and what makes
 //! 100k-task / 256-unit `Scale::Full` campaigns tractable.  Placements
@@ -26,7 +27,7 @@ use crate::obs::{DecisionEvent, EventKind, NoopSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
-use super::engine::{GapIndex, TIE_BAND};
+use super::engine::{GapIndex, Tick};
 
 /// HEFT / QHEFT schedule.
 pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
@@ -36,7 +37,7 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
 /// [`heft_schedule`] with an event sink: per decision, a gap-index
 /// probe sample (how many idle gaps the chosen type's index holds) plus
 /// the decision span (rule tag `heft`, per-type candidate count,
-/// band-tie cluster size).  With a [`NoopSink`] this *is*
+/// exact-tie cluster size).  With a [`NoopSink`] this *is*
 /// `heft_schedule`; the parity suites pin the placements bitwise.
 pub fn heft_schedule_traced(g: &TaskGraph, plat: &Platform, sink: &mut dyn Sink) -> Schedule {
     let n = g.n_tasks();
@@ -46,34 +47,34 @@ pub fn heft_schedule_traced(g: &TaskGraph, plat: &Platform, sink: &mut dyn Sink)
     order.sort_by(|&a, &b| rank[b].total_cmp(&rank[a]).then(a.cmp(&b)));
 
     let mut index: Vec<GapIndex> = plat.counts.iter().map(|&c| GapIndex::new(c)).collect();
+    let mut finish_tick = vec![Tick::ZERO; n];
     let mut placements: Vec<Option<Placement>> = vec![None; n];
 
     for &j in &order {
         let ready = g.preds[j]
             .iter()
-            // hetlint: allow(no-panic-in-hot-path) -- rank order is topological, so every predecessor is already placed
-            .map(|&p| placements[p].expect("rank order is topological").finish)
-            .fold(0.0f64, f64::max);
-        // choose (type, unit) minimizing EFT; tie (within the band) ->
-        // larger type index (GPU over CPU), then lower unit index.
-        // Types ascend, so the reference comparator's `q > b_q` arm is
-        // always true for a later type: band-tied means replace.
-        let mut best: Option<(f64, usize, usize, f64)> = None; // (eft, q, unit, start)
+            .map(|&p| finish_tick[p])
+            .fold(Tick::ZERO, Tick::max);
+        // choose (type, unit) minimizing EFT; exact tick tie -> larger
+        // type index (GPU over CPU), then lower unit index.  Types
+        // ascend, so the reference comparator's `q > b_q` arm is always
+        // true for a later type: an equal EFT means replace.
+        let mut best: Option<(Tick, usize, usize, Tick)> = None; // (eft, q, unit, start)
         let mut tie_cluster = 1usize;
         for q in 0..plat.n_types() {
-            let dur = g.time_on(j, q);
+            let dur = Tick::quantize_cost(g.time_on(j, q));
             let (eft, unit, start) = index[q].best_eft(ready, dur);
             let better = match best {
                 None => true,
                 Some((b_eft, _, _, _)) => {
                     // attribution bookkeeping only; the comparator is
                     // the reference's, unchanged
-                    if (eft - b_eft).abs() <= TIE_BAND {
+                    if eft == b_eft {
                         tie_cluster += 1;
                     } else if eft < b_eft {
                         tie_cluster = 1;
                     }
-                    eft <= b_eft + TIE_BAND
+                    eft <= b_eft
                 }
             };
             if better {
@@ -86,12 +87,12 @@ pub fn heft_schedule_traced(g: &TaskGraph, plat: &Platform, sink: &mut dyn Sink)
             // .get() rather than indexing: this file's no-panic
             // indexing budget stays flat
             let gaps = index.get(q).map_or(0, GapIndex::n_gaps);
-            sink.emit(start, EventKind::GapProbe { task: j, ptype: q, gaps });
+            sink.emit(start.to_f64(), EventKind::GapProbe { task: j, ptype: q, gaps });
         }
         index[q].insert(unit, start, eft);
         if sink.enabled() {
             sink.emit(
-                start,
+                start.to_f64(),
                 EventKind::Decision(DecisionEvent {
                     tenant: 0,
                     task: j,
@@ -103,16 +104,17 @@ pub fn heft_schedule_traced(g: &TaskGraph, plat: &Platform, sink: &mut dyn Sink)
                     restricted: Vec::new(),
                     ptype: q,
                     unit,
-                    start,
-                    finish: eft,
+                    start: start.to_f64(),
+                    finish: eft.to_f64(),
                 }),
             );
         }
+        finish_tick[j] = eft;
         placements[j] = Some(Placement {
             ptype: q,
             unit,
-            start,
-            finish: eft,
+            start: start.to_f64(),
+            finish: eft.to_f64(),
         });
     }
 
@@ -149,22 +151,24 @@ mod tests {
     }
 
     #[test]
-    fn tie_band_is_engine_wide_not_1e9() {
-        // the seed's ad-hoc 1e-9 band tied a GPU EFT 1e-10 above the CPU
-        // EFT and sent the task to the GPU; under engine::TIE_BAND
-        // (±1e-12) the difference separates them and the earlier finish
-        // wins.  This is the one deliberate behavior change of the
-        // gap-index PR (reference updated together, per the ROADMAP
-        // golden-parity protocol).
+    fn ties_are_exact_at_tick_resolution() {
+        // under the interim float engine a ±1e-12 band decided what
+        // "tied" meant; under the tick clock the quantizer does.  A
+        // 1e-10 EFT difference is ≈ 0.86 ticks and rounds the two costs
+        // to *different* ticks: the earlier finish (the CPU) wins.  A
+        // 1e-13 difference quantizes onto the same tick: exact tie ->
+        // GPU, the Theorem-1 convention.  Same outcomes the band
+        // produced, now by construction (reference updated together,
+        // per the ROADMAP golden-parity protocol).
         let mut b = Builder::new("band");
         b.add_task("a", vec![1.0, 1.0 + 1e-10]);
         let g = b.build();
         let plat = Platform::hybrid(1, 1);
         let s = heft_schedule(&g, &plat);
-        assert_eq!(s.placements[0].ptype, 0, "1e-10 is beyond the band");
+        assert_eq!(s.placements[0].ptype, 0, "1e-10 is beyond tick resolution");
         let r = reference::heft_schedule(&g, &plat);
         assert_eq!(s.placements, r.placements);
-        // a 1e-13 difference is inside the band: still a tie -> GPU
+        // a 1e-13 difference is inside one tick: still a tie -> GPU
         let mut b = Builder::new("band2");
         b.add_task("a", vec![1.0, 1.0 + 1e-13]);
         let g = b.build();

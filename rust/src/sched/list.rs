@@ -7,7 +7,9 @@
 //! bottom-level rank of §4.1).  The engine is event-driven —
 //! O((n + |E|) log n) per instance — built on the shared
 //! [`engine::EventQueue`] completion heap, per-type ready max-heaps and
-//! LIFO idle-unit pools.
+//! LIFO idle-unit pools.  The virtual clock cursor is an
+//! [`engine::Tick`], so "completions at time t" is an exact integer
+//! equality batch, not a float comparison.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -17,7 +19,7 @@ use crate::obs::{DecisionEvent, EventKind, NoopSink, Sink};
 use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 
-use super::engine::EventQueue;
+use super::engine::{EventQueue, Tick};
 use super::OrdF64;
 
 /// Schedule with a fixed allocation and per-task priority (higher first).
@@ -47,7 +49,9 @@ pub fn list_schedule_traced(
     let q_types = plat.n_types();
     debug_assert!(alloc.iter().all(|&q| q < q_types));
 
-    // ready queues per type: (priority, Reverse(id)) max-heap
+    // ready queues per type: (priority, Reverse(id)) max-heap.  The
+    // priority is a *rank*, not an event time — it stays f64 (total
+    // order via OrdF64) while the clock below runs in ticks.
     let mut ready: Vec<BinaryHeap<(OrdF64, Reverse<TaskId>)>> =
         (0..q_types).map(|_| BinaryHeap::new()).collect();
     // idle unit pools per type (LIFO)
@@ -57,35 +61,36 @@ pub fn list_schedule_traced(
 
     let mut remaining: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
     let mut placements: Vec<Option<Placement>> = vec![None; n];
+    let mut finish_tick = vec![Tick::ZERO; n];
     for j in 0..n {
         if remaining[j] == 0 {
             ready[alloc[j]].push((OrdF64(priority[j]), Reverse(j)));
         }
     }
 
-    let mut t = 0.0f64;
+    let mut t = Tick::ZERO;
     let mut scheduled = 0usize;
     loop {
-        // start everything startable at time t
+        // start everything startable at tick t
         for q in 0..q_types {
             while !idle[q].is_empty() && !ready[q].is_empty() {
                 // hetlint: allow(no-panic-in-hot-path) -- loop guard checked both heaps non-empty
                 let (_, Reverse(j)) = ready[q].pop().unwrap();
                 // hetlint: allow(no-panic-in-hot-path) -- loop guard checked both heaps non-empty
                 let unit = idle[q].pop().unwrap();
-                let dur = g.time_on(j, q);
-                let finish = t + dur;
+                let finish = t + Tick::quantize_cost(g.time_on(j, q));
+                finish_tick[j] = finish;
                 placements[j] = Some(Placement {
                     ptype: q,
                     unit,
-                    start: t,
-                    finish,
+                    start: t.to_f64(),
+                    finish: finish.to_f64(),
                 });
                 if sink.enabled() {
                     let depth: usize = ready.iter().map(BinaryHeap::len).sum();
-                    sink.emit(t, EventKind::Queue { scope: "list-ready", depth });
+                    sink.emit(t.to_f64(), EventKind::Queue { scope: "list-ready", depth });
                     sink.emit(
-                        t,
+                        t.to_f64(),
                         EventKind::Decision(DecisionEvent {
                             tenant: 0,
                             task: j,
@@ -97,8 +102,8 @@ pub fn list_schedule_traced(
                             restricted: Vec::new(),
                             ptype: q,
                             unit,
-                            start: t,
-                            finish,
+                            start: t.to_f64(),
+                            finish: finish.to_f64(),
                         }),
                     );
                 }
@@ -122,7 +127,7 @@ pub fn list_schedule_traced(
             }
             events.pop();
             // hetlint: allow(no-panic-in-hot-path) -- a completion event exists only for a task already placed
-            let p = placements[j].unwrap();
+            let p = placements[j].as_ref().unwrap();
             idle[p.ptype].push(p.unit);
             for &s in &g.succs[j] {
                 remaining[s] -= 1;

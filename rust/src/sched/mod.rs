@@ -37,8 +37,27 @@
 //! over every unit's timeline; gap-heavy adversarial workloads degrade
 //! gracefully back to the reference cost, never worse.
 //!
-//! Tie-breaks are preserved exactly for exact floating-point ties (see
-//! `engine` docs); `rust/tests/golden_parity.rs` pins engine-vs-reference
+//! # The tick clock
+//!
+//! Event time in the engine (and therefore in every scheduler above) is
+//! the [`engine::Tick`] fixed-point counter: `Tick(u64)` at 2⁻³³ time
+//! units per tick ([`engine::TICK_SHIFT`] = 33).  Costs and ready times
+//! quantize once at decision/admission entry (`round`-to-nearest;
+//! nonzero costs clamp to ≥ 1 tick) and every comparator in the hot
+//! path is an exact integer compare — the former ±1e-12 float tie band
+//! and its `band_eq` clustering are gone entirely.  Two event times tie
+//! iff they quantize to the same tick: sub-resolution differences
+//! (≲ 5.8e-11) collapse onto one tick, anything larger separates.
+//! Headroom: `u64::MAX` ticks ≈ 2.1e9 time units before overflow, and
+//! round-tripping `Tick -> f64 -> Tick` is exact below 2⁵² ticks, so
+//! the f64 values crossing the public API boundary (placements, sinks,
+//! [`online::PolicyEngine`]) are lossless tick-canonical multiples of
+//! 2⁻³³ — f64 adds and maxes of such values are themselves exact below
+//! 2⁵³ ticks, which is what lets the f64 [`reference`] bodies match the
+//! integer engine bit-for-bit.
+//!
+//! Tie-breaks are preserved exactly for exact tick ties (see `engine`
+//! docs); `rust/tests/golden_parity.rs` pins engine-vs-reference
 //! schedule equality across random instances.
 
 pub mod engine;

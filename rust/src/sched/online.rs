@@ -16,8 +16,15 @@
 //! earliest idle time, best unit, and the full EFT scan — is
 //! O(Q log units) instead of the O(units) linear rescans of the retained
 //! reference implementation ([`super::reference::online_schedule`]).
-//! Decisions (and therefore schedules) are identical; the golden-parity
-//! suite pins this.
+//! The engine clock is the [`engine::Tick`] fixed-point counter: ready
+//! times quantize once at decision entry, durations once per candidate,
+//! and every comparison in the rules below is an exact integer compare.
+//! The public [`PolicyEngine`] API stays `f64` — callers hand in float
+//! times and get float placements back — and because emitted times are
+//! tick-canonical (exact multiples of 2⁻³³ well inside `u64` range) the
+//! quantize→dequantize round-trip at this boundary is lossless.
+//! Decisions (and therefore schedules) are identical to the reference;
+//! the golden-parity suite pins this.
 
 use crate::alloc;
 use crate::graph::{TaskGraph, TaskId};
@@ -26,7 +33,7 @@ use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 use crate::substrate::rng::Rng;
 
-use super::engine::{UnitPool, TIE_BAND};
+use super::engine::{Tick, UnitPool};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum OnlinePolicy {
@@ -98,13 +105,13 @@ pub struct DecisionTrace {
     pub rule: &'static str,
     /// Candidates examined by the selection scan.
     pub candidates: usize,
-    /// Candidates that tied the incumbent within ±[`TIE_BAND`] during
-    /// the scan (1 = the winner was never challenged).
+    /// Candidates whose finish tick exactly equalled the incumbent's
+    /// during the scan (1 = the winner was never challenged).
     pub tie_cluster: usize,
 }
 
 /// Shared decision engine for the online policies: one [`UnitPool`] of
-/// per-type unit trees, keyed by the time each unit becomes idle, plus
+/// per-type unit trees, keyed by the tick each unit becomes idle, plus
 /// the irrevocable `(type, unit, start, finish)` decision rule of every
 /// policy.  `online_schedule` drives it for a single task stream; the
 /// multi-tenant service mode ([`super::service`]) threads one engine
@@ -129,18 +136,21 @@ impl PolicyEngine {
 
     /// Rewind one unit's free time (tenant-cancellation path: the
     /// service releases a cancelled tenant's not-yet-started
-    /// reservations through here, via [`UnitPool::release`]).
+    /// reservations through here, via [`UnitPool::release`]).  `free` is
+    /// a tick-canonical time the caller previously read out of a
+    /// placement or the pool, so quantizing it back is exact.
     pub fn release_unit(&mut self, q: usize, unit: usize, free: f64) {
-        self.avail.release(q, unit, free);
+        self.avail.release(q, unit, Tick::quantize(free));
     }
 
-    /// Earliest idle time among the allowed units of type `q` (+∞ when
-    /// the type is banned).  [`UnitSet::All`] is the exact tree query.
-    fn earliest_idle_in(&self, q: usize, s: UnitSet) -> f64 {
+    /// Earliest idle tick among the allowed units of type `q`
+    /// ([`Tick::MAX`] when the type is banned).  [`UnitSet::All`] is the
+    /// exact tree query.
+    fn earliest_idle_in(&self, q: usize, s: UnitSet) -> Tick {
         match s {
             UnitSet::All => self.avail.types[q].min(),
             UnitSet::Only(units) => self.avail.types[q].min_over(units),
-            UnitSet::Banned => f64::INFINITY,
+            UnitSet::Banned => Tick::MAX,
         }
     }
 
@@ -166,48 +176,54 @@ impl PolicyEngine {
         }
     }
 
-    /// EFT candidate on type `q` for a task ready at `ready` with
-    /// duration `dur`: (finish, unit).  Mirrors the seed scan's ±1e-12
-    /// band ([`engine::TIE_BAND`](super::engine::TIE_BAND)): the optimal
-    /// finish is `max(ready, τ_q) + dur`, every unit idle within the
-    /// band of that clamp ties, and the seed scan kept the *first* such
-    /// unit — including a slightly-later-idle unit with a lower index
-    /// beating the exact minimizer.  The returned finish uses the chosen
-    /// unit's true idle time, exactly as the seed computed it.
+    /// EFT candidate on type `q` for a task ready at tick `ready` with
+    /// duration `dur` ticks: (finish, unit).  The optimal finish is
+    /// `max(ready, τ_q) + dur`; every unit idle at or before that clamp
+    /// ties *exactly* (equal ticks), and the scan keeps the *first* such
+    /// unit — a lower-indexed unit idle at the same tick beats a
+    /// higher-indexed one.  The returned finish uses the chosen unit's
+    /// true idle tick.
     ///
     /// This is the tail-candidate half of the gap-indexed selection
     /// ([`engine::GapIndex::best_eft`](super::engine::GapIndex)): online
     /// decisions are irrevocable (no backfilling), so units never own
     /// idle gaps and the tail tree alone answers the query in
-    /// O(log units) — the same clamp-and-band rule HEFT's gap index
-    /// applies before folding in its gap candidates.
-    fn eft_candidate(&self, q: usize, ready: f64, dur: f64) -> (f64, usize) {
+    /// O(log units) — the same clamp rule HEFT's gap index applies
+    /// before folding in its gap candidates.
+    fn eft_candidate(&self, q: usize, ready: Tick, dur: Tick) -> (Tick, usize) {
         let tree = &self.avail.types[q];
         let tau = tree.min();
-        let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
+        let clamp = if tau <= ready { ready } else { tau };
         let u = tree
-            .first_at_most(clamp + TIE_BAND)
-            // hetlint: allow(no-panic-in-hot-path) -- clamp >= tree.min() by construction, so some unit is always within the band
-            .expect("idle horizon lies within its own band");
+            .first_at_most(clamp)
+            // hetlint: allow(no-panic-in-hot-path) -- clamp >= tree.min() by construction, so some unit is always at or below it
+            .expect("idle horizon admits its own minimizer");
         let start = ready.max(tree.get(u));
         (start + dur, u)
     }
 
     /// [`Self::eft_candidate`] restricted to the allowed units of type
-    /// `q`: same clamp-and-band rule over the restricted idle horizon,
-    /// first allowed unit within the band.  `None` for a banned type.
-    fn eft_candidate_in(&self, q: usize, ready: f64, dur: f64, s: UnitSet) -> Option<(f64, usize)> {
+    /// `q`: same clamp rule over the restricted idle horizon, first
+    /// allowed unit idle at or before the clamp.  `None` for a banned
+    /// type.
+    fn eft_candidate_in(
+        &self,
+        q: usize,
+        ready: Tick,
+        dur: Tick,
+        s: UnitSet,
+    ) -> Option<(Tick, usize)> {
         match s {
             UnitSet::All => Some(self.eft_candidate(q, ready, dur)),
             UnitSet::Only(units) => {
                 assert!(!units.is_empty(), "at-cap tenant must hold a unit");
                 let tree = &self.avail.types[q];
                 let tau = tree.min_over(units);
-                let clamp = if tau <= ready + TIE_BAND { ready } else { tau };
+                let clamp = if tau <= ready { ready } else { tau };
                 let u = tree
-                    .first_at_most_over(units, clamp + TIE_BAND)
-                    // hetlint: allow(no-panic-in-hot-path) -- clamp >= min over the (asserted non-empty) unit set, so a unit is always within the band
-                    .expect("restricted idle horizon lies within its own band");
+                    .first_at_most_over(units, clamp)
+                    // hetlint: allow(no-panic-in-hot-path) -- clamp >= min over the (asserted non-empty) unit set, so a unit is always at or below it
+                    .expect("restricted idle horizon admits its own minimizer");
                 let start = ready.max(tree.get(u));
                 Some((start + dur, u))
             }
@@ -261,7 +277,7 @@ impl PolicyEngine {
     /// placement plus a [`DecisionTrace`] (always computed — cheap tags
     /// and counts), and emits a full [`EventKind::Decision`] span when
     /// `sink` records.  The sink never influences the decision: event
-    /// payloads (tie-band alternatives, restricted-set snapshots) are
+    /// payloads (exact-tie alternatives, restricted-set snapshots) are
     /// built only behind [`Sink::enabled`], and the selection
     /// arithmetic is identical expression for expression to the
     /// untraced path — `obs_parity` pins recording vs. no-op bitwise.
@@ -279,6 +295,12 @@ impl PolicyEngine {
         tenant: usize,
         sink: &mut dyn Sink,
     ) -> (Placement, DecisionTrace) {
+        // the clock boundary: quantize once, here; everything below is
+        // exact integer arithmetic.  Rule *sides* (R1/R2/R3, Greedy,
+        // ER-LS Step 2) still read the raw float costs — they are
+        // allocation rules over processing-time ratios, not event-time
+        // comparisons, and the reference applies the same split.
+        let ready = Tick::quantize(ready);
         // a two-sided rule's side, quota-adjusted: banned sides fall
         // through to the other side (validation guarantees one is open)
         let flip = |q: usize| -> usize {
@@ -303,7 +325,10 @@ impl PolicyEngine {
                     candidates = 2; // both sides weighed
                     let tau_gpu = self.earliest_idle_in(1, set_for(allowed, 1));
                     let r_gpu = tau_gpu.max(ready);
-                    if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                    // Step 1 compares a CPU duration against an absolute
+                    // GPU finish — event-time arithmetic, so it runs on
+                    // quantized ticks like every other time comparison
+                    if Tick::quantize_cost(g.p_cpu(j)) >= r_gpu + Tick::quantize_cost(g.p_gpu(j)) {
                         (1, "erls-step1") // Step 1: GPU side
                     } else {
                         let side = alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k());
@@ -365,13 +390,13 @@ impl PolicyEngine {
                 )
             }
             OnlinePolicy::Eft => {
-                // minimize finish across every allowed unit; tie -> the
-                // later (higher) type wins within the band, matching the
+                // minimize finish across every allowed unit; exact tick
+                // tie -> the later (higher) type wins, matching the
                 // reference scan's `q > bq` rule
-                let mut best: Option<(f64, usize, usize)> = None;
+                let mut best: Option<(Tick, usize, usize)> = None;
                 let mut cands = 0usize;
                 for q in 0..plat.n_types() {
-                    let dur = g.time_on(j, q);
+                    let dur = Tick::quantize_cost(g.time_on(j, q));
                     let Some((finish, u)) = self.eft_candidate_in(q, ready, dur, set_for(allowed, q))
                     else {
                         continue;
@@ -380,13 +405,13 @@ impl PolicyEngine {
                     let better = match best {
                         None => true,
                         Some((bf, bq, bu)) => {
-                            // the comparator is unchanged (`finish <=
-                            // bf + TIE_BAND`); the tie/strict split
-                            // below only books attribution
-                            if (finish - bf).abs() <= TIE_BAND {
+                            // the comparator is the exact `finish <= bf`;
+                            // the tie/strict split below only books
+                            // attribution
+                            if finish == bf {
                                 tie_cluster += 1;
                                 if record {
-                                    alts.push(Alt { ptype: bq, unit: bu, finish: bf });
+                                    alts.push(Alt { ptype: bq, unit: bu, finish: bf.to_f64() });
                                 }
                             } else if finish < bf {
                                 tie_cluster = 1;
@@ -394,7 +419,7 @@ impl PolicyEngine {
                                     alts.clear();
                                 }
                             }
-                            finish <= bf + TIE_BAND
+                            finish <= bf
                         }
                     };
                     if better {
@@ -409,13 +434,13 @@ impl PolicyEngine {
         };
 
         let start = ready.max(self.avail.free_at(q, unit));
-        let finish = start + g.time_on(j, q);
+        let finish = start + Tick::quantize_cost(g.time_on(j, q));
         self.avail.reserve(q, unit, finish);
         let placement = Placement {
             ptype: q,
             unit,
-            start,
-            finish,
+            start: start.to_f64(),
+            finish: finish.to_f64(),
         };
         if record {
             let restricted: Vec<Restrict> = allowed
@@ -427,7 +452,7 @@ impl PolicyEngine {
                 })
                 .collect();
             sink.emit(
-                ready,
+                ready.to_f64(),
                 EventKind::Decision(DecisionEvent {
                     tenant,
                     task: j,
@@ -439,8 +464,8 @@ impl PolicyEngine {
                     restricted,
                     ptype: q,
                     unit,
-                    start,
-                    finish,
+                    start: placement.start,
+                    finish: placement.finish,
                 }),
             );
         }
@@ -503,7 +528,9 @@ pub fn online_schedule_traced(
     let mut seen = vec![false; n];
 
     for &j in order {
-        // arrival must respect precedences
+        // arrival must respect precedences; predecessor finishes are
+        // tick-canonical, so the fold (and the re-quantize inside the
+        // engine) is exact
         let ready = g.preds[j]
             .iter()
             .map(|&p| {

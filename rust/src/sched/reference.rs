@@ -9,10 +9,24 @@
 //! Do NOT "optimize" these: their value is being the old behavior.  The
 //! only changes from the seed code are `f64::total_cmp` in place of the
 //! panic-prone `partial_cmp(..).unwrap()` chains (identical ordering on
-//! the finite, NaN-free values the graph builder now enforces) and, for
-//! [`heft_schedule`], the engine-wide ±1e-12 tie band in place of the
-//! seed's ad-hoc 1e-9 (a deliberate, CHANGES.md-flagged update made
-//! together with the gap-indexed engine HEFT it is the oracle for).
+//! the finite, NaN-free values the graph builder now enforces) and the
+//! *canonical-time protocol* that replaced the tie bands when the engine
+//! moved to the [`Tick`](super::engine::Tick) fixed-point clock (a
+//! deliberate, CHANGES.md-flagged update made together with that engine
+//! change, per the ROADMAP golden-parity protocol):
+//!
+//! * every event-time quantity (task durations, ready times) passes
+//!   through [`canon`]/[`canon_cost`] — quantize to the 2⁻³³ tick grid,
+//!   dequantize — once at decision entry;
+//! * comparators are *exact* (`<` / `==`), with no ±ε band anywhere.
+//!
+//! Canonical values are integer multiples of 2⁻³³ well below 2⁵³ ticks,
+//! so the f64 adds and maxes in these naive bodies are exact and the
+//! selection loops order candidates identically to the engine's integer
+//! compares — same ties, same winners, bit-equal placements.  Rule-side
+//! selection (R1/R2/R3, Greedy, ER-LS Step 2) still reads the raw float
+//! costs: those are allocation rules over processing-time ratios, not
+//! event-time comparisons, and the engine applies the same split.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -23,7 +37,7 @@ use crate::platform::Platform;
 use crate::sim::{Placement, Schedule};
 use crate::substrate::rng::Rng;
 
-use super::engine::{Timeline, TIE_BAND};
+use super::engine::{canon, canon_cost, Tick, Timeline};
 use super::online::OnlinePolicy;
 use super::OrdF64;
 
@@ -31,13 +45,13 @@ use super::OrdF64;
 /// unit's [`Timeline`] — the oracle the gap-indexed engine HEFT
 /// ([`super::heft::heft_schedule`]) is pinned against.
 ///
-/// One deliberate change from the seed body (made when the gap index
-/// landed, per the ROADMAP golden-parity protocol, and flagged in
-/// CHANGES.md): the EFT tie comparison uses the engine-wide
-/// ±[`TIE_BAND`] (1e-12) instead of the seed's ad-hoc 1e-9, so HEFT ties
-/// the same way every other selection path does.  Candidates whose EFTs
-/// differ by more than 1e-12 (for example by 1e-10) are now *distinct*,
-/// where the seed band called them tied and sent the task to the GPU.
+/// The shared [`Timeline`] container is tick-typed, so this body runs
+/// its scan directly in tick space (quantize once per decision, exactly
+/// where the engine does); the *selection structure* — a full
+/// (type × unit) timeline scan per task — is still the seed's.  The EFT
+/// comparator is the exact `eft < best || (eft == best && q > b_q)`:
+/// ties are exact tick equality, GPU-most type wins, first (lowest)
+/// unit within a type wins.
 pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
     let n = g.n_tasks();
     let rank = crate::graph::paths::heft_rank(g, &plat.counts);
@@ -50,26 +64,25 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
         .iter()
         .map(|&c| vec![Timeline::default(); c])
         .collect();
+    let mut finish_tick = vec![Tick::ZERO; n];
     let mut placements: Vec<Option<Placement>> = vec![None; n];
 
     for &j in &order {
         let ready = g.preds[j]
             .iter()
-            .map(|&p| placements[p].expect("rank order is topological").finish)
-            .fold(0.0f64, f64::max);
+            .map(|&p| finish_tick[p])
+            .fold(Tick::ZERO, Tick::max);
         // choose (type, unit) minimizing EFT; tie -> larger type index
         // (GPU over CPU), then lower unit index
-        let mut best: Option<(f64, usize, usize, f64)> = None; // (eft, q, unit, start)
+        let mut best: Option<(Tick, usize, usize, Tick)> = None; // (eft, q, unit, start)
         for q in 0..plat.n_types() {
-            let dur = g.time_on(j, q);
+            let dur = Tick::quantize_cost(g.time_on(j, q));
             for (u, tl) in timelines[q].iter().enumerate() {
                 let start = tl.earliest_start(ready, dur);
                 let eft = start + dur;
                 let better = match best {
                     None => true,
-                    Some((b_eft, b_q, _, _)) => {
-                        eft < b_eft - TIE_BAND || (eft <= b_eft + TIE_BAND && q > b_q)
-                    }
+                    Some((b_eft, b_q, _, _)) => eft < b_eft || (eft == b_eft && q > b_q),
                 };
                 if better {
                     best = Some((eft, q, u, start));
@@ -78,18 +91,20 @@ pub fn heft_schedule(g: &TaskGraph, plat: &Platform) -> Schedule {
         }
         let (eft, q, unit, start) = best.unwrap();
         timelines[q][unit].insert(start, eft);
+        finish_tick[j] = eft;
         placements[j] = Some(Placement {
             ptype: q,
             unit,
-            start,
-            finish: eft,
+            start: start.to_f64(),
+            finish: eft.to_f64(),
         });
     }
 
     Schedule::from_placements(placements.into_iter().map(Option::unwrap).collect())
 }
 
-/// Seed EST: O(n · (|ready| + units)) selection per instance.
+/// Seed EST: O(n · (|ready| + units)) selection per instance, on
+/// canonical times with exact comparators.
 pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule {
     let n = g.n_tasks();
     assert_eq!(alloc.len(), n);
@@ -103,7 +118,8 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
     let mut placements: Vec<Option<Placement>> = vec![None; n];
 
     for _ in 0..n {
-        // pick the ready task with the earliest possible start
+        // pick the ready task with the earliest possible start; all
+        // times are canonical, so the comparison is exact
         let mut best: Option<(f64, TaskId, usize)> = None; // (est, task, ready-slot)
         for (slot, &j) in ready.iter().enumerate() {
             let q = alloc[j];
@@ -111,7 +127,7 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
             let est = ready_time[j].max(avail);
             let better = match best {
                 None => true,
-                Some((b_est, b_j, _)) => est < b_est - 1e-12 || (est <= b_est + 1e-12 && j < b_j),
+                Some((b_est, b_j, _)) => est < b_est || (est == b_est && j < b_j),
             };
             if better {
                 best = Some((est, j, slot));
@@ -127,7 +143,7 @@ pub fn est_schedule(g: &TaskGraph, plat: &Platform, alloc: &[usize]) -> Schedule
             .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let start = est;
-        let finish = start + g.time_on(j, q);
+        let finish = start + canon_cost(g.time_on(j, q));
         unit_free[q][unit] = finish;
         placements[j] = Some(Placement {
             ptype: q,
@@ -185,8 +201,7 @@ pub fn list_schedule(
             while !idle[q].is_empty() && !ready[q].is_empty() {
                 let (_, Reverse(j)) = ready[q].pop().unwrap();
                 let unit = idle[q].pop().unwrap();
-                let dur = g.time_on(j, q);
-                let finish = t + dur;
+                let finish = t + canon_cost(g.time_on(j, q));
                 placements[j] = Some(Placement {
                     ptype: q,
                     unit,
@@ -200,7 +215,8 @@ pub fn list_schedule(
         if scheduled == n && events.is_empty() {
             break;
         }
-        // advance to the next completion(s)
+        // advance to the next completion(s); canonical times, so the
+        // same-batch test below is an exact equality
         let Some(Reverse((OrdF64(t_next), _))) = events.peek().copied() else {
             // no events but unscheduled tasks left => deadlock (cycle)
             assert_eq!(scheduled, n, "list scheduler stalled");
@@ -281,15 +297,19 @@ pub fn online_schedule(
     let mut seen = vec![false; n];
 
     for &j in order {
-        // arrival must respect precedences
-        let ready = g.preds[j]
-            .iter()
-            .map(|&p| {
-                placements[p]
-                    .unwrap_or_else(|| panic!("order not topological: {p} after {j}"))
-                    .finish
-            })
-            .fold(0.0f64, f64::max);
+        // arrival must respect precedences; the fold is over canonical
+        // finishes, and canon() is the decision-entry quantization —
+        // the same boundary the engine's decide() applies
+        let ready = canon(
+            g.preds[j]
+                .iter()
+                .map(|&p| {
+                    placements[p]
+                        .unwrap_or_else(|| panic!("order not topological: {p} after {j}"))
+                        .finish
+                })
+                .fold(0.0f64, f64::max),
+        );
         debug_assert!(!seen[j]);
         seen[j] = true;
 
@@ -298,7 +318,9 @@ pub fn online_schedule(
             OnlinePolicy::ErLs => {
                 let tau_gpu = st.earliest_idle(1);
                 let r_gpu = tau_gpu.max(ready);
-                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                // Step 1 is an event-time comparison: canonical costs,
+                // exact arithmetic
+                let q = if canon_cost(g.p_cpu(j)) >= r_gpu + canon_cost(g.p_gpu(j)) {
                     1 // Step 1: GPU side
                 } else {
                     alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
@@ -328,17 +350,16 @@ pub fn online_schedule(
                 (q, st.best_unit(q))
             }
             OnlinePolicy::Eft => {
-                // minimize finish across every unit; tie -> GPU-most type
+                // minimize finish across every unit; exact tie -> the
+                // GPU-most type
                 let mut best: Option<(f64, usize, usize)> = None;
                 for q in 0..plat.n_types() {
-                    let dur = g.time_on(j, q);
+                    let dur = canon_cost(g.time_on(j, q));
                     for (u, &a) in st.avail[q].iter().enumerate() {
                         let finish = ready.max(a) + dur;
                         let better = match best {
                             None => true,
-                            Some((bf, bq, _)) => {
-                                finish < bf - 1e-12 || (finish <= bf + 1e-12 && q > bq)
-                            }
+                            Some((bf, bq, _)) => finish < bf || (finish == bf && q > bq),
                         };
                         if better {
                             best = Some((finish, q, u));
@@ -351,7 +372,7 @@ pub fn online_schedule(
         };
 
         let start = ready.max(st.avail[q][unit]);
-        let finish = start + g.time_on(j, q);
+        let finish = start + canon_cost(g.time_on(j, q));
         st.avail[q][unit] = finish;
         placements[j] = Some(Placement {
             ptype: q,
@@ -381,6 +402,11 @@ pub fn online_by_id(g: &TaskGraph, plat: &Platform, policy: &OnlinePolicy) -> Sc
 /// golden-parity protocol, any deliberate change to the FIFO service
 /// semantics must update this body in the same PR and say so in
 /// CHANGES.md.
+///
+/// The merge heap keys stay *raw* f64 (arrival times as submitted; the
+/// service merges with the same raw keys, so the orders agree); ready
+/// times pass through [`canon`] after the pop — the decision-entry
+/// quantization boundary, matching the engine's decide().
 ///
 /// Returns one [`Schedule`] per submission (absolute virtual times on
 /// the shared pool).  Independently-maintained body: the decision match
@@ -418,11 +444,13 @@ pub fn run_service(plat: &Platform, subs: &[super::service::Submission]) -> Vec<
     while let Some(Reverse((OrdF64(at), i, pos, OrdF64(ready)))) = heap.pop() {
         let g = &subs[i].graph;
         let j = orders[i][pos];
+        // decision-entry quantization (the engine's decide() boundary)
+        let ready = canon(ready);
         let (q, unit) = match &subs[i].policy {
             OnlinePolicy::ErLs => {
                 let tau_gpu = st.earliest_idle(1);
                 let r_gpu = tau_gpu.max(ready);
-                let q = if g.p_cpu(j) >= r_gpu + g.p_gpu(j) {
+                let q = if canon_cost(g.p_cpu(j)) >= r_gpu + canon_cost(g.p_gpu(j)) {
                     1
                 } else {
                     alloc::r2_side(g.p_cpu(j), g.p_gpu(j), plat.m(), plat.k())
@@ -454,14 +482,12 @@ pub fn run_service(plat: &Platform, subs: &[super::service::Submission]) -> Vec<
             OnlinePolicy::Eft => {
                 let mut best: Option<(f64, usize, usize)> = None;
                 for q in 0..plat.n_types() {
-                    let dur = g.time_on(j, q);
+                    let dur = canon_cost(g.time_on(j, q));
                     for (u, &a) in st.avail[q].iter().enumerate() {
                         let finish = ready.max(a) + dur;
                         let better = match best {
                             None => true,
-                            Some((bf, bq, _)) => {
-                                finish < bf - 1e-12 || (finish <= bf + 1e-12 && q > bq)
-                            }
+                            Some((bf, bq, _)) => finish < bf || (finish == bf && q > bq),
                         };
                         if better {
                             best = Some((finish, q, u));
@@ -473,7 +499,7 @@ pub fn run_service(plat: &Platform, subs: &[super::service::Submission]) -> Vec<
             }
         };
         let start = ready.max(st.avail[q][unit]);
-        let finish = start + g.time_on(j, q);
+        let finish = start + canon_cost(g.time_on(j, q));
         st.avail[q][unit] = finish;
         placements[i][j] = Some(Placement {
             ptype: q,

@@ -75,9 +75,14 @@ use crate::sim::{Placement, Schedule, TenantRun};
 use crate::substrate::rng::Rng;
 use crate::substrate::stats::{percentile, Summary};
 
-use super::engine::TIE_BAND;
 use super::online::{online_schedule, requires_two_types, OnlinePolicy, PolicyEngine, UnitSet};
 use super::OrdF64;
+
+/// Tie band for weighted-stretch leapfrog *keys* — raw float ratios
+/// (`weight × elapsed / ideal`), not event times, so they live outside
+/// the tick clock and keep a small band: key ties within ±1e-12 keep
+/// the FIFO (time, tenant, position) order.
+const WS_KEY_BAND: f64 = 1e-12;
 
 pub mod policy;
 
@@ -590,7 +595,7 @@ impl Service {
         // the pool's global idle horizon: an idle unit by t0 means the
         // pool is not saturated, and FIFO order stands
         let tau = (0..self.plat.n_types())
-            .map(|q| self.engine.pool().earliest_idle(q))
+            .map(|q| self.engine.pool().earliest_idle(q).to_f64())
             .fold(f64::INFINITY, f64::min);
         if tau <= t0 {
             return Some(first);
@@ -619,7 +624,7 @@ impl Service {
             let key = self.weights[i].expect("only weighted-stretch heads compete")
                 * (t_eval - self.subs[i].arrival).max(0.0)
                 / self.ws_ideals[i];
-            if idx == 0 || key > best_key + TIE_BAND {
+            if idx == 0 || key > best_key + WS_KEY_BAND {
                 best = idx;
                 best_key = key;
             }

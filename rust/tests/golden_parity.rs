@@ -130,9 +130,9 @@ fn heft_gap_index_matches_reference_scan() {
     // the gap-index property suite: random DAG/platform draws, engine
     // HEFT (tail tree + gap lists) vs the reference per-unit timeline
     // scan, placement-for-placement.  Insertion-based backfilling is
-    // exactly where an index could drift (gap splits, exact fits, band
-    // ties between a gap and a tail), so this sweep is the acceptance
-    // bar for the gap index.
+    // exactly where an index could drift (gap splits, exact fits, exact
+    // tick ties between a gap and a tail), so this sweep is the
+    // acceptance bar for the gap index.
     let mut rng = Rng::new(0x6A9_0008);
     for case in 0..CASES {
         let g = random_instance(&mut rng);
@@ -152,8 +152,8 @@ fn heft_gap_index_matches_reference_scan() {
 fn heft_gap_index_parity_on_gap_heavy_and_tie_instances() {
     // adversarial shapes for the gap index specifically: wide fork-join
     // layers (every join opens gaps on the losing units), repeated
-    // integer and 0.1-style constants (band ties between gap and tail
-    // candidates), and tiny unit counts (gap churn on every unit)
+    // integer and 0.1-style constants (exact tick ties between gap and
+    // tail candidates), and tiny unit counts (gap churn on every unit)
     use hetsched::workloads::forkjoin;
     let mut rng = Rng::new(0x6A9_0009);
     for case in 0..10u64 {
@@ -185,20 +185,29 @@ fn heft_gap_index_parity_on_gap_heavy_and_tie_instances() {
 }
 
 #[test]
-fn heft_band_change_is_pinned() {
-    // the deliberate behavior change of the gap-index PR: a 1e-10 EFT
-    // difference tied under the seed's 1e-9 band (tie -> GPU) but
-    // separates under the engine-wide 1e-12 band (earlier finish, the
-    // CPU, wins).  Engine and reference agree on the NEW semantics.
+fn heft_tick_tie_semantics_are_pinned() {
+    // the deliberate behavior change of the tick-clock PR: "tie" now
+    // means equal quantized ticks.  A 1e-10 EFT difference is ≈ 0.86
+    // ticks and rounds the two costs to different ticks — the earlier
+    // finish (the CPU) wins, exactly the outcome the interim ±1e-12
+    // band produced.  A 1e-13 difference lands on the same tick: exact
+    // tie -> GPU (Theorem-1 convention).  Engine and reference agree on
+    // the NEW semantics in the same diff.
     use hetsched::graph::Builder;
+    let plat = Platform::hybrid(1, 1);
     let mut b = Builder::new("band");
     b.add_task("a", vec![1.0, 1.0 + 1e-10]);
     let g = b.build();
-    let plat = Platform::hybrid(1, 1);
     let e = heft::heft_schedule(&g, &plat);
     let r = reference::heft_schedule(&g, &plat);
     assert_eq!(e.placements, r.placements);
-    assert_eq!(e.placements[0].ptype, 0, "beyond the band: CPU finishes first");
+    assert_eq!(e.placements[0].ptype, 0, "beyond tick resolution: CPU finishes first");
+    let mut b = Builder::new("band2");
+    b.add_task("a", vec![1.0, 1.0 + 1e-13]);
+    let g = b.build();
+    let e = heft::heft_schedule(&g, &plat);
+    assert_eq!(e.placements, reference::heft_schedule(&g, &plat).placements);
+    assert_eq!(e.placements[0].ptype, 1, "same tick: still a tie, GPU wins");
 }
 
 #[test]
@@ -258,12 +267,13 @@ fn parity_on_adversarial_tie_heavy_instances() {
 
 #[test]
 fn parity_on_repeated_constant_costs() {
-    // The ROADMAP tie-band gap: the engine used exact float comparison
-    // where the reference scans use a ±1e-12 band, so instances with
-    // repeated cost constants (chameleon-style integer costs, or
-    // non-representable constants like 0.1 whose path sums differ by
-    // ulps) could diverge.  Both comparators are banded now; these tie
-    // farms pin EST, OLS and every deterministic online policy on
+    // Instances with repeated cost constants (chameleon-style integer
+    // costs, or non-representable constants like 0.1 whose path sums
+    // differ by ulps) are where tie semantics bite hardest: under the
+    // tick clock both sides quantize to the same 2⁻³³ grid, so the ulp
+    // clusters the old ±1e-12 band absorbed collapse to exact tick
+    // equality on the engine AND the canonical-time reference.  These
+    // tie farms pin EST, OLS and every deterministic online policy on
     // exactly that regime.
     let int_costs: [(f64, f64); 4] = [(1.0, 2.0), (2.0, 1.0), (3.0, 2.0), (4.0, 1.0)];
     let frac_costs: [(f64, f64); 4] = [(0.1, 0.3), (0.3, 0.1), (0.2, 0.3), (0.6, 0.2)];
@@ -315,7 +325,7 @@ fn parity_on_repeated_constant_costs() {
 fn parity_on_chameleon_instances() {
     // real benchmark DAGs (block-size-derived repeated costs) through
     // EST and the online policies — the from_json/chameleon regime the
-    // ROADMAP flagged for the tie-band fix
+    // ROADMAP originally flagged for tie-semantics drift
     use hetsched::workloads::{chameleon, costs::CostModel};
     for (nb, bs) in [(5usize, 320usize), (8, 128)] {
         let cm = CostModel::hybrid(bs);
@@ -374,6 +384,55 @@ fn traced_entry_points_preserve_seed_parity() {
                 "{} traced case {case}",
                 policy.name()
             );
+        }
+    }
+}
+
+#[test]
+fn tick_quantization_properties_on_seed_costs() {
+    // the quantizer underpinning every parity assertion above:
+    // round-trip error bounded by half a tick, monotone, and
+    // order-preserving beyond tick resolution — checked on the same
+    // cost distributions the golden-parity sweeps draw from.
+    use hetsched::sched::engine::{Tick, TICK_SHIFT};
+    let half_tick = 0.5 / (1u64 << TICK_SHIFT) as f64;
+
+    let mut rng = Rng::new(0x71C_000B);
+    let mut costs: Vec<f64> = Vec::new();
+    for _ in 0..8 {
+        let g = random_instance(&mut rng);
+        for j in 0..g.n_tasks() {
+            costs.extend(g.proc_times[j].iter().copied());
+        }
+    }
+    // plus the adversarial constants the tie farms use
+    costs.extend([0.1, 0.2, 0.3, 0.6, 1.0, 2.0, 3.0, 4.0, 1.0 + 1e-10, 1.0 + 1e-13]);
+
+    for &t in &costs {
+        let q = Tick::quantize(t);
+        // round-trip bounded by half a tick (round-to-nearest)
+        assert!(
+            (q.to_f64() - t).abs() <= half_tick,
+            "round-trip drift on {t}: {}",
+            q.to_f64()
+        );
+        // dequantize->requantize is the identity (the f64 API boundary
+        // is lossless)
+        assert_eq!(Tick::quantize(q.to_f64()), q, "boundary round-trip on {t}");
+        // nonzero costs never quantize to zero duration
+        if t > 0.0 {
+            assert!(Tick::quantize_cost(t) >= Tick(1), "cost {t} collapsed to zero");
+        }
+    }
+
+    // monotone and order-preserving beyond one tick of separation
+    let mut sorted = costs.clone();
+    sorted.sort_by(f64::total_cmp);
+    for w in sorted.windows(2) {
+        let (a, b) = (Tick::quantize(w[0]), Tick::quantize(w[1]));
+        assert!(a <= b, "quantize not monotone on {} <= {}", w[0], w[1]);
+        if w[1] - w[0] > 2.0 * half_tick {
+            assert!(a < b, "separated costs {} < {} merged onto one tick", w[0], w[1]);
         }
     }
 }

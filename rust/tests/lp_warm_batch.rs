@@ -11,8 +11,11 @@
 //!   cache entries stay interchangeable;
 //! * the blocked (fused) `RustChunk` kernel agrees with the retained
 //!   `ScalarChunk` oracle — chunk-for-chunk to rounding and
-//!   solve-for-solve within certificate tolerance — over random LPs and
-//!   campaign-shaped HLPs.
+//!   solve-for-solve within certificate tolerance — over random LPs,
+//!   campaign-shaped HLPs, ragged/degenerate shapes (row and variable
+//!   counts not multiples of either block width, empty rows/columns,
+//!   single-column LPs) and extreme coefficient magnitudes (1e308 and
+//!   subnormal entries).
 
 use hetsched::algos::{solve_alloc_grid, solve_hlp_capped};
 use hetsched::graph::{gen, TaskGraph};
@@ -20,7 +23,8 @@ use hetsched::lp::batch::{solve_batch, BatchJob};
 use hetsched::lp::chain::{contract, plan_chains};
 use hetsched::lp::model::{build_hlp, build_qhlp, hlp_warm_start, tighten_hlp_box};
 use hetsched::lp::pdhg::{
-    solve_rust, solve_rust_scalar, ChunkBackend, DriveOpts, RustChunk, ScalarChunk,
+    solve_rust, solve_rust_scalar, BlockedCsr, ChunkBackend, Csr, DriveOpts, RustChunk,
+    ScalarChunk, BLOCK, BLOCK_WIDE,
 };
 use hetsched::lp::simplex::solve_simplex;
 use hetsched::lp::SparseLp;
@@ -253,6 +257,102 @@ fn blocked_kernel_matches_scalar_oracle_on_random_lps() {
                 "case {case} chunk {chunk}: diag scores diverged"
             );
         }
+    }
+}
+
+#[test]
+fn simd_kernel_matches_oracle_on_ragged_and_degenerate_shapes() {
+    // shapes chosen to stress the lane kernels' edges: row/variable
+    // counts that are multiples of neither block width (so both the
+    // 4-lane body and the ragged tail run), guaranteed-empty last row
+    // and last column, and single-column/single-row LPs
+    let mut rng = Rng::new(0x3A27);
+    for (n, m) in [
+        (1usize, 1usize),
+        (1, 5),
+        (3, 1),
+        (7, 5),
+        (9, 13),
+        (5, 8),
+        (8, 5),
+        (17, 11),
+    ] {
+        let mut lp = SparseLp {
+            n,
+            m,
+            b: (0..m).map(|_| rng.uniform(0.5, 2.0)).collect(),
+            c: (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+            lo: vec![0.0; n],
+            hi: (0..n).map(|_| rng.uniform(0.5, 2.0)).collect(),
+            ..Default::default()
+        };
+        for r in 0..m {
+            for c in 0..n {
+                // the last row and last column stay structurally empty
+                if r + 1 != m && c + 1 != n && rng.chance(0.6) {
+                    lp.push(r, c, rng.uniform(-1.5, 1.5));
+                }
+            }
+        }
+        let mut blocked = RustChunk::new(&lp, 30);
+        let mut scalar = ScalarChunk::new(&lp, 30);
+        let (mut zb, mut yb) = (vec![0.0; lp.n], vec![0.0; lp.m]);
+        let (mut zs, mut ys) = (vec![0.0; lp.n], vec![0.0; lp.m]);
+        for chunk in 0..3 {
+            blocked.run_chunk(&mut zb, &mut yb, 1e-2, 1e-2);
+            scalar.run_chunk(&mut zs, &mut ys, 1e-2, 1e-2);
+            for (a, b) in zb.iter().zip(&zs).chain(yb.iter().zip(&ys)) {
+                assert!((a - b).abs() < 1e-9, "({n},{m}) chunk {chunk}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_kernel_survives_extreme_magnitudes() {
+    // one huge (1e308) and one subnormal (1e-310) coefficient, each in
+    // its own row so per-row reordering cannot cancel catastrophically.
+    // Every row's entries end up in the same summation order in the
+    // scalar CSR and both blocked widths, so agreement here is exact
+    // bit-for-bit even when the dual iterate saturates to +inf — and
+    // the primal iterate must stay inside its (finite) box throughout.
+    let mut lp = SparseLp {
+        n: 3,
+        m: 3,
+        b: vec![1.0, 1.0, 1.0],
+        c: vec![-1.0, 0.5, -0.25],
+        lo: vec![0.0; 3],
+        hi: vec![1.0; 3],
+        ..Default::default()
+    };
+    lp.push(0, 0, 1e308);
+    lp.push(1, 1, 1e-310);
+    lp.push(2, 0, 0.75);
+    lp.push(2, 2, -1.25);
+    let mut blocked = RustChunk::new(&lp, 20);
+    let mut scalar = ScalarChunk::new(&lp, 20);
+    let (mut zb, mut yb) = (vec![0.0; 3], vec![0.0; 3]);
+    let (mut zs, mut ys) = (vec![0.0; 3], vec![0.0; 3]);
+    for chunk in 0..3 {
+        blocked.run_chunk(&mut zb, &mut yb, 1e-2, 1e-2);
+        scalar.run_chunk(&mut zs, &mut ys, 1e-2, 1e-2);
+        for (a, b) in zb.iter().zip(&zs).chain(yb.iter().zip(&ys)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "chunk {chunk}: {a} vs {b}");
+        }
+        for (z, (&l, &h)) in zb.iter().zip(lp.lo.iter().zip(&lp.hi)) {
+            assert!(*z >= l && *z <= h, "primal left its box: {z}");
+        }
+    }
+    // both block widths agree bitwise on the raw matvec too
+    let a = Csr::from_coo(3, 3, &lp.rows, &lp.cols, &lp.vals);
+    let b4 = BlockedCsr::from_csr_with_block(&a, BLOCK);
+    let b8 = BlockedCsr::from_csr_with_block(&a, BLOCK_WIDE);
+    let x = vec![0.5, -0.25, 1.0];
+    let (mut o4, mut o8) = (vec![0.0; 3], vec![0.0; 3]);
+    b4.matvec(&x, &mut o4);
+    b8.matvec(&x, &mut o8);
+    for (p, q) in o4.iter().zip(&o8) {
+        assert_eq!(p.to_bits(), q.to_bits(), "{p} vs {q}");
     }
 }
 

@@ -1,0 +1,8 @@
+// fixture: tie-band machinery creeping back into the tick core must
+// fire: a banned identifier, an epsilon-band literal, and raw float
+// comparisons of event time.
+pub const TIE_BAND: f64 = 0.5;
+pub fn leapfrog(finish: f64, best: f64) -> bool {
+    let close = (finish - best).abs() < 1e-9;
+    close || finish <= 0.5 || best > 1.5
+}

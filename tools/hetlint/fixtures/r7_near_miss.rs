@@ -1,0 +1,19 @@
+// fixture: exact tick compares, float-variable compares, band text in
+// strings/comments and #[cfg(test)] content must NOT fire.
+pub fn pick(finish: u64, best: u64, rank_a: f64, rank_b: f64) -> bool {
+    // TIE_BAND and band_eq in a comment are fine
+    let doc = "band_eq(TIE_BAND) <= 1e-9";
+    let tick_ok = finish <= best; // integer tick compare
+    let rank_ok = rank_a < rank_b; // float *variable* compare: ranks, not times
+    tick_ok && rank_ok && !doc.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    const TIE_BAND: f64 = 1e-9;
+
+    #[test]
+    fn t() {
+        assert!(super::pick(1, 2, 0.5, 1.5) || TIE_BAND < 1e-6);
+    }
+}

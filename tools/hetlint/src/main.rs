@@ -19,9 +19,10 @@
 //! |                          | floats panics or lies on NaN; `total_cmp` is the   |
 //! |                          | total order golden parity assumes.                 |
 //! | `no-raw-float-eq`        | Tie handling in the decision core: raw `==`/`!=`   |
-//! |                          | against float values bypasses the engine-wide      |
-//! |                          | ±`engine::TIE_BAND` band (`engine::band_eq`/       |
-//! |                          | `band_ne`); exact structural comparisons must say  |
+//! |                          | against float literals is almost never what a      |
+//! |                          | decision comparator means — event-time ties go     |
+//! |                          | through exact `engine::Tick` integer compares;     |
+//! |                          | deliberate exact structural comparisons must say   |
 //! |                          | so in a justified suppression.                     |
 //! | `no-unordered-iteration` | Replay == rerun: `HashMap`/`HashSet` iteration     |
 //! |                          | order is randomized per process, so any iteration  |
@@ -40,6 +41,12 @@
 //! |                          | ratchets the `x[i]` panic surface.                 |
 //! | `forbid-unsafe`          | The determinism argument is memory-safety-deep:    |
 //! |                          | no `unsafe` anywhere in the tree.                  |
+//! | `no-float-time-in-core`  | The tick clock stays integer: in the hot-path      |
+//! |                          | scheduler files, a comparison operator touching a  |
+//! |                          | float literal, a reintroduced `TIE_BAND`/          |
+//! |                          | `band_eq`/`band_ne`, or an epsilon-band literal    |
+//! |                          | (0 < x <= 1e-6) would silently revive the float    |
+//! |                          | tie band the `engine::Tick` migration removed.     |
 //!
 //! # Suppressions
 //!
@@ -475,11 +482,12 @@ const R3: &str = "no-unordered-iteration";
 const R4: &str = "no-wallclock-in-core";
 const R5: &str = "no-panic-in-hot-path";
 const R6: &str = "forbid-unsafe";
+const R7: &str = "no-float-time-in-core";
 const BAD_SUPPRESSION: &str = "bad-suppression";
 const UNUSED_SUPPRESSION: &str = "unused-suppression";
 
 /// The rules an inline suppression may name.
-const RULES: &[&str] = &[R1, R2, R3, R4, R5, R6];
+const RULES: &[&str] = &[R1, R2, R3, R4, R5, R6, R7];
 
 /// Files whose decision loops are the engine hot path: `unwrap`/
 /// `expect` there needs a justified invariant, and the indexing budget
@@ -498,10 +506,13 @@ const HOT_PATHS: &[&str] = &[
 /// consciously raise the budget here (the diff makes the decision
 /// reviewable).  Lower opportunistically; never raise silently.
 const INDEX_BUDGET: &[(&str, usize)] = &[
-    ("rust/src/sched/engine.rs", 38),
+    // engine grew the UnitTree range-descent (`min_over`/
+    // `first_at_most_over`) and the Tick plumbing in this pass; the
+    // others moved by at most one site.
+    ("rust/src/sched/engine.rs", 47),
     ("rust/src/sched/est.rs", 15),
-    ("rust/src/sched/heft.rs", 7),
-    ("rust/src/sched/list.rs", 17),
+    ("rust/src/sched/heft.rs", 8),
+    ("rust/src/sched/list.rs", 18),
     ("rust/src/sched/online.rs", 16),
 ];
 
@@ -737,9 +748,59 @@ fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
                     t.line,
                     "unsafe is forbidden repo-wide".into(),
                 ),
+                "TIE_BAND" | "band_eq" | "band_ne" if hot => push(
+                    &mut raw,
+                    R7,
+                    t.line,
+                    format!(
+                        "{} reintroduced in the tick core: the float tie band was \
+                         removed by the Tick migration; event-time ties are exact \
+                         integer tick compares",
+                        t.text
+                    ),
+                ),
                 _ => {}
             },
+            Kind::Float if hot => {
+                // epsilon-band literal: the characteristic constant of a
+                // creeping float tie band (0 < x <= 1e-6).
+                let lit = t.text.replace('_', "");
+                let lit = lit.trim_end_matches("f64").trim_end_matches("f32");
+                if let Ok(v) = lit.parse::<f64>() {
+                    if v > 0.0 && v <= 1e-6 {
+                        push(
+                            &mut raw,
+                            R7,
+                            t.line,
+                            format!(
+                                "epsilon-band literal {} in the tick core: event-time \
+                                 comparison is exact integer ticks, never banded",
+                                t.text
+                            ),
+                        );
+                    }
+                }
+            }
             Kind::Punct => match t.text.as_str() {
+                "==" | "!=" | "<" | ">" | "<=" | ">=" if hot => {
+                    let prev_float = i > 0 && ts[i - 1].kind == Kind::Float;
+                    let next_float = ts.get(i + 1).is_some_and(|t| t.kind == Kind::Float)
+                        || (ts.get(i + 1).is_some_and(|t| t.text == "-")
+                            && ts.get(i + 2).is_some_and(|t| t.kind == Kind::Float));
+                    if prev_float || next_float {
+                        push(
+                            &mut raw,
+                            R7,
+                            t.line,
+                            format!(
+                                "float-literal {} comparison in the tick core: event \
+                                 time is integer engine::Tick; quantize once at entry \
+                                 and compare ticks exactly",
+                                t.text
+                            ),
+                        );
+                    }
+                }
                 "==" | "!=" if in_core(rel) => {
                     let prev_float = i > 0 && ts[i - 1].kind == Kind::Float;
                     let next_float = ts.get(i + 1).is_some_and(|t| t.kind == Kind::Float)
@@ -751,9 +812,9 @@ fn lint_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
                             R2,
                             t.line,
                             format!(
-                                "raw float {} in the decision core: go through \
-                                 engine::band_eq/band_ne (±TIE_BAND), or justify an \
-                                 exact structural comparison",
+                                "raw float {} in the decision core: compare quantized \
+                                 engine::Tick values exactly, or justify an exact \
+                                 structural comparison",
                                 t.text
                             ),
                         );
@@ -1165,6 +1226,18 @@ let l: &'static str = s;
         assert_eq!(rules_of(&bad), vec![R6], "{bad:?}");
         let (ok, _) = lint_source("rust/src/lp/pdhg.rs", &fixture("r6_near_miss.rs"));
         assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn r7_fires_on_bad_and_not_on_near_miss() {
+        let (bad, _) = lint_source("rust/src/sched/online.rs", &fixture("r7_bad.rs"));
+        // TIE_BAND ident; `< 1e-9` (comparison + epsilon literal); `<= 0.5`; `> 1.5`
+        assert_eq!(rules_of(&bad), vec![R7, R7, R7, R7, R7], "{bad:?}");
+        let (ok, _) = lint_source("rust/src/sched/online.rs", &fixture("r7_near_miss.rs"));
+        assert!(ok.is_empty(), "{ok:?}");
+        // outside the hot-path files the tick-clock rule does not apply
+        let (ok2, _) = lint_source("rust/src/sched/service.rs", &fixture("r7_bad.rs"));
+        assert!(ok2.is_empty(), "{ok2:?}");
     }
 
     // -- suppressions ------------------------------------------------------
