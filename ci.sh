@@ -98,6 +98,57 @@ else
     echo "(cargo not installed; skipping daemon smoke)"
 fi
 
+echo "== sharded daemon smoke: --shards 4 kill -9 + WAL restart =="
+if cargo --version >/dev/null 2>&1; then
+    # same replay == rerun contract, but through the two-level sharded
+    # scheduler: 4 disjoint slices of an 8x4 pool, shard ids recorded in
+    # the WAL decision stream and bitwise-verified on restart; also pins
+    # the refusal path (a 4-shard WAL must not reopen at another count)
+    shard_dir="$(mktemp -d)"
+    hs=target/release/hetsched
+    "$hs" serve-service --addr 127.0.0.1:0 --m 8 --k 4 --shards 4 \
+        --wal "$shard_dir/service.wal" --port-file "$shard_dir/port" \
+        >"$shard_dir/daemon1.log" 2>&1 &
+    daemon=$!
+    for _ in $(seq 1 100); do [[ -s "$shard_dir/port" ]] && break; sleep 0.1; done
+    [[ -s "$shard_dir/port" ]] || { cat "$shard_dir/daemon1.log" >&2; exit 1; }
+    addr="$(cat "$shard_dir/port")"
+    "$hs" submit --addr "$addr" --app potrf --nb 4 --bs 64 --arrival 0
+    "$hs" submit --addr "$addr" --app getrf --nb 3 --bs 64 --arrival 2 --policy eft
+    "$hs" submit --addr "$addr" --app potrf --nb 3 --bs 64 --arrival 4 --policy greedy
+    "$hs" submit --addr "$addr" --app getrf --nb 4 --bs 64 --arrival 6
+    "$hs" report --addr "$addr" > "$shard_dir/report_before"
+    kill -9 "$daemon"
+    wait "$daemon" 2>/dev/null || true
+    # the refusal path: reopening the 4-shard WAL at --shards 2 must fail
+    if "$hs" serve-service --addr 127.0.0.1:0 --m 8 --k 4 --shards 2 \
+        --wal "$shard_dir/service.wal" --port-file "$shard_dir/portX" \
+        >"$shard_dir/daemonX.log" 2>&1; then
+        echo "sharded smoke FAILED: 4-shard WAL reopened at --shards 2" >&2
+        exit 1
+    fi
+    grep -q "shard" "$shard_dir/daemonX.log" \
+        || { echo "shard-count refusal did not name the shard mismatch" >&2; cat "$shard_dir/daemonX.log" >&2; exit 1; }
+    "$hs" serve-service --addr 127.0.0.1:0 --m 8 --k 4 --shards 4 \
+        --wal "$shard_dir/service.wal" --port-file "$shard_dir/port2" \
+        >"$shard_dir/daemon2.log" 2>&1 &
+    daemon=$!
+    for _ in $(seq 1 100); do [[ -s "$shard_dir/port2" ]] && break; sleep 0.1; done
+    [[ -s "$shard_dir/port2" ]] || { cat "$shard_dir/daemon2.log" >&2; exit 1; }
+    addr="$(cat "$shard_dir/port2")"
+    "$hs" report --addr "$addr" > "$shard_dir/report_after"
+    "$hs" shutdown --addr "$addr"
+    wait "$daemon" 2>/dev/null || true
+    if ! diff -u "$shard_dir/report_before" "$shard_dir/report_after"; then
+        echo "sharded smoke FAILED: report diverged across kill -9 + WAL restart" >&2
+        exit 1
+    fi
+    echo "sharded smoke OK: 4-shard report byte-identical across kill -9 + WAL restart; shard-count mismatch refused"
+    rm -rf "$shard_dir"
+else
+    echo "(cargo not installed; skipping sharded daemon smoke)"
+fi
+
 echo "== trace determinism: two fresh daemon runs write byte-identical JSONL =="
 if cargo --version >/dev/null 2>&1; then
     # the obs contract, end to end over real TCP: the --trace-out stream
@@ -201,11 +252,20 @@ PY
 import json, sys
 with open("BENCH_service.json") as f:
     r = json.load(f)
-# every admission policy must have produced its row
-for key in ("fifo", "quota", "stretch"):
+# every admission policy must have produced its row, plus the sharded one
+for key in ("fifo", "quota", "stretch", "sharded"):
     if key not in r:
-        sys.exit(f"BENCH_service.json is missing the {key} policy row")
+        sys.exit(f"BENCH_service.json is missing the {key} row")
 fifo, ws = r["fifo"], r["stretch"]
+# sharded gate: on the same contended 50x1000 instance, the two-level
+# scheduler (4 disjoint slices, quarter-size heaps and unit trees) must
+# not be slower than the single-loop fifo row it shards
+sh = r["sharded"]
+if sh["tasks_per_sec"] < fifo["tasks_per_sec"]:
+    sys.exit(
+        f"sharded throughput {sh['tasks_per_sec']:.0f} tasks/s below the "
+        f"single-loop fifo row's {fifo['tasks_per_sec']:.0f}"
+    )
 # fairness gate: on the contended 50x1000 bench, weighted-stretch
 # admission must strictly beat FIFO on the stretch tail (the sim-
 # measured margin is ~24%, so strictness costs no flakiness)
@@ -219,7 +279,8 @@ print(
     f"WStretch {ws['max_stretch']:.2f} "
     f"(p99 {fifo['p99_stretch']:.2f} -> {ws['p99_stretch']:.2f}, "
     f"Jain {fifo['jain_index']:.3f} -> {ws['jain_index']:.3f}; "
-    f"quota row max {r['quota']['max_stretch']:.2f})"
+    f"quota row max {r['quota']['max_stretch']:.2f}; "
+    f"sharded {sh['tasks_per_sec']:.0f} >= fifo {fifo['tasks_per_sec']:.0f} tasks/s)"
 )
 PY
     fi

@@ -1,3 +1,5 @@
+// Wall-clock reads are legitimate in benches (hetlint/clippy allowlist).
+#![allow(clippy::disallowed_methods)]
 //! Bench: multi-tenant service-mode throughput + fairness-policy gate.
 //!
 //! Schedules 50 DAGs × 1000 tasks on a 32-CPU + 8-GPU shared pool
@@ -15,7 +17,7 @@ use hetsched::graph::gen;
 use hetsched::platform::Platform;
 use hetsched::sched::online::{online_by_id, OnlinePolicy};
 use hetsched::sched::service::{
-    run_service_with_ideals, Submission, TenantPolicy,
+    run_service_with_ideals, ServiceReport, ShardedService, Submission, TenantPolicy,
 };
 use hetsched::sim::validate_service;
 use hetsched::substrate::bench::{bench_with, black_box, BenchOpts};
@@ -102,6 +104,107 @@ fn main() {
                     "utilization",
                     Json::Arr(report.utilization.iter().map(|&u| Json::Num(u)).collect()),
                 ),
+            ]),
+        ));
+    }
+
+    // sharded two-level scheduler on the same contended instance: 4
+    // disjoint slices (8 CPUs + 2 GPUs each), FIFO admission — the row
+    // the ci.sh --perf gate compares against the single-loop fifo row
+    // (per-shard heaps and unit trees are a quarter the size, so the
+    // sharded layer must not be slower on this instance)
+    let run_sharded = |shards: usize| -> ServiceReport {
+        let mut svc = ShardedService::new(&plat, shards).expect("valid shard count");
+        for sub in &base {
+            svc.admit(sub.clone()).expect("valid submission");
+        }
+        svc.run();
+        svc.report(Some(&ideals))
+    };
+    let report = run_sharded(4);
+    {
+        let svc = {
+            let mut svc = ShardedService::new(&plat, 4).unwrap();
+            for sub in &base {
+                svc.admit(sub.clone()).unwrap();
+            }
+            svc.run();
+            svc
+        };
+        validate_service(&plat, &report.tenant_runs(svc.submissions()))
+            .unwrap_or_else(|e| panic!("sharded: infeasible merged schedule: {e}"));
+    }
+    let r = bench_with("service 50x1000 (32x8 pool, 4 shards)", &opts, || {
+        black_box(run_sharded(4).horizon);
+    });
+    println!("{}", r.report());
+    let sharded_tps = r.throughput(total_tasks as f64);
+    println!(
+        "    -> {sharded_tps:.0} scheduled tasks/s | max stretch {:.2} | p99 {:.2} | Jain {:.3}",
+        report.max_stretch, report.stretch_p99, report.jain_index
+    );
+    rows.push((
+        "sharded",
+        Json::obj(vec![
+            ("shards", Json::Num(4.0)),
+            ("mean_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
+            ("p95_ms", Json::Num(r.p95.as_secs_f64() * 1e3)),
+            ("tasks_per_sec", Json::Num(sharded_tps)),
+            ("horizon", Json::Num(report.horizon)),
+            ("mean_stretch", Json::Num(report.mean_stretch)),
+            ("max_stretch", Json::Num(report.max_stretch)),
+            ("p99_stretch", Json::Num(report.stretch_p99)),
+            ("jain_index", Json::Num(report.jain_index)),
+            (
+                "utilization",
+                Json::Arr(report.utilization.iter().map(|&u| Json::Num(u)).collect()),
+            ),
+        ]),
+    ));
+
+    // the 1M-task cluster campaign (HETSCHED_BENCH_FULL=1): 500 tenants
+    // x 2000 tasks on a 1024-unit platform, 8 shards — the scale the
+    // two-level design exists for.  One timed pass (the instance is too
+    // big for the sampling loop), wall clock at the bench edge only.
+    if std::env::var("HETSCHED_BENCH_FULL").is_ok() {
+        let big_plat = Platform::hybrid(768, 256);
+        let mut rng = Rng::new(9001);
+        let big: Vec<Submission> = (0..500)
+            .map(|t| {
+                let g = gen::hybrid_dag(&mut rng, 2000, 0.002);
+                Submission::new(g, t as f64 * 5.0, policies[t % policies.len()].clone())
+            })
+            .collect();
+        let big_tasks: usize = big.iter().map(|s| s.graph.n_tasks()).sum();
+        println!(
+            "== full campaign: {} tenants x 2000 tasks on {} ==",
+            big.len(),
+            big_plat.label()
+        );
+        let t0 = std::time::Instant::now();
+        let mut svc = ShardedService::new(&big_plat, 8).expect("valid shard count");
+        for sub in &big {
+            svc.admit(sub.clone()).expect("valid submission");
+        }
+        svc.run();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let m = svc.metrics();
+        let tps = big_tasks as f64 / elapsed;
+        println!(
+            "    -> {big_tasks} tasks in {elapsed:.2}s = {tps:.0} tasks/s | \
+             {} migrations across 8 shards",
+            m.counter("svc_migrations")
+        );
+        rows.push((
+            "campaign_1m",
+            Json::obj(vec![
+                ("shards", Json::Num(8.0)),
+                ("tenants", Json::Num(big.len() as f64)),
+                ("tasks_total", Json::Num(big_tasks as f64)),
+                ("platform", Json::Str(big_plat.label())),
+                ("wall_s", Json::Num(elapsed)),
+                ("tasks_per_sec", Json::Num(tps)),
+                ("migrations", Json::Num(m.counter("svc_migrations") as f64)),
             ]),
         ));
     }

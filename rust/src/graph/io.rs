@@ -47,11 +47,6 @@ pub fn from_json(v: &Json) -> Result<TaskGraph, String> {
             .iter()
             .map(|x| x.as_f64().ok_or("bad time"))
             .collect::<Result<Vec<_>, _>>()?;
-        // pre-check so invalid documents surface as Err rather than the
-        // builder's panic on NaN / non-positive costs
-        if times.is_empty() || times.iter().any(|&t| !t.is_finite() || t <= 0.0) {
-            return Err(format!("task {name}: times must be finite and > 0"));
-        }
         b.add_task(name, times);
     }
     for a in v.get("arcs").and_then(|x| x.as_arr()).ok_or("missing arcs")? {
@@ -66,7 +61,9 @@ pub fn from_json(v: &Json) -> Result<TaskGraph, String> {
         }
         b.add_arc(i, j);
     }
-    let g = b.build();
+    // try_build surfaces invalid documents (NaN / non-positive /
+    // beyond-tick-headroom costs) as Err rather than a builder panic
+    let g = b.try_build()?;
     g.validate()?;
     Ok(g)
 }
@@ -129,6 +126,13 @@ mod tests {
     fn from_json_rejects_bad_docs() {
         assert!(parse_graph("{}").is_err());
         assert!(parse_graph(r#"{"app":"x","tasks":[],"arcs":[[0,1]]}"#).is_err());
+        // untrusted documents must surface bad costs as Err, not panic:
+        // non-positive, and finite-but-beyond-tick-headroom
+        let zero = r#"{"app":"x","tasks":[{"name":"a","times":[0.0]}],"arcs":[]}"#;
+        assert!(parse_graph(zero).is_err());
+        let huge = r#"{"app":"x","tasks":[{"name":"a","times":[1e308]}],"arcs":[]}"#;
+        let err = parse_graph(huge).unwrap_err();
+        assert!(err.contains("headroom"), "{err}");
     }
 
     #[test]

@@ -100,6 +100,11 @@ impl TaskGraph {
                 if !(p > 0.0) || !p.is_finite() {
                     return Err(format!("task {j}: nonpositive time on type {t}"));
                 }
+                if p >= crate::sched::engine::MAX_TIME_UNITS {
+                    return Err(format!(
+                        "task {j}: time {p} on type {t} exceeds the 2^31 time-unit tick headroom"
+                    ));
+                }
             }
             for &s in &self.succs[j] {
                 if s >= n {
@@ -172,21 +177,40 @@ impl Builder {
     }
 
     pub fn build(self) -> TaskGraph {
-        // Reject NaN / non-positive / infinite costs unconditionally
-        // (not just in debug): a single NaN time would otherwise poison
-        // every downstream float comparison silently.
+        match self.try_build() {
+            Ok(g) => g,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible build: the checked entry point for untrusted graphs
+    /// (daemon decode, CLI input).  Rejects NaN / non-positive /
+    /// infinite costs unconditionally (not just in debug) — a single
+    /// NaN time would otherwise poison every downstream float
+    /// comparison silently — and rejects any finite cost at or beyond
+    /// the 2^31 time-unit tick headroom
+    /// ([`crate::sched::engine::MAX_TIME_UNITS`]): a huge finite cost
+    /// would saturate `Tick::quantize` and collapse every comparison
+    /// against it, so it is an input error, not a clamp.
+    pub fn try_build(self) -> Result<TaskGraph, String> {
         for (j, times) in self.proc_times.iter().enumerate() {
-            assert!(
-                !times.is_empty(),
-                "task {j} ({}): no processing times",
-                self.names[j]
-            );
+            if times.is_empty() {
+                return Err(format!("task {j} ({}): no processing times", self.names[j]));
+            }
             for (q, &p) in times.iter().enumerate() {
-                assert!(
-                    p.is_finite() && p > 0.0,
-                    "task {j} ({}): processing time {p} on type {q} must be finite and > 0",
-                    self.names[j]
-                );
+                if !(p.is_finite() && p > 0.0) {
+                    return Err(format!(
+                        "task {j} ({}): processing time {p} on type {q} must be finite and > 0",
+                        self.names[j]
+                    ));
+                }
+                if p >= crate::sched::engine::MAX_TIME_UNITS {
+                    return Err(format!(
+                        "task {j} ({}): processing time {p} on type {q} exceeds the \
+                         2^31 time-unit tick headroom",
+                        self.names[j]
+                    ));
+                }
             }
         }
         let g = TaskGraph {
@@ -197,7 +221,7 @@ impl Builder {
             succs: self.succs,
         };
         debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
-        g
+        Ok(g)
     }
 }
 
@@ -306,6 +330,45 @@ mod tests {
         let mut b = Builder::new("inf");
         b.add_task("a", vec![f64::INFINITY, 2.0]);
         let _ = b.build();
+    }
+
+    #[test]
+    fn builder_rejects_beyond_headroom_cost() {
+        // regression: 1e308 is finite, so the finite-and-positive check
+        // passes, but it saturates Tick::quantize to u64::MAX and every
+        // comparison against it collapses — must be an Err, not a clamp
+        let mut b = Builder::new("huge");
+        b.add_task("a", vec![1e308, 2.0]);
+        let err = b.try_build().unwrap_err();
+        assert!(err.contains("2^31 time-unit tick headroom"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "tick headroom")]
+    fn build_panics_beyond_headroom() {
+        let mut b = Builder::new("huge");
+        b.add_task("a", vec![crate::sched::engine::MAX_TIME_UNITS, 2.0]);
+        let _ = b.build();
+    }
+
+    #[test]
+    fn headroom_boundary_is_exclusive() {
+        // the largest admissible cost is one ulp under 2^31 time units
+        let just_under = crate::sched::engine::MAX_TIME_UNITS - 1.0;
+        let mut b = Builder::new("edge");
+        b.add_task("a", vec![just_under, 1.0]);
+        let g = b.try_build().expect("just-under-headroom cost admissible");
+        assert!(g.validate().is_ok());
+        // and validate() rejects the same out-of-headroom graph built
+        // by hand (the daemon-decode path goes through validate too)
+        let bad = TaskGraph {
+            app: "huge".into(),
+            names: vec!["a".into()],
+            proc_times: vec![vec![1e308]],
+            preds: vec![vec![]],
+            succs: vec![vec![]],
+        };
+        assert!(bad.validate().unwrap_err().contains("headroom"));
     }
 
     #[test]

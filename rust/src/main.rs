@@ -75,16 +75,16 @@ fn usage() {
          serve      (gen flags) --m M --k K --policy P [--time-scale S]\n  \
          service    --tenants N --tasks T --m M --k K [--gap G] [--seed S] \
          [--admission fifo|quota|stretch] [--cpu-share F --gpu-share F] [--weight W]\n  \
-         serve-service --addr HOST:PORT --wal FILE --m M --k K [--port-file FILE] \
-         [--trace-out FILE]\n  \
+         serve-service --addr HOST:PORT --wal FILE --m M --k K [--shards N] \
+         [--port-file FILE] [--trace-out FILE]\n  \
          submit     --addr HOST:PORT (gen flags) [--arrival T] [--policy P] \
-         [--admission A ...]\n  \
-         status     --addr HOST:PORT --tenant I\n  \
-         cancel     --addr HOST:PORT --tenant I\n  \
-         report     --addr HOST:PORT\n  \
-         metrics    --addr HOST:PORT [--json]\n  \
+         [--admission A ...] [--timeout-s S]\n  \
+         status     --addr HOST:PORT --tenant I [--timeout-s S]\n  \
+         cancel     --addr HOST:PORT --tenant I [--timeout-s S]\n  \
+         report     --addr HOST:PORT [--timeout-s S]\n  \
+         metrics    --addr HOST:PORT [--json] [--timeout-s S]\n  \
          explain    --wal FILE --task TENANT:TASK\n  \
-         shutdown   --addr HOST:PORT\n  \
+         shutdown   --addr HOST:PORT [--timeout-s S]\n  \
          artifacts"
     );
     std::process::exit(2);
@@ -601,12 +601,20 @@ fn cmd_serve_service(args: &Args) {
         ),
         port_file: args.str_flag("port-file").map(std::path::PathBuf::from),
         trace_out: args.str_flag("trace-out").map(std::path::PathBuf::from),
+        shards: or_die(args.try_usize("shards", 1)),
     };
     or_die(serve(&cfg));
 }
 
 fn client_from_args(args: &Args) -> Client {
-    or_die(Client::connect(&args.string("addr", "127.0.0.1:7477")))
+    let timeout_s = or_die(args.try_u64(
+        "timeout-s",
+        hetsched::service_net::DEFAULT_TIMEOUT_S,
+    ));
+    or_die(Client::connect_with_timeout(
+        &args.string("addr", "127.0.0.1:7477"),
+        timeout_s,
+    ))
 }
 
 fn tenant_from_args(args: &Args) -> usize {

@@ -175,6 +175,34 @@ impl Metrics {
         }
     }
 
+    /// Fold another registry into this one with every key prefixed.
+    /// The sharded service uses this for per-shard attribution
+    /// (`svc_shard{i}_…` keys beside the global sums); prefixing keeps
+    /// the merged key set disjoint from the global one, so plain
+    /// [`Self::merge`] semantics (adding) never apply across shards by
+    /// accident.
+    pub fn merge_prefixed(&mut self, other: &Metrics, prefix: &str) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(format!("{prefix}{k}")).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            let key = format!("{prefix}{k}");
+            match self.hists.get_mut(&key) {
+                None => {
+                    self.hists.insert(key, h.clone());
+                }
+                Some(mine) => {
+                    assert_eq!(mine.bounds, h.bounds, "merging {key} with different bounds");
+                    for (a, b) in mine.counts.iter_mut().zip(&h.counts) {
+                        *a += b;
+                    }
+                    mine.total += h.total;
+                    mine.sum += h.sum;
+                }
+            }
+        }
+    }
+
     /// Freeze into a report.
     pub fn report(&self) -> MetricsReport {
         MetricsReport {

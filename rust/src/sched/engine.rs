@@ -62,12 +62,17 @@ use crate::graph::TaskId;
 /// banded comparators made: genuinely distinct keys stay distinct,
 /// ulp-smeared ties become exactly equal.
 ///
-/// Overflow headroom: `2⁶⁴ / 2³³ = 2³¹ ≈ 2.1e9` time units.  The
-/// largest virtual horizon in the repo (the 100k-task `Scale::Full`
-/// campaign) stays below 1e6, five decades clear.  Tick addition is
-/// plain `u64` addition — associative, so path sums are independent of
-/// evaluation order (the property the float band could only
-/// approximate).
+/// Overflow headroom: `2⁶⁴ / 2³³ = 2³¹ ≈ 2.1e9` time units
+/// ([`MAX_TIME_UNITS`]).  The largest virtual horizon in the repo (the
+/// 100k-task `Scale::Full` campaign) stays below 1e6, five decades
+/// clear.  Tick addition saturates at `Tick::MAX` — associative (a
+/// saturating sum is the min of the true sum and the ceiling, and min
+/// commutes with addition order), so path sums are independent of
+/// evaluation order, and a sum that does hit the ceiling stays an
+/// absorbing "never finishes" sentinel instead of wrapping to a tiny
+/// finish time.  `graph::Builder` rejects any single cost beyond the
+/// headroom outright, so saturation can only arise from pathological
+/// chain *sums*, where the monotone ceiling is the correct semantics.
 ///
 /// Conversion is exact both ways for any horizon this repo can reach:
 /// every tick count below 2⁵² is exactly representable as f64, so
@@ -80,11 +85,19 @@ pub struct Tick(pub u64);
 pub const TICK_SHIFT: u32 = 33;
 const TICK_SCALE: f64 = (1u64 << TICK_SHIFT) as f64;
 
+/// Largest event time (in time units) the tick clock can represent:
+/// `2⁶⁴ / 2³³ = 2³¹`.  Costs at or beyond this are rejected at graph
+/// construction ([`crate::graph::Builder::try_build`]); event-time
+/// *sums* that exceed it saturate to [`Tick::MAX`] instead of wrapping.
+pub const MAX_TIME_UNITS: f64 = (1u64 << (64 - TICK_SHIFT)) as f64;
+
 impl Tick {
     pub const ZERO: Tick = Tick(0);
     pub const MAX: Tick = Tick(u64::MAX);
 
-    /// Quantize a non-negative event time to the nearest tick.
+    /// Quantize a non-negative event time to the nearest tick.  The
+    /// `as u64` cast saturates (Rust guarantee), so `inf` and beyond-
+    /// headroom finite times land on `Tick::MAX` rather than wrapping.
     #[inline]
     pub fn quantize(t: f64) -> Tick {
         debug_assert!(!t.is_sign_negative(), "event times are non-negative");
@@ -109,9 +122,12 @@ impl Tick {
 
 impl std::ops::Add for Tick {
     type Output = Tick;
+    /// Saturating: a path sum that exceeds the clock's range clamps to
+    /// `Tick::MAX` (an absorbing "never finishes" sentinel) instead of
+    /// debug-panicking / release-wrapping to a tiny finish time.
     #[inline]
     fn add(self, rhs: Tick) -> Tick {
-        Tick(self.0 + rhs.0)
+        Tick(self.0.saturating_add(rhs.0))
     }
 }
 
@@ -658,6 +674,57 @@ mod tests {
         assert!(Tick::quantize_cost(0.0) >= Tick(1), "cost clamp");
         assert_eq!(canon(2.0), 2.0);
         assert_eq!(canon_cost(3.5), 3.5);
+    }
+
+    #[test]
+    fn tick_saturates_at_headroom() {
+        // quantize round-trip holds right up to the headroom boundary...
+        let under = MAX_TIME_UNITS - 1.0;
+        let q = Tick::quantize(under);
+        assert!(q < Tick::MAX);
+        assert_eq!(Tick::quantize(q.to_f64()), q, "round-trip just under headroom");
+        // ...and at/over the boundary the cast saturates instead of wrapping
+        assert_eq!(Tick::quantize(MAX_TIME_UNITS), Tick::MAX);
+        assert_eq!(Tick::quantize(1e308), Tick::MAX);
+        assert_eq!(Tick::quantize(f64::INFINITY), Tick::MAX);
+        // regression: Add saturates — `Tick::MAX + anything` must stay
+        // MAX (the absorbing never-finishes sentinel), not wrap small
+        assert_eq!(Tick::MAX + tk(1.0), Tick::MAX);
+        assert_eq!(q + q, Tick::MAX, "near-boundary sum clamps, not wraps");
+    }
+
+    #[test]
+    fn tick_saturating_add_preserves_finished_before() {
+        // if a finishes before b (a <= b), then for any shared suffix
+        // cost c the relation survives the (saturating) addition — a
+        // wrapping add would invert it once b + c overflowed
+        let probes = [
+            tk(0.0),
+            tk(1.0),
+            tk(123.456),
+            Tick::quantize(MAX_TIME_UNITS / 2.0),
+            Tick::quantize(MAX_TIME_UNITS - 1.0),
+            Tick::MAX,
+        ];
+        for &a in &probes {
+            for &b in &probes {
+                if a > b {
+                    continue;
+                }
+                for &c in &probes {
+                    assert!(a + c <= b + c, "monotone: {a:?}+{c:?} vs {b:?}+{c:?}");
+                }
+            }
+        }
+        // saturating addition stays associative: both orders reach the
+        // same min(true sum, ceiling)
+        for &a in &probes {
+            for &b in &probes {
+                for &c in &probes {
+                    assert_eq!((a + b) + c, a + (b + c));
+                }
+            }
+        }
     }
 
     #[test]

@@ -85,8 +85,10 @@ use super::OrdF64;
 const WS_KEY_BAND: f64 = 1e-12;
 
 pub mod policy;
+pub mod shard;
 
 pub use policy::TenantPolicy;
+pub use shard::ShardedService;
 
 /// One tenant's application entering the service.
 #[derive(Clone, Debug)]
@@ -517,6 +519,36 @@ impl Service {
         sub.arrival = sub.arrival.max(self.now);
         self.advance_before(sub.arrival);
         Ok(self.push_tenant(sub, None))
+    }
+
+    /// Admit a batch of tenants, advancing the stream once per distinct
+    /// arrival window instead of once per submission: consecutive
+    /// submissions sharing an arrival time are grouped, and the heap is
+    /// only drained up to each window's start.  Bit-identical to calling
+    /// [`Self::admit`] per submission in the same order (within one
+    /// window the repeated `advance_before` calls are no-ops and the
+    /// clamp `max(arrival, now)` is unchanged by earlier same-window
+    /// pushes — `now` never advances past the window while admitting
+    /// into it); pinned by the `service_shard` batching-parity test.
+    ///
+    /// All submissions are validated up front: on `Err` the service is
+    /// untouched (no partial batch).
+    pub fn admit_batch(&mut self, subs: Vec<Submission>) -> Result<Vec<usize>, String> {
+        for s in &subs {
+            validate_submission(&self.plat, s)?;
+        }
+        let mut ids = Vec::with_capacity(subs.len());
+        let mut window: Option<f64> = None;
+        for mut sub in subs {
+            let raw = sub.arrival;
+            if window != Some(raw) {
+                window = Some(raw);
+                self.advance_before(raw.max(self.now));
+            }
+            sub.arrival = raw.max(self.now);
+            ids.push(self.push_tenant(sub, None));
+        }
+        Ok(ids)
     }
 
     /// Decide every pending stream head with arrival time strictly
@@ -1013,14 +1045,6 @@ impl Service {
             });
         }
 
-        let mut utilization = vec![0.0; self.plat.n_types()];
-        if horizon > 0.0 {
-            for t in &tenants {
-                for (q, w) in t.schedule.loads(self.plat.n_types()).iter().enumerate() {
-                    utilization[q] += w / (horizon * self.plat.counts[q] as f64);
-                }
-            }
-        }
         let mut report = ServiceReport {
             tenants,
             decisions: self.decisions.clone(),
@@ -1030,7 +1054,7 @@ impl Service {
             max_stretch: 0.0,
             stretch_p99: 0.0,
             jain_index: 1.0,
-            utilization,
+            utilization: Vec::new(),
             rule_counts: self
                 .rule_counts
                 .iter()
@@ -1038,21 +1062,41 @@ impl Service {
                 .collect(),
             restricted_decisions: self.restricted_decisions,
         };
-        // every stretch aggregate flows through the one
-        // completed-tenants helper: a cancelled tenant's partial stretch
-        // is an underestimate and must not leak into any of them
-        let mut stretches = report.completed_stretches();
-        if !stretches.is_empty() {
-            stretches.sort_by(|a, b| a.total_cmp(b));
-            let n = stretches.len() as f64;
-            let sum: f64 = stretches.iter().sum();
-            let sum_sq: f64 = stretches.iter().map(|s| s * s).sum();
-            report.mean_stretch = sum / n;
-            report.max_stretch = stretches[stretches.len() - 1];
-            report.stretch_p99 = percentile(&stretches, 0.99);
-            report.jain_index = if sum_sq > 0.0 { sum * sum / (n * sum_sq) } else { 1.0 };
-        }
+        finalize_report(&mut report, &self.plat.counts);
         report
+    }
+}
+
+/// Fill the derived aggregates of a report whose `tenants`,
+/// `decisions`, `horizon`, `total_tasks`, `rule_counts` and
+/// `restricted_decisions` are already in place: per-type utilization
+/// from the tenant loads, then the completed-tenant stretch aggregates
+/// (mean/max/p99/Jain).  One code path shared by [`Service::report`]
+/// and the sharded merger ([`ShardedService`]) so an N-shard merge
+/// reproduces the single-loop aggregation bit for bit.
+pub(crate) fn finalize_report(report: &mut ServiceReport, counts: &[usize]) {
+    let mut utilization = vec![0.0; counts.len()];
+    if report.horizon > 0.0 {
+        for t in &report.tenants {
+            for (q, w) in t.schedule.loads(counts.len()).iter().enumerate() {
+                utilization[q] += w / (report.horizon * counts[q] as f64);
+            }
+        }
+    }
+    report.utilization = utilization;
+    // every stretch aggregate flows through the one
+    // completed-tenants helper: a cancelled tenant's partial stretch
+    // is an underestimate and must not leak into any of them
+    let mut stretches = report.completed_stretches();
+    if !stretches.is_empty() {
+        stretches.sort_by(|a, b| a.total_cmp(b));
+        let n = stretches.len() as f64;
+        let sum: f64 = stretches.iter().sum();
+        let sum_sq: f64 = stretches.iter().map(|s| s * s).sum();
+        report.mean_stretch = sum / n;
+        report.max_stretch = stretches[stretches.len() - 1];
+        report.stretch_p99 = percentile(&stretches, 0.99);
+        report.jain_index = if sum_sq > 0.0 { sum * sum / (n * sum_sq) } else { 1.0 };
     }
 }
 

@@ -1,0 +1,820 @@
+//! Sharded two-level service scheduler: a global admission layer
+//! fanning out to `N` per-shard [`Service`] loops, each owning a
+//! disjoint slice of the platform.
+//!
+//! # Model
+//!
+//! The single-loop [`Service`] serializes every irrevocable decision
+//! through one [`PolicyEngine`](crate::sched::online::PolicyEngine)
+//! over one [`UnitPool`](crate::sched::engine::UnitPool).  That is the
+//! right semantics for the paper's on-line model, but at cluster scale
+//! (1024 units, hundreds of tenants) every arrival pays a heap and
+//! unit-tree whose size grows with the *whole* machine.  The sharded
+//! form splits the platform into `N` disjoint slices — shard `s` owns
+//! `counts[q]/N (+1 for the first `counts[q] % N` shards)` units of
+//! every type `q`, so each slice is itself a valid heterogeneous
+//! platform — and runs one unmodified `Service` per slice.  The global
+//! layer only does admission (tenant → shard assignment), periodic
+//! whole-tenant rebalancing, and stream merging:
+//!
+//! * **Whole tenants only.**  A tenant's DAG is admitted to exactly one
+//!   shard and every one of its irrevocable decisions is taken there.
+//!   Decisions never split across shards, so each shard's decision
+//!   stream is exactly a single-loop service over its own submissions —
+//!   all per-shard invariants (overlap-freedom, precedence, quota
+//!   ledgers, cancellation rewinds) are inherited unchanged, and the
+//!   per-task decision rules are the PR 5 policy engine, untouched.
+//! * **Assignment** is a deterministic argmin over live normalized
+//!   backlog (undecided tasks per owned unit; ties prefer the lowest
+//!   shard id), a pure function of the op stream — replay == rerun
+//!   holds exactly as for the single loop.
+//! * **Rebalancing** runs every [`REBALANCE_EPOCH`] admissions and
+//!   migrates only tenants with *zero* decisions taken: migration is a
+//!   clean cancel-tombstone on the source shard (nothing to rewind)
+//!   plus a fresh admit on the destination.  A tenant with even one
+//!   irrevocable decision is pinned to its shard forever.
+//! * **Merging**: the global decision stream is the concatenation of
+//!   per-shard streams in *operational order* (each op touches one
+//!   shard; drains visit shards `0..N` in order), with local tenant
+//!   ids relabelled to global ones and unit indices translated by the
+//!   shard's per-type base offset.  Per-shard streams stay
+//!   time-monotone; the global stream is ordered by operation, which is
+//!   the order the WAL makes durable — crash replay recomputes and
+//!   bitwise-verifies each per-shard stream exactly as it does for the
+//!   single loop (`service_net::server::Core`).
+//!
+//! `--shards 1` is the degenerate case: one shard owning the whole
+//! platform, zero-offset translation, identity relabelling — the
+//! report, metrics and trace surfaces delegate to the inner `Service`
+//! directly, so single-shard output is bit-identical (report JSON
+//! bytes included) to the pre-shard service loop (pinned by the
+//! `service_shard` parity suite).
+//!
+//! Quota admission policies are interpreted against the tenant's own
+//! shard slice (`share × slice_counts`, the same ceil rule as before).
+//! Because slices are no larger than the machine, a tenant's concurrent
+//! held units never exceed its single-loop global cap — the cross-shard
+//! invariant tests pin this.
+
+use std::collections::BTreeMap;
+
+use crate::graph::TaskId;
+use crate::obs::{Event, EventKind, Metrics, Restrict};
+use crate::platform::Platform;
+use crate::sim::Placement;
+
+use super::{
+    finalize_report, validate_submission, CancelOutcome, DecisionRecord, Service,
+    ServiceReport, Submission,
+};
+
+/// Admissions between two rebalance passes.  Small enough that a burst
+/// of lopsided arrivals is corrected within the burst, large enough
+/// that assignment stays O(1) amortized.
+pub const REBALANCE_EPOCH: usize = 64;
+
+/// Most tenants moved per rebalance pass (each migration is a cancel +
+/// re-admit; bounding the batch keeps epochs cheap and deterministic).
+const MAX_MIGRATIONS_PER_EPOCH: usize = 4;
+
+/// Where a global tenant currently lives.
+#[derive(Clone, Copy, Debug)]
+struct TenantSlot {
+    shard: usize,
+    local: usize,
+}
+
+/// The sharded two-level service: global admission + `N` single-loop
+/// [`Service`] shards on disjoint platform slices.  Mirrors the
+/// `Service` surface the daemon core drives (`admit`, `cancel`, `run`,
+/// `report`, `decisions`, `placement_of`, trace/metrics), with every
+/// tenant id global and every unit index translated back to the full
+/// platform's numbering.
+pub struct ShardedService {
+    /// The full platform (shard slices partition its unit ranges).
+    plat: Platform,
+    shards: Vec<Service>,
+    /// `base[s][q]`: global unit index of shard `s`'s first type-`q`
+    /// unit (slices are contiguous per type).
+    base: Vec<Vec<usize>>,
+    /// Total units owned by each shard (the backlog normalizer).
+    units: Vec<usize>,
+    /// Global tenant table: where each global id currently lives.
+    tenants: Vec<TenantSlot>,
+    /// Reverse map: `local_to_global[s][local]` = global id (stale
+    /// slots of migrated-away tenants keep their old id; they are
+    /// tombstoned on the shard and never produce decisions).
+    local_to_global: Vec<Vec<usize>>,
+    /// Global copies of the admitted submissions (arrivals are the
+    /// effective clamped ones, re-clamped on migration).
+    subs: Vec<Submission>,
+    /// True cancellations (tombstones from migration are *not* marked).
+    cancelled: Vec<bool>,
+    /// Undecided-task count per global tenant (0 once drained or
+    /// cancelled) — the incremental load accounting.
+    undecided: Vec<usize>,
+    /// Undecided tasks currently assigned to each shard.
+    backlog: Vec<usize>,
+    /// Merged global decision stream (operational order).
+    decisions: Vec<DecisionRecord>,
+    /// Shard that took each merged decision (parallel to `decisions`).
+    decision_shards: Vec<usize>,
+    /// Per-shard count of decisions already merged.
+    watermarks: Vec<usize>,
+    admissions: usize,
+    migrations: u64,
+    /// Global trace sequence counter for the N>1 merged stream.
+    seq: u64,
+}
+
+impl ShardedService {
+    /// Split `plat` into `n_shards` disjoint slices and run one
+    /// [`Service`] per slice.  Every shard needs at least one unit of
+    /// every type, so `1 <= n_shards <= min_q counts[q]`.
+    pub fn new(plat: &Platform, n_shards: usize) -> Result<ShardedService, String> {
+        if n_shards == 0 {
+            return Err("shards must be >= 1".to_string());
+        }
+        let min_count = plat.counts.iter().copied().min().unwrap_or(0);
+        if n_shards > min_count {
+            return Err(format!(
+                "shards ({n_shards}) exceed the smallest type count ({min_count}): \
+                 every shard needs at least one unit of every type"
+            ));
+        }
+        let n_types = plat.n_types();
+        let mut base = vec![vec![0usize; n_types]; n_shards];
+        let mut slice_counts = vec![vec![0usize; n_types]; n_shards];
+        for (q, &c) in plat.counts.iter().enumerate() {
+            let (div, rem) = (c / n_shards, c % n_shards);
+            let mut offset = 0;
+            for s in 0..n_shards {
+                let units = div + usize::from(s < rem);
+                base[s][q] = offset;
+                slice_counts[s][q] = units;
+                offset += units;
+            }
+        }
+        let shards: Vec<Service> = slice_counts
+            .iter()
+            .map(|c| Service::empty(&Platform::new(c.clone())))
+            .collect();
+        let units: Vec<usize> = slice_counts.iter().map(|c| c.iter().sum()).collect();
+        Ok(ShardedService {
+            plat: plat.clone(),
+            shards,
+            base,
+            units,
+            tenants: Vec::new(),
+            local_to_global: vec![Vec::new(); n_shards],
+            subs: Vec::new(),
+            cancelled: Vec::new(),
+            undecided: Vec::new(),
+            backlog: vec![0; n_shards],
+            decisions: Vec::new(),
+            decision_shards: vec![],
+            watermarks: vec![0; n_shards],
+            admissions: 0,
+            migrations: 0,
+            seq: 0,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard currently owning global tenant `i`.
+    pub fn shard_of(&self, i: usize) -> usize {
+        self.tenants[i].shard
+    }
+
+    /// Normalized live backlog of shard `s` (undecided tasks per unit).
+    fn load(&self, s: usize) -> f64 {
+        self.backlog[s] as f64 / self.units[s] as f64
+    }
+
+    /// Deterministic argmin over normalized backlog; ties prefer the
+    /// lowest shard id (strict `<` while scanning upward).
+    fn pick_shard(&self) -> usize {
+        let mut best = 0;
+        for s in 1..self.shards.len() {
+            if self.load(s) < self.load(best) {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Merge shard `s`'s not-yet-merged decisions into the global
+    /// stream: relabel the tenant to its global id and keep the shard
+    /// id alongside (unit translation happens at the placement
+    /// surfaces, which carry the unit).
+    fn pull_decisions(&mut self, s: usize) {
+        let all = self.shards[s].decisions();
+        let fresh: Vec<DecisionRecord> = all[self.watermarks[s]..].to_vec();
+        self.watermarks[s] = all.len();
+        for d in fresh {
+            let gid = self.local_to_global[s][d.tenant];
+            self.decisions.push(DecisionRecord { tenant: gid, task: d.task, time: d.time });
+            self.decision_shards.push(s);
+            self.undecided[gid] -= 1;
+            self.backlog[s] -= 1;
+        }
+    }
+
+    /// Admit one tenant: validate against the *global* platform, assign
+    /// the least-loaded shard, admit there (the shard clamps the
+    /// arrival to its own virtual clock) and merge any decisions the
+    /// shard took while advancing to the arrival.  Every
+    /// [`REBALANCE_EPOCH`] admissions a rebalance pass runs after the
+    /// admit.  Returns the global tenant id; `Err` leaves the service
+    /// untouched.
+    pub fn admit(&mut self, sub: Submission) -> Result<usize, String> {
+        validate_submission(&self.plat, &sub)?;
+        let s = self.pick_shard();
+        self.admit_to(s, sub)
+    }
+
+    /// Admit a batch, grouping consecutive submissions that share an
+    /// arrival window *and* an assigned shard into one
+    /// [`Service::admit_batch`] call — the global layer's same-window
+    /// batching, amortizing the shard's stream advance over the group.
+    /// Bit-identical to admitting one at a time (pinned by the
+    /// batching-parity test): when a group opens, its shard is advanced
+    /// to the window immediately and fresh decisions are merged, so
+    /// every later argmin sees exactly the backlog the sequential path
+    /// would; groups also close at rebalance-epoch boundaries, so
+    /// migrations fire between the same two admissions in either mode.
+    /// All submissions are validated up front; on `Err` nothing is
+    /// admitted.
+    pub fn admit_batch(&mut self, subs: Vec<Submission>) -> Result<Vec<usize>, String> {
+        for s in &subs {
+            validate_submission(&self.plat, s)?;
+        }
+        let mut ids = Vec::with_capacity(subs.len());
+        let mut group: Vec<Submission> = Vec::new();
+        let (mut group_shard, mut group_window) = (0usize, f64::NAN);
+        for sub in subs {
+            let s = self.pick_shard();
+            let extends = !group.is_empty()
+                && s == group_shard
+                && sub.arrival == group_window
+                // never extend past an epoch boundary: the sequential
+                // path would rebalance there, changing later argmins
+                && (self.admissions + group.len()) % REBALANCE_EPOCH != 0;
+            if !extends {
+                let done = std::mem::take(&mut group);
+                self.flush_group(group_shard, done, &mut ids);
+                group_shard = s;
+                group_window = sub.arrival;
+                // advance the shard to the window now (exactly what the
+                // sequential admit would do first) so the backlog every
+                // later argmin reads is current
+                let at = sub.arrival.max(self.shards[s].now());
+                self.shards[s].advance_before(at);
+                self.pull_decisions(s);
+            }
+            // provisional load so the next argmin counts this tenant;
+            // flush_group reconciles before the shared tail re-adds it
+            self.backlog[s] += sub.graph.n_tasks();
+            group.push(sub);
+        }
+        let last = group_shard;
+        let done = std::mem::take(&mut group);
+        self.flush_group(last, done, &mut ids);
+        Ok(ids)
+    }
+
+    /// Admit one buffered same-window group into shard `s` and run the
+    /// per-tenant bookkeeping [`Self::admit_to`] would have done.
+    fn flush_group(&mut self, s: usize, group: Vec<Submission>, ids: &mut Vec<usize>) {
+        if group.is_empty() {
+            return;
+        }
+        let sizes: Vec<usize> = group.iter().map(|g| g.graph.n_tasks()).collect();
+        // drop the provisional backlog; the loop below re-adds it as
+        // each tenant is recorded
+        self.backlog[s] -= sizes.iter().sum::<usize>();
+        let locals = self.shards[s]
+            .admit_batch(group)
+            .expect("validated up front");
+        for (local, n_tasks) in locals.into_iter().zip(sizes) {
+            let gid = self.tenants.len();
+            self.tenants.push(TenantSlot { shard: s, local });
+            self.local_to_global[s].push(gid);
+            debug_assert_eq!(self.local_to_global[s].len() - 1, local);
+            self.subs.push(self.shards[s].submissions()[local].clone());
+            self.cancelled.push(false);
+            self.undecided.push(n_tasks);
+            self.backlog[s] += n_tasks;
+            self.admissions += 1;
+            if self.admissions % REBALANCE_EPOCH == 0 {
+                // by the grouping rule this can only be the last member
+                self.pull_decisions(s);
+                self.rebalance();
+            }
+        }
+        self.pull_decisions(s);
+    }
+
+    /// The shared tail of [`Self::admit`]/[`Self::admit_batch`]:
+    /// admit into shard `s`, record the slot, account the load, pull
+    /// fresh decisions and maybe rebalance.
+    fn admit_to(&mut self, s: usize, sub: Submission) -> Result<usize, String> {
+        let n_tasks = sub.graph.n_tasks();
+        let local = self.shards[s].admit(sub)?;
+        let gid = self.tenants.len();
+        self.tenants.push(TenantSlot { shard: s, local });
+        self.local_to_global[s].push(gid);
+        debug_assert_eq!(self.local_to_global[s].len() - 1, local);
+        // store the effective (clamped) submission the shard holds
+        self.subs.push(self.shards[s].submissions()[local].clone());
+        self.cancelled.push(false);
+        self.undecided.push(n_tasks);
+        self.backlog[s] += n_tasks;
+        self.pull_decisions(s);
+        self.admissions += 1;
+        if self.admissions % REBALANCE_EPOCH == 0 {
+            self.rebalance();
+        }
+        Ok(gid)
+    }
+
+    /// Periodic load rebalancing: migrate up to
+    /// [`MAX_MIGRATIONS_PER_EPOCH`] whole tenants from the most- to the
+    /// least-loaded shard, newest first, *only* tenants with zero
+    /// decisions taken (an irrevocable decision pins a DAG to its
+    /// shard).  Migration = clean cancel-tombstone on the source (no
+    /// reservations exist to rewind) + fresh admit on the destination,
+    /// and only happens when it strictly narrows the normalized load
+    /// gap — a pure function of the op stream, so replay reproduces
+    /// every migration exactly.
+    fn rebalance(&mut self) {
+        if self.shards.len() < 2 {
+            return;
+        }
+        for _ in 0..MAX_MIGRATIONS_PER_EPOCH {
+            let (mut src, mut dst) = (0, 0);
+            for s in 1..self.shards.len() {
+                if self.load(s) > self.load(src) {
+                    src = s;
+                }
+                if self.load(s) < self.load(dst) {
+                    dst = s;
+                }
+            }
+            if src == dst {
+                return;
+            }
+            let mut moved = false;
+            for gid in (0..self.tenants.len()).rev() {
+                let slot = self.tenants[gid];
+                if slot.shard != src
+                    || self.cancelled[gid]
+                    || self.undecided[gid] == 0
+                    || self.undecided[gid] != self.subs[gid].graph.n_tasks()
+                {
+                    continue;
+                }
+                let w = self.undecided[gid];
+                let src_after = (self.backlog[src] - w) as f64 / self.units[src] as f64;
+                let dst_after = (self.backlog[dst] + w) as f64 / self.units[dst] as f64;
+                if src_after.max(dst_after) >= self.load(src) {
+                    continue; // moving this tenant would not narrow the gap
+                }
+                // tombstone the source slot (zero decisions -> nothing
+                // to rewind; the slot stays cancelled and is skipped at
+                // every merge surface)
+                let _ = self.shards[src].cancel(slot.local);
+                let sub = self.subs[gid].clone();
+                let local = self.shards[dst]
+                    .admit(sub)
+                    .expect("migrated submission was admitted before");
+                self.tenants[gid] = TenantSlot { shard: dst, local };
+                self.local_to_global[dst].push(gid);
+                debug_assert_eq!(self.local_to_global[dst].len() - 1, local);
+                // the destination re-clamps the arrival to its clock
+                self.subs[gid].arrival = self.shards[dst].submissions()[local].arrival;
+                self.backlog[src] -= w;
+                self.backlog[dst] += w;
+                self.migrations += 1;
+                self.pull_decisions(dst);
+                moved = true;
+                break;
+            }
+            if !moved {
+                return;
+            }
+        }
+    }
+
+    /// Cancel global tenant `i` on its shard (single-loop semantics,
+    /// scoped to the shard's slice).  Panics on unknown or
+    /// already-cancelled tenants, exactly like [`Service::cancel`].
+    pub fn cancel(&mut self, i: usize) -> CancelOutcome {
+        assert!(i < self.tenants.len(), "no tenant {i}");
+        assert!(!self.cancelled[i], "tenant {i} cancelled twice");
+        let slot = self.tenants[i];
+        let out = self.shards[slot.shard].cancel(slot.local);
+        self.cancelled[i] = true;
+        self.backlog[slot.shard] -= self.undecided[i];
+        self.undecided[i] = 0;
+        CancelOutcome { tenant: i, ..out }
+    }
+
+    /// Drain every shard (ascending shard id — the deterministic
+    /// operational order the merged stream and the WAL record).
+    pub fn run(&mut self) {
+        for s in 0..self.shards.len() {
+            self.shards[s].run();
+            self.pull_decisions(s);
+        }
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.shards.iter().all(Service::is_drained)
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The merged global decision stream (operational order; per-shard
+    /// subsequences are time-monotone).
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.decisions
+    }
+
+    /// Shard that took merged decision `i` (parallel to
+    /// [`Self::decisions`]) — the WAL's per-decision shard id.
+    pub fn decision_shard(&self, i: usize) -> usize {
+        self.decision_shards[i]
+    }
+
+    /// Global-platform placement of tenant `i`'s task `j`: the shard's
+    /// slice-local unit index translated by the shard's base offset.
+    pub fn placement_of(&self, i: usize, j: TaskId) -> Option<Placement> {
+        let slot = self.tenants[i];
+        self.shards[slot.shard].placement_of(slot.local, j).map(|mut p| {
+            p.unit += self.base[slot.shard][p.ptype];
+            p
+        })
+    }
+
+    pub fn n_placed(&self, i: usize) -> usize {
+        let slot = self.tenants[i];
+        self.shards[slot.shard].n_placed(slot.local)
+    }
+
+    /// Virtual cancel time of a *true* cancellation (migration
+    /// tombstones are invisible here).
+    pub fn cancelled_at(&self, i: usize) -> Option<f64> {
+        if !self.cancelled[i] {
+            return None;
+        }
+        let slot = self.tenants[i];
+        self.shards[slot.shard].cancelled_at(slot.local)
+    }
+
+    /// The admitted submissions by global id (arrivals are the
+    /// effective clamped ones).
+    pub fn submissions(&self) -> &[Submission] {
+        &self.subs
+    }
+
+    /// Build the merged report.  Single-shard services delegate to the
+    /// inner [`Service::report`] (bit-identical bytes to the pre-shard
+    /// loop); multi-shard services merge per-shard tenant reports —
+    /// global ids, translated units, tombstones dropped — and recompute
+    /// the aggregates through the same [`finalize_report`] path the
+    /// single loop uses.
+    pub fn report(&self, ideals: Option<&[f64]>) -> ServiceReport {
+        if let Some(v) = ideals {
+            assert_eq!(v.len(), self.tenants.len(), "one ideal makespan per tenant");
+        }
+        if self.shards.len() == 1 {
+            return self.shards[0].report(ideals);
+        }
+        // scatter the global ideals onto shard-local slots (tombstoned
+        // slots keep NaN: their stretch is discarded with the slot)
+        let shard_reports: Vec<ServiceReport> = match ideals {
+            None => self.shards.iter().map(|s| s.report(None)).collect(),
+            Some(v) => {
+                let mut per_shard: Vec<Vec<f64>> = self
+                    .shards
+                    .iter()
+                    .map(|s| vec![f64::NAN; s.n_tenants()])
+                    .collect();
+                for (gid, slot) in self.tenants.iter().enumerate() {
+                    per_shard[slot.shard][slot.local] = v[gid];
+                }
+                self.shards
+                    .iter()
+                    .zip(&per_shard)
+                    .map(|(s, iv)| s.report(Some(iv)))
+                    .collect()
+            }
+        };
+        let mut tenants = Vec::with_capacity(self.tenants.len());
+        let mut horizon = 0.0f64;
+        let mut rule_counts: BTreeMap<String, u64> = BTreeMap::new();
+        let mut restricted = 0u64;
+        for (gid, slot) in self.tenants.iter().enumerate() {
+            let mut t = shard_reports[slot.shard].tenants[slot.local].clone();
+            t.tenant = gid;
+            for p in &mut t.schedule.placements {
+                p.unit += self.base[slot.shard][p.ptype];
+            }
+            if t.n_placed > 0 {
+                horizon = horizon.max(t.completion);
+            }
+            tenants.push(t);
+        }
+        for r in &shard_reports {
+            for (rule, n) in &r.rule_counts {
+                *rule_counts.entry(rule.clone()).or_insert(0) += n;
+            }
+            restricted += r.restricted_decisions;
+        }
+        let mut report = ServiceReport {
+            tenants,
+            decisions: self.decisions.clone(),
+            horizon,
+            total_tasks: self.subs.iter().map(|s| s.graph.n_tasks()).sum(),
+            mean_stretch: 0.0,
+            max_stretch: 0.0,
+            stretch_p99: 0.0,
+            jain_index: 1.0,
+            utilization: Vec::new(),
+            rule_counts: rule_counts.into_iter().collect(),
+            restricted_decisions: restricted,
+        };
+        finalize_report(&mut report, &self.plat.counts);
+        report
+    }
+
+    /// Always-on counters.  Single shard: the inner service's registry,
+    /// byte-identical to the pre-shard loop.  Multi-shard: global sums
+    /// computed at this layer (tombstones excluded from tenant counts)
+    /// plus a `shard{i}_`-prefixed copy of every shard's registry.
+    pub fn metrics(&self) -> Metrics {
+        if self.shards.len() == 1 {
+            return self.shards[0].metrics();
+        }
+        let mut m = Metrics::new();
+        m.add("svc_decisions", self.decisions.len() as u64);
+        m.add("svc_tenants", self.tenants.len() as u64);
+        m.add(
+            "svc_cancelled_tenants",
+            self.cancelled.iter().filter(|&&c| c).count() as u64,
+        );
+        m.add("svc_shards", self.shards.len() as u64);
+        m.add("svc_migrations", self.migrations);
+        let mut leapfrogs = 0;
+        let mut restricted = 0;
+        let mut rules: BTreeMap<String, u64> = BTreeMap::new();
+        for (i, sh) in self.shards.iter().enumerate() {
+            let sm = sh.metrics();
+            leapfrogs += sm.counter("svc_leapfrogs");
+            restricted += sm.counter("svc_restricted_decisions");
+            for (rule, n) in sh.rule_counts() {
+                *rules.entry(rule.to_string()).or_insert(0) += n;
+            }
+            m.merge_prefixed(&sm, &format!("shard{i}_"));
+        }
+        m.add("svc_leapfrogs", leapfrogs);
+        m.add("svc_restricted_decisions", restricted);
+        for (rule, n) in rules {
+            m.add(&format!("svc_rule_{rule}"), n);
+        }
+        m
+    }
+
+    /// Switch on event recording in every shard (idempotent).
+    pub fn enable_trace(&mut self) {
+        for s in &mut self.shards {
+            s.enable_trace();
+        }
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.shards.iter().any(Service::trace_enabled)
+    }
+
+    /// Emit a daemon-edge event.  Edge events describe the whole
+    /// daemon, not a slice, so they ride shard 0's stream (and the
+    /// single-shard path is byte-identical to the pre-shard loop).
+    pub fn trace_edge(&mut self, kind: EventKind) {
+        self.shards[0].trace_edge(kind);
+    }
+
+    pub fn note_decision_latency(&mut self, tenant: usize, secs: f64) {
+        if let Some(slot) = self.tenants.get(tenant).copied() {
+            self.shards[slot.shard].note_decision_latency(slot.local, secs);
+        }
+    }
+
+    /// Drain the recorded events.  Single shard: the inner sink's
+    /// stream, untouched.  Multi-shard: a stable merge of the per-shard
+    /// streams by (virtual time, shard id), with tenant ids, unit
+    /// indices and quota-restriction unit lists remapped to global
+    /// numbering and sequence numbers reassigned by one global counter
+    /// (monotone across drains, like the single sink's).
+    pub fn take_trace(&mut self) -> Vec<Event> {
+        if self.shards.len() == 1 {
+            return self.shards[0].take_trace();
+        }
+        let batches: Vec<Vec<Event>> = self.shards.iter_mut().map(Service::take_trace).collect();
+        let mut cursor = vec![0usize; batches.len()];
+        let mut merged = Vec::with_capacity(batches.iter().map(Vec::len).sum());
+        loop {
+            let mut best: Option<usize> = None;
+            for (s, batch) in batches.iter().enumerate() {
+                let Some(ev) = batch.get(cursor[s]) else { continue };
+                match best {
+                    None => best = Some(s),
+                    // strict < keeps the lowest shard id on vtime ties
+                    Some(b) => {
+                        if ev.vtime < batches[b][cursor[b]].vtime {
+                            best = Some(s);
+                        }
+                    }
+                }
+            }
+            let Some(s) = best else { break };
+            let mut ev = batches[s][cursor[s]].clone();
+            cursor[s] += 1;
+            self.remap_event(s, &mut ev);
+            ev.seq = self.seq;
+            self.seq += 1;
+            merged.push(ev);
+        }
+        merged
+    }
+
+    /// Rewrite a shard-local event into global numbering.
+    fn remap_event(&self, s: usize, ev: &mut Event) {
+        if let EventKind::Decision(d) = &mut ev.kind {
+            d.tenant = self.local_to_global[s][d.tenant];
+            d.unit += self.base[s][d.ptype];
+            for alt in &mut d.alternatives {
+                alt.unit += self.base[s][alt.ptype];
+            }
+            for (q, r) in d.restricted.iter_mut().enumerate() {
+                if let Restrict::Only(units) = r {
+                    for u in units.iter_mut() {
+                        *u += self.base[s][q];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, Builder};
+    use crate::sched::online::OnlinePolicy;
+    use crate::substrate::rng::Rng;
+
+    fn one_task(cpu: f64, gpu: f64, arrival: f64) -> Submission {
+        let mut b = Builder::new("one");
+        b.add_task("t", vec![cpu, gpu]);
+        Submission::new(b.build(), arrival, OnlinePolicy::Greedy)
+    }
+
+    #[test]
+    fn slices_partition_every_type() {
+        let plat = Platform::hybrid(10, 3);
+        let svc = ShardedService::new(&plat, 3).unwrap();
+        // type 0: 10 = 4 + 3 + 3 at bases 0, 4, 7
+        assert_eq!(svc.base.iter().map(|b| b[0]).collect::<Vec<_>>(), vec![0, 4, 7]);
+        // type 1: 3 = 1 + 1 + 1 at bases 0, 1, 2
+        assert_eq!(svc.base.iter().map(|b| b[1]).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(svc.units, vec![5, 4, 4]);
+    }
+
+    #[test]
+    fn shard_count_bounds_are_enforced() {
+        let plat = Platform::hybrid(8, 2);
+        assert!(ShardedService::new(&plat, 0).is_err());
+        assert!(ShardedService::new(&plat, 3).is_err(), "only 2 GPUs");
+        assert!(ShardedService::new(&plat, 2).is_ok());
+    }
+
+    #[test]
+    fn assignment_is_argmin_over_normalized_backlog() {
+        let plat = Platform::hybrid(4, 2);
+        let mut svc = ShardedService::new(&plat, 2).unwrap();
+        // empty loads tie -> shard 0; then shard 1 is strictly lighter
+        let a = svc.admit(one_task(5.0, 50.0, 0.0)).unwrap();
+        let b = svc.admit(one_task(5.0, 50.0, 0.0)).unwrap();
+        assert_eq!(svc.shard_of(a), 0);
+        assert_eq!(svc.shard_of(b), 1);
+    }
+
+    #[test]
+    fn unit_indices_translate_to_global_numbering() {
+        // two single-CPU-task tenants land on different shards; both
+        // decide local CPU 0, so the second must surface as global
+        // CPU 1 (shard 1's base offset)
+        let plat = Platform::hybrid(2, 2);
+        let mut svc = ShardedService::new(&plat, 2).unwrap();
+        let a = svc.admit(one_task(1.0, 10.0, 0.0)).unwrap();
+        let b = svc.admit(one_task(1.0, 10.0, 0.0)).unwrap();
+        svc.run();
+        let pa = svc.placement_of(a, 0).unwrap();
+        let pb = svc.placement_of(b, 0).unwrap();
+        assert_eq!((pa.ptype, pa.unit), (0, 0));
+        assert_eq!((pb.ptype, pb.unit), (0, 1));
+        // both started at 0 on *different* global units
+        assert_eq!(pa.start, 0.0);
+        assert_eq!(pb.start, 0.0);
+    }
+
+    #[test]
+    fn rebalance_migrates_zero_decision_tenants_across_a_real_gap() {
+        // 63 single-task tenants at t=0 spread evenly; the 64th
+        // admission arrives at t=100 and lands on the lighter shard,
+        // draining that shard's whole backlog (advance_before decides
+        // its pending singles).  The epoch boundary then sees a genuine
+        // gap — one shard still holds ~32 undecided singles, the other
+        // ~10 — and migrates MAX_MIGRATIONS_PER_EPOCH zero-decision
+        // tenants across it, without a single cancel surfacing.
+        let plat = Platform::hybrid(2, 2);
+        let mut svc = ShardedService::new(&plat, 2).unwrap();
+        for _ in 0..(REBALANCE_EPOCH - 1) {
+            svc.admit(one_task(1.0, 1.0, 0.0)).unwrap();
+        }
+        let mut b = Builder::new("late");
+        let mut prev = None;
+        for _ in 0..10 {
+            let t = b.add_task("t", vec![1.0, 1.0]);
+            if let Some(p) = prev {
+                b.add_arc(p, t);
+            }
+            prev = Some(t);
+        }
+        svc.admit(Submission::new(b.build(), 100.0, OnlinePolicy::Greedy)).unwrap();
+        let m = svc.metrics();
+        assert!(
+            m.counter("svc_migrations") > 0,
+            "epoch boundary over a drained shard must migrate"
+        );
+        svc.run();
+        let report = svc.report(None);
+        // every task decided exactly once, despite the migrations
+        assert_eq!(report.decisions.len(), (REBALANCE_EPOCH - 1) + 10);
+        for t in &report.tenants {
+            assert_eq!(t.n_placed, t.n_tasks, "tenant {} incomplete", t.tenant);
+            assert!(t.cancelled_at.is_none(), "migration must not surface as a cancel");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.counter("svc_tenants"), REBALANCE_EPOCH as u64);
+        assert_eq!(m.counter("svc_cancelled_tenants"), 0, "tombstones are not cancels");
+    }
+
+    #[test]
+    fn migration_rewrites_nothing_observable() {
+        // deterministic rerun: two identical runs produce identical
+        // decision streams, shard assignments and reports
+        let plat = Platform::hybrid(4, 2);
+        let mk = || {
+            let mut rng = Rng::new(0x5AAD);
+            let mut svc = ShardedService::new(&plat, 2).unwrap();
+            for t in 0..(REBALANCE_EPOCH + 10) {
+                let g = gen::hybrid_dag(&mut rng, 1 + t % 7, 0.2);
+                svc.admit(Submission::new(g, t as f64 * 0.25, OnlinePolicy::Eft)).unwrap();
+            }
+            svc.run();
+            svc
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.decisions().len(), b.decisions().len());
+        for (x, y) in a.decisions().iter().zip(b.decisions()) {
+            assert_eq!((x.tenant, x.task), (y.tenant, y.task));
+            assert_eq!(x.time.to_bits(), y.time.to_bits());
+        }
+        assert_eq!(a.decision_shards, b.decision_shards);
+        for i in 0..a.n_tenants() {
+            assert_eq!(a.shard_of(i), b.shard_of(i));
+        }
+    }
+
+    #[test]
+    fn cancel_is_scoped_to_the_owning_shard() {
+        let plat = Platform::hybrid(2, 2);
+        let mut svc = ShardedService::new(&plat, 2).unwrap();
+        let a = svc.admit(one_task(10.0, 100.0, 0.0)).unwrap();
+        let b = svc.admit(one_task(10.0, 100.0, 0.0)).unwrap();
+        svc.run();
+        let out = svc.cancel(a);
+        assert_eq!(out.tenant, a);
+        assert!(svc.cancelled_at(a).is_some());
+        assert!(svc.cancelled_at(b).is_none());
+        let report = svc.report(None);
+        assert_eq!(report.tenants[b].n_placed, 1, "other shard untouched");
+    }
+}

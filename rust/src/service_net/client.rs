@@ -2,25 +2,79 @@
 //! out, one response frame back, over a persistent TCP connection.
 //! Used by the `hetsched submit|status|cancel|report|shutdown`
 //! subcommands and by the integration tests.
+//!
+//! Every socket operation carries a deadline: a wedged daemon (accepted
+//! the connection, never answers) surfaces as a structured timeout
+//! error after [`DEFAULT_TIMEOUT_S`] seconds instead of hanging the CLI
+//! forever.  `--timeout-s 0` disables the deadline for debugging.
 
 use std::io::BufReader;
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::sched::service::Submission;
 use crate::substrate::json::Json;
 
 use super::wire::{self, Request};
 
+/// Default per-operation socket deadline (connect/read/write), seconds.
+pub const DEFAULT_TIMEOUT_S: u64 = 10;
+
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// `None` = blocking forever (explicitly requested via timeout 0).
+    timeout: Option<Duration>,
 }
 
 impl Client {
+    /// Connect with the default deadline.
     pub fn connect(addr: &str) -> Result<Client, String> {
-        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        Client::connect_with_timeout(addr, DEFAULT_TIMEOUT_S)
+    }
+
+    /// Connect with a per-operation deadline of `timeout_s` seconds
+    /// (0 = no deadline).  The same deadline covers the connect itself
+    /// and every subsequent read/write on the stream.
+    pub fn connect_with_timeout(addr: &str, timeout_s: u64) -> Result<Client, String> {
+        let timeout = (timeout_s > 0).then(|| Duration::from_secs(timeout_s));
+        let stream = match timeout {
+            Some(d) => {
+                use std::net::ToSocketAddrs;
+                let sock = addr
+                    .to_socket_addrs()
+                    .map_err(|e| format!("resolve {addr}: {e}"))?
+                    .next()
+                    .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
+                TcpStream::connect_timeout(&sock, d)
+                    .map_err(|e| format!("connect {addr}: {e}"))?
+            }
+            None => TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?,
+        };
+        stream
+            .set_read_timeout(timeout)
+            .map_err(|e| format!("set read timeout: {e}"))?;
+        stream
+            .set_write_timeout(timeout)
+            .map_err(|e| format!("set write timeout: {e}"))?;
         let writer = stream.try_clone().map_err(|e| e.to_string())?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client { reader: BufReader::new(stream), writer, timeout })
+    }
+
+    /// Mark would-block/timed-out socket errors so they read as a
+    /// deadline expiry, not a protocol failure.
+    fn deadline_context(&self, msg: String) -> String {
+        let timed_out = msg.contains("TimedOut")
+            || msg.contains("WouldBlock")
+            || msg.contains("timed out")
+            || msg.contains("temporarily unavailable");
+        match (timed_out, self.timeout) {
+            (true, Some(d)) => format!(
+                "timeout: no response from the daemon within {}s (--timeout-s to adjust): {msg}",
+                d.as_secs()
+            ),
+            _ => msg,
+        }
     }
 
     /// Send one request, await its response.  `ok:false` responses
@@ -28,8 +82,9 @@ impl Client {
     /// full response object (fields beyond `ok` depend on the op).
     pub fn call(&mut self, req: &Request) -> Result<Json, String> {
         wire::write_frame(&mut self.writer, &wire::request_to_json(req))
-            .map_err(|e| format!("send: {e}"))?;
-        let resp = wire::read_frame(&mut self.reader)?
+            .map_err(|e| self.deadline_context(format!("send: {e}")))?;
+        let resp = wire::read_frame(&mut self.reader)
+            .map_err(|e| self.deadline_context(e))?
             .ok_or_else(|| "daemon closed the connection".to_string())?;
         match resp.get("ok") {
             Some(Json::Bool(true)) => Ok(resp),

@@ -5,9 +5,10 @@
 //! sockets, no threads: every mutating op follows the write-ahead
 //! discipline *log, fsync, apply, log decisions, fsync* so that after a
 //! crash the WAL prefix always covers every acknowledged op.
-//! [`Core::open`] replays the log through the same [`Service`] code
-//! path that produced it, verifying every recomputed decision against
-//! the logged one bit for bit (see the [module docs](super)).
+//! [`Core::open`] replays the log through the same [`ShardedService`]
+//! code path that produced it, verifying every recomputed decision
+//! (shard assignment included) against the logged one bit for bit (see
+//! the [module docs](super)).
 //!
 //! [`serve`] wraps a `Core` in the network: the accept loop hands each
 //! connection to a reader thread, and every parsed [`Request`] is
@@ -30,7 +31,7 @@ use crate::obs::event::to_jsonl;
 use crate::obs::{Event, EventKind, Metrics, MetricsReport};
 use crate::platform::Platform;
 use crate::sched::service::{
-    validate_submission, CancelOutcome, DecisionRecord, Service, ServiceReport, Submission,
+    validate_submission, CancelOutcome, DecisionRecord, ServiceReport, ShardedService, Submission,
 };
 use crate::sim::Placement;
 use crate::substrate::json::Json;
@@ -54,6 +55,10 @@ pub struct DaemonConfig {
     /// stream carries virtual time only, so two runs of the same
     /// workload write byte-identical files (ci.sh pins this).
     pub trace_out: Option<PathBuf>,
+    /// Scheduler shards (`--shards N`); 1 reproduces the single-loop
+    /// daemon bit for bit.  Recorded in the WAL's platform record, so a
+    /// log can only be reopened at the shard count that wrote it.
+    pub shards: usize,
 }
 
 /// What replaying the WAL found (reported once at startup).
@@ -71,14 +76,14 @@ pub struct ReplaySummary {
 const EDGE_LATENCY_BOUNDS: [f64; 7] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
 const EDGE_LATENCY_HIST: &str = "edge_decision_latency_s";
 
-/// The deterministic daemon state: a [`Service`] whose every mutation
-/// is mirrored in (and recoverable from) a [`Wal`], plus the
+/// The deterministic daemon state: a [`ShardedService`] whose every
+/// mutation is mirrored in (and recoverable from) a [`Wal`], plus the
 /// daemon-edge metrics registry.  Edge metrics (op counts, WAL bytes,
 /// wall-clock latency) live here — outside the replay-stable core —
 /// so they can read the clock without touching a placement.
 pub struct Core {
     plat: Platform,
-    svc: Service,
+    svc: ShardedService,
     wal: Wal,
     edge: Metrics,
     /// Bytes appended since the last fsync (feeds the fsync trace event).
@@ -86,13 +91,27 @@ pub struct Core {
 }
 
 impl Core {
-    /// Open (or create) the WAL at `path` and reconstruct the service
-    /// state by replaying it.  A fresh log records the platform; an
-    /// existing log must have been written for the same platform.
+    /// [`Core::open_sharded`] with one shard — the single-loop daemon,
+    /// bit-identical to the pre-shard core (kept as the call shape the
+    /// recovery suite and `explain` drive).
     pub fn open(path: &Path, plat: &Platform) -> Result<(Core, ReplaySummary), String> {
+        Core::open_sharded(path, plat, 1)
+    }
+
+    /// Open (or create) the WAL at `path` and reconstruct the sharded
+    /// service state by replaying it.  A fresh log records the platform
+    /// *and* the shard count; an existing log must have been written
+    /// for the same platform at the same shard count — shard layout is
+    /// part of the decision stream's identity, so a mismatched restart
+    /// is refused rather than silently re-sliced.
+    pub fn open_sharded(
+        path: &Path,
+        plat: &Platform,
+        shards: usize,
+    ) -> Result<(Core, ReplaySummary), String> {
         let scan = wal::recover(path)?;
         let mut wal = Wal::open_append(path, scan.good_len)?;
-        let mut svc = Service::empty(plat);
+        let mut svc = ShardedService::new(plat, shards)?;
         let mut summary = ReplaySummary {
             ops: 0,
             decisions_logged: 0,
@@ -102,12 +121,15 @@ impl Core {
 
         if scan.records.is_empty() {
             let mut core = Core::with_edge(plat.clone(), svc, wal);
-            core.wal_append(&WalRecord::Platform { counts: plat.counts.clone() })?;
+            core.wal_append(&WalRecord::Platform {
+                counts: plat.counts.clone(),
+                shards,
+            })?;
             core.wal_sync()?;
             return Ok((core, summary));
         }
 
-        let WalRecord::Platform { counts } = &scan.records[0] else {
+        let WalRecord::Platform { counts, shards: logged_shards } = &scan.records[0] else {
             return Err("WAL does not start with a platform record".into());
         };
         if counts != &plat.counts {
@@ -116,10 +138,18 @@ impl Core {
                 counts, plat.counts
             ));
         }
+        if *logged_shards != shards {
+            return Err(format!(
+                "WAL was written with {logged_shards} shard(s) but --shards {shards} \
+                 was requested: shard layout determines the decision stream, reopen \
+                 with --shards {logged_shards}"
+            ));
+        }
 
         // Re-execute the ops; every logged decision must match the
-        // recomputed stream bit for bit (replay == rerun, checked).
-        let mut pending: VecDeque<(DecisionRecord, Placement)> = VecDeque::new();
+        // recomputed stream bit for bit — shard assignment included
+        // (replay == rerun, checked).
+        let mut pending: VecDeque<(DecisionRecord, Placement, usize)> = VecDeque::new();
         for (n, rec) in scan.records.iter().enumerate().skip(1) {
             match rec {
                 WalRecord::Platform { .. } => {
@@ -144,19 +174,20 @@ impl Core {
                     svc.run();
                     queue_new_decisions(&svc, before, &mut pending);
                 }
-                WalRecord::Decision { rec, place } => {
+                WalRecord::Decision { rec, place, shard } => {
                     summary.decisions_logged += 1;
-                    let (exp_rec, exp_place) = pending.pop_front().ok_or_else(|| {
-                        format!("replay: decision record at index {n} has no recomputed match")
-                    })?;
-                    if !decision_eq(rec, place, &exp_rec, &exp_place) {
+                    let (exp_rec, exp_place, exp_shard) =
+                        pending.pop_front().ok_or_else(|| {
+                            format!("replay: decision record at index {n} has no recomputed match")
+                        })?;
+                    if !decision_eq(rec, place, *shard, &exp_rec, &exp_place, exp_shard) {
                         return Err(format!(
                             "replay: decision mismatch at index {n}: logged \
-                             (tenant {}, task {}, time {}) vs recomputed \
-                             (tenant {}, task {}, time {}) — WAL corrupt or \
+                             (tenant {}, task {}, time {}, shard {}) vs recomputed \
+                             (tenant {}, task {}, time {}, shard {}) — WAL corrupt or \
                              non-deterministic build",
-                            rec.tenant, rec.task, rec.time,
-                            exp_rec.tenant, exp_rec.task, exp_rec.time
+                            rec.tenant, rec.task, rec.time, shard,
+                            exp_rec.tenant, exp_rec.task, exp_rec.time, exp_shard
                         ));
                     }
                 }
@@ -166,9 +197,9 @@ impl Core {
         // regenerate their records (determinism makes them identical to
         // what the dead daemon computed).
         let mut core = Core::with_edge(plat.clone(), svc, wal);
-        for (rec, place) in pending {
+        for (rec, place, shard) in pending {
             summary.decisions_regenerated += 1;
-            core.wal_append(&WalRecord::Decision { rec, place })?;
+            core.wal_append(&WalRecord::Decision { rec, place, shard })?;
         }
         if summary.decisions_regenerated > 0 {
             core.wal_sync()?;
@@ -176,7 +207,7 @@ impl Core {
         Ok((core, summary))
     }
 
-    fn with_edge(plat: Platform, svc: Service, wal: Wal) -> Core {
+    fn with_edge(plat: Platform, svc: ShardedService, wal: Wal) -> Core {
         let mut edge = Metrics::new();
         edge.register_hist(EDGE_LATENCY_HIST, &EDGE_LATENCY_BOUNDS);
         Core { plat, svc, wal, edge, unsynced: 0 }
@@ -276,8 +307,8 @@ impl Core {
         let mut queue = VecDeque::new();
         queue_new_decisions(&self.svc, before, &mut queue);
         let appended = !queue.is_empty();
-        for (rec, place) in queue {
-            self.wal_append(&WalRecord::Decision { rec, place })?;
+        for (rec, place, shard) in queue {
+            self.wal_append(&WalRecord::Decision { rec, place, shard })?;
         }
         if appended {
             self.wal_sync()?;
@@ -311,7 +342,7 @@ impl Core {
     }
 
     /// Merged metrics snapshot: the replay-stable core registry
-    /// ([`Service::metrics`]) plus the daemon-edge registry (op counts,
+    /// ([`ShardedService::metrics`]) plus the daemon-edge registry (op counts,
     /// WAL bytes/syncs, edge decision-latency histogram).
     pub fn metrics(&self) -> MetricsReport {
         let mut m = self.svc.metrics();
@@ -332,19 +363,19 @@ impl Core {
 }
 
 fn queue_new_decisions(
-    svc: &Service,
+    svc: &ShardedService,
     before: usize,
-    out: &mut VecDeque<(DecisionRecord, Placement)>,
+    out: &mut VecDeque<(DecisionRecord, Placement, usize)>,
 ) {
-    for d in &svc.decisions()[before..] {
+    for (i, d) in svc.decisions().iter().enumerate().skip(before) {
         let place = svc
             .placement_of(d.tenant, d.task)
             .expect("fresh decision has a placement");
-        out.push_back((*d, place));
+        out.push_back((*d, place, svc.decision_shard(i)));
     }
 }
 
-fn check_cancel(svc: &Service, tenant: usize) -> Result<(), String> {
+fn check_cancel(svc: &ShardedService, tenant: usize) -> Result<(), String> {
     if tenant >= svc.n_tenants() {
         return Err(format!("no tenant {tenant}"));
     }
@@ -356,19 +387,31 @@ fn check_cancel(svc: &Service, tenant: usize) -> Result<(), String> {
 
 /// Bitwise decision/placement equality — the replay==rerun invariant
 /// is about bits, not epsilons (and `-0.0 == 0.0` must not paper over
-/// a sign flip).
-fn decision_eq(a: &DecisionRecord, ap: &Placement, b: &DecisionRecord, bp: &Placement) -> bool {
+/// a sign flip).  The shard id is part of the identity: a decision
+/// recomputed on a different shard is a divergence even if the
+/// translated placement coincides.
+fn decision_eq(
+    a: &DecisionRecord,
+    ap: &Placement,
+    ashard: usize,
+    b: &DecisionRecord,
+    bp: &Placement,
+    bshard: usize,
+) -> bool {
     a.tenant == b.tenant
         && a.task == b.task
         && a.time.to_bits() == b.time.to_bits()
+        && ashard == bshard
         && ap.ptype == bp.ptype
         && ap.unit == bp.unit
         && ap.start.to_bits() == bp.start.to_bits()
         && ap.finish.to_bits() == bp.finish.to_bits()
 }
 
-/// Replay a WAL through a tracing [`Service`] and render why
-/// `tenant:task` landed where it did (`hetsched explain`).  Replay ==
+/// Replay a WAL through a tracing [`ShardedService`] and render why
+/// `tenant:task` landed where it did (`hetsched explain`).  The shard
+/// count comes from the platform record, so the reconstruction slices
+/// the machine exactly as the daemon that wrote the log did.  Replay ==
 /// rerun, so the recorded event stream is exactly what a traced
 /// original run would have emitted; logged decision records are
 /// verification-only and skipped here.
@@ -377,11 +420,11 @@ pub fn explain_from_wal(path: &Path, tenant: usize, task: usize) -> Result<Strin
     if scan.records.is_empty() {
         return Err(format!("{}: empty WAL", path.display()));
     }
-    let WalRecord::Platform { counts } = &scan.records[0] else {
+    let WalRecord::Platform { counts, shards } = &scan.records[0] else {
         return Err("WAL does not start with a platform record".into());
     };
     let plat = Platform::new(counts.clone());
-    let mut svc = Service::empty(&plat);
+    let mut svc = ShardedService::new(&plat, *shards)?;
     svc.enable_trace();
     for (n, rec) in scan.records.iter().enumerate().skip(1) {
         match rec {
@@ -414,13 +457,31 @@ pub fn explain_from_wal(path: &Path, tenant: usize, task: usize) -> Result<Strin
 
 type Reply = mpsc::Sender<Json>;
 
+/// Write `contents` to `path` atomically: write + fsync a `<path>.tmp`
+/// sibling, then rename over the target.  A reader (the ci.sh smoke
+/// stage polling the port file) sees either the old file or the
+/// complete new one — never a torn prefix — and the fsync means the
+/// advertised address survives a machine crash as well as a daemon
+/// crash.
+pub fn write_file_atomic(path: &Path, contents: &str) -> Result<(), String> {
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    let mut f = std::fs::File::create(&tmp)
+        .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+    f.write_all(contents.as_bytes())
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    f.sync_all().map_err(|e| format!("fsync {}: {e}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
 /// Run the daemon until a client sends `shutdown`.  Blocks the calling
 /// thread.
 pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
     let local = listener.local_addr().map_err(|e| e.to_string())?;
-    let (mut core, replay) = Core::open(&cfg.wal, &cfg.plat)?;
+    let (mut core, replay) = Core::open_sharded(&cfg.wal, &cfg.plat, cfg.shards)?;
     let trace_file = match &cfg.trace_out {
         None => None,
         Some(p) => {
@@ -434,8 +495,9 @@ pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
         }
     };
     println!(
-        "hetsched serve-service: listening on {local}, wal {} ({} ops replayed, \
-         {} decisions verified{}{})",
+        "hetsched serve-service: listening on {local}, {} shard(s), wal {} \
+         ({} ops replayed, {} decisions verified{}{})",
+        cfg.shards,
         cfg.wal.display(),
         replay.ops,
         replay.decisions_logged,
@@ -447,7 +509,7 @@ pub fn serve(cfg: &DaemonConfig) -> Result<(), String> {
         if replay.torn_tail { ", torn tail truncated" } else { "" },
     );
     if let Some(pf) = &cfg.port_file {
-        std::fs::write(pf, local.to_string())
+        write_file_atomic(pf, &local.to_string())
             .map_err(|e| format!("port file {}: {e}", pf.display()))?;
     }
 
@@ -523,11 +585,22 @@ fn scheduler_loop(
             }
             Request::Shutdown => wire::ok_response(vec![]),
         };
+        // Trace-write failures must not be silent: a truncated trace
+        // would fail the byte-identity pin downstream with no hint why.
+        // Report once, then stop tracing — the scheduler itself keeps
+        // running (the trace is an observability surface, not state).
         if let Some(f) = &mut trace_out {
             let events = core.take_trace();
-            if !events.is_empty() {
-                let _ = f.write_all(to_jsonl(&events).as_bytes());
-                let _ = f.flush();
+            let failed = if events.is_empty() {
+                false
+            } else {
+                f.write_all(to_jsonl(&events).as_bytes())
+                    .and_then(|()| f.flush())
+                    .map_err(|e| eprintln!("hetsched serve-service: trace write failed: {e}"))
+                    .is_err()
+            };
+            if failed {
+                trace_out = None;
             }
         }
         let _ = reply.send(resp);

@@ -33,23 +33,31 @@ use crate::substrate::json::Json;
 use super::wire;
 
 /// One WAL record (see module docs).
+///
+/// Sharding rides the same record grammar (one log, no second format):
+/// the `platform` record carries the shard count the log was written
+/// under (absent in pre-shard logs, which replay as 1), and every
+/// `decision` record carries the id of the shard that took it (absent
+/// → 0), so replay can recompute and bitwise-verify the per-shard
+/// decision streams exactly as it does for the single loop.
 #[derive(Clone, Debug)]
 pub enum WalRecord {
-    Platform { counts: Vec<usize> },
+    Platform { counts: Vec<usize>, shards: usize },
     Submit { sub: Submission },
     Cancel { tenant: usize },
     Drain,
-    Decision { rec: DecisionRecord, place: Placement },
+    Decision { rec: DecisionRecord, place: Placement, shard: usize },
 }
 
 pub fn record_to_json(r: &WalRecord) -> Json {
     match r {
-        WalRecord::Platform { counts } => Json::obj(vec![
+        WalRecord::Platform { counts, shards } => Json::obj(vec![
             ("k", Json::Str("platform".into())),
             (
                 "counts",
                 Json::Arr(counts.iter().map(|&c| Json::Num(c as f64)).collect()),
             ),
+            ("shards", Json::Num(*shards as f64)),
         ]),
         WalRecord::Submit { sub } => Json::obj(vec![
             ("k", Json::Str("submit".into())),
@@ -60,7 +68,7 @@ pub fn record_to_json(r: &WalRecord) -> Json {
             ("tenant", Json::Num(*tenant as f64)),
         ]),
         WalRecord::Drain => Json::obj(vec![("k", Json::Str("drain".into()))]),
-        WalRecord::Decision { rec, place } => Json::obj(vec![
+        WalRecord::Decision { rec, place, shard } => Json::obj(vec![
             ("k", Json::Str("decision".into())),
             ("tenant", Json::Num(rec.tenant as f64)),
             ("task", Json::Num(rec.task as f64)),
@@ -69,6 +77,7 @@ pub fn record_to_json(r: &WalRecord) -> Json {
             ("unit", Json::Num(place.unit as f64)),
             ("start", Json::Num(place.start)),
             ("finish", Json::Num(place.finish)),
+            ("shard", Json::Num(*shard as f64)),
         ]),
     }
 }
@@ -85,6 +94,14 @@ pub fn record_from_json(v: &Json) -> Result<WalRecord, String> {
             .and_then(Json::as_f64)
             .ok_or_else(|| format!("{kind} record: bad {k}"))
     };
+    // optional shard fields: pre-shard logs carry neither key and
+    // replay as a single-shard (shard-0) stream
+    let opt_idx = |k: &str, default: usize| -> Result<usize, String> {
+        match v.get(k) {
+            None => Ok(default),
+            Some(j) => j.as_usize().ok_or_else(|| format!("{kind} record: bad {k}")),
+        }
+    };
     Ok(match kind {
         "platform" => {
             let counts: Option<Vec<usize>> = v
@@ -96,6 +113,7 @@ pub fn record_from_json(v: &Json) -> Result<WalRecord, String> {
                 .collect();
             WalRecord::Platform {
                 counts: counts.ok_or("platform record: bad count")?,
+                shards: opt_idx("shards", 1)?,
             }
         }
         "submit" => WalRecord::Submit {
@@ -115,6 +133,7 @@ pub fn record_from_json(v: &Json) -> Result<WalRecord, String> {
                 start: num("start")?,
                 finish: num("finish")?,
             },
+            shard: opt_idx("shard", 0)?,
         },
         other => return Err(format!("unknown record kind '{other}'")),
     })
@@ -247,13 +266,14 @@ mod tests {
         let mut b = Builder::new("w");
         b.add_task("t", vec![1.0, 2.0]);
         vec![
-            WalRecord::Platform { counts: vec![2, 1] },
+            WalRecord::Platform { counts: vec![2, 1], shards: 1 },
             WalRecord::Submit {
                 sub: Submission::new(b.build(), 0.5, OnlinePolicy::Eft),
             },
             WalRecord::Decision {
                 rec: DecisionRecord { tenant: 0, task: 0, time: 0.5 },
                 place: Placement { ptype: 0, unit: 1, start: 0.5, finish: 1.5 },
+                shard: 0,
             },
             WalRecord::Cancel { tenant: 0 },
             WalRecord::Drain,
@@ -277,6 +297,47 @@ mod tests {
                 record_to_json(&r).to_string()
             );
         }
+    }
+
+    #[test]
+    fn preshard_records_parse_with_default_shard_fields() {
+        // logs written before sharding carry no `shards`/`shard` keys:
+        // they must replay as a single-shard, shard-0 stream
+        let plat = Json::obj(vec![
+            ("k", Json::Str("platform".into())),
+            ("counts", Json::Arr(vec![Json::Num(2.0), Json::Num(1.0)])),
+        ]);
+        match record_from_json(&plat).unwrap() {
+            WalRecord::Platform { counts, shards } => {
+                assert_eq!(counts, vec![2, 1]);
+                assert_eq!(shards, 1);
+            }
+            other => panic!("not a platform record: {other:?}"),
+        }
+        let dec = Json::obj(vec![
+            ("k", Json::Str("decision".into())),
+            ("tenant", Json::Num(0.0)),
+            ("task", Json::Num(0.0)),
+            ("time", Json::Num(0.5)),
+            ("ptype", Json::Num(0.0)),
+            ("unit", Json::Num(1.0)),
+            ("start", Json::Num(0.5)),
+            ("finish", Json::Num(1.5)),
+        ]);
+        match record_from_json(&dec).unwrap() {
+            WalRecord::Decision { shard, rec, .. } => {
+                assert_eq!(shard, 0);
+                assert_eq!((rec.tenant, rec.task), (0, 0));
+            }
+            other => panic!("not a decision record: {other:?}"),
+        }
+        // a bad shard value is still a parse error, not a silent default
+        let bad = Json::obj(vec![
+            ("k", Json::Str("platform".into())),
+            ("counts", Json::Arr(vec![Json::Num(2.0), Json::Num(1.0)])),
+            ("shards", Json::Num(-3.0)),
+        ]);
+        assert!(record_from_json(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Daemon-edge regression suite: the client deadline and the atomic
+//! port-file write.
+//!
+//! Both are bugfix pins.  Before the deadline existed, a wedged daemon
+//! (accepts the TCP connection, never replies) hung `hetsched status`
+//! forever; `Client::call` must now fail within the configured timeout
+//! with an error that says so.  Before the atomic write, the port file
+//! was a plain `std::fs::write` — a reader racing the daemon could see
+//! a torn prefix of the address; `write_file_atomic` goes through a
+//! fsync'd `<path>.tmp` + rename, so the file is always either absent,
+//! the old content, or the complete new content.
+
+use std::io::Read;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hetsched::service_net::{write_file_atomic, Client};
+use hetsched::substrate::json::Json;
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("hetsched_daemon_edges").join(name);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+#[test]
+fn wedged_daemon_times_out_instead_of_hanging() {
+    // a listener that accepts and then never replies — the wedge the
+    // default deadline exists for
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let wedge = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        // hold the connection open without ever replying, long enough
+        // that only the client's deadline can end the call
+        std::thread::sleep(Duration::from_secs(3));
+        drop(stream);
+    });
+
+    let t0 = Instant::now();
+    let mut client = Client::connect_with_timeout(&addr, 1).expect("connect succeeds");
+    let err = client.status(0).expect_err("wedged daemon must not answer");
+    let elapsed = t0.elapsed();
+    assert!(
+        err.contains("timeout"),
+        "error must name the deadline, got: {err}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(8),
+        "call returned only after {elapsed:?} — deadline not applied"
+    );
+    drop(client);
+    wedge.join().ok();
+}
+
+#[test]
+fn zero_timeout_disables_the_deadline() {
+    // --timeout-s 0 must mean "no deadline" (the operator's escape
+    // hatch for giant drains), not "fail immediately"
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        // answer one frame after a pause longer than the default-ish
+        // deadlines used in tests
+        std::thread::sleep(Duration::from_millis(300));
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let frame = hetsched::service_net::wire::read_frame(&mut reader)
+            .expect("read")
+            .expect("one request");
+        assert!(frame.get("op").is_some());
+        let mut writer = stream;
+        hetsched::service_net::wire::write_frame(
+            &mut writer,
+            &hetsched::service_net::wire::ok_response(vec![(
+                "status",
+                Json::obj(vec![("tenant", Json::Num(0.0))]),
+            )]),
+        )
+        .expect("write");
+    });
+    let mut client = Client::connect_with_timeout(&addr, 0).expect("connect succeeds");
+    let status = client.status(0).expect("slow but answering daemon");
+    assert!(status.get("tenant").is_some());
+    server.join().unwrap();
+}
+
+#[test]
+fn atomic_write_leaves_no_tmp_and_full_content() {
+    let dir = scratch_dir("atomic");
+    let path = dir.join("port");
+    write_file_atomic(&path, "127.0.0.1:7477").expect("first write");
+    let mut s = String::new();
+    std::fs::File::open(&path).unwrap().read_to_string(&mut s).unwrap();
+    assert_eq!(s, "127.0.0.1:7477");
+    assert!(
+        !dir.join("port.tmp").exists(),
+        "tmp sibling must be renamed away"
+    );
+    // overwrite: readers see old or new, and afterwards only new
+    write_file_atomic(&path, "127.0.0.1:9000").expect("overwrite");
+    let mut s = String::new();
+    std::fs::File::open(&path).unwrap().read_to_string(&mut s).unwrap();
+    assert_eq!(s, "127.0.0.1:9000");
+    assert!(!dir.join("port.tmp").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn atomic_write_reports_unwritable_targets() {
+    let err = write_file_atomic(
+        &PathBuf::from("/nonexistent-hetsched-dir/port"),
+        "127.0.0.1:1",
+    )
+    .expect_err("missing parent directory must fail");
+    assert!(
+        err.contains("/nonexistent-hetsched-dir/port.tmp"),
+        "error should name the tmp path: {err}"
+    );
+}

@@ -438,6 +438,45 @@ fn tick_quantization_properties_on_seed_costs() {
 }
 
 #[test]
+fn parity_holds_on_large_in_headroom_costs() {
+    // The overflow fix made tick addition *saturating* and moved the
+    // admission boundary to 2^31 time-units per cost.  Saturation must
+    // be unobservable below the boundary: for costs scaled ~1000× (per
+    // task up to ~3e5 time-units, worst-case path sums ~2e7 — two
+    // orders under 2^31), the engine's integer clock and the
+    // reference's canonical f64 times must still agree placement for
+    // placement — the regression this guards is a saturating Add that
+    // clips, rounds, or reorders *non*-saturating arithmetic.
+    use hetsched::sched::engine::MAX_TIME_UNITS;
+    let mut rng = Rng::new(0xB16_000C);
+    for case in 0..10 {
+        let n = 30 + rng.below(40);
+        let mut g = gen::hybrid_dag(&mut rng, n, 0.08);
+        let scale = MAX_TIME_UNITS / 2_097_152.0; // 2^31 / 2^21 = 1024.0
+        for j in 0..n {
+            for t in g.proc_times[j].iter_mut() {
+                *t *= scale * (0.5 + rng.f64());
+            }
+        }
+        let plat = random_platform(&mut rng);
+        let alloc = speed_alloc(&g);
+        let a = est::est_schedule(&g, &plat, &alloc);
+        let b = reference::est_schedule(&g, &plat, &alloc);
+        validate(&g, &plat, &a).unwrap_or_else(|e| panic!("large case {case}: {e}"));
+        assert_eq!(a.placements, b.placements, "EST large-cost case {case}");
+        let a = heft::heft_schedule(&g, &plat);
+        let b = reference::heft_schedule(&g, &plat);
+        assert_eq!(a.placements, b.placements, "HEFT large-cost case {case}");
+        let order = random_topo_order(&g, &mut rng);
+        for policy in [OnlinePolicy::ErLs, OnlinePolicy::Eft, OnlinePolicy::Greedy] {
+            let x = online_schedule(&g, &plat, &order, &policy);
+            let y = reference::online_schedule(&g, &plat, &order, &policy);
+            assert_eq!(x.placements, y.placements, "{} large-cost case {case}", policy.name());
+        }
+    }
+}
+
+#[test]
 fn engine_ranks_unchanged_by_refactor() {
     // ols_rank feeds both engine and reference OLS; pin that the rank
     // computation itself is untouched by asserting monotonicity along

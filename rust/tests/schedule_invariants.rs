@@ -151,6 +151,59 @@ fn service_mode_invariants_on_random_multi_tenant_draws() {
 }
 
 #[test]
+fn sharded_service_invariants_on_random_multi_tenant_draws() {
+    // the two-level scheduler inherits every global invariant: for
+    // random draws at 1–3 shards, the merged schedule passes the same
+    // tenant-aware validator as the single loop (per-tenant precedence
+    // + pool-wide no-overlap on *global* unit numbering), every task is
+    // decided exactly once, and the 1-shard case reproduces
+    // run_service decision-for-decision
+    use hetsched::sched::service::ShardedService;
+    let mut rng = Rng::new(0x54A2);
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(3),
+    ];
+    for draw in 0..15u64 {
+        // min type count >= 3 so every shard count in 1..=3 is valid
+        let plat = Platform::hybrid(3 + rng.below(6), 3 + rng.below(2));
+        let n_tenants = 4 + rng.below(5);
+        let subs: Vec<Submission> = (0..n_tenants)
+            .map(|t| {
+                let n = 8 + rng.below(20);
+                let g = gen::hybrid_dag(&mut rng, n, 0.03 + 0.15 * rng.f64());
+                // monotone arrivals: sequential admission clamps to the
+                // advancing clock, so out-of-order arrivals would
+                // legitimately diverge from the batch construct
+                let arrival = t as f64 * 0.75;
+                Submission::new(g, arrival, policies[(draw as usize + t) % 4].clone())
+            })
+            .collect();
+        let total: usize = subs.iter().map(|s| s.graph.n_tasks()).sum();
+        let reference = run_service(&plat, &subs);
+        for n_shards in 1..=3usize {
+            let mut svc = ShardedService::new(&plat, n_shards).unwrap();
+            for sub in &subs {
+                svc.admit(sub.clone()).unwrap();
+            }
+            svc.run();
+            let report = svc.report(None);
+            validate_service(&plat, &report.tenant_runs(svc.submissions()))
+                .unwrap_or_else(|e| panic!("draw {draw}, {n_shards} shards: {e}"));
+            assert_eq!(report.decisions.len(), total, "draw {draw}, {n_shards} shards");
+            if n_shards == 1 {
+                for (a, b) in reference.decisions.iter().zip(&report.decisions) {
+                    assert_eq!((a.tenant, a.task), (b.tenant, b.task), "draw {draw}");
+                    assert_eq!(a.time.to_bits(), b.time.to_bits(), "draw {draw}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn service_cancellation_invariants_on_random_draws() {
     // ~20 draws: cancel 1–2 tenants mid-stream, drain, then require
     // (a) survivors complete and jointly feasible (merge validator),
@@ -354,11 +407,13 @@ fn service_single_tenant_golden_parity_with_online() {
     }
 }
 
-/// 6 fully-connected layers of 6 tasks whose costs straddle the f64
-/// range: upward-rank and finish-time sums overflow to +inf along every
-/// chain, and inf − inf / inf ÷ inf turn downstream aggregates (slack,
-/// stretch) into NaN.
+/// 6 fully-connected layers of 6 tasks whose costs span the *admissible*
+/// extreme range: near the 2^31 time-unit tick headroom on one type,
+/// 1e-300 on the other.  Path sums along every chain exceed the tick
+/// clock's range, so finish times saturate at `Tick::MAX` — the
+/// monotone "never finishes" ceiling — instead of wrapping.
 fn extreme_cost_dag() -> hetsched::graph::TaskGraph {
+    let huge = hetsched::sched::engine::MAX_TIME_UNITS - 1.0;
     let mut b = Builder::new("extreme");
     let mut prev: Vec<usize> = Vec::new();
     for layer in 0..6 {
@@ -366,9 +421,9 @@ fn extreme_cost_dag() -> hetsched::graph::TaskGraph {
         for k in 0..6 {
             let i = layer * 6 + k;
             let times = match i % 3 {
-                0 => vec![1e308, 1e-300],
-                1 => vec![1e-300, 1e308],
-                _ => vec![1e308, 1e308],
+                0 => vec![huge, 1e-300],
+                1 => vec![1e-300, huge],
+                _ => vec![huge, huge],
             };
             let t = b.add_task(&format!("t{i}"), times);
             for &p in &prev {
@@ -382,14 +437,30 @@ fn extreme_cost_dag() -> hetsched::graph::TaskGraph {
 }
 
 #[test]
+fn beyond_headroom_costs_rejected_at_build() {
+    // Re-pin of the old extreme-cost contract: 1e308 costs used to be
+    // admitted and silently saturate Tick::quantize; under the new
+    // semantics graph construction rejects them outright (Err at
+    // try_build, same text from validate), so no scheduler ever sees a
+    // cost the tick clock cannot represent.
+    let mut b = Builder::new("overflow");
+    b.add_task("t", vec![1e308, 1e-300]);
+    let err = b.try_build().unwrap_err();
+    assert!(err.contains("2^31 time-unit tick headroom"), "{err}");
+}
+
+#[test]
 fn extreme_finite_costs_never_panic() {
     // Regression pin for the NaN-panic class hetlint rule R1 exists
     // for: `sort_by(partial_cmp().unwrap())` in substrate::stats /
     // substrate::bench and the old NaN-rejecting OrdF64 all panicked
-    // the moment an intermediate went non-finite.  Costs here are
-    // extreme but finite; every scheduler and the full service path
-    // (including the Summary/percentile statistics over NaN stretches)
-    // must run to completion and place every task exactly once.
+    // the moment an intermediate went non-finite.  Costs here are the
+    // most extreme ones graph construction now admits (just under the
+    // 2^31 tick headroom): chain sums saturate the integer clock, and
+    // every scheduler and the full service path (including the
+    // Summary/percentile statistics) must run to completion and place
+    // every task exactly once — saturating addition keeps the
+    // finished-before order, so no comparator or heap invariant breaks.
     let g = extreme_cost_dag();
     let n = g.n_tasks();
     let plat = Platform::hybrid(3, 2);
@@ -409,8 +480,10 @@ fn extreme_finite_costs_never_panic() {
         assert_eq!(s.placements.len(), n, "{} dropped tasks", policy.name());
     }
 
-    // Full service run: stretch = inf/inf = NaN must flow through the
-    // percentile/Jain aggregates without panicking.
+    // Full service run: flow times pinned at the saturated horizon
+    // divided by near-zero ideals give astronomically large (but
+    // finite) stretches, which must flow through the percentile/Jain
+    // aggregates without panicking.
     let subs = vec![
         Submission::new(g.clone(), 0.0, OnlinePolicy::ErLs),
         Submission::new(g, 1.0, OnlinePolicy::Eft),

@@ -1,0 +1,332 @@
+//! Sharded two-level service scheduler suite (`sched::service::shard`).
+//!
+//! Three pins, in rising order of strength:
+//!
+//! 1. **Single-shard bit-identity.**  `--shards 1` must be the
+//!    pre-shard service loop: same decision stream (to_bits on times),
+//!    same canonical report JSON bytes (`wire::report_to_json`), same
+//!    metrics — across the PR 5 seed matrices, admission policies and
+//!    mid-stream cancels.
+//! 2. **Cross-shard global invariants.**  For 2–4 shards the *merged*
+//!    output must satisfy everything the single loop guarantees
+//!    globally: no two tasks of any tenants overlap on one global unit,
+//!    per-tenant precedence/arrival feasibility, quota caps, unit
+//!    indices inside the platform, and per-shard decision streams that
+//!    stay time-monotone inside the merged (operational-order) stream.
+//! 3. **Batching parity.**  `admit_batch` — the global layer's
+//!    same-window admission batching — is bitwise identical to
+//!    admitting one submission at a time, at one shard and at several.
+
+use hetsched::graph::gen;
+use hetsched::platform::Platform;
+use hetsched::sched::online::OnlinePolicy;
+use hetsched::sched::service::{
+    run_service, Service, ServiceReport, ShardedService, Submission, TenantPolicy,
+};
+use hetsched::service_net::wire;
+use hetsched::sim::{validate_placements_no_overlap, validate_service};
+use hetsched::substrate::rng::Rng;
+
+fn policies(seed: u64) -> [OnlinePolicy; 4] {
+    [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed),
+    ]
+}
+
+fn admissions() -> [TenantPolicy; 4] {
+    [
+        TenantPolicy::Fifo,
+        TenantPolicy::Quota { cpu_share: 0.5, gpu_share: 1.0 },
+        TenantPolicy::WeightedStretch { weight: 0.25 },
+        TenantPolicy::WeightedStretch { weight: 4.0 },
+    ]
+}
+
+/// A contended mixed-policy draw: `n` tenants with tight arrival gaps
+/// on whatever platform the caller picked.
+fn draw(seed: u64, n: usize, tasks: usize) -> Vec<Submission> {
+    let mut rng = Rng::new(0x5A4D_0000 + seed);
+    let pol = policies(seed);
+    let adm = admissions();
+    (0..n)
+        .map(|t| {
+            let g = gen::hybrid_dag(&mut rng, tasks, 0.15);
+            Submission::new(g, t as f64 * 0.75, pol[t % 4].clone())
+                .with_admission(adm[t % adm.len()].clone())
+        })
+        .collect()
+}
+
+fn report_bytes(r: &ServiceReport) -> String {
+    wire::report_to_json(r).to_string()
+}
+
+fn assert_decisions_identical(a: &ServiceReport, b: &ServiceReport, ctx: &str) {
+    assert_eq!(a.decisions.len(), b.decisions.len(), "{ctx}: decision counts");
+    for (x, y) in a.decisions.iter().zip(&b.decisions) {
+        assert_eq!((x.tenant, x.task), (y.tenant, y.task), "{ctx}");
+        assert_eq!(x.time.to_bits(), y.time.to_bits(), "{ctx}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. single-shard bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_shard_matches_run_service_bitwise() {
+    let plat = Platform::hybrid(4, 2);
+    for seed in 0..6u64 {
+        let subs = draw(seed, 8, 12);
+        let reference = run_service(&plat, &subs);
+        let mut svc = ShardedService::new(&plat, 1).unwrap();
+        for sub in &subs {
+            svc.admit(sub.clone()).unwrap();
+        }
+        svc.run();
+        let sharded = svc.report(None);
+        let ctx = format!("seed {seed}");
+        assert_decisions_identical(&reference, &sharded, &ctx);
+        assert_eq!(
+            report_bytes(&reference),
+            report_bytes(&sharded),
+            "{ctx}: 1-shard report JSON diverges from the service loop"
+        );
+        // every merged decision carries shard 0
+        for i in 0..sharded.decisions.len() {
+            assert_eq!(svc.decision_shard(i), 0, "{ctx}: decision {i}");
+        }
+    }
+}
+
+#[test]
+fn one_shard_matches_the_loop_under_cancels() {
+    let plat = Platform::hybrid(4, 2);
+    for seed in 0..4u64 {
+        let subs = draw(seed, 8, 10);
+        let mut reference = Service::empty(&plat);
+        let mut svc = ShardedService::new(&plat, 1).unwrap();
+        for (t, sub) in subs.iter().enumerate() {
+            reference.admit(sub.clone()).unwrap();
+            svc.admit(sub.clone()).unwrap();
+            if t == 4 {
+                let a = reference.cancel(1);
+                let b = svc.cancel(1);
+                assert_eq!(a.at.to_bits(), b.at.to_bits(), "cancel time");
+                assert_eq!(a.dropped_tasks, b.dropped_tasks);
+                assert_eq!(a.released_units, b.released_units);
+            }
+        }
+        reference.run();
+        svc.run();
+        let (ra, rb) = (reference.report(None), svc.report(None));
+        let ctx = format!("seed {seed} with cancel");
+        assert_decisions_identical(&ra, &rb, &ctx);
+        assert_eq!(report_bytes(&ra), report_bytes(&rb), "{ctx}: report bytes");
+        // metrics surface delegates too (protects the obs parity pins)
+        assert_eq!(
+            reference.metrics().report(),
+            svc.metrics().report(),
+            "{ctx}: metrics diverge"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. cross-shard global invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn merged_schedules_satisfy_global_invariants() {
+    // hybrid(8, 4): shard counts 2/3/4 all divide into valid slices
+    let plat = Platform::hybrid(8, 4);
+    for n_shards in [2usize, 3, 4] {
+        for seed in 0..4u64 {
+            let subs = draw(10 * n_shards as u64 + seed, 24, 8);
+            let mut svc = ShardedService::new(&plat, n_shards).unwrap();
+            for sub in &subs {
+                svc.admit(sub.clone()).unwrap();
+            }
+            svc.run();
+            let report = svc.report(None);
+            let ctx = format!("{n_shards} shards, seed {seed}");
+
+            // (a) per-tenant feasibility + pool-wide no-overlap on the
+            // *global* unit numbering (validate_service sees the full
+            // platform, so a bad base-offset translation collides here)
+            let runs = report.tenant_runs(svc.submissions());
+            validate_service(&plat, &runs).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+
+            // (b) translated unit indices stay inside the platform
+            for t in &report.tenants {
+                for p in &t.schedule.placements {
+                    assert!(
+                        p.unit < plat.counts[p.ptype],
+                        "{ctx}: tenant {} uses unit {} of type {} (only {})",
+                        t.tenant, p.unit, p.ptype, plat.counts[p.ptype]
+                    );
+                }
+            }
+
+            // (c) the merged stream is operational-order, but each
+            // shard's subsequence must stay time-monotone
+            let mut last = vec![f64::NEG_INFINITY; n_shards];
+            for (i, d) in report.decisions.iter().enumerate() {
+                let s = svc.decision_shard(i);
+                assert!(s < n_shards, "{ctx}: decision {i} from shard {s}");
+                assert!(
+                    d.time >= last[s],
+                    "{ctx}: shard {s} stream went backwards at decision {i}"
+                );
+                last[s] = d.time;
+            }
+
+            // (d) every kept task decided exactly once
+            let kept: usize = report.tenants.iter().map(|t| t.n_placed).sum();
+            assert_eq!(report.decisions.len(), kept, "{ctx}: decisions vs kept tasks");
+        }
+    }
+}
+
+#[test]
+fn cancels_keep_the_merged_pool_overlap_free() {
+    let plat = Platform::hybrid(8, 4);
+    for seed in 0..3u64 {
+        let subs = draw(700 + seed, 20, 8);
+        let mut svc = ShardedService::new(&plat, 3).unwrap();
+        for (t, sub) in subs.iter().enumerate() {
+            svc.admit(sub.clone()).unwrap();
+            if t == 9 {
+                svc.cancel(3);
+                svc.cancel(7);
+            }
+        }
+        svc.run();
+        let report = svc.report(None);
+        // cancelled tenants' schedules are not graph-aligned, so only
+        // the pool-wide no-overlap applies to the full placement set
+        validate_placements_no_overlap(
+            report.tenants.iter().flat_map(|t| &t.schedule.placements),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(svc.cancelled_at(3).is_some());
+        assert!(svc.cancelled_at(7).is_some());
+        let m = svc.metrics();
+        assert_eq!(m.counter("svc_cancelled_tenants"), 2, "seed {seed}");
+    }
+}
+
+#[test]
+fn quota_caps_hold_against_the_global_platform() {
+    // shares are interpreted against the tenant's shard slice; a slice
+    // is never larger than the machine, so the global cap
+    // ceil(share · counts[q]) must still hold for every tenant
+    let plat = Platform::hybrid(8, 4);
+    let (cpu_share, gpu_share) = (0.25, 0.5);
+    let mut rng = Rng::new(0x0A07A);
+    let mut svc = ShardedService::new(&plat, 2).unwrap();
+    for t in 0..16usize {
+        let g = gen::hybrid_dag(&mut rng, 10, 0.1);
+        let sub = Submission::new(g, t as f64 * 0.5, OnlinePolicy::Eft)
+            .with_admission(TenantPolicy::Quota { cpu_share, gpu_share });
+        svc.admit(sub).unwrap();
+    }
+    svc.run();
+    let report = svc.report(None);
+    let caps = [
+        (cpu_share * plat.counts[0] as f64).ceil() as usize,
+        (gpu_share * plat.counts[1] as f64).ceil() as usize,
+    ];
+    for t in &report.tenants {
+        for q in 0..2 {
+            let mine: Vec<_> = t
+                .schedule
+                .placements
+                .iter()
+                .filter(|p| p.ptype == q)
+                .collect();
+            for p in &mine {
+                // distinct units this tenant holds at p.start
+                let mut held: Vec<usize> = mine
+                    .iter()
+                    .filter(|o| o.start <= p.start && p.start < o.finish)
+                    .map(|o| o.unit)
+                    .collect();
+                held.sort_unstable();
+                held.dedup();
+                assert!(
+                    held.len() <= caps[q],
+                    "tenant {} holds {} type-{q} units at t={} (cap {})",
+                    t.tenant, held.len(), p.start, caps[q]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. batching parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batched_admission_is_bitwise_identical_to_sequential() {
+    let plat = Platform::hybrid(6, 3);
+    for n_shards in [1usize, 3] {
+        for seed in 0..4u64 {
+            // bursts: several same-arrival submissions per window, so
+            // real groups form at the global layer
+            let mut rng = Rng::new(0xBA7C_0000 + seed);
+            let pol = policies(seed);
+            let subs: Vec<Submission> = (0..30)
+                .map(|t| {
+                    let g = gen::hybrid_dag(&mut rng, 6, 0.2);
+                    Submission::new(g, (t / 5) as f64 * 2.0, pol[t % 4].clone())
+                })
+                .collect();
+
+            let mut seq = ShardedService::new(&plat, n_shards).unwrap();
+            for sub in &subs {
+                seq.admit(sub.clone()).unwrap();
+            }
+            seq.run();
+
+            let mut bat = ShardedService::new(&plat, n_shards).unwrap();
+            let ids = bat.admit_batch(subs.clone()).unwrap();
+            assert_eq!(ids, (0..subs.len()).collect::<Vec<_>>());
+            bat.run();
+
+            let (ra, rb) = (seq.report(None), bat.report(None));
+            let ctx = format!("{n_shards} shards, seed {seed}");
+            assert_decisions_identical(&ra, &rb, &ctx);
+            assert_eq!(report_bytes(&ra), report_bytes(&rb), "{ctx}: report bytes");
+            for (i, d) in ra.decisions.iter().enumerate() {
+                assert_eq!(
+                    seq.decision_shard(i),
+                    bat.decision_shard(i),
+                    "{ctx}: decision {i} (tenant {}, task {})",
+                    d.tenant,
+                    d.task
+                );
+            }
+            for t in 0..seq.n_tenants() {
+                assert_eq!(seq.shard_of(t), bat.shard_of(t), "{ctx}: tenant {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn admit_batch_rejects_all_or_nothing() {
+    let plat = Platform::hybrid(4, 2);
+    let mut svc = ShardedService::new(&plat, 2).unwrap();
+    let mut rng = Rng::new(0xBAD);
+    let good = Submission::new(gen::hybrid_dag(&mut rng, 4, 0.2), 0.0, OnlinePolicy::Greedy);
+    let mut bad = good.clone();
+    bad.arrival = f64::NAN; // fails validate_submission
+    let err = svc.admit_batch(vec![good, bad]);
+    assert!(err.is_err(), "invalid member must reject the whole batch");
+    assert_eq!(svc.n_tenants(), 0, "nothing admitted on batch rejection");
+}

@@ -244,3 +244,131 @@ fn platform_mismatch_refuses_to_start() {
     assert!(err.contains("platform"), "unexpected error: {err}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------------
+// Sharded core: the same replay == rerun discipline, per shard
+// ---------------------------------------------------------------------------
+
+/// A contended draw big enough that a 4-shard split leaves every shard
+/// with real work (the hybrid(8, 4) pool gives each shard 2 CPUs and
+/// 1 GPU).
+fn sharded_draw(seed: u64) -> (Platform, Vec<Op>) {
+    let mut rng = Rng::new(0x5747_2000 + seed);
+    let plat = Platform::hybrid(8, 4);
+    let policies = [
+        OnlinePolicy::ErLs,
+        OnlinePolicy::Eft,
+        OnlinePolicy::Greedy,
+        OnlinePolicy::Random(seed),
+    ];
+    let mut ops = Vec::new();
+    for t in 0..12usize {
+        let g = gen::hybrid_dag(&mut rng, 8, 0.2);
+        let sub = Submission::new(g, t as f64 * 0.75, policies[t % 4].clone());
+        ops.push(Op::Submit(sub));
+        if t == 5 {
+            ops.push(Op::Cancel(2));
+        }
+    }
+    (plat, ops)
+}
+
+fn run_reference_sharded(
+    dir: &Path,
+    plat: &Platform,
+    shards: usize,
+    ops: &[Op],
+) -> (Vec<DecisionRecord>, String) {
+    let path = dir.join("reference.wal");
+    let (mut core, summary) =
+        Core::open_sharded(&path, plat, shards).expect("fresh sharded wal opens");
+    assert_eq!(summary.ops, 0);
+    for op in ops {
+        apply(&mut core, op);
+    }
+    let report = wire::report_to_json(&core.report().expect("drains")).to_string();
+    (core.decisions().to_vec(), report)
+}
+
+fn resume_and_finish_sharded(
+    path: &Path,
+    plat: &Platform,
+    shards: usize,
+    ops: &[Op],
+) -> (Vec<DecisionRecord>, String) {
+    let scan = wal::recover(path).expect("severed prefix recovers");
+    let skip = ops_logged(&scan.records);
+    let (mut core, _) =
+        Core::open_sharded(path, plat, shards).expect("severed sharded prefix opens");
+    for op in ops.iter().skip(skip) {
+        apply(&mut core, op);
+    }
+    let report = wire::report_to_json(&core.report().expect("drains")).to_string();
+    (core.decisions().to_vec(), report)
+}
+
+#[test]
+fn sharded_replay_equals_rerun_at_every_record_boundary() {
+    // the tentpole's crash invariant: a 4-shard daemon severed at any
+    // record boundary (or mid-record) resumes to the exact decision
+    // stream and report bytes of the uninterrupted run — per-shard
+    // streams recomputed and bitwise-verified, migrations included
+    for seed in 0..6u64 {
+        let dir = scratch_dir(&format!("sharded{seed}"));
+        let (plat, ops) = sharded_draw(seed);
+        let (ref_decisions, ref_report) = run_reference_sharded(&dir, &plat, 4, &ops);
+        let bytes = std::fs::read(dir.join("reference.wal")).expect("read reference wal");
+        assert_eq!(*bytes.last().unwrap(), b'\n', "wal ends on a record boundary");
+
+        let cut_path = dir.join("cut.wal");
+        for b in boundaries(&bytes) {
+            std::fs::write(&cut_path, &bytes[..b]).expect("write severed prefix");
+            let (dec, rep) = resume_and_finish_sharded(&cut_path, &plat, 4, &ops);
+            let ctx = format!("seed {seed}, 4 shards, cut at byte {b}/{}", bytes.len());
+            assert_streams_identical(&ref_decisions, &dec, &ctx);
+            assert_eq!(ref_report, rep, "{ctx}: report JSON differs");
+        }
+
+        let torn_at = bytes.len() - 2;
+        std::fs::write(&cut_path, &bytes[..torn_at]).expect("write torn prefix");
+        let (dec, rep) = resume_and_finish_sharded(&cut_path, &plat, 4, &ops);
+        let ctx = format!("seed {seed}, 4 shards, torn final record");
+        assert_streams_identical(&ref_decisions, &dec, &ctx);
+        assert_eq!(ref_report, rep, "{ctx}: report JSON differs");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn shard_count_mismatch_refuses_to_start() {
+    // shard layout is part of the decision stream's identity: a log
+    // written at 4 shards must not silently re-slice at 1 (or 2)
+    let dir = scratch_dir("shard_mismatch");
+    let (plat, ops) = sharded_draw(40);
+    run_reference_sharded(&dir, &plat, 4, &ops);
+    let path = dir.join("reference.wal");
+    for wrong in [1usize, 2] {
+        let err = Core::open_sharded(&path, &plat, wrong).unwrap_err();
+        assert!(err.contains("shard"), "unexpected error: {err}");
+    }
+    // and the right count still opens
+    Core::open_sharded(&path, &plat, 4).expect("matching shard count reopens");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_shard_wal_is_byte_identical_to_preshard_core() {
+    // Core::open (the 1-shard wrapper) and an explicit open_sharded(1)
+    // write byte-identical logs for the same op stream
+    let dir = scratch_dir("one_shard_bytes");
+    let (plat, ops) = contended_draw(31);
+    run_reference(&dir, &plat, &ops);
+    let a = std::fs::read(dir.join("reference.wal")).expect("read wrapper wal");
+    let dir2 = scratch_dir("one_shard_bytes_explicit");
+    run_reference_sharded(&dir2, &plat, 1, &ops);
+    let b = std::fs::read(dir2.join("reference.wal")).expect("read explicit wal");
+    assert_eq!(a, b, "1-shard WAL bytes diverge between open() and open_sharded(1)");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}

@@ -508,7 +508,9 @@ const HOT_PATHS: &[&str] = &[
 const INDEX_BUDGET: &[(&str, usize)] = &[
     // engine grew the UnitTree range-descent (`min_over`/
     // `first_at_most_over`) and the Tick plumbing in this pass; the
-    // others moved by at most one site.
+    // others moved by at most one site.  Re-verified after the
+    // saturating-tick hardening pass: every file sits exactly at its
+    // ceiling, so no re-ratchet was possible.
     ("rust/src/sched/engine.rs", 47),
     ("rust/src/sched/est.rs", 15),
     ("rust/src/sched/heft.rs", 8),
